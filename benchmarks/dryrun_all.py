@@ -1,0 +1,84 @@
+"""Run the full dry-run sweep: 10 archs x 4 shapes x {pod1, pod2}.
+
+Each combo runs in its own subprocess (fresh XLA state, isolated
+failures); reports land in reports/dryrun/<arch>_<shape>_<mesh>.json and
+completed combos are skipped on re-run.
+
+    PYTHONPATH=src python -m benchmarks.dryrun_all [--mesh pod1 pod2] \
+        [--arch ...] [--shape ...] [--force]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+ARCHS = [
+    "mamba2-130m", "whisper-small", "yi-6b", "recurrentgemma-9b",
+    "qwen3-14b", "starcoder2-15b", "llama4-scout-17b-a16e",
+    "llama-3.2-vision-90b", "qwen1.5-110b", "grok-1-314b",
+]
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+OUT_DIR = "reports/dryrun"
+
+
+def run_one(arch: str, shape: str, mesh: str, force: bool) -> dict:
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, f"{arch}_{shape}_{mesh}.json")
+    if not force and os.path.exists(path):
+        with open(path) as f:
+            rep = json.load(f)
+        if rep.get("status") == "ok":
+            return rep
+    t0 = time.time()
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+         "--shape", shape, "--mesh", mesh, "--json", path],
+        capture_output=True, text=True, env=env, timeout=3000)
+    try:
+        with open(path) as f:
+            rep = json.load(f)
+    except Exception:
+        rep = {"arch": arch, "shape": shape, "mesh": mesh, "status": "error",
+               "error": (proc.stderr or "")[-2000:]}
+        with open(path, "w") as f:
+            json.dump(rep, f, indent=2)
+    rep["compile_wall_s"] = time.time() - t0
+    return rep
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", nargs="+", default=["pod1", "pod2"])
+    ap.add_argument("--arch", nargs="+", default=ARCHS)
+    ap.add_argument("--shape", nargs="+", default=SHAPES)
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    failures = []
+    for mesh in args.mesh:
+        for arch in args.arch:
+            for shape in args.shape:
+                rep = run_one(arch, shape, mesh, args.force)
+                ok = rep.get("status") == "ok"
+                dom = rep.get("dominant", "?")
+                fit = rep.get("memory_analysis", {}).get("fits_16gb_hbm")
+                print(f"[{'OK' if ok else 'FAIL'}] {arch:24s} {shape:12s} "
+                      f"{mesh}  dom={dom} fits={fit} "
+                      f"({rep.get('compile_wall_s', 0):.0f}s)", flush=True)
+                if not ok:
+                    failures.append((arch, shape, mesh,
+                                     rep.get("error", "")[:200]))
+    print(f"\n{len(failures)} failures")
+    for f in failures:
+        print("  FAIL:", f)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

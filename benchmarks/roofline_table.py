@@ -1,0 +1,81 @@
+"""Render the roofline table (EXPERIMENTS.md §Roofline) from the dry-run
+reports in reports/dryrun/.
+
+Per (arch x shape x mesh): the three roofline terms (s), dominant term,
+MODEL_FLOPS/HLO_FLOPs ratio, HBM fit, and for pod2-train the ProFe vs
+FedAvg gossip wire bytes.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List
+
+
+def load_reports(path: str = "reports/dryrun") -> List[Dict]:
+    reports = []
+    for f in sorted(glob.glob(os.path.join(path, "*.json"))):
+        with open(f) as fh:
+            reports.append(json.load(fh))
+    return reports
+
+
+def render(reports: List[Dict], mesh: str = "pod1") -> str:
+    rows = [r for r in reports if r.get("mesh") == mesh
+            and r.get("status") == "ok"]
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    lines = [
+        f"| arch | shape | compute_s | memory_s | collective_s | dominant "
+        f"| 6ND/HLO | fits 16GB |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        t = r["terms_s"]
+        ratio = r.get("useful_flops_ratio")
+        fits = r.get("memory_analysis", {}).get("fits_16gb_hbm")
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {t['compute_s']:.3g} "
+            f"| {t['memory_s']:.3g} | {t['collective_s']:.3g} "
+            f"| **{r['dominant']}** | {ratio:.2f} "
+            f"| {'yes' if fits else 'NO'} |"
+            if ratio is not None else
+            f"| {r['arch']} | {r['shape']} | {t['compute_s']:.3g} "
+            f"| {t['memory_s']:.3g} | {t['collective_s']:.3g} "
+            f"| **{r['dominant']}** | - | {'yes' if fits else 'NO'} |")
+    return "\n".join(lines)
+
+
+def render_federate(reports: List[Dict]) -> str:
+    lines = ["| arch | ProFe wire B/dev | FedAvg wire B/dev | reduction |",
+             "|---|---|---|---|"]
+    for r in sorted(reports, key=lambda r: r.get("arch", "")):
+        fed = r.get("federate")
+        if not fed or r.get("mesh") != "pod2":
+            continue
+        p = fed["profe_collective_bytes"]["total"]
+        f = fed["fedavg_collective_bytes"]["total"]
+        red = fed.get("wire_reduction_vs_fedavg")
+        lines.append(f"| {r['arch']} | {p/1e6:.1f} MB | {f/1e6:.1f} MB "
+                     f"| {red:.1%} |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--reports", default="reports/dryrun")
+    args = ap.parse_args()
+    reports = load_reports(args.reports)
+    ok = sum(1 for r in reports if r.get("status") == "ok")
+    print(f"{ok}/{len(reports)} combos ok\n")
+    for mesh in ("pod1", "pod2"):
+        print(f"### mesh {mesh}\n")
+        print(render(reports, mesh))
+        print()
+    print("### ProFe vs FedAvg gossip (pod2)\n")
+    print(render_federate(reports))
+
+
+if __name__ == "__main__":
+    main()

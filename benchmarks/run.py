@@ -1,0 +1,66 @@
+"""Benchmark entry point — one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--full]
+
+* fig2   — F1 vs rounds, ProFe vs FedAvg/FedProto/FML/FedGPD   (Fig. 2)
+* table2 — bytes sent/received per node, % vs FedAvg           (Table II)
+* table3 — wall time, % vs FedAvg                              (Table III)
+* roofline — renders the dry-run roofline table if reports exist (ours)
+
+Defaults are scaled down for the CPU container; --full runs the paper's
+20-node protocol.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", nargs="+",
+                    default=["fig2", "table2", "table3", "roofline"])
+    args = ap.parse_args()
+
+    t0 = time.time()
+    print("name,seconds,artifact")
+
+    if "fig2" in args.only:
+        from benchmarks import fig2_f1
+        t = time.time()
+        sys.argv = ["fig2_f1"] + (["--full"] if args.full else [])
+        fig2_f1.main()
+        print(f"fig2_f1,{time.time() - t:.1f},reports/fig2_f1.json")
+
+    if "table2" in args.only:
+        from benchmarks import table2_comm
+        t = time.time()
+        sys.argv = ["table2_comm"] + (["--full"] if args.full else [])
+        table2_comm.main()
+        print(f"table2_comm,{time.time() - t:.1f},reports/table2_comm.json")
+
+    if "table3" in args.only:
+        from benchmarks import table3_time
+        t = time.time()
+        sys.argv = ["table3_time"] + (["--full"] if args.full else [])
+        table3_time.main()
+        print(f"table3_time,{time.time() - t:.1f},reports/table3_time.json")
+
+    if "roofline" in args.only:
+        import os
+        if os.path.isdir("reports/dryrun") and os.listdir("reports/dryrun"):
+            from benchmarks import roofline_table
+            t = time.time()
+            sys.argv = ["roofline_table"]
+            roofline_table.main()
+            print(f"roofline_table,{time.time() - t:.1f},reports/dryrun/")
+        else:
+            print("roofline_table,skipped (run benchmarks.dryrun_all first),-")
+
+    print(f"total,{time.time() - t0:.1f},-")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""Table II reproduction: network bytes sent/received per node (GB) and
+% vs FedAvg, per algorithm.
+
+Byte counts are *analytic serialized payload sizes* (exact), so this
+table does not need long training — one round with the real models gives
+the exact per-round payload; total = payload x rounds x neighbours.
+``--full`` uses the paper's 20-node/10-20-80-round protocol numbers.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import numpy as np
+
+from repro.config import FederationConfig, TrainConfig, get_config
+from repro.core.comm import CommMeter
+from repro.core.federation import run_federation
+from repro.data import make_image_dataset, partition, train_test_split
+
+ALGOS = ["fedavg", "fedgpd", "fml", "fedproto", "profe"]
+PAPER_ROUNDS = {"mnist-cnn": 10, "cifar10-resnet18": 20,
+                "cifar100-resnet32": 80}
+
+
+def measure(dataset: str, *, nodes: int, rounds: int,
+            n_samples: int = 1200, seed: int = 0):
+    cfg = get_config(dataset)
+    data = make_image_dataset(seed, n_samples, cfg.input_hw, cfg.num_classes)
+    train_d, test_d = train_test_split(data, 0.1, seed)
+    parts = partition(train_d["label"], nodes, "iid", seed)
+    node_data = [{k: v[i] for k, v in train_d.items()} for i in parts]
+    train = TrainConfig(batch_size=64, learning_rate=1e-3, optimizer="adamw",
+                        remat=False)
+    rows = {}
+    for algo in ALGOS:
+        fed = FederationConfig(num_nodes=nodes, rounds=rounds,
+                               local_epochs=1, algorithm=algo, seed=seed)
+        res = run_federation(cfg, fed, train, node_data, test_d)
+        rows[algo] = {
+            "sent_gb": res.extras["avg_sent_gb"],
+            "received_gb": res.extras["avg_received_gb"],
+        }
+    base = rows["fedavg"]["sent_gb"]
+    for algo in ALGOS:
+        rows[algo]["pct_vs_fedavg"] = 100.0 * (rows[algo]["sent_gb"] / base - 1)
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--datasets", nargs="+", default=["mnist-cnn"])
+    ap.add_argument("--out", default="reports/table2_comm.json")
+    args = ap.parse_args()
+
+    results = {}
+    for ds in args.datasets:
+        nodes = 20 if args.full else 4
+        rounds = PAPER_ROUNDS.get(ds, 10) if args.full else 2
+        print(f"== {ds} ({nodes} nodes, {rounds} rounds) ==")
+        rows = measure(ds, nodes=nodes, rounds=rounds,
+                       n_samples=20000 if args.full else 1200)
+        results[ds] = rows
+        print(f"  {'algo':9s} {'sent GB':>10s} {'recv GB':>10s} {'% vs FedAvg':>12s}")
+        for algo, r in rows.items():
+            print(f"  {algo:9s} {r['sent_gb']:10.4f} {r['received_gb']:10.4f} "
+                  f"{r['pct_vs_fedavg']:+11.1f}%")
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(results, f, indent=2)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

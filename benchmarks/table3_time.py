@@ -1,0 +1,65 @@
+"""Table III reproduction: elapsed wall time per algorithm (% vs FedAvg).
+
+Wall time on this CPU container is only meaningful *relatively* (the
+paper used 2x RTX 3080); the claim under test is the ORDERING and the
+ProFe overhead band (~+18-20% on CIFAR-scale, ~0% on MNIST-scale) vs the
+FedProto floor (~-65%).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from repro.config import FederationConfig, TrainConfig, get_config
+from repro.core.federation import run_federation
+from repro.data import make_image_dataset, partition, train_test_split
+
+ALGOS = ["fedavg", "fedgpd", "fml", "fedproto", "profe"]
+
+
+def measure(dataset: str, *, nodes: int, rounds: int, n_samples: int,
+            seed: int = 0):
+    cfg = get_config(dataset)
+    data = make_image_dataset(seed, n_samples, cfg.input_hw, cfg.num_classes)
+    train_d, test_d = train_test_split(data, 0.1, seed)
+    parts = partition(train_d["label"], nodes, "iid", seed)
+    node_data = [{k: v[i] for k, v in train_d.items()} for i in parts]
+    train = TrainConfig(batch_size=64, learning_rate=1e-3, optimizer="adamw",
+                        remat=False)
+    rows = {}
+    for algo in ALGOS:
+        fed = FederationConfig(num_nodes=nodes, rounds=rounds, local_epochs=1,
+                               algorithm=algo, seed=seed)
+        res = run_federation(cfg, fed, train, node_data, test_d)
+        rows[algo] = {"elapsed_s": res.elapsed_s}
+    base = rows["fedavg"]["elapsed_s"]
+    for algo in ALGOS:
+        rows[algo]["pct_vs_fedavg"] = 100.0 * (rows[algo]["elapsed_s"] / base - 1)
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--datasets", nargs="+", default=["mnist-cnn"])
+    ap.add_argument("--out", default="reports/table3_time.json")
+    args = ap.parse_args()
+
+    results = {}
+    for ds in args.datasets:
+        nodes, rounds, n = (20, 10, 20000) if args.full else (3, 2, 900)
+        print(f"== {ds} ==")
+        rows = measure(ds, nodes=nodes, rounds=rounds, n_samples=n)
+        results[ds] = rows
+        for algo, r in rows.items():
+            print(f"  {algo:9s} {r['elapsed_s']:8.1f}s "
+                  f"({r['pct_vs_fedavg']:+.0f}% vs FedAvg)")
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(results, f, indent=2)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

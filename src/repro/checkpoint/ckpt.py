@@ -1,0 +1,72 @@
+"""Checkpointing: pytree <-> .npz with key-path flattening.
+
+Host-side (numpy) serialization; restoring onto a sharded mesh goes
+through ``jax.device_put`` with the target sharding at the call site.
+Works for params, optimizer states, and federation node states alike.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Tuple
+
+import jax
+import numpy as np
+
+
+_SEP = "/"
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(_path_str(p) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return f"#{p.idx}"
+    return str(p)
+
+
+def save_checkpoint(path: str, tree, *, metadata: Dict[str, Any] | None = None):
+    """Write tree to ``path`` (.npz) + structure sidecar (.json)."""
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(tree)
+    np.savez(path if path.endswith(".npz") else path + ".npz", **flat)
+    treedef = jax.tree_util.tree_structure(tree)
+    side = {"treedef": str(treedef), "metadata": metadata or {}}
+    with open(_sidecar(path), "w") as f:
+        json.dump(side, f)
+
+
+def _sidecar(path: str) -> str:
+    base = path[:-4] if path.endswith(".npz") else path
+    return base + ".meta.json"
+
+
+def load_checkpoint(path: str, like_tree) -> Any:
+    """Restore into the structure of ``like_tree`` (keys must match)."""
+    npz = np.load(path if path.endswith(".npz") else path + ".npz")
+    flat_like = _flatten(like_tree)
+    missing = set(flat_like) - set(npz.files)
+    extra = set(npz.files) - set(flat_like)
+    if missing or extra:
+        raise ValueError(f"checkpoint mismatch: missing={sorted(missing)[:5]} "
+                         f"extra={sorted(extra)[:5]}")
+    leaves_like, treedef = jax.tree_util.tree_flatten(like_tree)
+    paths = [
+        _SEP.join(_path_str(p) for p in path)
+        for path, _ in jax.tree_util.tree_flatten_with_path(like_tree)[0]
+    ]
+    new_leaves = []
+    for key, leaf in zip(paths, leaves_like):
+        arr = npz[key]
+        if hasattr(leaf, "dtype"):
+            arr = arr.astype(leaf.dtype)
+        new_leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, new_leaves)

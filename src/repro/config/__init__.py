@@ -1,0 +1,23 @@
+from repro.config.base import (
+    FederationConfig,
+    ModelConfig,
+    ShapeConfig,
+    SHAPES,
+    TrainConfig,
+    get_config,
+    get_shape,
+    list_configs,
+    register,
+)
+
+__all__ = [
+    "FederationConfig",
+    "ModelConfig",
+    "ShapeConfig",
+    "SHAPES",
+    "TrainConfig",
+    "get_config",
+    "get_shape",
+    "list_configs",
+    "register",
+]

@@ -1,0 +1,19 @@
+"""ProFe core — the paper's contribution: KD + prototypes + quantization
+for communication-efficient decentralized federated learning."""
+from repro.core import (
+    aggregation,
+    baselines,
+    comm,
+    distillation,
+    federation,
+    metrics,
+    profe,
+    prototypes,
+    quantization,
+    topology,
+)
+
+__all__ = [
+    "aggregation", "baselines", "comm", "distillation", "federation",
+    "metrics", "profe", "prototypes", "quantization", "topology",
+]

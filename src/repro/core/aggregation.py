@@ -1,0 +1,33 @@
+"""Decentralized model aggregation (gossip round).
+
+Each node averages the (de-quantized) student parameters it received from
+its neighbours together with its own, weighted by local dataset sizes —
+FedAvg-style weights, evaluated per node over its neighbourhood (no
+central server).
+"""
+from __future__ import annotations
+
+from typing import Any, List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def weighted_tree_mean(trees: Sequence[Any], weights: Sequence[float]):
+    w = np.asarray(weights, np.float64)
+    w = w / w.sum()
+
+    def combine(*leaves):
+        out = sum(wi * leaf.astype(jnp.float32)
+                  for wi, leaf in zip(w, leaves))
+        return out.astype(leaves[0].dtype)
+
+    return jax.tree_util.tree_map(combine, *trees)
+
+
+def neighborhood_aggregate(node: int, own_tree, received: List[Any],
+                           own_size: float, received_sizes: List[float]):
+    """Aggregate own + neighbour models, dataset-size weighted."""
+    return weighted_tree_mean([own_tree] + received,
+                              [own_size] + list(received_sizes))

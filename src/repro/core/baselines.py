@@ -1,0 +1,142 @@
+"""Literature baselines the paper compares against (Sec. IV):
+
+* **FedAvg**  — plain decentralized averaging of the full (teacher-size)
+  model, fp32 on the wire.
+* **FedProto** [9] — local model trained with CE + prototype-MSE; ONLY
+  prototypes travel.  Nearest-prototype inference available (Eq. 5).
+* **FML** [8] — personalized (large) + meme (small) models trained with
+  Deep Mutual Learning (bidirectional KD); the meme model travels fp32.
+* **FedGPD** [10] — CE + global-prototype distillation on one model;
+  model + prototypes travel fp32.
+
+Each baseline exposes ``make_step(...)`` with the same NodeState layout as
+ProFe (unused slots hold empty pytrees) so the federation driver treats
+all algorithms uniformly.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import FederationConfig, ModelConfig
+from repro.core import distillation as D
+from repro.core import prototypes as P
+from repro.core.profe import NodeState, proto_labels, task_ce
+from repro.models import forward
+from repro.optim import Optimizer, clip_by_global_norm
+
+
+def _empty():
+    return {}
+
+
+def make_fedavg_step(cfg: ModelConfig, opt: Optimizer, *,
+                     grad_clip: float = 1.0, remat: bool = True):
+    def _step(state: NodeState, batch, teacher_on: bool = False):
+        def loss(p):
+            out = forward(cfg, p, batch, remat=remat)
+            l = task_ce(cfg, out.logits, batch)
+            return l + out.aux * getattr(cfg, "router_aux_weight", 0.0), out
+
+        (l, _), g = jax.value_and_grad(loss, has_aux=True)(state.student)
+        g, gn = clip_by_global_norm(g, grad_clip)
+        params, opt_state = opt.update(g, state.opt_s, state.student)
+        return state._replace(student=params, opt_s=opt_state), \
+            {"loss_s": l, "grad_norm_s": gn}
+
+    return jax.jit(_step, static_argnames=("teacher_on",))
+
+
+def make_fedproto_step(cfg: ModelConfig, fed: FederationConfig,
+                       opt: Optimizer, *, grad_clip: float = 1.0,
+                       remat: bool = True):
+    """CE + beta * proto-MSE (FedProto Eq.; beta = 1 per paper Sec. III-B)."""
+    def _step(state: NodeState, batch, teacher_on: bool = False):
+        def loss(p):
+            out = forward(cfg, p, batch, remat=remat)
+            labels_p = proto_labels(cfg, batch)
+            l = task_ce(cfg, out.logits, batch)
+            l = l + fed.beta_s * P.proto_mse_loss(
+                out.f1, state.global_protos, labels_p, state.proto_mask)
+            return l + out.aux * getattr(cfg, "router_aux_weight", 0.0), out
+
+        (l, _), g = jax.value_and_grad(loss, has_aux=True)(state.student)
+        g, gn = clip_by_global_norm(g, grad_clip)
+        params, opt_state = opt.update(g, state.opt_s, state.student)
+        return state._replace(student=params, opt_s=opt_state), \
+            {"loss_s": l, "grad_norm_s": gn}
+
+    return jax.jit(_step, static_argnames=("teacher_on",))
+
+
+def make_fml_step(big_cfg: ModelConfig, meme_cfg: ModelConfig,
+                  fed: FederationConfig, opt_big: Optimizer,
+                  opt_meme: Optimizer, *, grad_clip: float = 1.0,
+                  remat: bool = True):
+    """Deep Mutual Learning: L_big = CE + a*KD(big<-meme),
+    L_meme = CE + b*KD(meme<-big).  The meme model is aggregated.
+
+    State mapping: ``student`` = meme (travels), ``teacher`` = personalized.
+    """
+    def _step(state: NodeState, batch, teacher_on: bool = True):
+        # big (personalized) update, distilling from the current meme
+        meme_out = forward(meme_cfg, state.student, batch, remat=remat)
+        meme_out = jax.tree_util.tree_map(jax.lax.stop_gradient, meme_out)
+
+        def big_loss(p):
+            out = forward(big_cfg, p, batch, remat=remat)
+            l = task_ce(big_cfg, out.logits, batch)
+            l = l + fed.alpha_s * D.kd_loss(out.logits, meme_out.logits,
+                                            fed.kd_temperature)
+            return l + out.aux * getattr(big_cfg, "router_aux_weight", 0.0), out
+
+        (lb, big_out), gb = jax.value_and_grad(big_loss, has_aux=True)(state.teacher)
+        gb, _ = clip_by_global_norm(gb, grad_clip)
+        big, opt_t = opt_big.update(gb, state.opt_t, state.teacher)
+        big_out = jax.tree_util.tree_map(jax.lax.stop_gradient, big_out)
+
+        def meme_loss(p):
+            out = forward(meme_cfg, p, batch, remat=remat)
+            l = task_ce(meme_cfg, out.logits, batch)
+            l = l + fed.alpha_s * D.kd_loss(out.logits, big_out.logits,
+                                            fed.kd_temperature)
+            return l + out.aux * getattr(meme_cfg, "router_aux_weight", 0.0), out
+
+        (lm, _), gm = jax.value_and_grad(meme_loss, has_aux=True)(state.student)
+        gm, gn = clip_by_global_norm(gm, grad_clip)
+        meme, opt_s = opt_meme.update(gm, state.opt_s, state.student)
+        return state._replace(student=meme, teacher=big, opt_s=opt_s,
+                              opt_t=opt_t), \
+            {"loss_s": lm, "loss_t": lb, "grad_norm_s": gn}
+
+    return jax.jit(_step, static_argnames=("teacher_on",))
+
+
+def make_fedgpd_step(cfg: ModelConfig, fed: FederationConfig, opt: Optimizer,
+                     *, grad_clip: float = 1.0, remat: bool = True):
+    """Global-prototype distillation: CE + MSE(f1, C̄(j)) + proto-CE, where
+    proto-CE treats negative squared distances to global prototypes as
+    logits (aligning local features with the global class anchors)."""
+    def _step(state: NodeState, batch, teacher_on: bool = False):
+        def loss(p):
+            out = forward(cfg, p, batch, remat=remat)
+            labels_p = proto_labels(cfg, batch)
+            l = task_ce(cfg, out.logits, batch)
+            l = l + fed.beta_s * P.proto_mse_loss(
+                out.f1, state.global_protos, labels_p, state.proto_mask)
+            d2 = P.pairwise_sq_dists(out.f1, state.global_protos)
+            proto_logits = jnp.where(state.proto_mask[None, :] > 0, -d2,
+                                     jnp.finfo(jnp.float32).min)
+            any_proto = jnp.sum(state.proto_mask) > 0
+            pce = jnp.where(any_proto, D.ce_loss(proto_logits, labels_p), 0.0)
+            return l + 0.5 * pce + out.aux * getattr(cfg, "router_aux_weight", 0.0), out
+
+        (l, _), g = jax.value_and_grad(loss, has_aux=True)(state.student)
+        g, gn = clip_by_global_norm(g, grad_clip)
+        params, opt_state = opt.update(g, state.opt_s, state.student)
+        return state._replace(student=params, opt_s=opt_state), \
+            {"loss_s": l, "grad_norm_s": gn}
+
+    return jax.jit(_step, static_argnames=("teacher_on",))

@@ -1,0 +1,50 @@
+"""Communication accounting — reproduces Table II analytically.
+
+Every gossip payload is measured in *serialized wire bytes* (quantized
+width for float tensors + per-tensor scale overhead).  The meter tracks
+bytes sent/received per node, per round, per payload kind ("model",
+"prototypes", ...), so `benchmarks/table2_comm.py` can print the exact
+FedAvg/FedProto/FML/FedGPD/ProFe comparison.
+"""
+from __future__ import annotations
+
+from collections import defaultdict
+from typing import Dict, Optional
+
+from repro.core.quantization import tree_wire_bytes
+
+
+class CommMeter:
+    def __init__(self, num_nodes: int):
+        self.num_nodes = num_nodes
+        self.sent: Dict[int, int] = defaultdict(int)
+        self.received: Dict[int, int] = defaultdict(int)
+        self.by_kind: Dict[str, int] = defaultdict(int)
+        self.by_round: Dict[int, int] = defaultdict(int)
+
+    def record_broadcast(self, sender: int, receivers, payload_tree,
+                         kind: str, round_idx: int,
+                         bits: Optional[int] = None) -> int:
+        """Sender ships ``payload_tree`` to each receiver. Returns bytes/copy."""
+        nbytes = tree_wire_bytes(payload_tree, bits)
+        for r in receivers:
+            self.sent[sender] += nbytes
+            self.received[r] += nbytes
+            self.by_kind[kind] += nbytes
+            self.by_round[round_idx] += nbytes
+        return nbytes
+
+    # -- summaries ----------------------------------------------------------
+    def avg_sent_gb(self) -> float:
+        return sum(self.sent.values()) / max(self.num_nodes, 1) / 1e9
+
+    def avg_received_gb(self) -> float:
+        return sum(self.received.values()) / max(self.num_nodes, 1) / 1e9
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "avg_sent_gb": self.avg_sent_gb(),
+            "avg_received_gb": self.avg_received_gb(),
+            "total_gb": (sum(self.sent.values())) / 1e9,
+            "by_kind_gb": {k: v / 1e9 for k, v in self.by_kind.items()},
+        }

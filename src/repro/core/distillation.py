@@ -1,0 +1,82 @@
+"""Knowledge distillation losses (paper Sec. III-A).
+
+Response-based KD with temperature T:
+
+    p_s = log_softmax(y_s / T)        (student, log-probabilities)
+    p_t = softmax(y_t / T)            (teacher, probabilities)
+    L_KD = KL(p_t || p_s) * T^2
+
+plus the professor-importance decay schedule of Sec. III-A.1: the
+distillation weight is halved every federated round and snapped to zero
+below ``alpha_limit`` (at which point the teacher forward can be skipped).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import shard_act
+
+
+def kd_loss(student_logits, teacher_logits, temperature: float = 1.0,
+            mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """KL(p_t || p_s) * T^2, mean over all leading dims.
+
+    Works for classifier logits [B, K] and LM logits [B, S, V].
+    ``mask`` (broadcastable to the leading dims) excludes padding tokens.
+    """
+    ys = student_logits.astype(jnp.float32) / temperature
+    yt = teacher_logits.astype(jnp.float32) / temperature
+    log_ps = jax.nn.log_softmax(ys, axis=-1)
+    log_pt = jax.nn.log_softmax(yt, axis=-1)
+    pt = jnp.exp(log_pt)
+    kl = jnp.sum(pt * (log_pt - log_ps), axis=-1)       # [...]
+    if mask is not None:
+        kl = kl * mask
+        denom = jnp.maximum(jnp.sum(mask), 1.0)
+        return jnp.sum(kl) / denom * temperature ** 2
+    return jnp.mean(kl) * temperature ** 2
+
+
+def ce_loss(logits, labels, mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Cross-entropy with integer labels (Eq. 1), mean-reduced.
+
+    Uses the one-hot contraction rather than ``take_along_axis`` so a
+    vocab-sharded logits tensor never gets all-gathered: the one-hot is
+    elementwise against logits (same sharding) and reduces over V with a
+    (tiny) cross-model-axis psum.
+    """
+    logits32 = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits32, axis=-1)
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=jnp.float32)
+    if onehot.ndim == 3:
+        onehot = shard_act(onehot, "btv")  # keep vocab-sharded like logits
+    true_logit = jnp.sum(logits32 * onehot, axis=-1)
+    nll = lse - true_logit
+    if mask is not None:
+        nll = nll * mask
+        return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+def repr_mse_loss(f_student, f_teacher) -> jnp.ndarray:
+    """L_MSE between intermediate representations (Eq. 6 applied to
+    student/teacher vectors, Sec. III-C)."""
+    d = f_student.astype(jnp.float32) - f_teacher.astype(jnp.float32)
+    return jnp.mean(jnp.square(d))
+
+
+def alpha_at_round(alpha0: float, alpha_limit: float, round_idx) -> jnp.ndarray:
+    """Professor importance decay: halve per round, zero below the limit.
+
+    ``round_idx`` may be a traced int (device round counters).
+    """
+    a = alpha0 * (0.5 ** jnp.asarray(round_idx, jnp.float32))
+    return jnp.where(a < alpha_limit, 0.0, a)
+
+
+def teacher_active(alpha0: float, alpha_limit: float, round_idx: int) -> bool:
+    """Python-level check (for skipping teacher compute entirely)."""
+    return float(alpha0 * (0.5 ** round_idx)) >= alpha_limit

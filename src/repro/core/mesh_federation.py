@@ -1,0 +1,129 @@
+"""ProFe federation round on the production mesh.
+
+Mapping (DESIGN.md §2): each **pod is a federation node**.  All federation
+state is stacked along a leading node dimension sharded over the ``pod``
+mesh axis, so node divergence is explicit and *local training never
+crosses pods* (the train step is vmapped over the node dim — XLA
+partitions it over ``pod`` with zero cross-pod collectives).
+
+The gossip round is where inter-pod traffic happens, and the HLO shows
+exactly ProFe's wire content:
+
+1. per-node 16-bit quantization of the student + prototypes
+   (int16 codes + one fp32 scale per tensor),
+2. exchange == resharding the stacked int16 codes from P("pod", ...) to
+   replicated — an **all-gather over the pod axis of int16 payloads**
+   (half the bytes of FedAvg's fp32 model exchange, on a model
+   |student| ≪ |teacher|),
+3. local de-quantization + dataset-size-weighted averaging (student) and
+   Eq. 4 instance-count-weighted prototype aggregation.
+
+``make_fedavg_round`` is the baseline: same exchange of the *full-size*
+model at fp32 — the dry-run diff of collective bytes between the two
+programs reproduces Table II on the mesh.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.quantization import _qmax
+
+
+def _quantize_leaf_per_node(x, bits: int):
+    """x: [N, ...] fp — quantize each node's slice independently.
+    Returns (codes int16 [N, ...], scales fp32 [N]).
+
+    Shape-preserving (no reshape): flattening a sharded tensor would force
+    GSPMD to replicate it, which would silently inflate the wire bytes the
+    dry-run measures.
+    """
+    qm = _qmax(bits)
+    x32 = x.astype(jnp.float32)
+    reduce_axes = tuple(range(1, x.ndim))
+    amax = jnp.max(jnp.abs(x32), axis=reduce_axes)                # [N]
+    delta = jnp.maximum(amax / qm, jnp.finfo(jnp.float32).tiny)   # [N]
+    bshape = (x.shape[0],) + (1,) * (x.ndim - 1)
+    codes = jnp.floor(x32 / delta.reshape(bshape) + 0.5)
+    codes = jnp.clip(codes, -qm - 1, qm).astype(jnp.int16)
+    return codes, delta
+
+
+def _dequantize_leaf(codes, delta):
+    bshape = (codes.shape[0],) + (1,) * (codes.ndim - 1)
+    return codes.astype(jnp.float32) * delta.reshape(bshape)
+
+
+def _replicate_over_pod(mesh, tree, specs_no_pod):
+    """Reshard [N, ...] leaves from P("pod", ...) to P(None, ...): the
+    all-gather over the pod axis == the wire exchange."""
+    def cons(x, spec):
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, P(None, *spec)))
+    return jax.tree_util.tree_map(
+        cons, tree, specs_no_pod,
+        is_leaf=lambda x: not isinstance(x, (dict, list, tuple)))
+
+
+def make_profe_round(mesh, student_specs, bits: int = 16):
+    """Returns round_fn(students, protos, counts, sizes) for stacked
+    node state; students leaves [N, ...] sharded P("pod", *student_spec).
+
+    Output: aggregated students (every node identical), global prototypes
+    [C, P] + mask [C] (Eq. 4), replicated.
+    """
+    def round_fn(students, protos, counts, sizes):
+        # 1. quantize per node (vmapped math, stays in-pod)
+        q = jax.tree_util.tree_map(
+            lambda x: _quantize_leaf_per_node(x, bits), students,
+            is_leaf=lambda x: hasattr(x, "shape"))
+        codes = jax.tree_util.tree_map(lambda t: t[0], q,
+                                       is_leaf=lambda t: isinstance(t, tuple))
+        scales = jax.tree_util.tree_map(lambda t: t[1], q,
+                                        is_leaf=lambda t: isinstance(t, tuple))
+
+        # 2. the exchange: all-gather int16 codes over the pod axis
+        codes = _replicate_over_pod(mesh, codes, student_specs)
+        scales = jax.tree_util.tree_map(
+            lambda d: jax.lax.with_sharding_constraint(
+                d, NamedSharding(mesh, P(None))), scales)
+        pq, pd = _quantize_leaf_per_node(protos, bits)
+        pq = jax.lax.with_sharding_constraint(
+            pq, NamedSharding(mesh, P(None, None, None)))
+        counts_r = jax.lax.with_sharding_constraint(
+            counts, NamedSharding(mesh, P(None, None)))
+
+        # 3. local dequantize + dataset-size-weighted FedAvg over nodes
+        w = sizes / jnp.sum(sizes)                                 # [N]
+        def agg(c, d):
+            deq = _dequantize_leaf(c, d)                           # [N, ...]
+            mean = jnp.tensordot(w.astype(jnp.float32), deq, axes=1)
+            return jnp.stack([mean] * c.shape[0]).astype(jnp.float32)
+        new_students = jax.tree_util.tree_map(agg, codes, scales)
+
+        # 4. Eq. 4 prototype aggregation (instance-count weighted)
+        protos_rx = _dequantize_leaf(pq, pd)                       # [N, C, P]
+        n_j = jnp.sum(counts_r, axis=0)                            # [C]
+        wc = counts_r / jnp.maximum(n_j, 1.0)[None, :]             # [N, C]
+        global_protos = jnp.einsum("nc,ncp->cp", wc, protos_rx)
+        proto_mask = (n_j > 0).astype(jnp.float32)
+        return new_students, global_protos, proto_mask
+
+    return round_fn
+
+
+def make_fedavg_round(mesh, model_specs):
+    """Baseline exchange: full model, fp32, no quantization."""
+    def round_fn(models, sizes):
+        gathered = _replicate_over_pod(mesh, models, model_specs)
+        w = sizes / jnp.sum(sizes)
+        def agg(x):
+            mean = jnp.tensordot(w.astype(jnp.float32),
+                                 x.astype(jnp.float32), axes=1)
+            return jnp.stack([mean] * x.shape[0]).astype(x.dtype)
+        return jax.tree_util.tree_map(agg, gathered)
+    return round_fn

@@ -1,0 +1,22 @@
+"""Evaluation metrics: accuracy and macro-F1 (the paper's Fig. 2 metric)."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def macro_f1(y_true: np.ndarray, y_pred: np.ndarray, n_classes: int) -> float:
+    f1s = []
+    for c in range(n_classes):
+        tp = np.sum((y_pred == c) & (y_true == c))
+        fp = np.sum((y_pred == c) & (y_true != c))
+        fn = np.sum((y_pred != c) & (y_true == c))
+        if tp + fp + fn == 0:
+            continue  # class absent from both -> skip (sklearn convention)
+        prec = tp / (tp + fp) if tp + fp else 0.0
+        rec = tp / (tp + fn) if tp + fn else 0.0
+        f1s.append(2 * prec * rec / (prec + rec) if prec + rec else 0.0)
+    return float(np.mean(f1s)) if f1s else 0.0
+
+
+def accuracy(y_true: np.ndarray, y_pred: np.ndarray) -> float:
+    return float(np.mean(y_true == y_pred)) if len(y_true) else 0.0

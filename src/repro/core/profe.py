@@ -1,0 +1,187 @@
+"""ProFe node-local training step (paper Sec. III-C, Eq. 8/9) and round
+payload handling (quantize → gossip → aggregate).
+
+Each node holds a *teacher* (the full architecture, never communicated)
+and a *student* (the aggregation model).  Per batch:
+
+    L_s = L_CE(y_s, y) + β_s L_MSE(f_s1, C̄(j))
+          + α_s [ L_KD(y_s, y_t) + L_MSE(f_s1, f_t1) ]          (Eq. 8)
+    L_t = L_CE(y_t, y) + β_t L_MSE(f_t1, C̄(j))                 (Eq. 9)
+
+α_s follows the professor-importance decay (halved per round, zero below
+``alpha_limit``); once zero, the teacher forward/update is skipped
+entirely (compile-time static branch — two step variants are jitted).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import FederationConfig, ModelConfig, TrainConfig
+from repro.core import distillation as D
+from repro.core import prototypes as P
+from repro.core.quantization import quantize_dequantize_tree
+from repro.models import forward
+from repro.optim import Optimizer, clip_by_global_norm
+
+
+class NodeState(NamedTuple):
+    student: Any
+    teacher: Any
+    opt_s: Any
+    opt_t: Any
+    global_protos: jnp.ndarray   # [C, P]
+    proto_mask: jnp.ndarray      # [C]
+    round_idx: jnp.ndarray       # scalar int32
+
+
+def proto_labels(cfg: ModelConfig, batch) -> jnp.ndarray:
+    """The prototype class of each example: the true label for classifiers,
+    the sequence's domain tag for LM tasks (DESIGN.md §5)."""
+    if cfg.family in ("cnn", "resnet"):
+        return batch["label"]
+    return batch["domains"]
+
+
+def task_ce(cfg: ModelConfig, logits, batch) -> jnp.ndarray:
+    """Task cross-entropy: classification CE, or next-token CE for LMs."""
+    if cfg.family in ("cnn", "resnet"):
+        return D.ce_loss(logits, batch["label"])
+    return D.ce_loss(logits, batch["labels"])
+
+
+def student_loss(student_cfg: ModelConfig, sp, batch, global_protos,
+                 proto_mask, alpha, beta_s: float, temperature: float,
+                 teacher_out=None, *, remat: bool = True):
+    """Eq. 8. ``teacher_out=None`` means the professor has decayed away."""
+    out = forward(student_cfg, sp, batch, remat=remat)
+    labels_p = proto_labels(student_cfg, batch)
+    loss = task_ce(student_cfg, out.logits, batch)
+    loss = loss + beta_s * P.proto_mse_loss(out.f1, global_protos, labels_p,
+                                            proto_mask)
+    if teacher_out is not None:
+        kd = D.kd_loss(out.logits, teacher_out.logits, temperature)
+        rep = D.repr_mse_loss(out.f1, teacher_out.f1)
+        loss = loss + alpha * (kd + rep)
+    loss = loss + out.aux * getattr(student_cfg, "router_aux_weight", 0.0)
+    return loss, out
+
+
+def teacher_loss(teacher_cfg: ModelConfig, tp, batch, global_protos,
+                 proto_mask, beta_t: float, *, remat: bool = True):
+    """Eq. 9: L_t = L_CE + beta_t * L_MSE(f_t1, C̄(j))."""
+    out = forward(teacher_cfg, tp, batch, remat=remat)
+    labels_p = proto_labels(teacher_cfg, batch)
+    loss = task_ce(teacher_cfg, out.logits, batch)
+    loss = loss + beta_t * P.proto_mse_loss(out.f1, global_protos, labels_p,
+                                            proto_mask)
+    loss = loss + out.aux * getattr(teacher_cfg, "router_aux_weight", 0.0)
+    return loss, out
+
+
+def make_profe_step(teacher_cfg: ModelConfig, student_cfg: ModelConfig,
+                    fed: FederationConfig, opt_s: Optimizer, opt_t: Optimizer,
+                    *, grad_clip: float = 1.0, remat: bool = True):
+    """Returns ``step(state, batch, teacher_on) -> (state, metrics)``,
+    jitted with a static teacher_on flag."""
+
+    def _step(state: NodeState, batch, teacher_on: bool):
+        alpha = D.alpha_at_round(fed.alpha_s, fed.alpha_limit, state.round_idx)
+        metrics = {}
+
+        teacher = state.teacher
+        opt_t_state = state.opt_t
+        teacher_out = None
+        if teacher_on:
+            def t_loss(tp):
+                out = forward(teacher_cfg, tp, batch, remat=remat)
+                labels_p = proto_labels(teacher_cfg, batch)
+                l = task_ce(teacher_cfg, out.logits, batch)
+                l = l + fed.beta_t * P.proto_mse_loss(
+                    out.f1, state.global_protos, labels_p, state.proto_mask)
+                l = l + out.aux * getattr(teacher_cfg, "router_aux_weight", 0.0)
+                return l, out
+
+            (lt, teacher_out), gt = jax.value_and_grad(t_loss, has_aux=True)(teacher)
+            gt, _ = clip_by_global_norm(gt, grad_clip)
+            teacher, opt_t_state = opt_t.update(gt, opt_t_state, teacher)
+            metrics["loss_t"] = lt
+            teacher_out = jax.tree_util.tree_map(jax.lax.stop_gradient,
+                                                 teacher_out)
+
+        def s_loss(sp):
+            return student_loss(student_cfg, sp, batch, state.global_protos,
+                                state.proto_mask, alpha, fed.beta_s,
+                                fed.kd_temperature, teacher_out, remat=remat)
+
+        (ls, out_s), gs = jax.value_and_grad(s_loss, has_aux=True)(state.student)
+        gs, gnorm = clip_by_global_norm(gs, grad_clip)
+        student, opt_s_state = opt_s.update(gs, state.opt_s, state.student)
+        metrics.update(loss_s=ls, grad_norm_s=gnorm, alpha=alpha)
+
+        new_state = state._replace(student=student, teacher=teacher,
+                                   opt_s=opt_s_state, opt_t=opt_t_state)
+        return new_state, metrics
+
+    return jax.jit(_step, static_argnames=("teacher_on",))
+
+
+def init_node_state(teacher_cfg: ModelConfig, student_cfg: ModelConfig,
+                    rng, opt_s: Optimizer, opt_t: Optimizer,
+                    n_classes: int) -> NodeState:
+    from repro.models import init_params
+    k1, k2 = jax.random.split(rng)
+    teacher = init_params(teacher_cfg, k1)
+    student = init_params(student_cfg, k2)
+    return NodeState(
+        student=student,
+        teacher=teacher,
+        opt_s=opt_s.init(student),
+        opt_t=opt_t.init(teacher),
+        global_protos=jnp.zeros((n_classes, student_cfg.proto_dim), jnp.float32),
+        proto_mask=jnp.zeros((n_classes,), jnp.float32),
+        round_idx=jnp.zeros((), jnp.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# round-boundary: prototypes + wire payloads
+# ---------------------------------------------------------------------------
+
+def compute_local_prototypes(cfg: ModelConfig, params, batches,
+                             n_classes: int):
+    """Stream local data once, accumulate Eq. 3 sums/counts."""
+    sums = jnp.zeros((n_classes, cfg.proto_dim), jnp.float32)
+    counts = jnp.zeros((n_classes,), jnp.float32)
+
+    @jax.jit
+    def acc(sums, counts, batch):
+        out = forward(cfg, params, batch, remat=False)
+        labels_p = proto_labels(cfg, batch)
+        onehot = jax.nn.one_hot(labels_p, n_classes, dtype=jnp.float32)
+        sums = sums + jnp.einsum("nc,np->cp", onehot, out.f1)
+        counts = counts + jnp.sum(onehot, axis=0)
+        return sums, counts
+
+    for batch in batches:
+        sums, counts = acc(sums, counts, batch)
+    protos = sums / jnp.maximum(counts, 1.0)[:, None]
+    return protos, counts
+
+
+def wire_payload(state: NodeState, protos, counts, bits: int):
+    """What ProFe puts on the wire: the quantized student + prototypes.
+
+    Returned payload is already the receiver-side (de-quantized) view plus
+    the exact wire tree used for byte accounting.
+    """
+    wire = {"student": state.student, "protos": protos, "counts": counts}
+    recon = {
+        "student": quantize_dequantize_tree(state.student, bits),
+        "protos": quantize_dequantize_tree(protos, bits),
+        "counts": counts,
+    }
+    return wire, recon

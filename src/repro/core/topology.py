@@ -1,0 +1,37 @@
+"""DFL topologies: who gossips with whom (paper: 20 nodes fully connected)."""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+
+def adjacency(num_nodes: int, topology: str = "full") -> np.ndarray:
+    """Boolean [N, N] adjacency (no self-loops)."""
+    a = np.zeros((num_nodes, num_nodes), bool)
+    if topology == "full":
+        a[:] = True
+        np.fill_diagonal(a, False)
+    elif topology == "ring":
+        for i in range(num_nodes):
+            a[i, (i - 1) % num_nodes] = True
+            a[i, (i + 1) % num_nodes] = True
+        if num_nodes > 1:
+            np.fill_diagonal(a, False)
+    elif topology == "star":
+        a[0, 1:] = True
+        a[1:, 0] = True
+    else:
+        raise ValueError(f"unknown topology {topology!r}")
+    return a
+
+
+def neighbors(adj: np.ndarray, node: int) -> List[int]:
+    return list(np.nonzero(adj[node])[0])
+
+
+def mixing_weights(adj: np.ndarray) -> np.ndarray:
+    """Row-stochastic gossip weights including self: W[i,j] = 1/(deg_i+1)."""
+    n = adj.shape[0]
+    w = adj.astype(np.float64) + np.eye(n)
+    return w / w.sum(axis=1, keepdims=True)

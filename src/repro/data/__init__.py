@@ -1,0 +1,18 @@
+from repro.data.loader import batches, num_batches
+from repro.data.partition import (
+    dirichlet_partition,
+    iid_partition,
+    partition,
+    pathological_partition,
+)
+from repro.data.synthetic import (
+    make_image_dataset,
+    make_token_dataset,
+    train_test_split,
+)
+
+__all__ = [
+    "batches", "num_batches", "dirichlet_partition", "iid_partition",
+    "partition", "pathological_partition", "make_image_dataset",
+    "make_token_dataset", "train_test_split",
+]

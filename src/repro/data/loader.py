@@ -1,0 +1,29 @@
+"""Minimal batcher: numpy arrays -> shuffled jnp minibatches."""
+from __future__ import annotations
+
+from typing import Dict, Iterator
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def batches(data: Dict[str, np.ndarray], batch_size: int, seed: int,
+            *, epochs: int = 1, drop_remainder: bool = True
+            ) -> Iterator[Dict[str, jnp.ndarray]]:
+    n = len(next(iter(data.values())))
+    rng = np.random.default_rng(seed)
+    for _ in range(epochs):
+        perm = rng.permutation(n)
+        end = (n // batch_size) * batch_size if drop_remainder else n
+        if end == 0 and n > 0:   # tiny node datasets: one short batch
+            idx = perm
+            yield {k: jnp.asarray(v[idx]) for k, v in data.items()}
+            continue
+        for i in range(0, end, batch_size):
+            idx = perm[i:i + batch_size]
+            yield {k: jnp.asarray(v[idx]) for k, v in data.items()}
+
+
+def num_batches(n: int, batch_size: int, epochs: int = 1) -> int:
+    per = max(n // batch_size, 1 if n else 0)
+    return per * epochs

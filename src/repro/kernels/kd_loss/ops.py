@@ -1,0 +1,52 @@
+"""Jitted wrapper: arbitrary-leading-dim logits -> mean KD loss.
+
+Pads rows/vocab to block alignment (padded vocab entries are masked to
+-inf on both teacher and student so they contribute nothing; padded rows
+are dropped before the mean).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.kd_loss.kd_loss import (BLOCK_R, BLOCK_V,
+                                           kd_loss_rows_pallas)
+from repro.kernels.kd_loss.ref import kd_loss_rows_ref
+
+NEG = -1e30
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("temperature",))
+def kd_loss(student_logits, teacher_logits, temperature: float = 1.0):
+    """Mean over all rows of KL(p_t||p_s)*T^2. Shapes [..., V]."""
+    v = student_logits.shape[-1]
+    ys = student_logits.reshape(-1, v)
+    yt = teacher_logits.reshape(-1, v)
+    r = ys.shape[0]
+    br = min(BLOCK_R, max(8, 1 << (r - 1).bit_length()))
+    bv = min(BLOCK_V, max(128, 1 << (v - 1).bit_length()))
+    rpad, vpad = (-r) % br, (-v) % bv
+    if vpad:
+        ys = jnp.pad(ys, ((0, 0), (0, vpad)), constant_values=NEG)
+        yt = jnp.pad(yt, ((0, 0), (0, vpad)), constant_values=NEG)
+    if rpad:
+        ys = jnp.pad(ys, ((0, rpad), (0, 0)))
+        yt = jnp.pad(yt, ((0, rpad), (0, 0)))
+    per_row = kd_loss_rows_pallas(ys, yt, temperature,
+                                  block_r=br, block_v=bv,
+                                  interpret=_interpret())
+    return jnp.mean(per_row[:r])
+
+
+@functools.partial(jax.jit, static_argnames=("temperature",))
+def kd_loss_ref_mean(student_logits, teacher_logits, temperature: float = 1.0):
+    v = student_logits.shape[-1]
+    per_row = kd_loss_rows_ref(student_logits.reshape(-1, v),
+                               teacher_logits.reshape(-1, v), temperature)
+    return jnp.mean(per_row)

@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the fused KD kernel (paper Sec. III-A formulas)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def kd_loss_rows_ref(student_logits, teacher_logits,
+                     temperature: float) -> jnp.ndarray:
+    """Per-row KL(p_t || p_s) * T^2 — the direct (materialising) form."""
+    ys = student_logits.astype(jnp.float32) / temperature
+    yt = teacher_logits.astype(jnp.float32) / temperature
+    log_ps = jax.nn.log_softmax(ys, axis=-1)
+    log_pt = jax.nn.log_softmax(yt, axis=-1)
+    pt = jnp.exp(log_pt)
+    return jnp.sum(pt * (log_pt - log_ps), axis=-1) * temperature ** 2

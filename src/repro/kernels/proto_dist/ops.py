@@ -1,0 +1,39 @@
+"""Jitted wrapper: pad to 128-aligned tiles, run the kernel, slice back.
+
+Used by nearest-prototype inference (Eq. 5) and by FedGPD's
+prototype-logit loss where N = batch and C = classes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.proto_dist.proto_dist import (BLOCK_C, BLOCK_N,
+                                                 proto_dist_pallas)
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@jax.jit
+def proto_dists(x, protos):
+    """x: [N, P], protos: [C, P] -> d2 [N, C]."""
+    n, p_dim = x.shape
+    c = protos.shape[0]
+    bn = min(BLOCK_N, max(8, n))
+    bc = min(BLOCK_C, max(8, c))
+    npad, cpad = (-n) % bn, (-c) % bc
+    xp = jnp.pad(x, ((0, npad), (0, 0))) if npad else x
+    pp = jnp.pad(protos, ((0, cpad), (0, 0))) if cpad else protos
+    d2 = proto_dist_pallas(xp, pp, block_n=bn, block_c=bc,
+                           interpret=_interpret())
+    return d2[:n, :c]
+
+
+@jax.jit
+def nearest_prototype(x, protos, proto_mask):
+    """Eq. 5 prediction via the Pallas distance kernel."""
+    d2 = proto_dists(x, protos)
+    d2 = jnp.where(proto_mask[None, :] > 0, d2, jnp.inf)
+    return jnp.argmin(d2, axis=-1)

@@ -1,0 +1,50 @@
+"""Pairwise squared-L2 prototype distances, Pallas TPU kernel (Eq. 5/6).
+
+d2[n, c] = ||x_n - p_c||^2 = ||x_n||^2 - 2 x_n·p_c + ||p_c||^2
+
+The cross term is an [Nb, P] x [P, Cb] matmul — MXU work — while the two
+norms are cheap row/column reductions fused into the same block.  Tiles
+are 128-aligned on both N and C so the MXU systolic array stays full; P
+streams through VMEM in one block (proto_dim <= 8k fits comfortably:
+128·8k·4B = 4 MiB per operand tile).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_N = 128
+BLOCK_C = 128
+
+
+def _proto_dist_kernel(x_ref, p_ref, out_ref):
+    x = x_ref[...].astype(jnp.float32)          # [Nb, P]
+    p = p_ref[...].astype(jnp.float32)          # [Cb, P]
+    xc = jax.lax.dot_general(x, p, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # [Nb, Cb]
+    x2 = jnp.sum(x * x, axis=-1, keepdims=True)                   # [Nb, 1]
+    p2 = jnp.sum(p * p, axis=-1)[None, :]                         # [1, Cb]
+    out_ref[...] = jnp.maximum(x2 - 2.0 * xc + p2, 0.0)
+
+
+def proto_dist_pallas(x, protos, *, block_n: int = BLOCK_N,
+                      block_c: int = BLOCK_C,
+                      interpret: bool = False) -> jnp.ndarray:
+    """x: [N, P], protos: [C, P] -> d2 [N, C] (block-aligned inputs)."""
+    n, p_dim = x.shape
+    c = protos.shape[0]
+    bn, bc = min(block_n, n), min(block_c, c)
+    if n % bn or c % bc:
+        raise ValueError(f"block-align inputs first: {(n, c)} vs {(bn, bc)}")
+    return pl.pallas_call(
+        _proto_dist_kernel,
+        grid=(n // bn, c // bc),
+        in_specs=[
+            pl.BlockSpec((bn, p_dim), lambda i, j: (i, 0)),
+            pl.BlockSpec((bc, p_dim), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, bc), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, c), jnp.float32),
+        interpret=interpret,
+    )(x, protos)

@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the prototype-distance kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def proto_dist_ref(x, protos) -> jnp.ndarray:
+    """Direct pairwise ||x - p||^2, [N, P] x [C, P] -> [N, C]."""
+    x = x.astype(jnp.float32)
+    protos = protos.astype(jnp.float32)
+    diff = x[:, None, :] - protos[None, :, :]
+    return jnp.sum(jnp.square(diff), axis=-1)

@@ -1,0 +1,65 @@
+"""Jitted public API over the quantize kernels.
+
+Pads arbitrary tensors to (8,128)-aligned 2-D, runs the Pallas kernels
+(interpret mode off-TPU), and restores the original shape.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.quantize.quantize import (absmax_pallas, dequantize_pallas,
+                                             quantize_pallas)
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _to_2d(x) -> Tuple[jnp.ndarray, Tuple[int, ...]]:
+    shape = x.shape
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    cols = 512 if n >= 512 else 128
+    pad = (-n) % cols
+    flat = jnp.pad(flat, (0, pad))
+    x2d = flat.reshape(-1, cols)
+    rpad = (-x2d.shape[0]) % 8
+    if rpad:
+        x2d = jnp.pad(x2d, ((0, rpad), (0, 0)))
+    return x2d, shape
+
+
+def _from_2d(x2d, shape) -> jnp.ndarray:
+    n = 1
+    for s in shape:
+        n *= s
+    return x2d.reshape(-1)[:n].reshape(shape)
+
+
+@functools.partial(jax.jit, static_argnames=("bits",))
+def quantize(x, bits: int = 16):
+    """-> (codes int32 [same shape], delta scalar fp32)."""
+    x2d, shape = _to_2d(x)
+    interp = _interpret()
+    qmax = (1 << (bits - 1)) - 1
+    amax = absmax_pallas(x2d, interpret=interp)
+    delta = jnp.maximum(amax / qmax, jnp.finfo(jnp.float32).tiny)
+    codes2d = quantize_pallas(x2d, delta, bits=bits, interpret=interp)
+    return _from_2d(codes2d, shape), delta
+
+
+@jax.jit
+def dequantize(codes, delta):
+    c2d, shape = _to_2d(codes.astype(jnp.int32))
+    out = dequantize_pallas(c2d, delta, interpret=_interpret())
+    return _from_2d(out, shape)
+
+
+@functools.partial(jax.jit, static_argnames=("bits",))
+def quantize_dequantize(x, bits: int = 16):
+    codes, delta = quantize(x, bits)
+    return dequantize(codes, delta).astype(x.dtype)

@@ -1,0 +1,95 @@
+"""Pallas TPU kernels for wire quantization (paper Sec. III-D).
+
+Bandwidth-bound elementwise op: every gossip payload is pushed through
+``Q(x) = floor(x/Δ + 0.5)·Δ`` with Δ = max|x| / 32767 (16-bit).  The
+kernels tile HBM→VMEM in (8,128)-aligned blocks (fp32 min tile) so each
+element is read exactly once:
+
+* ``absmax``   — block-wise |x| max reduction (pass 1, gives Δ)
+* ``quantize`` — codes = clip(floor(x/Δ + .5)) as int16 (pass 2)
+* ``dequantize`` — x' = codes·Δ back to fp32 on the receiver
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_R = 256
+BLOCK_C = 512
+
+
+def _absmax_kernel(x_ref, out_ref):
+    out_ref[0, 0] = jnp.max(jnp.abs(x_ref[...]))
+
+
+def absmax_pallas(x2d, *, interpret: bool = False) -> jnp.ndarray:
+    """x2d: [R, C] (padded to block multiples) -> scalar max|x|."""
+    r, c = x2d.shape
+    br, bc = min(BLOCK_R, r), min(BLOCK_C, c)
+    grid = (pl.cdiv(r, br), pl.cdiv(c, bc))
+    partial = pl.pallas_call(
+        _absmax_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((br, bc), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct(grid, jnp.float32),
+        interpret=interpret,
+    )(x2d.astype(jnp.float32))
+    return jnp.max(partial)
+
+
+def _quantize_kernel(qmax: float, x_ref, delta_ref, out_ref):
+    # exact division (not reciprocal-multiply): bit-identical to the
+    # fp32 oracle, and this kernel is bandwidth-bound anyway
+    delta = delta_ref[0, 0]
+    codes = jnp.floor(x_ref[...].astype(jnp.float32) / delta + 0.5)
+    out_ref[...] = jnp.clip(codes, -qmax - 1, qmax).astype(jnp.int32)
+
+
+def quantize_pallas(x2d, delta, *, bits: int = 16,
+                    interpret: bool = False) -> jnp.ndarray:
+    """x2d: [R, C] fp, delta: scalar -> int32 codes (int16 range).
+
+    int32 block output (TPU-native word size); the wire format narrows to
+    int16 on serialization — byte accounting uses ``bits``, not the
+    in-memory dtype.
+    """
+    r, c = x2d.shape
+    br, bc = min(BLOCK_R, r), min(BLOCK_C, c)
+    qmax = float((1 << (bits - 1)) - 1)
+    delta2d = jnp.reshape(delta.astype(jnp.float32), (1, 1))
+    return pl.pallas_call(
+        functools.partial(_quantize_kernel, qmax),
+        grid=(pl.cdiv(r, br), pl.cdiv(c, bc)),
+        in_specs=[
+            pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((r, c), jnp.int32),
+        interpret=interpret,
+    )(x2d, delta2d)
+
+
+def _dequantize_kernel(codes_ref, delta_ref, out_ref):
+    out_ref[...] = codes_ref[...].astype(jnp.float32) * delta_ref[0, 0]
+
+
+def dequantize_pallas(codes2d, delta, *, interpret: bool = False) -> jnp.ndarray:
+    r, c = codes2d.shape
+    br, bc = min(BLOCK_R, r), min(BLOCK_C, c)
+    delta2d = jnp.reshape(delta.astype(jnp.float32), (1, 1))
+    return pl.pallas_call(
+        _dequantize_kernel,
+        grid=(pl.cdiv(r, br), pl.cdiv(c, bc)),
+        in_specs=[
+            pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((r, c), jnp.float32),
+        interpret=interpret,
+    )(codes2d, delta2d)

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the quantize kernels (mirrors core.quantization)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def absmax_ref(x2d) -> jnp.ndarray:
+    return jnp.max(jnp.abs(x2d.astype(jnp.float32)))
+
+
+def quantize_ref(x2d, delta, *, bits: int = 16) -> jnp.ndarray:
+    qmax = (1 << (bits - 1)) - 1
+    codes = jnp.floor(x2d.astype(jnp.float32) / delta + 0.5)
+    return jnp.clip(codes, -qmax - 1, qmax).astype(jnp.int32)
+
+
+def dequantize_ref(codes2d, delta) -> jnp.ndarray:
+    return codes2d.astype(jnp.float32) * delta
+
+
+def roundtrip_ref(x2d, *, bits: int = 16) -> jnp.ndarray:
+    qmax = (1 << (bits - 1)) - 1
+    delta = jnp.maximum(absmax_ref(x2d) / qmax, jnp.finfo(jnp.float32).tiny)
+    return dequantize_ref(quantize_ref(x2d, delta, bits=bits), delta)

@@ -1,0 +1,238 @@
+"""Static analysis of compiled (SPMD-partitioned) HLO text.
+
+``compiled.cost_analysis()`` counts each while-loop body ONCE, which
+undercounts scan-over-layers models by ~the layer count.  This analyzer
+walks the computation call graph, multiplying loop bodies by their
+``known_trip_count`` (XLA prints it in the while op's backend_config),
+and produces per-device:
+
+* FLOPs          — 2·M·N·K for every dot (+conv approximation)
+* HBM bytes      — operands+results of top-level ops (fusion-internal
+                   values stay in registers/VMEM and are not counted)
+* collective bytes, by kind (ring conventions: all-reduce counts 2x its
+  operand, all-gather counts its gathered output)
+
+All shapes in the partitioned module are per-device shard shapes, so
+results divide by per-chip peaks directly.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "token": 0,
+    "s4": 1, "u4": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b([a-z]\w*?)\[([\d,]*)\]")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*?)\s+([\w\-]+)\(")
+_COMP_HDR_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"?(\d+)"?\}')
+_CALL_RE = re.compile(r"(?:body|calls|to_apply|condition)=%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+
+
+def _shape_list(text: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for m in _SHAPE_RE.finditer(text):
+        dt = m.group(1)
+        if dt not in _DTYPE_BYTES:
+            continue
+        dims = [int(d) for d in m.group(2).split(",") if d]
+        out.append((dt, dims))
+    return out
+
+
+def _nbytes(shapes: List[Tuple[str, List[int]]]) -> int:
+    total = 0
+    for dt, dims in shapes:
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: Dict[str, float] = field(default_factory=dict)
+    coll_counts: Dict[str, float] = field(default_factory=dict)
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        for k, v in other.coll.items():
+            self.coll[k] = self.coll.get(k, 0.0) + v * mult
+        for k, v in other.coll_counts.items():
+            self.coll_counts[k] = self.coll_counts.get(k, 0.0) + v * mult
+
+    @property
+    def coll_total(self) -> float:
+        return sum(self.coll.values())
+
+
+def _split_computations(text: str) -> Tuple[Dict[str, List[str]], str]:
+    comps: Dict[str, List[str]] = {}
+    entry = ""
+    cur: Optional[str] = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_HDR_RE.match(line.strip())
+            if m and line.rstrip().endswith("{"):
+                cur = m.group(2)
+                comps[cur] = []
+                if m.group(1):
+                    entry = cur
+        else:
+            if line.strip() == "}":
+                cur = None
+            else:
+                comps[cur].append(line)
+    return comps, entry
+
+
+def _dot_flops(line: str, symtab: Dict[str, List[Tuple[str, List[int]]]]) -> float:
+    result = _shape_list(line.split(" dot(")[0])
+    if not result:
+        return 0.0
+    _, rdims = result[-1]
+    relems = 1
+    for d in rdims:
+        relems *= d
+    # contracted size from lhs operand shape + lhs_contracting_dims
+    mc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+    ops = re.findall(r"%([\w.\-]+)", line.split("dot(")[1].split(")")[0])
+    k = 1
+    if mc and ops:
+        lhs_shape = symtab.get(ops[0])
+        if lhs_shape:
+            dims = lhs_shape[-1][1]
+            for ci in mc.group(1).split(","):
+                if ci and int(ci) < len(dims):
+                    k *= dims[int(ci)]
+    return 2.0 * relems * k
+
+
+def _conv_flops(line: str, symtab) -> float:
+    result = _shape_list(line.split(" convolution(")[0])
+    if not result:
+        return 0.0
+    _, rdims = result[-1]
+    relems = 1
+    for d in rdims:
+        relems *= d
+    ops = re.findall(r"%([\w.\-]+)",
+                     line.split("convolution(")[1].split(")")[0])
+    if len(ops) >= 2 and ops[1] in symtab:
+        kdims = symtab[ops[1]][-1][1]
+        kelems = 1
+        for d in kdims:
+            kelems *= d
+        # dim_labels ...io-> : output-feature dim is 'o'
+        mdl = re.search(r"dim_labels=\w+_(\w+)->", line)
+        ofeat = kdims[-1]
+        if mdl:
+            labels = mdl.group(1)
+            if "o" in labels:
+                ofeat = kdims[labels.index("o")]
+        return 2.0 * relems * (kelems / max(ofeat, 1))
+    return 0.0
+
+
+def analyze_hlo(text: str) -> Cost:
+    comps, entry = _split_computations(text)
+    if not entry:
+        # fall back: biggest computation
+        entry = max(comps, key=lambda c: len(comps[c])) if comps else ""
+    memo: Dict[str, Cost] = {}
+
+    def comp_cost(name: str) -> Cost:
+        if name in memo:
+            return memo[name]
+        memo[name] = Cost()  # cycle guard
+        lines = comps.get(name, [])
+        symtab: Dict[str, List[Tuple[str, List[int]]]] = {}
+        cost = Cost()
+        for line in lines:
+            s = line.strip()
+            m = _INSTR_RE.match(s)
+            if not m:
+                continue
+            iname, result_txt, op = m.groups()
+            symtab[iname] = _shape_list(result_txt)
+
+            if op == "dot":
+                cost.flops += _dot_flops(s, symtab)
+                cost.bytes += _nbytes(symtab[iname])
+            elif op == "convolution":
+                cost.flops += _conv_flops(s, symtab)
+                cost.bytes += _nbytes(symtab[iname])
+            elif op == "while":
+                trip = 1
+                mt = _TRIP_RE.search(s)
+                if mt:
+                    trip = int(mt.group(1))
+                for child in _CALL_RE.findall(s):
+                    cost.add(comp_cost(child), trip)
+            elif op == "conditional":
+                mb = _BRANCHES_RE.search(s)
+                if mb:
+                    kids = [c.strip().lstrip("%")
+                            for c in mb.group(1).split(",")]
+                    costs = [comp_cost(c) for c in kids if c in comps]
+                    if costs:
+                        biggest = max(costs, key=lambda c: c.flops + c.bytes)
+                        cost.add(biggest)
+            elif op in ("fusion", "call", "map", "reduce", "reduce-window",
+                        "sort", "scatter", "select-and-scatter"):
+                # fusion/call bodies: FLOPs inside count; their internal
+                # values don't touch HBM (fusion) so bytes = call-site IO
+                for child in _CALL_RE.findall(s):
+                    child_cost = comp_cost(child)
+                    cost.flops += child_cost.flops
+                    for k, v in child_cost.coll.items():
+                        cost.coll[k] = cost.coll.get(k, 0.0) + v
+                cost.bytes += _nbytes(symtab[iname]) + _operand_bytes(s, symtab)
+            else:
+                base = op.replace("-start", "")
+                if base in _COLLECTIVES and not op.endswith("-done"):
+                    ob = _operand_bytes(s, symtab)
+                    rb = _nbytes(symtab[iname])
+                    if base == "all-gather":
+                        nb = rb
+                    elif base == "all-reduce":
+                        nb = 2 * ob
+                    else:
+                        nb = ob
+                    cost.coll[base] = cost.coll.get(base, 0.0) + nb
+                    cost.coll_counts[base] = cost.coll_counts.get(base, 0.0) + 1
+                    cost.bytes += ob + rb
+                elif op in ("parameter", "constant", "iota", "tuple",
+                            "get-tuple-element", "bitcast", "reshape",
+                            "broadcast", "after-all", "partition-id"):
+                    pass  # no HBM traffic attributed
+                else:
+                    # top-level elementwise / copy / dynamic-slice etc.
+                    cost.bytes += _nbytes(symtab[iname]) + _operand_bytes(s, symtab)
+        memo[name] = cost
+        return cost
+
+    return comp_cost(entry) if entry else Cost()
+
+
+def _operand_bytes(line: str, symtab) -> int:
+    inside = line.split("(", 2)[-1].split(")")[0] if "(" in line else ""
+    total = 0
+    for opname in re.findall(r"%([\w.\-]+)", inside):
+        if opname in symtab:
+            total += _nbytes(symtab[opname])
+    return total

@@ -1,0 +1,34 @@
+"""Production mesh construction.
+
+Functions, not module-level constants — importing this module never
+touches jax device state (the dry-run sets the 512-device XLA flag before
+any jax initialization, see dryrun.py).
+
+Mesh semantics (DESIGN.md §2):
+  pod   — federation node (ProFe gossip crosses this axis only)
+  data  — in-node batch/FSDP parallelism
+  model — in-node tensor parallelism
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Single-device mesh for CPU tests (axes exist, size 1)."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def mesh_axis_names(mesh) -> tuple:
+    return tuple(mesh.axis_names)
+
+
+def dp_axes(mesh):
+    """Axes the training batch shards over."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)

@@ -1,0 +1,214 @@
+"""The lowered programs (one per input-shape kind) and their input specs.
+
+* ``train_4k``    -> ProFe joint train step (teacher fwd/bwd + student
+                     fwd/bwd with KD/prototype losses + both optimizers)
+* ``prefill_32k`` -> teacher forward building the decode cache
+* ``decode_32k``  -> one-token serve step against a full KV cache
+* ``long_500k``   -> one-token serve step, sub-quadratic path (native
+                     state for ssm/hybrid; rolling window for the rest)
+
+``input_specs`` returns ShapeDtypeStruct stand-ins only — no allocation;
+the dry-run lowers against them.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import (FederationConfig, ModelConfig, ShapeConfig,
+                               TrainConfig)
+from repro.core.profe import NodeState
+from repro.models import (decode_step, derive_student, init_cache,
+                          init_params, prefill)
+from repro.models.model import build_memory
+from repro.optim import make_optimizer
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins)
+# ---------------------------------------------------------------------------
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def batch_struct(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Model inputs for a training/prefill batch."""
+    b, s = shape.global_batch, shape.seq_len
+    batch: Dict[str, Any] = {"tokens": sds((b, s), jnp.int32)}
+    if shape.kind == "train":
+        batch["labels"] = sds((b, s), jnp.int32)
+        batch["domains"] = sds((b,), jnp.int32)
+    if cfg.family == "vlm":
+        batch["image_embed"] = sds((b, cfg.num_image_tokens, cfg.d_model),
+                                   jnp.bfloat16)
+    if cfg.family == "audio":
+        batch["audio_embed"] = sds((b, cfg.encoder_seq, cfg.d_model),
+                                   jnp.bfloat16)
+    return batch
+
+
+def decode_cache_len(cfg: ModelConfig, shape: ShapeConfig) -> int:
+    """long_500k uses the sub-quadratic path: native state for ssm/hybrid,
+    rolling ``sliding_window_serve`` KV for full-attention archs."""
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return cfg.sliding_window_serve
+    return shape.seq_len
+
+
+def decode_rolling(cfg: ModelConfig, shape: ShapeConfig) -> bool:
+    return shape.name == "long_500k" and not cfg.subquadratic
+
+
+def decode_struct(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    b = shape.global_batch
+    cache_len = decode_cache_len(cfg, shape)
+    cache = jax.eval_shape(
+        lambda: init_cache(cfg, b, cache_len, jnp.bfloat16))
+    d: Dict[str, Any] = {
+        "token": sds((b, 1), jnp.int32),
+        "index": sds((), jnp.int32),
+        "cache": cache,
+    }
+    if cfg.family == "vlm":
+        d["memory"] = sds((b, cfg.num_image_tokens, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "audio":
+        d["memory"] = sds((b, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+    return d
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    if shape.kind in ("train", "prefill"):
+        return {"batch": batch_struct(cfg, shape)}
+    return decode_struct(cfg, shape)
+
+
+# ---------------------------------------------------------------------------
+# programs
+# ---------------------------------------------------------------------------
+
+def make_profe_train_fn(teacher_cfg: ModelConfig, student_cfg: ModelConfig,
+                        fed: FederationConfig, train: TrainConfig):
+    """The jittable ProFe joint step — same math as core.profe.make_profe_step
+    but exposed un-jitted so the dry-run controls jit/shardings."""
+    from repro.core import distillation as D
+    from repro.core import prototypes as P
+    from repro.core.profe import proto_labels, task_ce, student_loss
+    from repro.optim import clip_by_global_norm
+    from repro.models import forward
+
+    opt_s = make_optimizer(train.optimizer, train.learning_rate,
+                           weight_decay=train.weight_decay)
+    opt_t = make_optimizer(train.optimizer, train.learning_rate,
+                           weight_decay=train.weight_decay)
+
+    def micro_grads(state: NodeState, batch, alpha):
+        """Teacher+student grads and losses for ONE microbatch."""
+        def t_loss(tp):
+            out = forward(teacher_cfg, tp, batch, remat=train.remat)
+            labels_p = proto_labels(teacher_cfg, batch)
+            l = task_ce(teacher_cfg, out.logits, batch)
+            l = l + fed.beta_t * P.proto_mse_loss(
+                out.f1, state.global_protos, labels_p, state.proto_mask)
+            l = l + out.aux * teacher_cfg.router_aux_weight
+            return l, out
+
+        (lt, teacher_out), gt = jax.value_and_grad(t_loss, has_aux=True)(
+            state.teacher)
+        teacher_out = jax.tree_util.tree_map(jax.lax.stop_gradient,
+                                             teacher_out)
+
+        def s_loss(sp):
+            return student_loss(student_cfg, sp, batch, state.global_protos,
+                                state.proto_mask, alpha, fed.beta_s,
+                                fed.kd_temperature, teacher_out,
+                                remat=train.remat)
+
+        (ls, _), gs = jax.value_and_grad(s_loss, has_aux=True)(state.student)
+        return gt, gs, lt, ls
+
+    def train_step(state: NodeState, batch):
+        alpha = D.alpha_at_round(fed.alpha_s, fed.alpha_limit,
+                                 state.round_idx)
+        m = train.microbatches
+        if m <= 1:
+            gt, gs, lt, ls = micro_grads(state, batch, alpha)
+        else:
+            micro = jax.tree_util.tree_map(
+                lambda x: x.reshape((m, x.shape[0] // m) + x.shape[1:]),
+                batch)
+
+            def mb_step(carry, mb):
+                gt_a, gs_a, lt_a, ls_a = carry
+                gt, gs, lt, ls = micro_grads(state, mb, alpha)
+                add = lambda a, g: jax.tree_util.tree_map(
+                    lambda x, y: x + y.astype(x.dtype), a, g)
+                return (add(gt_a, gt), add(gs_a, gs), lt_a + lt, ls_a + ls), None
+
+            # accumulate grads in the parameter dtype: fp32 masters get
+            # fp32 accumulation; bf16-param configs (>=90B) accept bf16
+            # accumulators (halves the dominant train-step temp)
+            zeros_like_param = lambda t: jax.tree_util.tree_map(
+                lambda x: jnp.zeros(x.shape, x.dtype), t)
+            init = (zeros_like_param(state.teacher),
+                    zeros_like_param(state.student),
+                    jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32))
+            (gt, gs, lt, ls), _ = jax.lax.scan(mb_step, init, micro)
+            scale = 1.0 / m
+            gt = jax.tree_util.tree_map(lambda g: g * scale, gt)
+            gs = jax.tree_util.tree_map(lambda g: g * scale, gs)
+            lt, ls = lt * scale, ls * scale
+
+        gt, _ = clip_by_global_norm(gt, train.grad_clip)
+        teacher, opt_t_state = opt_t.update(gt, state.opt_t, state.teacher)
+        gs, gn = clip_by_global_norm(gs, train.grad_clip)
+        student, opt_s_state = opt_s.update(gs, state.opt_s, state.student)
+        new_state = state._replace(student=student, teacher=teacher,
+                                   opt_s=opt_s_state, opt_t=opt_t_state,
+                                   round_idx=state.round_idx)
+        metrics = {"loss_s": ls, "loss_t": lt, "grad_norm_s": gn,
+                   "alpha": alpha}
+        return new_state, metrics
+
+    return train_step, (opt_s, opt_t)
+
+
+def make_prefill_fn(cfg: ModelConfig):
+    def prefill_step(params, batch):
+        return prefill(cfg, params, batch)
+    return prefill_step
+
+
+def make_serve_fn(cfg: ModelConfig, shape: ShapeConfig):
+    rolling = decode_rolling(cfg, shape)
+
+    def serve_step(params, token, index, cache, memory=None):
+        return decode_step(cfg, params, token, index, cache, memory,
+                           rolling=rolling)
+    return serve_step
+
+
+def node_state_struct(teacher_cfg: ModelConfig, student_cfg: ModelConfig,
+                      train: TrainConfig, n_classes: int):
+    """ShapeDtypeStruct tree for the full ProFe NodeState (no allocation)."""
+    opt_s = make_optimizer(train.optimizer, train.learning_rate)
+    opt_t = make_optimizer(train.optimizer, train.learning_rate)
+
+    def build():
+        k = jax.random.PRNGKey(0)
+        k1, k2 = jax.random.split(k)
+        teacher = init_params(teacher_cfg, k1)
+        student = init_params(student_cfg, k2)
+        return NodeState(
+            student=student, teacher=teacher,
+            opt_s=opt_s.init(student), opt_t=opt_t.init(teacher),
+            global_protos=jnp.zeros((n_classes, student_cfg.proto_dim),
+                                    jnp.float32),
+            proto_mask=jnp.zeros((n_classes,), jnp.float32),
+            round_idx=jnp.zeros((), jnp.int32),
+        )
+
+    return jax.eval_shape(build)

@@ -1,0 +1,199 @@
+"""Roofline extraction from compiled dry-run artifacts.
+
+Three terms per (arch, shape, mesh), in seconds (TPU v5e targets):
+
+    compute    = HLO_FLOPs   / (chips * 197e12  bf16 FLOP/s)
+    memory     = HLO_bytes   / (chips * 819e9   HBM B/s)
+    collective = coll_bytes  / (chips * 50e9    ICI B/s per link)
+
+``compiled.cost_analysis()`` is per-device (the SPMD-partitioned module),
+so per-device numbers divide by per-chip peaks directly; totals in the
+report multiply back by chip count.
+
+Collective bytes are parsed from the compiled HLO text: the operand
+bytes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute (ring-algorithm convention: all-reduce counts 2x its
+operand; all-gather counts its output).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, Optional
+
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # B/s / chip
+ICI_BW = 50e9            # B/s / link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _first_shape_bytes(text: str) -> int:
+    """Bytes of the first (possibly tuple) shape literal in ``text``."""
+    total = 0
+    for m in _SHAPE_RE.finditer(text):
+        total += _shape_bytes(m.group(1), m.group(2))
+    return total
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, Any]:
+    """Per-device bytes moved by collectives, by op kind."""
+    by_kind: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    counts: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(r"%?[\w.\-]+\s*=\s*(.+?)\s+([\w\-]+)\(", line)
+        if not m:
+            continue
+        op = m.group(2)
+        # start ops carry the payload; done ops would double-count
+        base = op.replace("-start", "")
+        if base not in _COLLECTIVES or op.endswith("-done"):
+            continue
+        result_shapes = m.group(1)
+        paren = line[line.index("("):]
+        operand_bytes = _first_shape_bytes(paren.split(")")[0])
+        result_bytes = _first_shape_bytes(result_shapes)
+        if base == "all-gather":
+            nbytes = result_bytes            # gathered output crosses links
+        elif base == "all-reduce":
+            nbytes = 2 * operand_bytes       # ring reduce+broadcast
+        else:
+            nbytes = operand_bytes
+        by_kind[base] += nbytes
+        counts[base] += 1
+    total = sum(by_kind.values())
+    return {"total": total, "by_kind": by_kind, "counts": counts}
+
+
+# ---------------------------------------------------------------------------
+# analytic model FLOPs (6·N·D train / 2·N·D inference, N_active for MoE)
+# ---------------------------------------------------------------------------
+
+def approx_params(cfg, *, active_only: bool = False) -> int:
+    """Analytic parameter count from the config (transformer families)."""
+    if cfg.family in ("cnn", "resnet"):
+        return 0  # paper models: counted from the real tree instead
+    d, ff, L, v = cfg.d_model, cfg.d_ff, cfg.num_layers, cfg.vocab_size
+    hd = cfg.head_dim
+    attn = d * cfg.num_heads * hd + 2 * d * cfg.num_kv_heads * hd \
+        + cfg.num_heads * hd * d
+    if cfg.family == "ssm":
+        d_inner = cfg.ssm_expand * d
+        nheads = d_inner // 64
+        mixer = d * (2 * d_inner + 2 * cfg.ssm_state + nheads) + d_inner * d
+        return v * d + L * mixer
+    if cfg.ffn == "gated":
+        ffn_dense = 3 * d * ff
+    else:
+        ffn_dense = 2 * d * ff
+    if cfg.is_moe:
+        e_count = 1 if active_only else cfg.num_experts
+        k = cfg.num_experts_per_tok if active_only else 1
+        ffn_p = (ffn_dense * e_count * (k if active_only else 1)) + d * cfg.num_experts
+    else:
+        ffn_p = ffn_dense
+    from repro.models.transformer import block_sequence
+    seq = block_sequence(cfg)
+    total = v * d
+    for kind in seq:
+        if kind in ("attn", "lattn", "battn"):
+            total += attn + ffn_p
+        elif kind == "cross":
+            total += 2 * attn + ffn_p
+        elif kind == "rec":
+            total += 3 * d * d + ffn_dense  # in_rec/in_gate/out + gates
+    if cfg.family == "audio":
+        total += cfg.encoder_layers * (attn + ffn_p)
+    return int(total)
+
+
+def model_flops(cfg, shape) -> float:
+    n = approx_params(cfg, active_only=cfg.is_moe)
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    if shape.kind == "train":
+        # teacher (6ND) + student forward/backward: student counted via its
+        # own config at the call site; here N is the *teacher*.
+        return 6.0 * n * tokens
+    return 2.0 * n * tokens
+
+
+def roofline_report(cfg, shape, mesh, mem, cost, coll,
+                    hlo_text: Optional[str] = None) -> Dict[str, Any]:
+    chips = mesh.devices.size
+    if hlo_text is not None:
+        # static analysis with while-loop trip counts (cost_analysis counts
+        # loop bodies once — useless for scan-over-layers models)
+        from repro.launch.hlo_analysis import analyze_hlo
+        an = analyze_hlo(hlo_text)
+        flops_dev = float(an.flops)
+        bytes_dev = float(an.bytes)
+        coll_dev = float(an.coll_total)
+        coll = {"total": coll_dev,
+                "by_kind": {k: float(v) for k, v in an.coll.items()},
+                "counts": {k: float(v) for k, v in an.coll_counts.items()}}
+    else:
+        flops_dev = float(cost.get("flops", 0.0))
+        bytes_dev = float(cost.get("bytes accessed", 0.0))
+        coll_dev = float(coll["total"])
+
+    t_compute = flops_dev / PEAK_FLOPS
+    t_memory = bytes_dev / HBM_BW
+    t_coll = coll_dev / ICI_BW
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll}
+    dominant = max(terms, key=terms.get)
+
+    mf = model_flops(cfg, shape)
+    flops_total = flops_dev * chips
+    report = {
+        "chips": chips,
+        "xla_cost_analysis_flops": float(cost.get("flops", 0.0)),
+        "flops_per_device": flops_dev,
+        "flops_total": flops_total,
+        "bytes_per_device": bytes_dev,
+        "collective_bytes_per_device": coll_dev,
+        "collective_by_kind": coll["by_kind"],
+        "collective_counts": coll["counts"],
+        "terms_s": terms,
+        "dominant": dominant.replace("_s", ""),
+        "model_flops_6nd": mf,
+        "useful_flops_ratio": (mf / flops_total) if flops_total else None,
+        "memory_analysis": _mem_dict(mem),
+    }
+    return report
+
+
+def _mem_dict(mem) -> Dict[str, Any]:
+    out = {}
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "alias_size_in_bytes",
+                 "generated_code_size_in_bytes"):
+        try:
+            out[attr] = int(getattr(mem, attr))
+        except Exception:
+            pass
+    if "argument_size_in_bytes" in out and "temp_size_in_bytes" in out:
+        out["peak_bytes_estimate"] = (out["argument_size_in_bytes"]
+                                      + out["output_size_in_bytes"]
+                                      + out["temp_size_in_bytes"]
+                                      - out.get("alias_size_in_bytes", 0))
+        out["fits_16gb_hbm"] = out["peak_bytes_estimate"] <= 16 * 1024 ** 3
+    return out

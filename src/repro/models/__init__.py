@@ -1,0 +1,16 @@
+from repro.models.model import (
+    ModelOutput,
+    decode_step,
+    derive_student,
+    forward,
+    init_cache,
+    init_params,
+    param_bytes,
+    param_count,
+    prefill,
+)
+
+__all__ = [
+    "ModelOutput", "decode_step", "derive_student", "forward", "init_cache",
+    "init_params", "param_bytes", "param_count", "prefill",
+]

@@ -1,0 +1,167 @@
+"""Grouped-query attention with RoPE, qk-norm, KV-cache and sliding windows.
+
+Supports the attention variants used by the assigned architectures:
+
+* GQA with arbitrary ``num_kv_heads`` (qwen3, starcoder2, yi, llama4, ...)
+* optional qk-norm (qwen3) and QKV bias (qwen1.5)
+* local / sliding-window masks (recurrentgemma local-attn layers, and the
+  long-context serving path for dense archs)
+* cross-attention against an encoder memory (whisper, llama-3.2-vision)
+* single-token decode against a (optionally rolling) KV cache
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.sharding import shard_act
+
+
+def init_attention(rng, d_model: int, num_heads: int, num_kv_heads: int,
+                   head_dim: int, *, qkv_bias: bool = False,
+                   qk_norm: bool = False, dtype=jnp.float32):
+    ks = jax.random.split(rng, 4)
+    p = {
+        "wq": L.init_dense(ks[0], d_model, num_heads * head_dim, bias=qkv_bias, dtype=dtype),
+        "wk": L.init_dense(ks[1], d_model, num_kv_heads * head_dim, bias=qkv_bias, dtype=dtype),
+        "wv": L.init_dense(ks[2], d_model, num_kv_heads * head_dim, bias=qkv_bias, dtype=dtype),
+        "wo": L.init_dense(ks[3], num_heads * head_dim, d_model, dtype=dtype),
+    }
+    if qk_norm:
+        p["q_norm"] = L.init_rmsnorm(head_dim, dtype)
+        p["k_norm"] = L.init_rmsnorm(head_dim, dtype)
+    return p
+
+
+def _split_heads(x, n_heads, head_dim):
+    return x.reshape(x.shape[:-1] + (n_heads, head_dim))
+
+
+def project_q(params, x, positions, *, num_heads, head_dim, rope_theta,
+              use_rope=True, norm_eps=1e-6):
+    q = shard_act(_split_heads(L.dense(params["wq"], x), num_heads,
+                               head_dim), "bthd")
+    if "q_norm" in params:
+        q = L.rmsnorm(params["q_norm"], q, norm_eps)
+    if use_rope:
+        q = L.apply_rope(q, positions, rope_theta)
+    return q
+
+
+def project_kv(params, x, positions, *, num_kv_heads, head_dim, rope_theta,
+               use_rope=True, norm_eps=1e-6):
+    k = shard_act(_split_heads(L.dense(params["wk"], x), num_kv_heads,
+                               head_dim), "bthd")
+    v = shard_act(_split_heads(L.dense(params["wv"], x), num_kv_heads,
+                               head_dim), "bthd")
+    if "k_norm" in params:
+        k = L.rmsnorm(params["k_norm"], k, norm_eps)
+    if use_rope:
+        k = L.apply_rope(k, positions, rope_theta)
+    return k, v
+
+
+def gqa_attend(q, k, v, mask: Optional[jnp.ndarray]):
+    """q: [B,S,NQ,HD], k/v: [B,T,NKV,HD], mask broadcastable to [B,1,1,S,T]."""
+    b, s, nq, hd = q.shape
+    nkv = k.shape[2]
+    groups = nq // nkv
+    qg = q.reshape(b, s, nkv, groups, hd)
+    scale = hd ** -0.5
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    if mask is not None:
+        scores = jnp.where(mask[:, None, None, :, :] if mask.ndim == 3
+                           else mask[None, None, None, :, :],
+                           scores, jnp.finfo(jnp.float32).min)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    ctx = jnp.einsum("bkgst,btkd->bskgd", probs, v)
+    return ctx.reshape(b, s, nq * hd)
+
+
+def attention(params, x, positions, mask, *, num_heads, num_kv_heads,
+              head_dim, rope_theta=10_000.0, use_rope=True, norm_eps=1e-6):
+    """Full self-attention over a sequence (training / prefill)."""
+    q = project_q(params, x, positions, num_heads=num_heads, head_dim=head_dim,
+                  rope_theta=rope_theta, use_rope=use_rope, norm_eps=norm_eps)
+    k, v = project_kv(params, x, positions, num_kv_heads=num_kv_heads,
+                      head_dim=head_dim, rope_theta=rope_theta,
+                      use_rope=use_rope, norm_eps=norm_eps)
+    ctx = gqa_attend(q, k, v, mask)
+    return L.dense(params["wo"], ctx), (k, v)
+
+
+def cross_attention(params, x, memory, *, num_heads, num_kv_heads, head_dim,
+                    norm_eps=1e-6):
+    """Cross-attention: queries from ``x``, keys/values from ``memory``.
+
+    No RoPE and no causal mask (encoder memory is fully visible).
+    Runs blockwise for long query sequences so the [S, T_mem] score
+    tensor never materialises (vision-90b: 4096 x 1600 x heads in f32
+    dominated the train-step temps).
+    """
+    b, s, _ = x.shape
+    t = memory.shape[1]
+    pos_q = jnp.zeros((s,), jnp.int32)
+    pos_kv = jnp.zeros((t,), jnp.int32)
+    q = project_q(params, x, pos_q, num_heads=num_heads, head_dim=head_dim,
+                  rope_theta=1.0, use_rope=False, norm_eps=norm_eps)
+    k, v = project_kv(params, memory, pos_kv, num_kv_heads=num_kv_heads,
+                      head_dim=head_dim, rope_theta=1.0, use_rope=False,
+                      norm_eps=norm_eps)
+    if s > 1024:
+        from repro.models.blockwise import blockwise_attention
+        ctx = blockwise_attention(q, k, v, causal=False, q_block=512,
+                                  kv_block=512)
+        ctx = ctx.reshape(b, s, -1)
+    else:
+        ctx = gqa_attend(q, k, v, None)
+    return L.dense(params["wo"], ctx)
+
+
+# ---------------------------------------------------------------------------
+# KV cache (decode)
+# ---------------------------------------------------------------------------
+
+def init_kv_cache(batch: int, cache_len: int, num_kv_heads: int,
+                  head_dim: int, dtype):
+    return {
+        "k": jnp.zeros((batch, cache_len, num_kv_heads, head_dim), dtype),
+        "v": jnp.zeros((batch, cache_len, num_kv_heads, head_dim), dtype),
+    }
+
+
+def decode_attention(params, x, cache, cache_index, *, num_heads,
+                     num_kv_heads, head_dim, rope_theta=10_000.0,
+                     use_rope=True, norm_eps=1e-6, rolling: bool = False):
+    """One-token decode. ``x``: [B,1,D]; ``cache_index``: scalar int32
+    (absolute position of the new token). Returns (out, new_cache).
+
+    ``rolling=True`` treats the cache as a circular window buffer of
+    length ``cache[k].shape[1]`` (sliding-window serving).
+    """
+    b = x.shape[0]
+    cache_len = cache["k"].shape[1]
+    pos = jnp.full((1,), cache_index, jnp.int32)
+    q = project_q(params, x, pos, num_heads=num_heads, head_dim=head_dim,
+                  rope_theta=rope_theta, use_rope=use_rope, norm_eps=norm_eps)
+    k_new, v_new = project_kv(params, x, pos, num_kv_heads=num_kv_heads,
+                              head_dim=head_dim, rope_theta=rope_theta,
+                              use_rope=use_rope, norm_eps=norm_eps)
+    slot = jnp.where(rolling, cache_index % cache_len, cache_index)
+    k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype),
+                                     (0, slot, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype),
+                                     (0, slot, 0, 0))
+    if rolling:
+        # once the buffer has wrapped every slot is valid
+        j = jnp.arange(cache_len)[None, :]
+        mask = (j <= cache_index) | (cache_index >= cache_len)
+    else:
+        mask = jnp.arange(cache_len)[None, :] <= cache_index
+    ctx = gqa_attend(q, k, v, mask[None])  # mask -> [1,1,T] broadcast path
+    out = L.dense(params["wo"], ctx)
+    return out, {"k": k, "v": v}

@@ -1,0 +1,61 @@
+"""Two-layer CNN (the paper's MNIST teacher/student).
+
+Teacher uses ``cnn_channels``; the student uses half the channels
+(Sec. IV: "a two-layer CNN is chosen as the teacher network, having half
+of the channels in the student network").  ``f_1(x)`` — the prototype
+representation — is the output of the first fully-connected layer
+(Sec. III-B: "prototypes are calculated using the output of the model
+first linear layer").
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import ModelConfig
+from repro.models import layers as L
+
+
+def _conv(rng, h, w, cin, cout, dtype):
+    return {"kernel": L.he_init(rng, (h, w, cin, cout), h * w * cin, dtype),
+            "bias": jnp.zeros((cout,), dtype)}
+
+
+def _apply_conv(p, x):
+    y = jax.lax.conv_general_dilated(
+        x, p["kernel"].astype(x.dtype), window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + p["bias"].astype(x.dtype)
+
+
+def _maxpool(x):
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                 (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+
+
+def init_cnn(cfg: ModelConfig, rng):
+    dt = jnp.dtype(cfg.param_dtype)
+    h, w, cin = cfg.input_hw
+    c1, c2 = cfg.cnn_channels
+    ks = jax.random.split(rng, 4)
+    flat = (h // 4) * (w // 4) * c2
+    return {
+        "conv1": _conv(ks[0], 3, 3, cin, c1, dt),
+        "conv2": _conv(ks[1], 3, 3, c1, c2, dt),
+        "fc1": L.init_dense(ks[2], flat, cfg.proto_dim, bias=True, dtype=dt),
+        "fc2": L.init_dense(ks[3], cfg.proto_dim, cfg.num_classes, bias=True,
+                            dtype=dt),
+    }
+
+
+def cnn_forward(cfg: ModelConfig, params, image) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """image: [B,H,W,C] -> (logits [B,K], f1 [B, proto_dim])."""
+    x = image.astype(jnp.dtype(cfg.dtype))
+    x = _maxpool(jax.nn.relu(_apply_conv(params["conv1"], x)))
+    x = _maxpool(jax.nn.relu(_apply_conv(params["conv2"], x)))
+    x = x.reshape(x.shape[0], -1)
+    f1 = jax.nn.relu(L.dense(params["fc1"], x))
+    logits = L.dense(params["fc2"], f1).astype(jnp.float32)
+    return logits, f1.astype(jnp.float32)

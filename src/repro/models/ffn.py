@@ -1,0 +1,39 @@
+"""Feed-forward blocks: gated (SwiGLU-style) and plain MLP."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.sharding import shard_act
+
+
+def init_gated_ffn(rng, d_model: int, d_ff: int, dtype=jnp.float32):
+    ks = jax.random.split(rng, 3)
+    return {
+        "wi_gate": L.init_dense(ks[0], d_model, d_ff, dtype=dtype),
+        "wi_up": L.init_dense(ks[1], d_model, d_ff, dtype=dtype),
+        "wo": L.init_dense(ks[2], d_ff, d_model, dtype=dtype),
+    }
+
+
+def gated_ffn(params, x, act_name: str = "silu"):
+    act = L.activation(act_name)
+    gate = act(shard_act(L.dense(params["wi_gate"], x), "btf"))
+    up = shard_act(L.dense(params["wi_up"], x), "btf")
+    return L.dense(params["wo"], gate * up)
+
+
+def init_mlp(rng, d_model: int, d_ff: int, *, bias: bool = True,
+             dtype=jnp.float32):
+    ks = jax.random.split(rng, 2)
+    return {
+        "wi": L.init_dense(ks[0], d_model, d_ff, bias=bias, dtype=dtype),
+        "wo": L.init_dense(ks[1], d_ff, d_model, bias=bias, dtype=dtype),
+    }
+
+
+def mlp(params, x, act_name: str = "gelu"):
+    act = L.activation(act_name)
+    return L.dense(params["wo"], act(shard_act(L.dense(params["wi"], x),
+                                               "btf")))

@@ -1,0 +1,168 @@
+"""Core functional building blocks (no flax — plain pytrees of arrays).
+
+Conventions
+-----------
+* ``init_*`` functions take an ``rng`` first and return a params pytree
+  (nested dicts of ``jnp.ndarray``).
+* ``apply``-style functions take ``(params, x, ...)`` and are pure.
+* Params live in ``param_dtype`` (fp32 by default); compute happens in
+  ``dtype`` (bf16 by default). Casting is the caller's job via
+  :func:`cast_tree`.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def truncated_normal_init(rng, shape, stddev, dtype=jnp.float32):
+    unscaled = jax.random.truncated_normal(rng, -2.0, 2.0, shape, jnp.float32)
+    return (unscaled * stddev).astype(dtype)
+
+
+def lecun_init(rng, shape, fan_in: Optional[int] = None, dtype=jnp.float32):
+    fan_in = fan_in if fan_in is not None else shape[0]
+    return truncated_normal_init(rng, shape, 1.0 / math.sqrt(max(fan_in, 1)), dtype)
+
+
+def he_init(rng, shape, fan_in: Optional[int] = None, dtype=jnp.float32):
+    fan_in = fan_in if fan_in is not None else int(jnp.prod(jnp.asarray(shape[:-1])))
+    return truncated_normal_init(rng, shape, math.sqrt(2.0 / max(fan_in, 1)), dtype)
+
+
+def cast_tree(tree, dtype):
+    """Cast every floating array in ``tree`` to ``dtype`` (for bf16 compute)."""
+    def _cast(x):
+        if isinstance(x, jnp.ndarray) and jnp.issubdtype(x.dtype, jnp.floating):
+            return x.astype(dtype)
+        return x
+    return jax.tree_util.tree_map(_cast, tree)
+
+
+# ---------------------------------------------------------------------------
+# dense / embedding
+# ---------------------------------------------------------------------------
+
+def init_dense(rng, in_dim: int, out_dim: int, *, bias: bool = False,
+               dtype=jnp.float32):
+    p = {"kernel": lecun_init(rng, (in_dim, out_dim), in_dim, dtype)}
+    if bias:
+        p["bias"] = jnp.zeros((out_dim,), dtype)
+    return p
+
+
+def dense(params, x):
+    y = x @ params["kernel"].astype(x.dtype)
+    if "bias" in params:
+        y = y + params["bias"].astype(x.dtype)
+    return y
+
+
+def init_embedding(rng, vocab: int, dim: int, dtype=jnp.float32):
+    return {"table": truncated_normal_init(rng, (vocab, dim), 1.0, dtype)}
+
+
+def embed(params, tokens, dtype):
+    return params["table"].astype(dtype)[tokens]
+
+
+def unembed(params, x):
+    """Tied read-out: logits = x @ table^T (fp32 accumulation)."""
+    table = params["table"].astype(x.dtype)
+    return jnp.einsum("...d,vd->...v", x, table,
+                      preferred_element_type=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(dim: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((dim,), dtype)}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def init_layernorm(dim: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)}
+
+
+def layernorm(params, x, eps: float = 1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# activations
+# ---------------------------------------------------------------------------
+
+_ACTIVATIONS = {
+    "silu": jax.nn.silu,
+    "gelu": jax.nn.gelu,
+    "relu": jax.nn.relu,
+    "tanh": jnp.tanh,
+}
+
+
+def activation(name: str):
+    return _ACTIVATIONS[name]
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float = 10_000.0):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 10_000.0):
+    """x: [..., S, H, D] (D even), positions: broadcastable to [..., S]."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)                    # [D/2]
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # [..., S, D/2]
+    cos = jnp.cos(angles)[..., None, :]                   # [..., S, 1, D/2]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# masks
+# ---------------------------------------------------------------------------
+
+def causal_mask(q_len: int, kv_len: int, *, q_offset: int = 0,
+                window: int = 0) -> jnp.ndarray:
+    """[q_len, kv_len] boolean mask. ``window>0`` = local/sliding attention."""
+    q_pos = q_offset + jnp.arange(q_len)[:, None]
+    k_pos = jnp.arange(kv_len)[None, :]
+    mask = k_pos <= q_pos
+    if window > 0:
+        mask = mask & (k_pos > q_pos - window)
+    return mask
+
+
+def decode_mask(kv_len: int, cache_index, *, window: int = 0) -> jnp.ndarray:
+    """[1, kv_len] mask for single-token decode at position ``cache_index``."""
+    k_pos = jnp.arange(kv_len)[None, :]
+    mask = k_pos <= cache_index
+    if window > 0:
+        mask = mask & (k_pos > cache_index - window)
+    return mask

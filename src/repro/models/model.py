@@ -1,0 +1,202 @@
+"""Unified model API over every family.
+
+Every model — CNN, ResNet, or any transformer family — exposes:
+
+* ``init_params(cfg, rng)``
+* ``forward(cfg, params, batch)``  -> :class:`ModelOutput` (logits, f1, aux)
+* ``prefill(cfg, params, batch)``  -> (logits, cache)          [LM families]
+* ``decode_step(cfg, params, token, index, cache, ...)``       [LM families]
+* ``derive_student(cfg)``          -> the ProFe student config
+
+``f1`` is the ProFe prototype representation f_1(x): the first-linear-layer
+output for CNN/ResNet (paper Sec. III-B) and the projected mean-pooled
+final hidden state for LM families (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import ModelConfig
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.models.cnn import cnn_forward, init_cnn
+from repro.models.resnet import init_resnet, resnet_forward
+from repro.sharding import shard_act
+
+
+class ModelOutput(NamedTuple):
+    logits: jnp.ndarray   # [B,S,V] (LM) or [B,K] (classifier)
+    f1: jnp.ndarray       # [B, proto_dim] prototype representation
+    aux: jnp.ndarray      # scalar auxiliary loss (MoE load balance)
+
+
+def _encoder_cfg(cfg: ModelConfig) -> ModelConfig:
+    """Whisper encoder: bidirectional attention stack over frame embeddings."""
+    return cfg.replace(family="dense", block_pattern=("battn",),
+                       num_layers=cfg.encoder_layers, num_experts=0)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, rng) -> Dict[str, Any]:
+    if cfg.family == "cnn":
+        return init_cnn(cfg, rng)
+    if cfg.family == "resnet":
+        return init_resnet(cfg, rng)
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(rng, 5)
+    params: Dict[str, Any] = {
+        "embed": L.init_embedding(ks[0], cfg.vocab_size, cfg.d_model, dt),
+        "stack": T.init_stack(cfg, ks[1]),
+        "final_norm": (L.init_rmsnorm(cfg.d_model, dt) if cfg.norm == "rms"
+                       else L.init_layernorm(cfg.d_model, dt)),
+        "proto_proj": L.init_dense(ks[2], cfg.d_model, cfg.proto_dim,
+                                   bias=True, dtype=dt),
+    }
+    if cfg.family == "audio":
+        params["encoder"] = {
+            "stack": T.init_stack(_encoder_cfg(cfg), ks[3]),
+            "norm": (L.init_rmsnorm(cfg.d_model, dt) if cfg.norm == "rms"
+                     else L.init_layernorm(cfg.d_model, dt)),
+        }
+    if cfg.family == "vlm":
+        params["img_proj"] = L.init_dense(ks[4], cfg.d_model, cfg.d_model,
+                                          dtype=dt)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# memory (cross-attention source) from stubbed frontends
+# ---------------------------------------------------------------------------
+
+def build_memory(cfg: ModelConfig, params, batch, *, remat: bool = True):
+    if cfg.family == "vlm":
+        img = batch["image_embed"].astype(jnp.dtype(cfg.dtype))
+        return L.dense(params["img_proj"], img)
+    if cfg.family == "audio":
+        enc_cfg = _encoder_cfg(cfg)
+        x = batch["audio_embed"].astype(jnp.dtype(cfg.dtype))
+        pos = jnp.arange(x.shape[1])
+        x, _ = T.stack_forward(enc_cfg, params["encoder"]["stack"], x, pos,
+                               remat=remat)
+        p = params["encoder"]["norm"]
+        return (L.rmsnorm(p, x, cfg.norm_eps) if cfg.norm == "rms"
+                else L.layernorm(p, x, cfg.norm_eps))
+    return None
+
+
+# ---------------------------------------------------------------------------
+# forward / prefill / decode
+# ---------------------------------------------------------------------------
+
+def _head(cfg, params, h):
+    p = params["final_norm"]
+    h = (L.rmsnorm(p, h, cfg.norm_eps) if cfg.norm == "rms"
+         else L.layernorm(p, h, cfg.norm_eps))
+    pooled = jnp.mean(h.astype(jnp.float32), axis=1)
+    f1 = jax.nn.relu(L.dense(params["proto_proj"],
+                             pooled.astype(h.dtype))).astype(jnp.float32)
+    logits = shard_act(L.unembed(params["embed"], h), "btv")
+    return logits, f1
+
+
+def forward(cfg: ModelConfig, params, batch, *, remat: bool = True) -> ModelOutput:
+    if cfg.family == "cnn":
+        logits, f1 = cnn_forward(cfg, params, batch["image"])
+        return ModelOutput(logits, f1, jnp.zeros((), jnp.float32))
+    if cfg.family == "resnet":
+        logits, f1 = resnet_forward(cfg, params, batch["image"])
+        return ModelOutput(logits, f1, jnp.zeros((), jnp.float32))
+    tokens = batch["tokens"]
+    x = shard_act(L.embed(params["embed"], tokens, jnp.dtype(cfg.dtype)),
+                  "btd")
+    positions = batch.get("positions", jnp.arange(tokens.shape[1]))
+    memory = build_memory(cfg, params, batch, remat=remat)
+    x, aux = T.stack_forward(cfg, params["stack"], x, positions, memory,
+                             remat=remat)
+    logits, f1 = _head(cfg, params, x)
+    return ModelOutput(logits, f1, aux)
+
+
+def prefill(cfg: ModelConfig, params, batch):
+    """Forward + decode-cache build. Returns (last_logits [B,V], cache)."""
+    tokens = batch["tokens"]
+    x = L.embed(params["embed"], tokens, jnp.dtype(cfg.dtype))
+    positions = batch.get("positions", jnp.arange(tokens.shape[1]))
+    memory = build_memory(cfg, params, batch)
+    x, cache = T.stack_prefill(cfg, params["stack"], x, positions, memory)
+    logits, _ = _head(cfg, params, x[:, -1:, :])
+    return logits[:, 0], cache
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int,
+               dtype=jnp.bfloat16):
+    return T.init_stack_cache(cfg, batch, cache_len, dtype)
+
+
+def decode_step(cfg: ModelConfig, params, token, index, cache,
+                memory: Optional[jnp.ndarray] = None, *,
+                rolling: bool = False):
+    """token: [B,1] int32; index: scalar int32 absolute position.
+
+    Returns (logits [B,V], new_cache). ``rolling=True`` = sliding-window
+    serving (long_500k on full-attention archs).
+    """
+    x = L.embed(params["embed"], token, jnp.dtype(cfg.dtype))
+    x, cache = T.stack_decode(cfg, params["stack"], cache, x, index, memory,
+                              rolling=rolling)
+    logits, _ = _head(cfg, params, x)
+    return logits[:, 0] if logits.ndim == 3 else logits, cache
+
+
+# ---------------------------------------------------------------------------
+# ProFe student derivation
+# ---------------------------------------------------------------------------
+
+_STUDENT_OVERRIDES = {
+    # paper pairs: ResNet18 -> ResNet8, ResNet32 -> ResNet18
+    "cifar10-resnet18": dict(resnet_blocks=(1, 1, 1), resnet_width=16),
+    "cifar100-resnet32": dict(resnet_blocks=(2, 2, 2, 2), resnet_width=64),
+}
+
+
+def derive_student(cfg: ModelConfig) -> ModelConfig:
+    """The paper's smaller aggregation model, same family as the teacher."""
+    if cfg.family == "cnn":
+        return cfg.replace(
+            name=cfg.name + "-student",
+            cnn_channels=tuple(max(c // 2, 1) for c in cfg.cnn_channels))
+    if cfg.family == "resnet":
+        ov = _STUDENT_OVERRIDES.get(cfg.name, dict(
+            resnet_blocks=tuple(max(b // 2, 1) for b in cfg.resnet_blocks)))
+        return cfg.replace(name=cfg.name + "-student", **ov)
+    s = cfg.student_scale
+    n_layers = max(int(round(cfg.num_layers * s)), 2)
+    if cfg.block_pattern:
+        # keep whole periods so the pattern stays valid
+        p = len(cfg.block_pattern)
+        n_layers = max((n_layers // p) * p, p)
+    kw: Dict[str, Any] = dict(
+        name=cfg.name + "-student",
+        num_layers=n_layers,
+        d_ff=max(int(cfg.d_ff * s), 128) if cfg.d_ff else cfg.d_ff,
+    )
+    if cfg.is_moe and not cfg.student_moe:
+        kw.update(num_experts=0, num_experts_per_tok=0)
+    if cfg.encoder_layers:
+        kw["encoder_layers"] = max(int(round(cfg.encoder_layers * s)), 2)
+    return cfg.replace(**kw)
+
+
+def param_count(params) -> int:
+    return sum(x.size for x in jax.tree_util.tree_leaves(params)
+               if hasattr(x, "size"))
+
+
+def param_bytes(params, bytes_per_param: int = 4) -> int:
+    return param_count(params) * bytes_per_param

@@ -1,0 +1,96 @@
+"""Mixture-of-Experts FFN: top-k router + capacity-based einsum dispatch.
+
+GShard/Switch-style dense dispatch, grouped so the dispatch tensor stays
+small (`group_size` tokens per group => capacity scales with the group, and
+total dispatch footprint is O(N * E * C/g) = O(N * k * cf) independent of
+sequence length).  Expert dim shards over the ``model`` mesh axis (expert
+parallelism); groups shard over ``data``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.sharding import shard_act
+
+DEFAULT_GROUP = 2048
+
+
+def init_moe(rng, d_model: int, d_ff: int, num_experts: int,
+             dtype=jnp.float32):
+    ks = jax.random.split(rng, 4)
+    e = num_experts
+    return {
+        "router": L.lecun_init(ks[0], (d_model, e), d_model, dtype),
+        "wi_gate": L.lecun_init(ks[1], (e, d_model, d_ff), d_model, dtype),
+        "wi_up": L.lecun_init(ks[2], (e, d_model, d_ff), d_model, dtype),
+        "wo": L.lecun_init(ks[3], (e, d_ff, d_model), d_ff, dtype),
+    }
+
+
+def moe_ffn(params, x, *, num_experts: int, top_k: int,
+            capacity_factor: float = 1.25, act_name: str = "silu",
+            group_size: int = DEFAULT_GROUP) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (output [B,S,D], aux load-balance loss scalar)."""
+    B, S, D = x.shape
+    E, K = num_experts, top_k
+    tokens = x.reshape(-1, D)
+    N = tokens.shape[0]
+    g = min(group_size, N)
+    # pad N to a multiple of g
+    pad = (-N) % g
+    if pad:
+        tokens = jnp.pad(tokens, ((0, pad), (0, 0)))
+    G = tokens.shape[0] // g
+    xt = shard_act(tokens.reshape(G, g, D), "gtd")
+
+    logits = jnp.einsum("gtd,de->gte", xt, params["router"].astype(x.dtype),
+                        preferred_element_type=jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                      # [G,g,E] f32
+    w, idx = jax.lax.top_k(probs, K)                             # [G,g,K]
+    w = w / jnp.sum(w, axis=-1, keepdims=True)
+
+    onehot = jax.nn.one_hot(idx, E, dtype=jnp.float32)           # [G,g,K,E]
+    flat = onehot.reshape(G, g * K, E)
+    pos = jnp.cumsum(flat, axis=1) - 1.0                         # [G,gK,E]
+    C = max(int(math.ceil(g * K / E * capacity_factor)), 1)
+    keep = (pos < C) & (flat > 0)                                # [G,gK,E]
+    pos = pos.reshape(G, g, K, E)
+    keep = keep.reshape(G, g, K, E)
+
+    c_iota = jnp.arange(C, dtype=jnp.float32)
+    # token-granular dispatch/combine: sum over the K routing slots
+    disp_k = keep[..., None] & (pos[..., None] == c_iota)        # [G,g,K,E,C]
+    dispatch = shard_act(jnp.sum(disp_k.astype(x.dtype), axis=2), "gtec")
+    # combine in compute dtype: the f32 version dominates train temps at
+    # grok scale (routing weights tolerate bf16)
+    combine = shard_act(
+        jnp.sum(disp_k.astype(x.dtype) *
+                w[..., None, None].astype(x.dtype), axis=2), "gtec")
+
+    expert_in = shard_act(jnp.einsum("gtec,gtd->egcd", dispatch, xt),
+                          "egcd")                                # [E,G,C,D]
+    act = L.activation(act_name)
+    wi_g = params["wi_gate"].astype(x.dtype)
+    wi_u = params["wi_up"].astype(x.dtype)
+    wo = params["wo"].astype(x.dtype)
+    h = act(jnp.einsum("egcd,edf->egcf", expert_in, wi_g)) * \
+        jnp.einsum("egcd,edf->egcf", expert_in, wi_u)
+    expert_out = shard_act(jnp.einsum("egcf,efd->egcd", h, wo), "egcd")
+    out = jnp.einsum("gtec,egcd->gtd", combine, expert_out)
+
+    out = out.reshape(-1, D)
+    if pad:
+        out = out[:N]
+    out = out.reshape(B, S, D)
+
+    # Switch load-balance auxiliary loss: E * sum_e f_e * p_e
+    frac = jnp.mean(onehot[..., 0, :] if K == 1 else jnp.max(onehot, axis=2),
+                    axis=(0, 1))                                  # [E] dispatch frac
+    mean_prob = jnp.mean(probs, axis=(0, 1))                      # [E]
+    aux = E * jnp.sum(frac * mean_prob)
+    return out, aux

@@ -1,0 +1,103 @@
+"""CIFAR-style ResNets (ResNet-8 / ResNet-18 / ResNet-32 — the paper's
+CIFAR10/100 teachers and students).
+
+``resnet_blocks`` gives the basic-block count per stage; widths start at
+``resnet_width`` and double per stage.  ``f_1(x)`` is the projected
+global-average-pooled feature (shared ``proto_dim`` so heterogeneous
+teacher/student prototype spaces align, as in FedProto).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import ModelConfig
+from repro.models import layers as L
+
+
+def _conv(rng, k, cin, cout, dtype):
+    return {"kernel": L.he_init(rng, (k, k, cin, cout), k * k * cin, dtype)}
+
+
+def _apply_conv(p, x, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, p["kernel"].astype(x.dtype), window_strides=(stride, stride),
+        padding="SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def _init_gn(c, dtype):
+    # GroupNorm stands in for BatchNorm: batch-stat-free, federated-friendly
+    return {"scale": jnp.ones((c,), dtype), "bias": jnp.zeros((c,), dtype)}
+
+
+def _groupnorm(p, x, groups=8, eps=1e-5):
+    b, h, w, c = x.shape
+    g = min(groups, c)
+    while c % g:
+        g -= 1
+    x32 = x.astype(jnp.float32).reshape(b, h, w, g, c // g)
+    mu = jnp.mean(x32, axis=(1, 2, 4), keepdims=True)
+    var = jnp.var(x32, axis=(1, 2, 4), keepdims=True)
+    y = ((x32 - mu) * jax.lax.rsqrt(var + eps)).reshape(b, h, w, c)
+    return (y * p["scale"] + p["bias"]).astype(x.dtype)
+
+
+def _init_basic_block(rng, cin, cout, dtype):
+    ks = jax.random.split(rng, 3)
+    p = {
+        "conv1": _conv(ks[0], 3, cin, cout, dtype), "gn1": _init_gn(cout, dtype),
+        "conv2": _conv(ks[1], 3, cout, cout, dtype), "gn2": _init_gn(cout, dtype),
+    }
+    if cin != cout:
+        p["proj"] = _conv(ks[2], 1, cin, cout, dtype)
+    return p
+
+
+def _basic_block(p, x, stride):
+    h = jax.nn.relu(_groupnorm(p["gn1"], _apply_conv(p["conv1"], x, stride)))
+    h = _groupnorm(p["gn2"], _apply_conv(p["conv2"], h))
+    sc = x
+    if "proj" in p:
+        sc = _apply_conv(p["proj"], x, stride)
+    elif stride != 1:
+        sc = x[:, ::stride, ::stride, :]
+    return jax.nn.relu(h + sc)
+
+
+def init_resnet(cfg: ModelConfig, rng):
+    dt = jnp.dtype(cfg.param_dtype)
+    _, _, cin = cfg.input_hw
+    ks = jax.random.split(rng, 2 + sum(cfg.resnet_blocks) + 2)
+    ki = iter(ks)
+    width = cfg.resnet_width
+    params = {"stem": _conv(next(ki), 3, cin, width, dt),
+              "gn0": _init_gn(width, dt), "stages": []}
+    c = width
+    for si, n in enumerate(cfg.resnet_blocks):
+        cout = width * (2 ** si)
+        stage = []
+        for bi in range(n):
+            stage.append(_init_basic_block(next(ki), c, cout, dt))
+            c = cout
+        params["stages"].append(stage)
+    params["proto_proj"] = L.init_dense(next(ki), c, cfg.proto_dim, bias=True,
+                                        dtype=dt)
+    params["fc"] = L.init_dense(next(ki), cfg.proto_dim, cfg.num_classes,
+                                bias=True, dtype=dt)
+    return params
+
+
+def resnet_forward(cfg: ModelConfig, params, image) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """image: [B,H,W,C] -> (logits [B,K], f1 [B, proto_dim])."""
+    x = image.astype(jnp.dtype(cfg.dtype))
+    x = jax.nn.relu(_groupnorm(params["gn0"], _apply_conv(params["stem"], x)))
+    for si, stage in enumerate(params["stages"]):
+        for bi, block in enumerate(stage):
+            stride = 2 if (si > 0 and bi == 0) else 1
+            x = _basic_block(block, x, stride)
+    pooled = jnp.mean(x, axis=(1, 2))
+    f1 = jax.nn.relu(L.dense(params["proto_proj"], pooled))
+    logits = L.dense(params["fc"], f1).astype(jnp.float32)
+    return logits, f1.astype(jnp.float32)

@@ -1,0 +1,131 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin). [arXiv:2402.19427]
+
+Real-Gated Linear Recurrent Unit:
+    r_t = sigmoid(W_a x_t + b_a)            (recurrence gate)
+    i_t = sigmoid(W_x x_t + b_x)            (input gate)
+    a_t = exp(-c * softplus(Lambda) * r_t)  (diagonal decay, c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training uses an associative scan (log-depth, shardable over batch);
+decode is a single constant-size state update — giving this family a
+native ``long_500k`` path together with its local-attention layers.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+_C = 8.0
+
+
+def init_rglru(rng, width: int, dtype=jnp.float32):
+    ks = jax.random.split(rng, 3)
+    # Lambda init so a^c spans ~[0.9, 0.999]
+    lam = jax.random.uniform(ks[0], (width,), jnp.float32, 0.0001, 0.1)
+    return {
+        "lambda_param": jnp.log(jnp.expm1(lam)).astype(dtype),  # inv softplus
+        "w_a": L.init_dense(ks[1], width, width, bias=True, dtype=dtype),
+        "w_x": L.init_dense(ks[2], width, width, bias=True, dtype=dtype),
+    }
+
+
+def _gates(params, x):
+    r = jax.nn.sigmoid(L.dense(params["w_a"], x).astype(jnp.float32))
+    i = jax.nn.sigmoid(L.dense(params["w_x"], x).astype(jnp.float32))
+    lam = jax.nn.softplus(params["lambda_param"].astype(jnp.float32))
+    log_a = -_C * lam * r                       # [B,S,W], <= 0
+    a = jnp.exp(log_a)
+    gated_x = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * \
+        (i * x.astype(jnp.float32))
+    return a, gated_x
+
+
+def rglru_forward(params, x, h0=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: [B,S,W] -> (y [B,S,W], h_final [B,W]) via associative scan."""
+    a, b = _gates(params, x)
+    if h0 is not None:
+        # fold the carried state into the first step's additive term
+        b = b.at[:, 0, :].add(a[:, 0, :] * h0.astype(jnp.float32))
+
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h.astype(x.dtype), h[:, -1, :].astype(x.dtype)
+
+
+def rglru_decode_step(params, x, h) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: [B,1,W], h: [B,W] -> (y [B,1,W], h')."""
+    a, b = _gates(params, x)
+    h_new = a[:, 0] * h.astype(jnp.float32) + b[:, 0]
+    return h_new.astype(x.dtype)[:, None, :], h_new.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Griffin recurrent block: conv + RG-LRU + GeLU gate branch
+# ---------------------------------------------------------------------------
+
+def init_recurrent_block(rng, d_model: int, width: int, *, conv_width: int = 4,
+                         dtype=jnp.float32):
+    ks = jax.random.split(rng, 5)
+    return {
+        "in_rec": L.init_dense(ks[0], d_model, width, dtype=dtype),
+        "in_gate": L.init_dense(ks[1], d_model, width, dtype=dtype),
+        "conv": {"kernel": L.lecun_init(ks[2], (conv_width, width), conv_width, dtype),
+                 "bias": jnp.zeros((width,), dtype)},
+        "rglru": init_rglru(ks[3], width, dtype),
+        "out": L.init_dense(ks[4], width, d_model, dtype=dtype),
+    }
+
+
+def _causal_conv(params, u):
+    w = params["kernel"].astype(u.dtype)
+    width = w.shape[0]
+    pad = jnp.pad(u, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + u.shape[1], :] * w[i] for i in range(width))
+    return out + params["bias"].astype(u.dtype)
+
+
+def recurrent_block_forward(params, x, state=None, *, want_state: bool = False):
+    """x: [B,S,D] -> (y [B,S,D], decode_state {h, conv} | None)."""
+    pre = L.dense(params["in_rec"], x)
+    rec = _causal_conv(params["conv"], pre)
+    gate = jax.nn.gelu(L.dense(params["in_gate"], x))
+    h0 = state["h"] if state is not None else None
+    rec, h_final = rglru_forward(params["rglru"], rec, h0)
+    y = L.dense(params["out"], rec * gate)
+    if not (want_state or state is not None):
+        return y, None
+    width = params["conv"]["kernel"].shape[0]
+    if x.shape[1] < width - 1:
+        pre = jnp.pad(pre, ((0, 0), (width - 1 - x.shape[1], 0), (0, 0)))
+    conv_tail = pre[:, -(width - 1):, :]
+    return y, {"h": h_final, "conv": conv_tail}
+
+
+def init_recurrent_state(batch: int, width: int, *, conv_width: int = 4,
+                         dtype=jnp.bfloat16):
+    return {
+        "h": jnp.zeros((batch, width), dtype),
+        "conv": jnp.zeros((batch, conv_width - 1, width), dtype),
+    }
+
+
+def recurrent_block_decode(params, x, state):
+    """One-token decode. x: [B,1,D]."""
+    pre = L.dense(params["in_rec"], x)                       # [B,1,W]
+    window = jnp.concatenate([state["conv"], pre], axis=1)   # [B,W_c,W]
+    w = params["conv"]["kernel"].astype(x.dtype)
+    rec = jnp.einsum("bwc,wc->bc", window, w) + \
+        params["conv"]["bias"].astype(x.dtype)
+    rec = rec[:, None, :]
+    gate = jax.nn.gelu(L.dense(params["in_gate"], x))
+    rec, h_new = rglru_decode_step(params["rglru"], rec, state["h"])
+    y = L.dense(params["out"], rec * gate)
+    return y, {"h": h_new, "conv": window[:, 1:, :]}

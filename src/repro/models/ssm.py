@@ -1,0 +1,216 @@
+"""Mamba-2 (SSD — state-space duality) block. [arXiv:2405.21060]
+
+Chunk-parallel SSD algorithm: within a chunk the quadratic (attention-dual)
+form runs on the MXU; across chunks a linear recurrence over per-chunk
+states runs as a ``lax.scan``.  Decode maintains a constant-size state
+[B, H, N, P] — this is what makes ``long_500k`` native for this family.
+
+ngroups = 1 (B/C shared across heads), headdim P = 64, as in mamba2-130m.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+HEADDIM = 64
+
+
+def init_mamba2(rng, d_model: int, d_state: int, *, expand: int = 2,
+                conv_width: int = 4, dtype=jnp.float32):
+    d_inner = expand * d_model
+    nheads = d_inner // HEADDIM
+    ks = jax.random.split(rng, 5)
+    conv_ch = d_inner + 2 * d_state  # x, B, C all pass the causal conv
+    return {
+        # fused input projection: [z, x, B, C, dt]
+        "in_proj": L.init_dense(ks[0], d_model,
+                                2 * d_inner + 2 * d_state + nheads, dtype=dtype),
+        "conv": {"kernel": L.lecun_init(ks[1], (conv_width, conv_ch), conv_width, dtype),
+                 "bias": jnp.zeros((conv_ch,), dtype)},
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, nheads).astype(dtype)),
+        "dt_bias": jnp.zeros((nheads,), dtype),
+        "d_skip": jnp.ones((nheads,), dtype),
+        "norm": L.init_rmsnorm(d_inner, dtype),
+        "out_proj": L.init_dense(ks[2], d_inner, d_model, dtype=dtype),
+    }
+
+
+def _split_proj(zxbcdt, d_inner: int, d_state: int, nheads: int):
+    z = zxbcdt[..., :d_inner]
+    x = zxbcdt[..., d_inner:2 * d_inner]
+    b = zxbcdt[..., 2 * d_inner:2 * d_inner + d_state]
+    c = zxbcdt[..., 2 * d_inner + d_state:2 * d_inner + 2 * d_state]
+    dt = zxbcdt[..., 2 * d_inner + 2 * d_state:]
+    return z, x, b, c, dt
+
+
+def _causal_conv(params, u):
+    """Depthwise causal conv1d. u: [B, S, C]."""
+    w = params["kernel"].astype(u.dtype)      # [W, C]
+    width = w.shape[0]
+    pad = jnp.pad(u, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + u.shape[1], :] * w[i] for i in range(width))
+    return out + params["bias"].astype(u.dtype)
+
+
+def _segsum(a):
+    """a: [..., Q] -> [..., Q, Q] lower-tri cumulative sums (exclusive)."""
+    q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    # segsum[l, s] = sum_{s < r <= l} a_r  = cs[l] - cs[s]
+    seg = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool), 0)
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def ssd_chunked(x, dt, a_log, b, c, *, chunk: int):
+    """SSD core.
+
+    x: [B,S,H,P]  dt: [B,S,H]  a_log: [H] (A = -exp(a_log))
+    b, c: [B,S,N]  (ngroups=1, broadcast over heads)
+    Returns y: [B,S,H,P] and final state [B,H,N,P].
+    """
+    B_, S, H, P = x.shape
+    N = b.shape[-1]
+    Q = min(chunk, S)
+    pad = (-S) % Q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+    S_p = x.shape[1]
+    nc = S_p // Q
+
+    A = -jnp.exp(a_log.astype(jnp.float32))                  # [H]
+    da = dt.astype(jnp.float32) * A                          # [B,S,H] (<=0)
+    xd = x * dt[..., None].astype(x.dtype)
+
+    # chunk views
+    xc = xd.reshape(B_, nc, Q, H, P)
+    dac = da.reshape(B_, nc, Q, H).transpose(0, 1, 3, 2)     # [B,nc,H,Q]
+    bc = b.reshape(B_, nc, Q, N)
+    cc = c.reshape(B_, nc, Q, N)
+
+    # 1. intra-chunk (attention-dual) term
+    Lmat = jnp.exp(_segsum(dac))                             # [B,nc,H,Q,Q]
+    scores = jnp.einsum("bzln,bzsn->bzls", cc, bc,
+                        preferred_element_type=jnp.float32)  # [B,nc,Q,Q]
+    att = scores[:, :, None] * Lmat                          # [B,nc,H,Q,Q]
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    att = jnp.where(tri, att, 0.0)
+    y_diag = jnp.einsum("bzhls,bzshp->bzlhp", att.astype(x.dtype), xc)
+
+    # 2. per-chunk final states
+    cum = jnp.cumsum(dac, axis=-1)                           # [B,nc,H,Q]
+    decay_states = jnp.exp(cum[..., -1:] - cum)              # [B,nc,H,Q]
+    states = jnp.einsum("bzsn,bzhs,bzshp->bzhnp",
+                        bc, decay_states.astype(x.dtype), xc)  # [B,nc,H,N,P]
+
+    # 3. inter-chunk recurrence (scan over chunks)
+    chunk_decay = jnp.exp(cum[..., -1])                      # [B,nc,H]
+
+    def step(carry, inp):
+        s_prev = carry                                       # [B,H,N,P]
+        s_chunk, dec = inp                                   # [B,H,N,P], [B,H]
+        s_new = s_prev * dec[..., None, None].astype(s_prev.dtype) + s_chunk
+        return s_new, s_prev
+
+    init = jnp.zeros((B_, H, N, P), x.dtype)
+    final_state, prev_states = jax.lax.scan(
+        step, init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)       # [B,nc,H,N,P]
+
+    # 4. inter-chunk contribution: C_t @ state_in * exp(cum_t)
+    state_decay = jnp.exp(cum)                               # [B,nc,H,Q]
+    y_off = jnp.einsum("bzln,bzhnp,bzhl->bzlhp",
+                       cc, prev_states, state_decay.astype(x.dtype))
+    y = (y_diag + y_off).reshape(B_, S_p, H, P)
+    if pad:
+        y = y[:, :S]
+    return y, final_state
+
+
+def mamba2_forward(params, x, *, d_state: int, chunk: int = 128,
+                   want_state: bool = False):
+    """Full-sequence forward. x: [B,S,D] -> (y [B,S,D], decode_state|None).
+
+    ``want_state=True`` returns the decode-compatible state dict
+    ({"ssm": [B,H,N,P], "conv": [B,W-1,C]}) so prefill can hand off to
+    :func:`mamba2_decode_step`.
+    """
+    B_, S, D = x.shape
+    d_inner = params["norm"]["scale"].shape[0]
+    nheads = params["a_log"].shape[0]
+    z, xi, b, c, dt = _split_proj(L.dense(params["in_proj"], x),
+                                  d_inner, d_state, nheads)
+    conv_in = jnp.concatenate([xi, b, c], axis=-1)
+    conv_out = jax.nn.silu(_causal_conv(params["conv"], conv_in))
+    xi = conv_out[..., :d_inner]
+    b = conv_out[..., d_inner:d_inner + d_state]
+    c = conv_out[..., d_inner + d_state:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) +
+                         params["dt_bias"].astype(jnp.float32))
+    xh = xi.reshape(B_, S, nheads, HEADDIM)
+    y, state = ssd_chunked(xh, dt, params["a_log"], b, c, chunk=chunk)
+    y = y + params["d_skip"].astype(x.dtype)[None, None, :, None] * xh
+    y = y.reshape(B_, S, d_inner)
+    y = L.rmsnorm(params["norm"], y * jax.nn.silu(z))
+    out = L.dense(params["out_proj"], y)
+    if not want_state:
+        return out, None
+    width = params["conv"]["kernel"].shape[0]
+    if S < width - 1:
+        conv_in = jnp.pad(conv_in, ((0, 0), (width - 1 - S, 0), (0, 0)))
+    conv_tail = conv_in[:, -(width - 1):, :]
+    return out, {"ssm": state, "conv": conv_tail}
+
+
+def init_mamba2_state(batch: int, d_model: int, d_state: int, *,
+                      expand: int = 2, conv_width: int = 4, dtype=jnp.bfloat16):
+    d_inner = expand * d_model
+    nheads = d_inner // HEADDIM
+    conv_ch = d_inner + 2 * d_state
+    return {
+        "ssm": jnp.zeros((batch, nheads, d_state, HEADDIM), dtype),
+        "conv": jnp.zeros((batch, conv_width - 1, conv_ch), dtype),
+    }
+
+
+def mamba2_decode_step(params, x, state, *, d_state: int):
+    """One-token decode. x: [B,1,D]; constant-size state."""
+    B_ = x.shape[0]
+    d_inner = params["norm"]["scale"].shape[0]
+    nheads = params["a_log"].shape[0]
+    z, xi, b, c, dt = _split_proj(L.dense(params["in_proj"], x),
+                                  d_inner, d_state, nheads)
+    conv_in = jnp.concatenate([xi, b, c], axis=-1)           # [B,1,C]
+    window = jnp.concatenate([state["conv"], conv_in], axis=1)  # [B,W,C]
+    w = params["conv"]["kernel"].astype(x.dtype)
+    conv_out = jnp.einsum("bwc,wc->bc", window, w) + \
+        params["conv"]["bias"].astype(x.dtype)
+    conv_out = jax.nn.silu(conv_out)[:, None, :]
+    new_conv = window[:, 1:, :]
+    xi = conv_out[..., :d_inner]
+    b = conv_out[..., d_inner:d_inner + d_state]
+    c = conv_out[..., d_inner + d_state:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) +
+                         params["dt_bias"].astype(jnp.float32))  # [B,1,H]
+    A = -jnp.exp(params["a_log"].astype(jnp.float32))
+    da = jnp.exp(dt[:, 0] * A)                                # [B,H]
+    xh = xi.reshape(B_, nheads, HEADDIM)
+    s = state["ssm"]
+    s = s * da[..., None, None].astype(s.dtype) + \
+        jnp.einsum("bn,bhp,bh->bhnp", b[:, 0], xh,
+                   dt[:, 0].astype(x.dtype))
+    y = jnp.einsum("bn,bhnp->bhp", c[:, 0], s)
+    y = y + params["d_skip"].astype(x.dtype)[None, :, None] * xh
+    y = y.reshape(B_, 1, d_inner)
+    y = L.rmsnorm(params["norm"], y * jax.nn.silu(z))
+    out = L.dense(params["out_proj"], y)
+    return out, {"ssm": s, "conv": new_conv}

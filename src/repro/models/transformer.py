@@ -1,0 +1,376 @@
+"""Unified transformer stack for all assigned families.
+
+A model is a sequence of *blocks* drawn from:
+
+* ``attn``  — self-attention (+ FFN / MoE)
+* ``lattn`` — local (windowed) self-attention (+ FFN)
+* ``rec``   — RG-LRU recurrent block (+ FFN)
+* ``ssm``   — Mamba-2 SSD mixer (no separate FFN, as in mamba2)
+* ``cross`` — self-attention + cross-attention on a memory (+ FFN)
+
+The block sequence is derived from the config (``block_pattern`` for
+hybrids, ``cross_attn_every`` for VLM/enc-dec, plain repetition for
+dense/MoE/SSM).  Repeated *periods* are stacked and driven by
+``lax.scan`` so HLO size stays O(period), not O(depth) — required to
+compile 80–100-layer configs.  A non-multiple remainder is unrolled
+after the scan.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import ModelConfig
+from repro.models import attention as A
+from repro.models import ffn as F
+from repro.models import layers as L
+from repro.models import rglru as R
+from repro.models import ssm as S
+from repro.models.blockwise import blockwise_attention
+from repro.sharding import shard_act
+
+
+# ---------------------------------------------------------------------------
+# pattern derivation
+# ---------------------------------------------------------------------------
+
+def block_sequence(cfg: ModelConfig) -> List[str]:
+    if cfg.family == "ssm":
+        return ["ssm"] * cfg.num_layers
+    if cfg.block_pattern:  # hybrid, explicit periodic pattern
+        pat = list(cfg.block_pattern)
+        seq = (pat * (cfg.num_layers // len(pat) + 1))[: cfg.num_layers]
+        return seq
+    if cfg.family == "vlm" and cfg.cross_attn_every:
+        k = cfg.cross_attn_every
+        return [("cross" if (i + 1) % k == 0 else "attn")
+                for i in range(cfg.num_layers)]
+    if cfg.family == "audio":
+        return ["cross"] * cfg.num_layers  # whisper decoder layers
+    return ["attn"] * cfg.num_layers
+
+
+def split_periods(seq: List[str]) -> Tuple[List[str], int, List[str]]:
+    """Smallest period p such that seq[i] == period[i % p] for all i.
+
+    Returns (period, full_repetitions, remainder) — the remainder is the
+    truncated tail (e.g. recurrentgemma's 38 = 12*(rec,rec,attn) + (rec,rec)).
+    """
+    n = len(seq)
+    for p in range(1, n + 1):
+        period = seq[:p]
+        if all(seq[i] == period[i % p] for i in range(n)):
+            return period, n // p, seq[(n // p) * p:]
+    return seq, 1, []
+
+
+# ---------------------------------------------------------------------------
+# per-block init
+# ---------------------------------------------------------------------------
+
+def _init_norm(cfg, dtype):
+    return L.init_rmsnorm(cfg.d_model, dtype) if cfg.norm == "rms" \
+        else L.init_layernorm(cfg.d_model, dtype)
+
+
+def _apply_norm(cfg, p, x):
+    return L.rmsnorm(p, x, cfg.norm_eps) if cfg.norm == "rms" \
+        else L.layernorm(p, x, cfg.norm_eps)
+
+
+def _init_ffn(cfg, rng, dtype):
+    if cfg.is_moe:
+        from repro.models.moe import init_moe
+        return init_moe(rng, cfg.d_model, cfg.d_ff, cfg.num_experts, dtype)
+    if cfg.ffn == "gated":
+        return F.init_gated_ffn(rng, cfg.d_model, cfg.d_ff, dtype)
+    return F.init_mlp(rng, cfg.d_model, cfg.d_ff, dtype=dtype)
+
+
+def _apply_ffn(cfg, p, x):
+    """Returns (out, aux)."""
+    if cfg.is_moe:
+        from repro.models.moe import moe_ffn
+        return moe_ffn(p, x, num_experts=cfg.num_experts,
+                       top_k=cfg.num_experts_per_tok,
+                       capacity_factor=cfg.capacity_factor,
+                       act_name=cfg.activation)
+    if cfg.ffn == "gated":
+        return F.gated_ffn(p, x, cfg.activation), 0.0
+    return F.mlp(p, x, cfg.activation), 0.0
+
+
+def init_block(cfg: ModelConfig, kind: str, rng) -> Dict[str, Any]:
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(rng, 6)
+    p: Dict[str, Any] = {"ln1": _init_norm(cfg, dt)}
+    if kind in ("attn", "lattn", "cross", "battn"):
+        p["attn"] = A.init_attention(ks[0], cfg.d_model, cfg.num_heads,
+                                     cfg.num_kv_heads, cfg.head_dim,
+                                     qkv_bias=cfg.qkv_bias,
+                                     qk_norm=cfg.qk_norm, dtype=dt)
+        p["ln2"] = _init_norm(cfg, dt)
+        p["ffn"] = _init_ffn(cfg, ks[1], dt)
+        if kind == "cross":
+            p["lnx"] = _init_norm(cfg, dt)
+            p["xattn"] = A.init_attention(ks[2], cfg.d_model, cfg.num_heads,
+                                          cfg.num_kv_heads, cfg.head_dim,
+                                          dtype=dt)
+    elif kind == "rec":
+        p["rec"] = R.init_recurrent_block(ks[0], cfg.d_model, cfg.d_model,
+                                          conv_width=cfg.conv_width, dtype=dt)
+        p["ln2"] = _init_norm(cfg, dt)
+        p["ffn"] = _init_ffn(cfg, ks[1], dt)
+    elif kind == "ssm":
+        p["mixer"] = S.init_mamba2(ks[0], cfg.d_model, cfg.ssm_state,
+                                   expand=cfg.ssm_expand,
+                                   conv_width=cfg.conv_width, dtype=dt)
+    else:
+        raise ValueError(kind)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# per-block forward (full sequence)
+# ---------------------------------------------------------------------------
+
+def _self_attention(cfg: ModelConfig, p, x, positions, *, window: int,
+                    causal: bool = True):
+    q = A.project_q(p, x, positions, num_heads=cfg.num_heads,
+                    head_dim=cfg.head_dim, rope_theta=cfg.rope_theta,
+                    norm_eps=cfg.norm_eps)
+    k, v = A.project_kv(p, x, positions, num_kv_heads=cfg.num_kv_heads,
+                        head_dim=cfg.head_dim, rope_theta=cfg.rope_theta,
+                        norm_eps=cfg.norm_eps)
+    ctx = blockwise_attention(q, k, v, causal=causal, window=window,
+                              q_block=cfg.q_block, kv_block=cfg.kv_block)
+    b, s, _, _ = ctx.shape
+    return L.dense(p["wo"], ctx.reshape(b, s, -1)), (k, v)
+
+
+def block_forward(cfg: ModelConfig, kind: str, p, x, positions,
+                  memory: Optional[jnp.ndarray], *, want_cache: bool = False):
+    """Returns (x_out, aux_loss, cache_entry_or_None)."""
+    aux = jnp.zeros((), jnp.float32)
+    cache = None
+    if kind in ("attn", "lattn", "cross", "battn"):
+        window = cfg.local_window if kind == "lattn" else 0
+        h, (k, v) = _self_attention(cfg, p["attn"],
+                                    _apply_norm(cfg, p["ln1"], x),
+                                    positions, window=window,
+                                    causal=kind != "battn")
+        if want_cache:
+            if kind == "lattn":
+                k, v = k[:, -cfg.local_window:], v[:, -cfg.local_window:]
+            cache = {"kv": {"k": k, "v": v}}
+        x = x + h
+        if kind == "cross":
+            h = A.cross_attention(p["xattn"], _apply_norm(cfg, p["lnx"], x),
+                                  memory, num_heads=cfg.num_heads,
+                                  num_kv_heads=cfg.num_kv_heads,
+                                  head_dim=cfg.head_dim, norm_eps=cfg.norm_eps)
+            x = x + h
+        h, a = _apply_ffn(cfg, p["ffn"], _apply_norm(cfg, p["ln2"], x))
+        aux = aux + jnp.asarray(a, jnp.float32)
+        x = x + h
+    elif kind == "rec":
+        xin = _apply_norm(cfg, p["ln1"], x)
+        h, st = R.recurrent_block_forward(p["rec"], xin,
+                                          want_state=want_cache)
+        if want_cache:
+            cache = {"rec": st}
+        x = x + h
+        h, a = _apply_ffn(cfg, p["ffn"], _apply_norm(cfg, p["ln2"], x))
+        aux = aux + jnp.asarray(a, jnp.float32)
+        x = x + h
+    elif kind == "ssm":
+        h, st = S.mamba2_forward(p["mixer"], _apply_norm(cfg, p["ln1"], x),
+                                 d_state=cfg.ssm_state, chunk=cfg.ssm_chunk,
+                                 want_state=want_cache)
+        if want_cache:
+            cache = {"ssm": st}
+        x = x + h
+    return x, aux, cache
+
+
+# ---------------------------------------------------------------------------
+# per-block decode (one token, stateful)
+# ---------------------------------------------------------------------------
+
+def init_block_cache(cfg: ModelConfig, kind: str, batch: int, cache_len: int,
+                     dtype) -> Dict[str, Any]:
+    if kind in ("attn", "lattn", "cross"):
+        length = min(cache_len, cfg.local_window) if kind == "lattn" else cache_len
+        return {"kv": A.init_kv_cache(batch, length, cfg.num_kv_heads,
+                                      cfg.head_dim, dtype)}
+    if kind == "rec":
+        return {"rec": R.init_recurrent_state(batch, cfg.d_model,
+                                              conv_width=cfg.conv_width,
+                                              dtype=dtype)}
+    if kind == "ssm":
+        return {"ssm": S.init_mamba2_state(batch, cfg.d_model, cfg.ssm_state,
+                                           expand=cfg.ssm_expand,
+                                           conv_width=cfg.conv_width,
+                                           dtype=dtype)}
+    raise ValueError(kind)
+
+
+def block_decode(cfg: ModelConfig, kind: str, p, x, cache, index,
+                 memory: Optional[jnp.ndarray], *, rolling: bool):
+    if kind in ("attn", "lattn", "cross"):
+        roll = rolling or kind == "lattn"
+        window = cfg.local_window if kind == "lattn" else \
+            (cfg.sliding_window_serve if rolling else 0)
+        h, kv = A.decode_attention(p["attn"], _apply_norm(cfg, p["ln1"], x),
+                                   cache["kv"], index,
+                                   num_heads=cfg.num_heads,
+                                   num_kv_heads=cfg.num_kv_heads,
+                                   head_dim=cfg.head_dim,
+                                   rope_theta=cfg.rope_theta,
+                                   norm_eps=cfg.norm_eps, rolling=roll)
+        x = x + h
+        if kind == "cross":
+            h = A.cross_attention(p["xattn"], _apply_norm(cfg, p["lnx"], x),
+                                  memory, num_heads=cfg.num_heads,
+                                  num_kv_heads=cfg.num_kv_heads,
+                                  head_dim=cfg.head_dim, norm_eps=cfg.norm_eps)
+            x = x + h
+        h, _ = _apply_ffn(cfg, p["ffn"], _apply_norm(cfg, p["ln2"], x))
+        return x + h, {"kv": kv}
+    if kind == "rec":
+        h, st = R.recurrent_block_decode(p["rec"],
+                                         _apply_norm(cfg, p["ln1"], x),
+                                         cache["rec"])
+        x = x + h
+        h, _ = _apply_ffn(cfg, p["ffn"], _apply_norm(cfg, p["ln2"], x))
+        return x + h, {"rec": st}
+    if kind == "ssm":
+        h, st = S.mamba2_decode_step(p["mixer"], _apply_norm(cfg, p["ln1"], x),
+                                     cache["ssm"], d_state=cfg.ssm_state)
+        return x + h, {"ssm": st}
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# whole-stack init / forward / decode
+# ---------------------------------------------------------------------------
+
+def init_stack(cfg: ModelConfig, rng):
+    """Scan-stacked periods + unrolled remainder."""
+    seq = block_sequence(cfg)
+    period, reps, rem = split_periods(seq)
+    k_scan, k_rem = jax.random.split(rng)
+
+    def one_period(r):
+        ks = jax.random.split(r, len(period))
+        return {f"b{i}": init_block(cfg, kind, ks[i])
+                for i, kind in enumerate(period)}
+
+    stacked = jax.vmap(one_period)(jax.random.split(k_scan, reps)) \
+        if reps > 0 else None
+    rem_params = [init_block(cfg, kind, k)
+                  for kind, k in zip(rem, jax.random.split(k_rem, max(len(rem), 1)))]
+    return {"scan": stacked, "rem": rem_params}
+
+
+def _period_forward(cfg, period, pparams, x, positions, memory,
+                    want_cache=False):
+    aux = jnp.zeros((), jnp.float32)
+    caches = {}
+    for i, kind in enumerate(period):
+        x = shard_act(x, "btd")
+        x, a, c = block_forward(cfg, kind, pparams[f"b{i}"], x, positions,
+                                memory, want_cache=want_cache)
+        aux = aux + a
+        if want_cache:
+            caches[f"b{i}"] = c
+    return x, aux, caches
+
+
+def stack_forward(cfg: ModelConfig, params, x, positions,
+                  memory: Optional[jnp.ndarray] = None, *, remat: bool = True):
+    seq = block_sequence(cfg)
+    period, reps, rem = split_periods(seq)
+
+    body = partial(_period_forward, cfg, period)
+    if remat:
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+
+    def scan_fn(carry, pparams):
+        x, aux = carry
+        x, a, _ = body(pparams, x, positions, memory)
+        return (x, aux + a), None
+
+    aux0 = jnp.zeros((), jnp.float32)
+    if params["scan"] is not None and reps > 0:
+        (x, aux0), _ = jax.lax.scan(scan_fn, (x, aux0), params["scan"])
+    for kind, p in zip(rem, params["rem"]):
+        x, a, _ = block_forward(cfg, kind, p, x, positions, memory)
+        aux0 = aux0 + a
+    return x, aux0
+
+
+def stack_prefill(cfg: ModelConfig, params, x, positions,
+                  memory: Optional[jnp.ndarray] = None):
+    """Forward pass that also returns the decode cache (KV / states)."""
+    seq = block_sequence(cfg)
+    period, reps, rem = split_periods(seq)
+
+    def scan_fn(x, pparams):
+        x, _, caches = _period_forward(cfg, period, pparams, x, positions,
+                                       memory, want_cache=True)
+        return x, caches
+
+    scan_caches = None
+    if params["scan"] is not None and reps > 0:
+        x, scan_caches = jax.lax.scan(scan_fn, x, params["scan"])
+    rem_caches = []
+    for kind, p in zip(rem, params["rem"]):
+        x, _, c = block_forward(cfg, kind, p, x, positions, memory,
+                                want_cache=True)
+        rem_caches.append(c)
+    return x, {"scan": scan_caches, "rem": rem_caches}
+
+
+def init_stack_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype):
+    seq = block_sequence(cfg)
+    period, reps, rem = split_periods(seq)
+
+    def one(_):
+        return {f"b{i}": init_block_cache(cfg, kind, batch, cache_len, dtype)
+                for i, kind in enumerate(period)}
+
+    stacked = jax.vmap(one)(jnp.arange(reps)) if reps > 0 else None
+    rem_caches = [init_block_cache(cfg, kind, batch, cache_len, dtype)
+                  for kind in rem]
+    return {"scan": stacked, "rem": rem_caches}
+
+
+def stack_decode(cfg: ModelConfig, params, caches, x, index,
+                 memory: Optional[jnp.ndarray] = None, *, rolling: bool):
+    seq = block_sequence(cfg)
+    period, reps, rem = split_periods(seq)
+
+    def scan_fn(x, inp):
+        pparams, pcache = inp
+        new_cache = {}
+        for i, kind in enumerate(period):
+            x, c = block_decode(cfg, kind, pparams[f"b{i}"], x,
+                                pcache[f"b{i}"], index, memory,
+                                rolling=rolling)
+            new_cache[f"b{i}"] = c
+        return x, new_cache
+
+    new_scan = None
+    if params["scan"] is not None and reps > 0:
+        x, new_scan = jax.lax.scan(scan_fn, x, (params["scan"], caches["scan"]))
+    new_rem = []
+    for kind, p, c in zip(rem, params["rem"], caches["rem"]):
+        x, nc = block_decode(cfg, kind, p, x, c, index, memory, rolling=rolling)
+        new_rem.append(nc)
+    return x, {"scan": new_scan, "rem": new_rem}

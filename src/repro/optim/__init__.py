@@ -1,0 +1,14 @@
+from repro.optim.optimizers import (
+    Optimizer,
+    adafactor,
+    adamw,
+    clip_by_global_norm,
+    make_optimizer,
+    sgd,
+)
+from repro.optim.schedule import constant, cosine_decay, warmup_cosine
+
+__all__ = [
+    "Optimizer", "adafactor", "adamw", "clip_by_global_norm",
+    "make_optimizer", "sgd", "constant", "cosine_decay", "warmup_cosine",
+]

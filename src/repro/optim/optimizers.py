@@ -1,0 +1,160 @@
+"""Optimizers as (init, update) pairs over pytrees — optax-style but
+self-contained (optax is not installed in this environment).
+
+* ``sgd`` (+momentum) — the paper's local trainer
+* ``adamw`` — default for <=15B-class transformer configs
+* ``adafactor`` — factored second moment for the >=90B configs, keeping
+  optimizer state ~O(params/d) so the 256-chip memory analysis fits
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], Tuple[Any, Any]]  # (grads, state, params)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree_util.tree_leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale.astype(g.dtype), grads), gn
+
+
+def sgd(lr_or_sched, momentum: float = 0.9, weight_decay: float = 0.0) -> Optimizer:
+    sched = lr_or_sched if callable(lr_or_sched) else (lambda _: jnp.float32(lr_or_sched))
+
+    def init(params):
+        return {
+            "mu": jax.tree_util.tree_map(jnp.zeros_like, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params):
+        lr = sched(state["step"])
+        mu = jax.tree_util.tree_map(
+            lambda m, g: momentum * m + g.astype(m.dtype), state["mu"], grads)
+        new_params = jax.tree_util.tree_map(
+            lambda p, m: p - lr * (m + weight_decay * p).astype(p.dtype),
+            params, mu)
+        return new_params, {"mu": mu, "step": state["step"] + 1}
+
+    return Optimizer(init, update)
+
+
+def adamw(lr_or_sched, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+          weight_decay: float = 0.01) -> Optimizer:
+    sched = lr_or_sched if callable(lr_or_sched) else (lambda _: jnp.float32(lr_or_sched))
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {
+            "mu": jax.tree_util.tree_map(zeros, params),
+            "nu": jax.tree_util.tree_map(zeros, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr = sched(step)
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            g32 = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g32
+            v = b2 * v + (1 - b2) * jnp.square(g32)
+            mh = m / bc1
+            vh = v / bc2
+            newp = p.astype(jnp.float32) - lr * (
+                mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(jnp.float32))
+            return newp.astype(p.dtype), m, v
+
+        flat_p, tdef = jax.tree_util.tree_flatten(params)
+        flat_g = jax.tree_util.tree_leaves(grads)
+        flat_m = jax.tree_util.tree_leaves(state["mu"])
+        flat_v = jax.tree_util.tree_leaves(state["nu"])
+        out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+        new_params = jax.tree_util.tree_unflatten(tdef, [o[0] for o in out])
+        mu = jax.tree_util.tree_unflatten(tdef, [o[1] for o in out])
+        nu = jax.tree_util.tree_unflatten(tdef, [o[2] for o in out])
+        return new_params, {"mu": mu, "nu": nu, "step": step}
+
+    return Optimizer(init, update)
+
+
+def adafactor(lr_or_sched, decay: float = 0.8, eps: float = 1e-30,
+              clip_threshold: float = 1.0, weight_decay: float = 0.0) -> Optimizer:
+    """Factored Adam (Shazeer & Stern 2018), no momentum: for a [r, c]
+    matrix the second-moment state is r + c floats instead of r*c."""
+    sched = lr_or_sched if callable(lr_or_sched) else (lambda _: jnp.float32(lr_or_sched))
+
+    def _factored(shape) -> bool:
+        return len(shape) >= 2 and shape[-1] > 1 and shape[-2] > 1
+
+    def init(params):
+        def st(p):
+            if _factored(p.shape):
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {
+            "v": jax.tree_util.tree_map(st, params,
+                                        is_leaf=lambda x: hasattr(x, "shape")),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr = sched(step)
+        beta = 1.0 - (step.astype(jnp.float32) + 1.0) ** (-decay)
+
+        def upd(p, g, v):
+            g32 = g.astype(jnp.float32)
+            g2 = jnp.square(g32) + eps
+            if _factored(p.shape):
+                vr = beta * v["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * v["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                rfac = (vr / jnp.mean(vr, axis=-1, keepdims=True))[..., None]
+                upd_ = g32 * jax.lax.rsqrt(rfac * vc[..., None, :] + eps)
+                nv = {"vr": vr, "vc": vc}
+            else:
+                nv = {"v": beta * v["v"] + (1 - beta) * g2}
+                upd_ = g32 * jax.lax.rsqrt(nv["v"] + eps)
+            rms = jnp.sqrt(jnp.mean(jnp.square(upd_)) + 1e-12)
+            upd_ = upd_ / jnp.maximum(1.0, rms / clip_threshold)
+            newp = p.astype(jnp.float32) - lr * (upd_ + weight_decay * p.astype(jnp.float32))
+            return newp.astype(p.dtype), nv
+
+        flat_p, tdef = jax.tree_util.tree_flatten(params)
+        flat_g = jax.tree_util.tree_leaves(grads)
+        is_state = lambda x: isinstance(x, dict) and ("v" in x or "vr" in x)
+        flat_v = state["v"]
+        # align the v-subtree with param leaves
+        flat_v_leaves = jax.tree_util.tree_leaves(
+            flat_v, is_leaf=is_state)
+        out = [upd(p, g, v) for p, g, v in zip(flat_p, flat_g, flat_v_leaves)]
+        new_params = jax.tree_util.tree_unflatten(tdef, [o[0] for o in out])
+        new_v = jax.tree_util.tree_unflatten(tdef, [o[1] for o in out])
+        return new_params, {"v": new_v, "step": step}
+
+    return Optimizer(init, update)
+
+
+def make_optimizer(name: str, lr_or_sched, *, weight_decay: float = 0.01,
+                   momentum: float = 0.9) -> Optimizer:
+    if name == "sgd":
+        return sgd(lr_or_sched, momentum=momentum, weight_decay=0.0)
+    if name == "adamw":
+        return adamw(lr_or_sched, weight_decay=weight_decay)
+    if name == "adafactor":
+        return adafactor(lr_or_sched, weight_decay=weight_decay)
+    raise ValueError(f"unknown optimizer {name!r}")

@@ -1,0 +1,26 @@
+"""Learning-rate schedules (pure functions of the step counter)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.float32(lr)
+
+
+def cosine_decay(lr: float, total_steps: int, final_frac: float = 0.1):
+    def sched(step):
+        t = jnp.clip(step / max(total_steps, 1), 0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+        return jnp.float32(lr * (final_frac + (1 - final_frac) * cos))
+    return sched
+
+
+def warmup_cosine(lr: float, warmup_steps: int, total_steps: int,
+                  final_frac: float = 0.1):
+    cos = cosine_decay(lr, max(total_steps - warmup_steps, 1), final_frac)
+    def sched(step):
+        warm = lr * step / max(warmup_steps, 1)
+        return jnp.where(step < warmup_steps, jnp.float32(warm),
+                         cos(step - warmup_steps))
+    return sched

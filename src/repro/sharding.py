@@ -1,0 +1,296 @@
+"""Sharding rules: PartitionSpec trees for params, optimizer states,
+batches and decode caches on the production mesh.
+
+Scheme (DESIGN.md §6):
+
+* ``data`` axis — FSDP for weights (their "reduction" dim) + batch DP.
+* ``model`` axis — tensor parallelism: attention head columns, FFN hidden,
+  vocab rows of the embedding, MoE expert dim (when divisible).
+* ``pod`` axis — federation: each pod holds an independent replica
+  (params never list "pod"; per-pod divergence is expressed by the
+  explicit node dimension in the federation programs).
+
+Every rule checks divisibility against the mesh axis size and falls back
+to replication — e.g. grok's 8 experts on a 16-way model axis shard the
+``d_ff`` dim instead.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.config.base import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+def axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        out = 1
+        for a in axis:
+            out *= mesh.shape[a]
+        return out
+    return mesh.shape[axis]
+
+
+def _fits(dim: int, mesh: Mesh, axis) -> bool:
+    n = axis_size(mesh, axis)
+    return dim % n == 0 and dim >= n
+
+
+def dim_axis(dim: int, mesh: Mesh, axis):
+    """axis if it divides dim, else None (replicate)."""
+    return axis if _fits(dim, mesh, axis) else None
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    names = []
+    for p in path:
+        if hasattr(p, "key"):
+            names.append(str(p.key))
+        elif hasattr(p, "idx"):
+            names.append(f"#{p.idx}")
+    return tuple(names)
+
+
+# ---------------------------------------------------------------------------
+# parameter specs
+# ---------------------------------------------------------------------------
+
+_COL_PARALLEL_PARENTS = {  # dense layers whose OUTPUT dim gets "model"
+    "wq", "wk", "wv", "wi", "wi_gate", "wi_up", "in_proj", "in_rec",
+    "in_gate", "w_a", "w_x",
+}
+_ROW_PARALLEL_PARENTS = {  # dense layers whose INPUT dim gets "model"
+    "wo", "out", "out_proj",
+}
+_REPLICATED_PARENTS = {  # small / host-side layers
+    "proto_proj", "fc", "fc1", "fc2", "router",
+}
+
+
+def _param_spec(names: Tuple[str, ...], shape: Tuple[int, ...],
+                mesh: Mesh, data_axis, model_axis) -> P:
+    """Spec for one leaf; ``shape`` EXCLUDES any scan-stack prefix."""
+    parent = names[-2] if len(names) >= 2 else ""
+    leafname = names[-1]
+
+    # embeddings: vocab rows over model, d over data (FSDP).  In the
+    # pure-FSDP layout (model_axis=None) the vocab STAYS sharded over the
+    # physical "model" axis — replicated [B,S,V] logits at 150k-256k
+    # vocabs cost 20-45 GiB/dev in KD temps (Perf-17).
+    if leafname == "table":
+        return P(dim_axis(shape[0], mesh, model_axis),
+                 dim_axis(shape[1], mesh, data_axis))
+
+    # norms / small vectors / scalars
+    if len(shape) <= 1:
+        return P(*([None] * len(shape)))
+
+    # conv kernels (paper CNN/ResNet, mamba/rglru depthwise): replicate
+    if leafname == "kernel" and parent in ("conv", "conv1", "conv2", "stem",
+                                           "proj"):
+        return P(*([None] * len(shape)))
+    if len(shape) == 4:  # any HWIO conv
+        return P(None, None, None, None)
+
+    # MoE expert tensors [E, in, out]
+    if len(shape) == 3 and parent in ("wi_gate", "wi_up", "wo") or \
+            (len(shape) == 3 and leafname in ("wi_gate", "wi_up", "wo")):
+        e, d_in, d_out = shape
+        if _fits(e, mesh, model_axis):
+            return P(model_axis, dim_axis(d_in, mesh, data_axis), None)
+        # experts don't divide: TP over the wide dim instead
+        if leafname in ("wi_gate", "wi_up") or parent in ("wi_gate", "wi_up"):
+            return P(None, dim_axis(d_in, mesh, data_axis),
+                     dim_axis(d_out, mesh, model_axis))
+        return P(None, dim_axis(d_in, mesh, model_axis),
+                 dim_axis(d_out, mesh, data_axis))
+
+    if len(shape) == 2:
+        d_in, d_out = shape
+        if parent in _REPLICATED_PARENTS or leafname == "router":
+            return P(dim_axis(d_in, mesh, data_axis), None)
+        if parent in _ROW_PARALLEL_PARENTS:
+            return P(dim_axis(d_in, mesh, model_axis),
+                     dim_axis(d_out, mesh, data_axis))
+        # default: column-parallel (covers _COL_PARALLEL_PARENTS)
+        return P(dim_axis(d_in, mesh, data_axis),
+                 dim_axis(d_out, mesh, model_axis))
+
+    return P(*([None] * len(shape)))
+
+
+def param_specs(cfg: ModelConfig, shapes_tree, mesh: Mesh, *,
+                data_axis="data", model_axis="model"):
+    """Spec tree matching ``shapes_tree`` (from ``jax.eval_shape``).
+
+    Leaves under a ``scan``-stacked subtree carry a leading period dim
+    which is replicated (never sharded across layers).
+    """
+    def leaf_spec(path, leaf):
+        names = _path_names(path)
+        shape = tuple(leaf.shape)
+        stacked = "scan" in names
+        body = shape[1:] if stacked and len(shape) >= 1 else shape
+        spec = _param_spec(names, body, mesh, data_axis, model_axis)
+        if stacked:
+            spec = P(None, *spec)
+        return spec
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, shapes_tree)
+
+
+# ---------------------------------------------------------------------------
+# optimizer-state specs
+# ---------------------------------------------------------------------------
+
+def opt_state_specs(opt_name: str, pspecs, shapes=None):
+    """Mirror param specs onto the optimizer state tree."""
+    if opt_name in ("sgd",):
+        return {"mu": pspecs, "step": P()}
+    if opt_name == "adamw":
+        return {"mu": pspecs, "nu": pspecs, "step": P()}
+    if opt_name == "adafactor":
+        def vspec(spec):
+            t = tuple(spec)
+            if len(t) >= 2:
+                return {"vr": P(*t[:-1]), "vc": P(*(t[:-2] + t[-1:]))}
+            return {"v": P(*t)}
+        v = jax.tree_util.tree_map(vspec, pspecs,
+                                   is_leaf=lambda x: isinstance(x, P))
+        return {"v": v, "step": P()}
+    raise ValueError(opt_name)
+
+
+# ---------------------------------------------------------------------------
+# batch / cache specs
+# ---------------------------------------------------------------------------
+
+def batch_specs(batch_shapes, mesh: Mesh, *, dp_axes) -> Any:
+    """Batch dim over the data-parallel axes (pod+data for training)."""
+    def spec(leaf):
+        shape = tuple(leaf.shape)
+        if not shape:
+            return P()
+        lead = dim_axis(shape[0], mesh, dp_axes)
+        return P(lead, *([None] * (len(shape) - 1)))
+    return jax.tree_util.tree_map(spec, batch_shapes)
+
+
+def cache_specs(cache_shapes, mesh: Mesh, *, data_axis="data",
+                model_axis="model"):
+    """Decode-state sharding:
+
+    * KV caches [.., B, S, KH, HD] — batch over data; ``head_dim`` over
+      model.  (Sharding S instead forces GSPMD to replicate the cache:
+      the decode ``dynamic_update_slice`` writes at a traced offset into
+      that dim.  GQA kv-head counts (1/4/8) can't shard a 16-way axis,
+      but HD=64..256 always divides.)
+    * mamba2 ssm state [.., B, H, N, P] — batch over data, N over model.
+    * rglru h [.., B, W] / conv tails [.., B, W-1, C] — width over model.
+    """
+    def leaf_spec(path, leaf):
+        names = _path_names(path)
+        shape = tuple(leaf.shape)
+        stacked = "scan" in names
+        body = list(shape[1:] if stacked else shape)
+        leafname = names[-1]
+        spec: list = [None] * len(body)
+        if len(body) >= 1:
+            spec[0] = dim_axis(body[0], mesh, data_axis)  # batch
+        if leafname in ("k", "v") and len(body) == 4:
+            spec[3] = dim_axis(body[3], mesh, model_axis)  # head_dim
+        elif leafname == "ssm" and len(body) == 4:
+            spec[2] = dim_axis(body[2], mesh, model_axis)  # state N
+        elif leafname == "h" and len(body) == 2:
+            spec[1] = dim_axis(body[1], mesh, model_axis)
+        elif leafname == "conv" and len(body) == 3:
+            spec[2] = dim_axis(body[2], mesh, model_axis)
+        out = P(*spec)
+        if stacked:
+            out = P(None, *out)
+        return out
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, cache_shapes)
+
+
+def to_named(tree_of_specs, mesh: Mesh):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s),
+        tree_of_specs, is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# activation sharding (MaxText-style in-model constraints)
+# ---------------------------------------------------------------------------
+# GSPMD propagation alone goes "weights-stationary" on big FSDP+TP trees
+# (it replicates the token batch and shards only the hidden dims). The
+# model code calls :func:`shard_act` on the residual stream / attention
+# heads / FFN hidden / logits; outside a configured context it's a no-op,
+# so tests and CPU federation runs are unaffected.
+
+_ACT_CTX: dict = {"mesh": None, "dp": None, "model": None}
+
+_ACT_KINDS = {
+    # logical layout -> per-dim axis roles; "dp" batch, "tp" tensor,
+    # "sp" sequence-parallel (residual stream sharded over the model axis
+    # between blocks — Korthikanti-style TP+SP; GSPMD inserts the
+    # all-gather/reduce-scatter pair at block boundaries)
+    "btd": ("dp", "sp", None),
+    "btf": ("dp", None, "tp"),       # ffn hidden
+    "bthd": ("dp", None, "tp", None),  # per-head activations
+    "btv": ("dp", None, "vocab"),    # logits: vocab on model, always
+    "bd": ("dp", "tp"),
+    "egcd": ("tp", "dp", None, None),  # moe dispatched tokens
+    "gtd": ("dp", None, None),         # moe grouped tokens
+    "gtec": ("dp", None, "tp", None),  # moe dispatch/combine tensors
+}
+
+
+def set_activation_sharding(mesh, *, dp_axes=("data",), model_axis="model"):
+    """model_axis=None disables TP constraints (pure-FSDP layout)."""
+    _ACT_CTX.update(mesh=mesh, dp=tuple(dp_axes), model=model_axis)
+
+
+def clear_activation_sharding():
+    _ACT_CTX.update(mesh=None, dp=None, model=None)
+
+
+def shard_act(x, kind: str):
+    mesh = _ACT_CTX["mesh"]
+    if mesh is None:
+        return x
+    roles = _ACT_KINDS[kind]
+    # MoE fallback: when the expert dim doesn't divide the model axis
+    # (grok: 8 experts / 16-way), move tensor parallelism to the trailing
+    # feature/capacity dim instead of replicating the big dispatch tensors.
+    if kind == "egcd" and not _fits(x.shape[-4], mesh, _ACT_CTX["model"]):
+        # capacity rows are a pure batch dim for the expert FFN -> shard
+        # them over model ("expert data parallelism" when E < axis size)
+        roles = (None, "dp", "tp", None)
+    if kind == "gtec" and not _fits(x.shape[-2], mesh, _ACT_CTX["model"]):
+        roles = ("dp", None, None, "tp")
+    spec = []
+    for dim, role in zip(x.shape[-len(roles):], roles):
+        if role == "dp":
+            spec.append(dim_axis(dim, mesh, _ACT_CTX["dp"]))
+        elif role in ("tp", "sp", "vocab"):
+            spec.append(dim_axis(dim, mesh, _ACT_CTX["model"]))
+        else:
+            spec.append(None)
+    # rank mismatch (e.g. extra leading scan/vmap dims): leave them free
+    lead = [None] * (x.ndim - len(roles))
+    if lead:
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, P(*lead, *spec)))
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))

@@ -1,0 +1,99 @@
+"""Per-architecture smoke tests (deliverable f).
+
+Each assigned architecture instantiates a REDUCED variant of the same
+family (<=2 layers / d_model<=128 / <=4 experts) and runs one forward and
+one ProFe train step on CPU, asserting output shapes and no NaNs.
+The FULL configs are exercised only via the dry-run (ShapeDtypeStruct).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import FederationConfig, TrainConfig, get_config
+from repro.configs import ASSIGNED, PAPER
+from repro.core.profe import init_node_state, make_profe_step
+from repro.models import derive_student, forward, init_params
+from repro.optim import make_optimizer
+
+B, S = 2, 16
+
+
+def _batch(cfg, rng):
+    if cfg.family in ("cnn", "resnet"):
+        h, w, c = cfg.input_hw
+        return {
+            "image": jax.random.normal(rng, (B, h, w, c), jnp.float32),
+            "label": jax.random.randint(rng, (B,), 0, cfg.num_classes),
+        }
+    batch = {
+        "tokens": jax.random.randint(rng, (B, S), 0, cfg.vocab_size),
+        "labels": jax.random.randint(rng, (B, S), 0, cfg.vocab_size),
+        "domains": jax.random.randint(rng, (B,), 0, cfg.n_proto_classes),
+    }
+    if cfg.family == "vlm":
+        batch["image_embed"] = jnp.ones((B, cfg.num_image_tokens, cfg.d_model),
+                                        jnp.bfloat16)
+    if cfg.family == "audio":
+        batch["audio_embed"] = jnp.ones((B, cfg.encoder_seq, cfg.d_model),
+                                        jnp.bfloat16)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_smoke_forward(arch):
+    cfg = get_config(arch).smoke()
+    assert cfg.num_layers <= max(2, len(cfg.block_pattern) or 2) + 1
+    assert cfg.d_model <= 512
+    assert cfg.num_experts <= 4
+    rng = jax.random.PRNGKey(0)
+    params = init_params(cfg, rng)
+    out = forward(cfg, params, _batch(cfg, rng), remat=False)
+    assert out.logits.shape == (B, S, cfg.vocab_size)
+    assert out.f1.shape == (B, cfg.proto_dim)
+    assert not bool(jnp.any(jnp.isnan(out.logits))), f"NaN logits in {arch}"
+    assert not bool(jnp.any(jnp.isnan(out.f1)))
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_smoke_profe_train_step(arch):
+    """One ProFe joint step (teacher+student, Eq. 8/9) on the reduced arch."""
+    teacher = get_config(arch).smoke()
+    student = derive_student(teacher)
+    fed = FederationConfig()
+    opt = make_optimizer("adamw", 1e-3)
+    state = init_node_state(teacher, student, jax.random.PRNGKey(1), opt, opt,
+                            teacher.n_proto_classes)
+    step = make_profe_step(teacher, student, fed, opt, opt, remat=False)
+    batch = _batch(teacher, jax.random.PRNGKey(2))
+    state2, metrics = step(state, batch, teacher_on=True)
+    assert np.isfinite(float(metrics["loss_s"]))
+    assert np.isfinite(float(metrics["loss_t"]))
+    # params actually changed
+    def _delta(a, b):
+        return sum(float(jnp.sum(jnp.abs(x - y)))
+                   for x, y in zip(jax.tree_util.tree_leaves(a),
+                                   jax.tree_util.tree_leaves(b)))
+    assert _delta(state.student, state2.student) > 0
+
+
+@pytest.mark.parametrize("arch", PAPER)
+def test_paper_models_smoke(arch):
+    cfg = get_config(arch)
+    rng = jax.random.PRNGKey(0)
+    params = init_params(cfg, rng)
+    out = forward(cfg, params, _batch(cfg, rng))
+    assert out.logits.shape == (B, cfg.num_classes)
+    assert out.f1.shape == (B, cfg.proto_dim)
+    assert not bool(jnp.any(jnp.isnan(out.logits)))
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_student_derivation(arch):
+    cfg = get_config(arch)
+    stu = derive_student(cfg)
+    assert stu.family == cfg.family
+    assert stu.num_layers <= cfg.num_layers
+    assert stu.proto_dim == cfg.proto_dim  # prototype spaces must align
+    if cfg.is_moe:
+        assert not stu.is_moe  # dense student from MoE teacher

@@ -1,0 +1,190 @@
+"""Unit tests for the ProFe core math: distillation (Sec. III-A),
+prototypes (III-B), quantization (III-D), topology, comm accounting."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import distillation as D
+from repro.core import prototypes as P
+from repro.core import quantization as Q
+from repro.core import topology as T
+from repro.core.comm import CommMeter
+from repro.core.metrics import accuracy, macro_f1
+
+RNG = np.random.default_rng(7)
+
+
+# ---------------------------------------------------------------------------
+# distillation
+# ---------------------------------------------------------------------------
+
+def test_kd_loss_nonnegative_and_zero_at_match():
+    ys = jnp.asarray(RNG.standard_normal((16, 10)), jnp.float32)
+    assert float(D.kd_loss(ys, ys, 3.0)) == pytest.approx(0.0, abs=1e-6)
+    yt = jnp.asarray(RNG.standard_normal((16, 10)), jnp.float32)
+    assert float(D.kd_loss(ys, yt, 3.0)) > 0
+
+
+def test_kd_temperature_scaling():
+    """L_KD = KL * T^2; at large T the KL shrinks ~T^-2 so the product
+    approaches a finite gradient-preserving limit (Hinton et al.)."""
+    ys = jnp.asarray(RNG.standard_normal((8, 10)), jnp.float32)
+    yt = jnp.asarray(RNG.standard_normal((8, 10)), jnp.float32)
+    l1 = float(D.kd_loss(ys, yt, 1.0))
+    l100 = float(D.kd_loss(ys, yt, 100.0))
+    assert 0 < l100 < 10 * max(l1, 1.0)
+
+
+def test_ce_loss_matches_manual():
+    logits = jnp.asarray(RNG.standard_normal((32, 5)), jnp.float32)
+    labels = jnp.asarray(RNG.integers(0, 5, 32))
+    want = -np.mean([jax.nn.log_softmax(logits[i])[labels[i]]
+                     for i in range(32)])
+    np.testing.assert_allclose(float(D.ce_loss(logits, labels)), want,
+                               rtol=1e-6)
+
+
+def test_alpha_decay_schedule():
+    """Professor importance: halved per round, snapped to 0 below limit."""
+    a0, lim = 0.7, 0.05
+    values = [float(D.alpha_at_round(a0, lim, r)) for r in range(8)]
+    assert values[0] == pytest.approx(0.7)
+    assert values[1] == pytest.approx(0.35)
+    assert values[3] == pytest.approx(0.0875)
+    assert values[4] == 0.0  # 0.04375 < 0.05 -> snapped
+    assert all(v == 0.0 for v in values[4:])
+    assert D.teacher_active(a0, lim, 3)
+    assert not D.teacher_active(a0, lim, 4)
+
+
+# ---------------------------------------------------------------------------
+# prototypes
+# ---------------------------------------------------------------------------
+
+def test_local_prototypes_eq3():
+    f1 = jnp.asarray(RNG.standard_normal((20, 8)), jnp.float32)
+    labels = jnp.asarray(RNG.integers(0, 4, 20))
+    protos, counts = P.local_prototypes(f1, labels, 4)
+    for c in range(4):
+        idx = np.asarray(labels) == c
+        assert counts[c] == idx.sum()
+        if idx.sum():
+            np.testing.assert_allclose(np.asarray(protos[c]),
+                                       np.asarray(f1)[idx].mean(0), rtol=1e-5)
+
+
+def test_aggregate_prototypes_eq4_weighting():
+    # node 0 has 3 instances of class 0, node 1 has 1 -> weights 3/4, 1/4
+    p0 = jnp.ones((1, 4)) * 2.0
+    p1 = jnp.ones((1, 4)) * 6.0
+    protos = jnp.stack([p0, p1])            # [2, 1, 4]
+    counts = jnp.asarray([[3.0], [1.0]])
+    glob, mask = P.aggregate_prototypes(protos, counts)
+    np.testing.assert_allclose(np.asarray(glob[0]), np.full(4, 3.0), rtol=1e-6)
+    assert mask[0] == 1.0
+
+
+def test_aggregate_prototypes_unseen_class_masked():
+    protos = jnp.zeros((2, 3, 4))
+    counts = jnp.asarray([[1.0, 0.0, 0.0], [2.0, 0.0, 5.0]])
+    _, mask = P.aggregate_prototypes(protos, counts)
+    np.testing.assert_array_equal(np.asarray(mask), [1.0, 0.0, 1.0])
+
+
+def test_nearest_prototype_eq5():
+    protos = jnp.eye(3, 8) * 5
+    x = protos[jnp.asarray([2, 0, 1])] + 0.01
+    pred = P.nearest_prototype_predict(x, protos, jnp.ones(3))
+    np.testing.assert_array_equal(np.asarray(pred), [2, 0, 1])
+
+
+def test_proto_mse_eq6_masks_unseen():
+    f1 = jnp.ones((4, 8))
+    protos = jnp.zeros((2, 8))
+    labels = jnp.asarray([0, 0, 1, 1])
+    mask_all = jnp.ones(2)
+    mask_half = jnp.asarray([1.0, 0.0])
+    full = float(P.proto_mse_loss(f1, protos, labels, mask_all))
+    half = float(P.proto_mse_loss(f1, protos, labels, mask_half))
+    assert full == pytest.approx(1.0)   # ||1-0||^2 mean
+    assert half == pytest.approx(1.0)   # only class-0 rows counted
+    zero = float(P.proto_mse_loss(f1, protos, labels, jnp.zeros(2)))
+    assert zero == 0.0
+
+
+# ---------------------------------------------------------------------------
+# quantization
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bits", [8, 16])
+def test_quantize_roundtrip_error_bound(bits):
+    x = jnp.asarray(RNG.standard_normal((100,)) * 10, jnp.float32)
+    rt = Q.quantize_dequantize_tree(x, bits)
+    qmax = (1 << (bits - 1)) - 1
+    delta = float(jnp.max(jnp.abs(x))) / qmax
+    assert float(jnp.max(jnp.abs(rt - x))) <= delta / 2 + 1e-7
+
+
+def test_quantize_tree_structure_and_ints():
+    tree = {"a": jnp.ones((3, 3)), "b": {"c": jnp.arange(5, dtype=jnp.float32)}}
+    payload = Q.quantize_tree(tree, 16)
+    codes = jax.tree_util.tree_leaves(payload["codes"])
+    assert all(jnp.issubdtype(c.dtype, jnp.integer) for c in codes)
+    rt = Q.dequantize_tree(payload)
+    np.testing.assert_allclose(np.asarray(rt["a"]), np.ones((3, 3)), atol=1e-3)
+
+
+def test_wire_bytes_16bit_halves_fp32():
+    tree = {"w": jnp.zeros((1000,), jnp.float32)}
+    assert Q.tree_wire_bytes(tree) == 4000
+    assert Q.tree_wire_bytes(tree, bits=16) == 2004  # + fp32 scale
+
+
+def test_int_arrays_pass_through():
+    x = jnp.arange(10, dtype=jnp.int32)
+    codes, delta = Q.quantize_array(x, 16)
+    assert codes.dtype == jnp.int32
+    np.testing.assert_array_equal(np.asarray(Q.dequantize_array(codes, delta)),
+                                  np.arange(10))
+
+
+# ---------------------------------------------------------------------------
+# topology / comm
+# ---------------------------------------------------------------------------
+
+def test_topologies():
+    full = T.adjacency(5, "full")
+    assert full.sum() == 20 and not full.diagonal().any()
+    ring = T.adjacency(5, "ring")
+    assert (ring.sum(1) == 2).all()
+    star = T.adjacency(5, "star")
+    assert star[0].sum() == 4 and (star[1:, 1:] == 0).all()
+
+
+def test_mixing_weights_row_stochastic():
+    w = T.mixing_weights(T.adjacency(6, "ring"))
+    np.testing.assert_allclose(w.sum(1), np.ones(6), rtol=1e-12)
+
+
+def test_comm_meter_accounting():
+    m = CommMeter(3)
+    payload = {"w": jnp.zeros((100,), jnp.float32)}
+    n = m.record_broadcast(0, [1, 2], payload, kind="model", round_idx=0)
+    assert n == 400
+    assert m.sent[0] == 800          # two receivers
+    assert m.received[1] == 400
+    n16 = m.record_broadcast(1, [0], payload, kind="model", round_idx=0,
+                             bits=16)
+    assert n16 == 204
+
+
+# ---------------------------------------------------------------------------
+# metrics
+# ---------------------------------------------------------------------------
+
+def test_macro_f1_perfect_and_worst():
+    y = np.asarray([0, 1, 2, 0, 1, 2])
+    assert macro_f1(y, y, 3) == 1.0
+    assert macro_f1(y, (y + 1) % 3, 3) == 0.0
+    assert accuracy(y, y) == 1.0

@@ -1,0 +1,130 @@
+"""Data pipeline (partitioners = the paper's five splits) and optimizers."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data import (batches, dirichlet_partition, iid_partition,
+                        make_image_dataset, make_token_dataset, partition,
+                        pathological_partition, train_test_split)
+from repro.optim import adafactor, adamw, clip_by_global_norm, sgd
+
+RNG = np.random.default_rng(0)
+
+
+# ---------------------------------------------------------------------------
+# synthetic data
+# ---------------------------------------------------------------------------
+
+def test_image_dataset_learnable_structure():
+    d = make_image_dataset(0, 500, (16, 16, 3), 10)
+    assert d["image"].shape == (500, 16, 16, 3)
+    assert set(np.unique(d["label"])) <= set(range(10))
+    # class-conditional means must differ (it's a mixture, not noise)
+    m0 = d["image"][d["label"] == 0].mean(0)
+    m1 = d["image"][d["label"] == 1].mean(0)
+    assert np.abs(m0 - m1).mean() > 0.05
+
+
+def test_token_dataset_domains():
+    d = make_token_dataset(0, 50, 32, 1000, 4)
+    assert d["tokens"].shape == (50, 32)
+    np.testing.assert_array_equal(d["labels"][:, :-1], d["tokens"][:, 1:])
+    assert d["domains"].max() < 4
+
+
+def test_train_test_split_disjoint_and_sized():
+    d = make_image_dataset(1, 200, (8, 8, 1), 4)
+    tr, te = train_test_split(d, 0.1, 0)
+    assert len(te["label"]) == 20 and len(tr["label"]) == 180
+
+
+# ---------------------------------------------------------------------------
+# partitioners (paper Sec. IV splits)
+# ---------------------------------------------------------------------------
+
+def _cover_all(parts, n):
+    got = np.sort(np.concatenate(parts))
+    np.testing.assert_array_equal(got, np.arange(n))
+
+
+def test_iid_partition_covers():
+    labels = RNG.integers(0, 10, 1000)
+    parts = iid_partition(labels, 7, 0)
+    _cover_all(parts, 1000)
+
+
+@pytest.mark.parametrize("frac,maxc", [(0.6, 7), (0.4, 5), (0.2, 3)])
+def test_pathological_partition_class_limits(frac, maxc):
+    labels = RNG.integers(0, 10, 2000)
+    parts = pathological_partition(labels, 8, frac, 0)
+    _cover_all(parts, 2000)
+    for p in parts:
+        assert len(np.unique(labels[p])) <= maxc
+    # every class owned somewhere
+    owned = set()
+    for p in parts:
+        owned |= set(np.unique(labels[p]).tolist())
+    assert owned == set(range(10))
+
+
+def test_dirichlet_partition_nonempty_and_covering():
+    labels = RNG.integers(0, 10, 1500)
+    parts = dirichlet_partition(labels, 10, 0.5, 0)
+    _cover_all(parts, 1500)
+    assert all(len(p) > 0 for p in parts)
+
+
+def test_partition_dispatch():
+    labels = RNG.integers(0, 10, 300)
+    for split in ["iid", "noniid60", "noniid40", "noniid20", "dirichlet"]:
+        parts = partition(labels, 4, split, 0)
+        _cover_all(parts, 300)
+
+
+def test_batcher_shapes_and_count():
+    d = {"x": np.arange(103, dtype=np.float32)}
+    bs = list(batches(d, 10, seed=0))
+    assert len(bs) == 10
+    assert all(b["x"].shape == (10,) for b in bs)
+
+
+# ---------------------------------------------------------------------------
+# optimizers
+# ---------------------------------------------------------------------------
+
+def _optimize(opt, steps=120):
+    """Minimize ||x - 3||^2 ; returns final loss."""
+    params = {"x": jnp.asarray([10.0, -4.0])}
+    state = opt.init(params)
+    for _ in range(steps):
+        grads = jax.grad(lambda p: jnp.sum((p["x"] - 3.0) ** 2))(params)
+        params, state = opt.update(grads, state, params)
+    return float(jnp.sum((params["x"] - 3.0) ** 2))
+
+
+def test_sgd_converges():
+    assert _optimize(sgd(0.05, momentum=0.5)) < 1e-3
+
+
+def test_adamw_converges():
+    assert _optimize(adamw(0.3, weight_decay=0.0)) < 1e-2
+
+
+def test_adafactor_converges():
+    assert _optimize(adafactor(0.5), steps=300) < 0.3
+
+
+def test_adafactor_factored_state_is_small():
+    params = {"w": jnp.zeros((128, 64))}
+    st = adafactor(0.01).init(params)
+    sizes = [v.size for v in jax.tree_util.tree_leaves(st["v"])]
+    assert sum(sizes) == 128 + 64  # vr + vc, not 128*64
+
+
+def test_grad_clip():
+    grads = {"a": jnp.asarray([3.0, 4.0])}   # norm 5
+    clipped, gn = clip_by_global_norm(grads, 1.0)
+    assert float(gn) == pytest.approx(5.0)
+    np.testing.assert_allclose(np.asarray(clipped["a"]), [0.6, 0.8],
+                               rtol=1e-6)

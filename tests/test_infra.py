@@ -1,0 +1,172 @@
+"""Infrastructure tests: checkpointing, sharding rules, HLO analyzer,
+mesh-level federation round (1-device mesh), comm accounting."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.checkpoint import load_checkpoint, save_checkpoint
+from repro.config import get_config
+from repro.launch.hlo_analysis import analyze_hlo
+from repro.models import derive_student, init_params
+
+
+# ---------------------------------------------------------------------------
+# checkpoint
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip(tmp_path):
+    cfg = get_config("mnist-cnn")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    path = str(tmp_path / "ck.npz")
+    save_checkpoint(path, params, metadata={"round": 3})
+    restored = load_checkpoint(path, jax.tree_util.tree_map(
+        lambda x: jnp.zeros_like(x), params))
+    for a, b in zip(jax.tree_util.tree_leaves(params),
+                    jax.tree_util.tree_leaves(restored)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_mismatch_raises(tmp_path):
+    path = str(tmp_path / "ck.npz")
+    save_checkpoint(path, {"a": jnp.ones(3)})
+    with pytest.raises(ValueError):
+        load_checkpoint(path, {"b": jnp.ones(3)})
+
+
+# ---------------------------------------------------------------------------
+# sharding rules
+# ---------------------------------------------------------------------------
+
+def test_param_specs_shapes_and_divisibility():
+    from repro.sharding import param_specs
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    cfg = get_config("yi-6b").smoke()
+    shapes = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+    specs = param_specs(cfg, shapes, mesh)
+    # same tree structure
+    assert jax.tree_util.tree_structure(
+        jax.tree_util.tree_map(lambda s: 0, specs,
+                               is_leaf=lambda x: isinstance(x, P))) == \
+        jax.tree_util.tree_structure(
+            jax.tree_util.tree_map(lambda x: 0, shapes))
+    flat = jax.tree_util.tree_leaves(specs,
+                                     is_leaf=lambda x: isinstance(x, P))
+    assert all(isinstance(s, P) for s in flat)
+
+
+def test_spec_rank_matches_leaf_rank():
+    from repro.sharding import param_specs
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    for arch in ["grok-1-314b", "mamba2-130m", "recurrentgemma-9b",
+                 "whisper-small"]:
+        cfg = get_config(arch).smoke()
+        shapes = jax.eval_shape(lambda c=cfg: init_params(c, jax.random.PRNGKey(0)))
+        specs = param_specs(cfg, shapes, mesh)
+        flat_shapes = jax.tree_util.tree_leaves(shapes)
+        flat_specs = jax.tree_util.tree_leaves(
+            specs, is_leaf=lambda x: isinstance(x, P))
+        for sh, sp in zip(flat_shapes, flat_specs):
+            assert len(sp) == len(sh.shape), (arch, sh.shape, tuple(sp))
+
+
+def test_opt_state_specs_structure():
+    from repro.sharding import opt_state_specs
+    pspecs = {"w": P("data", "model"), "b": P(None)}
+    ad = opt_state_specs("adamw", pspecs)
+    assert ad["mu"]["w"] == P("data", "model")
+    af = opt_state_specs("adafactor", pspecs)
+    assert af["v"]["w"]["vr"] == P("data")
+    assert af["v"]["w"]["vc"] == P("model")
+
+
+# ---------------------------------------------------------------------------
+# HLO analyzer
+# ---------------------------------------------------------------------------
+
+HLO_SAMPLE = """
+HloModule test
+
+%body (p: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %p = (s32[], f32[8,8]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,8] get-tuple-element(%p), index=1
+  %w = f32[8,8]{1,0} constant({...})
+  %dot.1 = f32[8,8]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %one = s32[] constant(1)
+  %i2 = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[8,8]) tuple(%i2, %dot.1)
+}
+
+%cond (p2: (s32[], f32[8,8])) -> pred[] {
+  %p2 = (s32[], f32[8,8]) parameter(0)
+  %i3 = s32[] get-tuple-element(%p2), index=0
+  %n = s32[] constant(10)
+  ROOT %lt = pred[] compare(%i3, %n), direction=LT
+}
+
+ENTRY %main (a: f32[8,8]) -> f32[8,8] {
+  %a = f32[8,8]{1,0} parameter(0)
+  %zero = s32[] constant(0)
+  %t0 = (s32[], f32[8,8]) tuple(%zero, %a)
+  %wh = (s32[], f32[8,8]) while(%t0), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"10"}}
+  %ar = f32[8,8]{1,0} all-reduce(%a), replica_groups={}, to_apply=%body
+  ROOT %out = f32[8,8]{1,0} get-tuple-element(%wh), index=1
+}
+"""
+
+
+def test_analyze_hlo_trip_count_multiplies():
+    cost = analyze_hlo(HLO_SAMPLE)
+    # dot: 2*8*8*8 = 1024 flops, x10 trips
+    assert cost.flops == pytest.approx(10 * 1024, rel=0.3)
+
+
+def test_analyze_hlo_collectives():
+    cost = analyze_hlo(HLO_SAMPLE)
+    # all-reduce of f32[8,8] = 256 B operand -> ring convention 2x
+    assert cost.coll.get("all-reduce", 0) == 512
+
+
+# ---------------------------------------------------------------------------
+# mesh federation round on a 1x1 mesh (semantics, not scale)
+# ---------------------------------------------------------------------------
+
+def test_mesh_profe_round_math():
+    from repro.core.mesh_federation import make_profe_round
+    from repro.sharding import param_specs
+    mesh = jax.make_mesh((1, 1, 1), ("pod", "data", "model"))
+    cfg = get_config("yi-6b").smoke()
+    student_cfg = derive_student(cfg)
+    s0 = init_params(student_cfg, jax.random.PRNGKey(0))
+    s1 = init_params(student_cfg, jax.random.PRNGKey(1))
+    stacked = jax.tree_util.tree_map(lambda a, b: jnp.stack([a, b]), s0, s1)
+    shapes = jax.eval_shape(lambda: init_params(student_cfg,
+                                                jax.random.PRNGKey(0)))
+    specs = param_specs(student_cfg, shapes, mesh)
+    protos = jnp.stack([jnp.ones((4, cfg.proto_dim)),
+                        3 * jnp.ones((4, cfg.proto_dim))])
+    counts = jnp.asarray([[1.0, 0, 2, 0], [3.0, 0, 2, 0]])
+    sizes = jnp.asarray([1.0, 1.0])
+
+    round_fn = make_profe_round(mesh, specs, bits=16)
+    with mesh:
+        new_students, glob, mask = jax.jit(round_fn)(stacked, protos, counts,
+                                                     sizes)
+    # all nodes end with the same aggregated student
+    for leaf in jax.tree_util.tree_leaves(new_students):
+        np.testing.assert_allclose(np.asarray(leaf[0]), np.asarray(leaf[1]),
+                                   atol=1e-6)
+    # aggregation ~= plain average (sizes equal), up to quantization error
+    leaf0 = jax.tree_util.tree_leaves(new_students)[0]
+    want = (jax.tree_util.tree_leaves(s0)[0] +
+            jax.tree_util.tree_leaves(s1)[0]) / 2
+    np.testing.assert_allclose(np.asarray(leaf0[0]), np.asarray(want),
+                               atol=2e-3)
+    # Eq.4: class 0 weighted 1:3 -> 1*0.25 + 3*0.75 = 2.5
+    np.testing.assert_allclose(np.asarray(glob[0]),
+                               np.full(cfg.proto_dim, 2.5), atol=1e-2)
+    np.testing.assert_array_equal(np.asarray(mask), [1, 0, 1, 0])

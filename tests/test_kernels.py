@@ -1,0 +1,118 @@
+"""Per-kernel correctness: Pallas (interpret mode) vs pure-jnp oracles,
+swept over shapes and dtypes (deliverable c)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.distillation import kd_loss as kd_oracle
+from repro.core.quantization import quantize_dequantize_tree
+from repro.kernels.kd_loss import ops as kd_ops
+from repro.kernels.kd_loss.ref import kd_loss_rows_ref
+from repro.kernels.proto_dist import ops as pd_ops
+from repro.kernels.proto_dist.ref import proto_dist_ref
+from repro.kernels.quantize import ops as q_ops
+from repro.kernels.quantize.ref import roundtrip_ref
+
+RNG = np.random.default_rng(42)
+
+
+# ---------------------------------------------------------------------------
+# quantize
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(16,), (1000,), (64, 130), (3, 7, 11),
+                                   (8, 128), (2, 3, 5, 7)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_quantize_roundtrip_matches_core(shape, dtype):
+    x = jnp.asarray(RNG.standard_normal(shape) * 3, dtype)
+    got = q_ops.quantize_dequantize(x, 16)     # returns x.dtype
+    want = quantize_dequantize_tree(x, 16).astype(dtype)  # core keeps fp32
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), rtol=0, atol=0)
+
+
+@pytest.mark.parametrize("bits", [8, 16])
+def test_quantize_error_bound(bits):
+    x = jnp.asarray(RNG.standard_normal((257, 33)), jnp.float32)
+    rt = q_ops.quantize_dequantize(x, bits)
+    qmax = (1 << (bits - 1)) - 1
+    delta = float(jnp.max(jnp.abs(x))) / qmax
+    # delta/2 quantization bound + fp32 rounding of the codes*delta product
+    assert float(jnp.max(jnp.abs(rt - x))) <= delta / 2 * 1.05 + 1e-7
+
+
+def test_quantize_codes_within_range():
+    x = jnp.asarray(RNG.standard_normal((64, 64)) * 100, jnp.float32)
+    codes, delta = q_ops.quantize(x, 16)
+    assert int(jnp.max(codes)) <= 32767
+    assert int(jnp.min(codes)) >= -32768
+
+
+# ---------------------------------------------------------------------------
+# kd_loss
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("r,v", [(8, 128), (16, 512), (8, 1000), (32, 4096),
+                                 (1, 50257), (3, 333)])
+@pytest.mark.parametrize("temperature", [1.0, 3.0, 10.0])
+def test_kd_loss_matches_oracle(r, v, temperature):
+    ys = jnp.asarray(RNG.standard_normal((r, v)) * 3, jnp.float32)
+    yt = jnp.asarray(RNG.standard_normal((r, v)) * 3, jnp.float32)
+    got = float(kd_ops.kd_loss(ys, yt, temperature))
+    want = float(kd_oracle(ys, yt, temperature))
+    np.testing.assert_allclose(got, want, rtol=5e-5)
+
+
+def test_kd_loss_zero_when_identical():
+    y = jnp.asarray(RNG.standard_normal((8, 512)), jnp.float32)
+    assert abs(float(kd_ops.kd_loss(y, y, 3.0))) < 1e-5
+
+
+def test_kd_loss_bf16_inputs():
+    ys = jnp.asarray(RNG.standard_normal((8, 512)), jnp.bfloat16)
+    yt = jnp.asarray(RNG.standard_normal((8, 512)), jnp.bfloat16)
+    got = float(kd_ops.kd_loss(ys, yt, 2.0))
+    want = float(kd_oracle(ys, yt, 2.0))
+    np.testing.assert_allclose(got, want, rtol=2e-2, atol=1e-3)
+
+
+def test_kd_loss_3d_batch():
+    ys = jnp.asarray(RNG.standard_normal((2, 5, 256)), jnp.float32)
+    yt = jnp.asarray(RNG.standard_normal((2, 5, 256)), jnp.float32)
+    got = float(kd_ops.kd_loss(ys, yt, 1.0))
+    want = float(kd_oracle(ys, yt, 1.0))
+    np.testing.assert_allclose(got, want, rtol=5e-5)
+
+
+# ---------------------------------------------------------------------------
+# proto_dist
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,c,p", [(64, 10, 32), (130, 100, 256), (7, 3, 64),
+                                   (128, 128, 128), (1, 1, 8)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_proto_dist_matches_oracle(n, c, p, dtype):
+    x = jnp.asarray(RNG.standard_normal((n, p)), dtype)
+    protos = jnp.asarray(RNG.standard_normal((c, p)), dtype)
+    got = np.asarray(pd_ops.proto_dists(x, protos))
+    want = np.asarray(proto_dist_ref(x, protos))
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol)
+
+
+def test_nearest_prototype_matches_argmin():
+    x = jnp.asarray(RNG.standard_normal((50, 64)), jnp.float32)
+    protos = jnp.asarray(RNG.standard_normal((10, 64)), jnp.float32)
+    mask = jnp.ones((10,))
+    got = np.asarray(pd_ops.nearest_prototype(x, protos, mask))
+    want = np.argmin(np.asarray(proto_dist_ref(x, protos)), axis=-1)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_nearest_prototype_respects_mask():
+    x = jnp.zeros((4, 8))
+    protos = jnp.stack([jnp.zeros(8), jnp.ones(8) * 10])
+    mask = jnp.array([0.0, 1.0])  # class 0 unseen -> must pick class 1
+    got = np.asarray(pd_ops.nearest_prototype(x, protos, mask))
+    np.testing.assert_array_equal(got, np.ones(4, np.int64))

@@ -1,0 +1,172 @@
+"""Model-substrate correctness: decode == forward consistency per family,
+chunked-SSD == sequential recurrence, RG-LRU scan == step loop,
+blockwise attention == naive attention."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import get_config
+from repro.models import (decode_step, forward, init_cache, init_params,
+                          prefill)
+from repro.models import attention as A
+from repro.models import rglru as R
+from repro.models import ssm as S
+from repro.models.blockwise import blockwise_attention
+from repro.models.model import build_memory
+from repro.models.transformer import block_sequence, split_periods
+
+RNG = np.random.default_rng(3)
+DECODE_ARCHS = ["yi-6b", "qwen3-14b", "mamba2-130m", "recurrentgemma-9b",
+                "whisper-small", "llama-3.2-vision-90b",
+                "llama4-scout-17b-a16e", "starcoder2-15b", "qwen1.5-110b",
+                "grok-1-314b"]
+
+
+def _lm_batch(cfg, b, s, rng):
+    batch = {"tokens": jax.random.randint(rng, (b, s), 0, cfg.vocab_size)}
+    if cfg.family == "vlm":
+        batch["image_embed"] = jax.random.normal(
+            rng, (b, cfg.num_image_tokens, cfg.d_model), jnp.float32) * 0.02
+    if cfg.family == "audio":
+        batch["audio_embed"] = jax.random.normal(
+            rng, (b, cfg.encoder_seq, cfg.d_model), jnp.float32) * 0.02
+    return batch
+
+
+@pytest.mark.parametrize("arch", DECODE_ARCHS)
+def test_decode_matches_forward(arch):
+    """Prefill S-1 tokens, decode token S-1; logits must match the full
+    forward pass at the last position (the system's core serving invariant)."""
+    cfg = get_config(arch).smoke().replace(dtype="float32",
+                                           param_dtype="float32")
+    b, s = 2, 8
+    rng = jax.random.PRNGKey(0)
+    params = init_params(cfg, rng)
+    batch = _lm_batch(cfg, b, s, rng)
+
+    out = forward(cfg, params, batch, remat=False)
+
+    # prefill on the first s-1 tokens (cache sized for s)
+    pre_batch = dict(batch, tokens=batch["tokens"][:, :s - 1])
+    _, cache = prefill(cfg, params, pre_batch)
+    # grow attention caches to length >= s: rebuild with init_cache and copy
+    cache_full = init_cache(cfg, b, s, jnp.float32)
+    def graft(dst, src):
+        if isinstance(dst, dict):
+            return {k: graft(dst[k], src[k]) for k in dst}
+        if isinstance(dst, list):
+            return [graft(d, s_) for d, s_ in zip(dst, src)]
+        if dst is None or src is None:
+            return src if dst is None else dst
+        if dst.ndim >= 2 and dst.shape != src.shape:
+            # kv cache: paste prefix along the cache-length dim
+            pad = [(0, d - s_) for d, s_ in zip(dst.shape, src.shape)]
+            return jnp.pad(src.astype(dst.dtype), pad)
+        return src.astype(dst.dtype)
+    cache = graft(cache_full, cache)
+
+    memory = build_memory(cfg, params, batch)
+    logits_d, _ = decode_step(cfg, params, batch["tokens"][:, s - 1:s],
+                              jnp.int32(s - 1), cache, memory)
+    want = out.logits[:, -1]
+    err = float(jnp.max(jnp.abs(logits_d - want)))
+    assert err < 2e-2, f"{arch}: decode/forward mismatch {err}"
+
+
+def test_ssd_chunked_equals_sequential():
+    """Mamba-2 SSD chunked algorithm == naive step-by-step recurrence."""
+    b, s, h, p, n = 2, 37, 3, 8, 16
+    x = jnp.asarray(RNG.standard_normal((b, s, h, p)), jnp.float32) * 0.5
+    dt = jax.nn.softplus(jnp.asarray(RNG.standard_normal((b, s, h)), jnp.float32))
+    a_log = jnp.asarray(np.log(np.linspace(1, 4, h)), jnp.float32)
+    bb = jnp.asarray(RNG.standard_normal((b, s, n)), jnp.float32) * 0.5
+    cc = jnp.asarray(RNG.standard_normal((b, s, n)), jnp.float32) * 0.5
+
+    y_chunk, state_chunk = S.ssd_chunked(x, dt, a_log, bb, cc, chunk=8)
+
+    # sequential reference
+    A_ = -np.exp(np.asarray(a_log))
+    st = np.zeros((b, h, n, p), np.float64)
+    ys = []
+    for t in range(s):
+        da = np.exp(np.asarray(dt[:, t]) * A_)          # [b, h]
+        xd = np.asarray(x[:, t]) * np.asarray(dt[:, t])[..., None]  # [b,h,p]
+        st = st * da[..., None, None] + np.einsum("bn,bhp->bhnp",
+                                                  np.asarray(bb[:, t]), xd)
+        ys.append(np.einsum("bn,bhnp->bhp", np.asarray(cc[:, t]), st))
+    y_ref = np.stack(ys, 1)
+    np.testing.assert_allclose(np.asarray(y_chunk), y_ref, rtol=2e-3,
+                               atol=2e-3)
+    np.testing.assert_allclose(np.asarray(state_chunk), st, rtol=2e-3,
+                               atol=2e-3)
+
+
+def test_rglru_scan_equals_step_loop():
+    width = 16
+    params = R.init_rglru(jax.random.PRNGKey(0), width)
+    x = jnp.asarray(RNG.standard_normal((2, 9, width)), jnp.float32)
+    y_scan, h_final = R.rglru_forward(params, x)
+    h = jnp.zeros((2, width))
+    outs = []
+    for t in range(9):
+        y, h = R.rglru_decode_step(params, x[:, t:t + 1], h)
+        outs.append(y[:, 0])
+    y_loop = jnp.stack(outs, 1)
+    np.testing.assert_allclose(np.asarray(y_scan), np.asarray(y_loop),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(h_final), np.asarray(h),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("s,t,window", [(16, 16, 0), (33, 33, 0), (32, 32, 8),
+                                        (16, 48, 0)])
+def test_blockwise_attention_equals_naive(s, t, window):
+    b, nq, nkv, hd = 2, 4, 2, 16
+    q = jnp.asarray(RNG.standard_normal((b, s, nq, hd)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((b, t, nkv, hd)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((b, t, nkv, hd)), jnp.float32)
+    got = blockwise_attention(q, k, v, causal=True, window=window,
+                              q_block=8, kv_block=8)
+    from repro.models.layers import causal_mask
+    mask = causal_mask(s, t, window=window)
+    want_ctx = A.gqa_attend(q, k, v, mask)
+    got_flat = got.reshape(b, s, nq * hd)
+    np.testing.assert_allclose(np.asarray(got_flat), np.asarray(want_ctx),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_split_periods():
+    assert split_periods(["a"] * 7) == (["a"], 7, [])
+    assert split_periods(["r", "r", "a"] * 12 + ["r", "r"]) == \
+        (["r", "r", "a"], 12, ["r", "r"])
+    seq = (["s"] * 4 + ["x"]) * 20
+    assert split_periods(seq) == (["s"] * 4 + ["x"], 20, [])
+
+
+def test_block_sequences():
+    rg = get_config("recurrentgemma-9b")
+    seq = block_sequence(rg)
+    assert len(seq) == 38
+    assert seq[:3] == ["rec", "rec", "attn"]
+    assert seq[-2:] == ["rec", "rec"]
+    vlm = get_config("llama-3.2-vision-90b")
+    seq = block_sequence(vlm)
+    assert len(seq) == 100
+    assert seq.count("cross") == 20
+    assert all(seq[i] == "cross" for i in range(4, 100, 5))
+
+
+def test_rolling_decode_window():
+    """Sliding-window decode: a token far past the window must not attend
+    to evicted positions (finite logits, cache wraps)."""
+    cfg = get_config("yi-6b").smoke().replace(dtype="float32",
+                                              param_dtype="float32",
+                                              sliding_window_serve=8)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    cache = init_cache(cfg, 1, 8, jnp.float32)  # window-sized rolling cache
+    tok = jnp.ones((1, 1), jnp.int32)
+    for i in range(20):
+        logits, cache = decode_step(cfg, params, tok, jnp.int32(i), cache,
+                                    rolling=True)
+    assert bool(jnp.all(jnp.isfinite(logits)))
