@@ -1,0 +1,227 @@
+"""Microbenchmark: one full federation round, seed Python loop vs the
+jitted stacked round (``core/federation.py`` round engine).
+
+The seed trained N nodes with nested Python loops — a jitted step call
+per batch per node, a *freshly re-jitted* prototype accumulator per
+round × node, and per-node Python gossip.  The stacked engine compiles
+the whole round (scan over batches, vmap over nodes, round_ops
+gossip/aggregate) into one program, so dispatch cost per round is O(1)
+in node count.  This benchmark records that gap per node count so the
+perf trajectory is tracked in ``BENCH_round_step.json``.
+
+    PYTHONPATH=src python benchmarks/round_step.py --nodes 2 4 8
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import statistics
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import FederationConfig, TrainConfig, get_config
+from repro.core import federation as F
+from repro.core import round_ops as R
+from repro.core import topology as T
+from repro.core.aggregation import weighted_tree_mean
+from repro.core.profe import proto_labels
+from repro.core.prototypes import aggregate_prototypes
+from repro.core.quantization import quantize_dequantize_tree
+from repro.data import batches, make_image_dataset, partition
+from repro.models import derive_student, forward
+from repro.optim import make_optimizer
+
+
+def _block(tree):
+    for leaf in jax.tree_util.tree_leaves(tree):
+        if hasattr(leaf, "block_until_ready"):
+            leaf.block_until_ready()
+
+
+def _setup(n_nodes: int, samples_per_node: int, batch_size: int,
+           channels=(8, 16)):
+    # A reduced CNN keeps the round in the dispatch-bound regime the
+    # refactor targets: per-batch compute is a few ms, so the measured
+    # gap is the Python-side multiplier (N x T jitted dispatches plus a
+    # re-traced prototype accumulator per round x node) that the stacked
+    # round removes — not the conv throughput of the host CPU, which no
+    # round engine can change.
+    cfg = get_config("mnist-cnn").replace(cnn_channels=tuple(channels))
+    fed = FederationConfig(num_nodes=n_nodes, rounds=1, local_epochs=1,
+                           algorithm="profe")
+    train = TrainConfig(batch_size=batch_size, learning_rate=1e-3,
+                        optimizer="adamw", remat=False)
+    data = make_image_dataset(0, samples_per_node * n_nodes, cfg.input_hw,
+                              cfg.num_classes)
+    parts = partition(data["label"], n_nodes, "iid", 0)
+    node_data = [{k: v[i] for k, v in data.items()} for i in parts]
+    return cfg, fed, train, node_data
+
+
+def _wiring(cfg, fed, train, *, jit: bool):
+    student_cfg = derive_student(cfg)
+    opt = make_optimizer(train.optimizer, train.learning_rate,
+                         weight_decay=train.weight_decay,
+                         momentum=train.momentum)
+    step, wire_model, share_protos, bits, model_cfgs = F._algo_wiring(
+        fed.algorithm, cfg, student_cfg, fed, train, opt, opt, jit=jit)
+    ncls = F._n_proto_classes(cfg)
+    states = F._init_states(fed.algorithm, model_cfgs, fed, opt, opt, ncls)
+    return step, bits, ncls, model_cfgs, states, student_cfg
+
+
+def legacy_round(step, states, node_data, cfg, student_cfg, fed, train,
+                 adj, sizes, ncls, bits, rnd: int):
+    """One round exactly as the seed ran it: per-node Python loops and a
+    per-round re-jitted Eq. 3 accumulator closure."""
+    n_nodes = fed.num_nodes
+    for i in range(n_nodes):
+        st = states[i]
+        for batch in batches(node_data[i], train.batch_size,
+                             seed=fed.seed + rnd * 997 + i,
+                             epochs=fed.local_epochs):
+            st, _ = step(st, batch, teacher_on=True)
+        states[i] = st._replace(round_idx=jnp.int32(rnd + 1))
+
+    protos, counts = [], []
+    for i in range(n_nodes):
+        params = states[i].student
+        sums = jnp.zeros((ncls, student_cfg.proto_dim), jnp.float32)
+        cts = jnp.zeros((ncls,), jnp.float32)
+
+        @jax.jit   # seed behavior: fresh closure => re-trace every call
+        def acc(sums, counts, batch):
+            out = forward(student_cfg, params, batch, remat=False)
+            onehot = jax.nn.one_hot(proto_labels(student_cfg, batch), ncls,
+                                    dtype=jnp.float32)
+            return (sums + jnp.einsum("nc,np->cp", onehot, out.f1),
+                    counts + jnp.sum(onehot, axis=0))
+
+        for batch in batches(node_data[i], train.batch_size,
+                             seed=fed.seed + rnd):
+            sums, cts = acc(sums, cts, batch)
+        protos.append(sums / jnp.maximum(cts, 1.0)[:, None])
+        counts.append(cts)
+
+    recv = [[] for _ in range(n_nodes)]
+    recv_sz = [[] for _ in range(n_nodes)]
+    for i in range(n_nodes):
+        rx = quantize_dequantize_tree(states[i].student, bits)
+        for j in T.neighbors(adj, i):
+            recv[j].append(rx)
+            recv_sz[j].append(sizes[i])
+    all_p = jnp.stack([quantize_dequantize_tree(p, bits) for p in protos])
+    all_c = jnp.stack(counts)
+    for i in range(n_nodes):
+        neigh = T.neighbors(adj, i) + [i]
+        gp, mask = aggregate_prototypes(all_p[np.array(neigh)],
+                                        all_c[np.array(neigh)])
+        new_student = weighted_tree_mean([states[i].student] + recv[i],
+                                         [sizes[i]] + recv_sz[i])
+        states[i] = states[i]._replace(student=new_student, global_protos=gp,
+                                       proto_mask=mask)
+    _block(states[0])
+    return states
+
+
+def measure(n_nodes: int, *, samples_per_node: int, batch_size: int,
+            rounds: int):
+    cfg, fed, train, node_data = _setup(n_nodes, samples_per_node, batch_size)
+    adj = T.adjacency(n_nodes, fed.topology)
+    sizes = [len(d["label"]) for d in node_data]
+    n_steps = sum(len(d["label"]) // batch_size for d in node_data)
+
+    # --- seed Python-loop engine --------------------------------------
+    step, bits, ncls, model_cfgs, states, student_cfg = _wiring(
+        cfg, fed, train, jit=True)
+    states = legacy_round(step, states, node_data, cfg, student_cfg, fed,
+                          train, adj, sizes, ncls, bits, 0)   # warmup/compile
+    t_legacy = []
+    for rnd in range(1, rounds + 1):
+        t0 = time.perf_counter()
+        states = legacy_round(step, states, node_data, cfg, student_cfg, fed,
+                              train, adj, sizes, ncls, bits, rnd)
+        t_legacy.append((time.perf_counter() - t0) * 1e3)
+
+    # --- jitted stacked round -----------------------------------------
+    step_p, bits, ncls, model_cfgs, states, student_cfg = _wiring(
+        cfg, fed, train, jit=False)
+    stacked = F._stack_states(states)
+    w_self, w_neigh = R.gossip_matrix(adj, sizes)
+    include = R.include_matrix(adj)
+    round_fn = F._make_round_fn(step_p, student_cfg, ncls, share_protos=True,
+                                wire_model="student", bits=bits,
+                                w_self=w_self, w_neigh=w_neigh,
+                                include=include)
+
+    def jitted_round(stacked, rnd):
+        xb, valid = F._stack_round_batches(
+            node_data, batch_size,
+            [fed.seed + rnd * 997 + i for i in range(n_nodes)],
+            fed.local_epochs)
+        pxb, pvalid = F._stack_round_batches(
+            node_data, batch_size, [fed.seed + rnd] * n_nodes, 1)
+        out = round_fn(stacked, xb, valid, pxb, pvalid, teacher_on=True,
+                       all_valid=bool(np.all(np.asarray(valid) == 1.0)))
+        _block(out)
+        return out
+
+    stacked = jitted_round(stacked, 0)                        # warmup/compile
+    t_jit = []
+    for rnd in range(1, rounds + 1):
+        t0 = time.perf_counter()
+        stacked = jitted_round(stacked, rnd)
+        t_jit.append((time.perf_counter() - t0) * 1e3)
+
+    legacy_ms = statistics.median(t_legacy)
+    jit_ms = statistics.median(t_jit)
+    return {
+        "legacy_ms": round(legacy_ms, 2),
+        "jitted_ms": round(jit_ms, 2),
+        "speedup": round(legacy_ms / jit_ms, 2),
+        "local_steps_per_round": n_steps,
+        "steps_per_s_legacy": round(n_steps / (legacy_ms / 1e3), 1),
+        "steps_per_s_jitted": round(n_steps / (jit_ms / 1e3), 1),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--nodes", nargs="+", type=int, default=[2, 4, 8])
+    ap.add_argument("--samples-per-node", type=int, default=32)
+    ap.add_argument("--batch-size", type=int, default=8)
+    ap.add_argument("--rounds", type=int, default=5)
+    ap.add_argument("--out", default="BENCH_round_step.json")
+    args = ap.parse_args()
+
+    results = {}
+    for n in args.nodes:
+        print(f"== N={n} nodes ==")
+        r = measure(n, samples_per_node=args.samples_per_node,
+                    batch_size=args.batch_size, rounds=args.rounds)
+        results[str(n)] = r
+        print(f"  legacy {r['legacy_ms']:8.1f} ms/round   "
+              f"jitted {r['jitted_ms']:8.1f} ms/round   "
+              f"speedup {r['speedup']:.2f}x")
+
+    out = {
+        "benchmark": "one full ProFe federation round (train + Eq.3 protos "
+                     "+ gossip + aggregate), reduced mnist-cnn (8,16), "
+                     "dispatch-bound regime",
+        "backend": jax.default_backend(),
+        "config": {"samples_per_node": args.samples_per_node,
+                   "batch_size": args.batch_size,
+                   "timed_rounds": args.rounds,
+                   "algorithm": "profe", "local_epochs": 1},
+        "nodes": results,
+    }
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

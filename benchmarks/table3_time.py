@@ -12,14 +12,14 @@ import json
 import os
 
 from repro.config import FederationConfig, TrainConfig, get_config
-from repro.core.federation import run_federation
+from repro.core.federation import run_federation, run_federation_loop
 from repro.data import make_image_dataset, partition, train_test_split
 
 ALGOS = ["fedavg", "fedgpd", "fml", "fedproto", "profe"]
 
 
 def measure(dataset: str, *, nodes: int, rounds: int, n_samples: int,
-            seed: int = 0):
+            seed: int = 0, engine: str = "stacked"):
     cfg = get_config(dataset)
     data = make_image_dataset(seed, n_samples, cfg.input_hw, cfg.num_classes)
     train_d, test_d = train_test_split(data, 0.1, seed)
@@ -27,11 +27,12 @@ def measure(dataset: str, *, nodes: int, rounds: int, n_samples: int,
     node_data = [{k: v[i] for k, v in train_d.items()} for i in parts]
     train = TrainConfig(batch_size=64, learning_rate=1e-3, optimizer="adamw",
                         remat=False)
+    run = run_federation if engine == "stacked" else run_federation_loop
     rows = {}
     for algo in ALGOS:
         fed = FederationConfig(num_nodes=nodes, rounds=rounds, local_epochs=1,
                                algorithm=algo, seed=seed)
-        res = run_federation(cfg, fed, train, node_data, test_d)
+        res = run(cfg, fed, train, node_data, test_d)
         rows[algo] = {"elapsed_s": res.elapsed_s}
     base = rows["fedavg"]["elapsed_s"]
     for algo in ALGOS:
@@ -43,6 +44,10 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--datasets", nargs="+", default=["mnist-cnn"])
+    ap.add_argument("--engine", choices=["stacked", "loop"],
+                    default="stacked",
+                    help="round engine: jitted stacked rounds (default) or "
+                         "the per-node reference loop")
     ap.add_argument("--out", default="reports/table3_time.json")
     args = ap.parse_args()
 
@@ -50,7 +55,8 @@ def main():
     for ds in args.datasets:
         nodes, rounds, n = (20, 10, 20000) if args.full else (3, 2, 900)
         print(f"== {ds} ==")
-        rows = measure(ds, nodes=nodes, rounds=rounds, n_samples=n)
+        rows = measure(ds, nodes=nodes, rounds=rounds, n_samples=n,
+                       engine=args.engine)
         results[ds] = rows
         for algo, r in rows.items():
             print(f"  {algo:9s} {r['elapsed_s']:8.1f}s "

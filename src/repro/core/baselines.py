@@ -11,7 +11,11 @@
 
 Each baseline exposes ``make_step(...)`` with the same NodeState layout as
 ProFe (unused slots hold empty pytrees) so the federation driver treats
-all algorithms uniformly.
+all algorithms uniformly.  All five step makers take ``jit=False`` to
+return the pure per-node step instead — the stacked round engine in
+``core/federation.py`` vmaps that over a leading ``[N, ...]`` node axis
+inside its own jitted round program, so one compiled program trains
+every node.
 """
 from __future__ import annotations
 
@@ -33,7 +37,8 @@ def _empty():
 
 
 def make_fedavg_step(cfg: ModelConfig, opt: Optimizer, *,
-                     grad_clip: float = 1.0, remat: bool = True):
+                     grad_clip: float = 1.0, remat: bool = True,
+                     jit: bool = True):
     def _step(state: NodeState, batch, teacher_on: bool = False):
         def loss(p):
             out = forward(cfg, p, batch, remat=remat)
@@ -46,12 +51,14 @@ def make_fedavg_step(cfg: ModelConfig, opt: Optimizer, *,
         return state._replace(student=params, opt_s=opt_state), \
             {"loss_s": l, "grad_norm_s": gn}
 
+    if not jit:
+        return _step
     return jax.jit(_step, static_argnames=("teacher_on",))
 
 
 def make_fedproto_step(cfg: ModelConfig, fed: FederationConfig,
                        opt: Optimizer, *, grad_clip: float = 1.0,
-                       remat: bool = True):
+                       remat: bool = True, jit: bool = True):
     """CE + beta * proto-MSE (FedProto Eq.; beta = 1 per paper Sec. III-B)."""
     def _step(state: NodeState, batch, teacher_on: bool = False):
         def loss(p):
@@ -68,13 +75,15 @@ def make_fedproto_step(cfg: ModelConfig, fed: FederationConfig,
         return state._replace(student=params, opt_s=opt_state), \
             {"loss_s": l, "grad_norm_s": gn}
 
+    if not jit:
+        return _step
     return jax.jit(_step, static_argnames=("teacher_on",))
 
 
 def make_fml_step(big_cfg: ModelConfig, meme_cfg: ModelConfig,
                   fed: FederationConfig, opt_big: Optimizer,
                   opt_meme: Optimizer, *, grad_clip: float = 1.0,
-                  remat: bool = True):
+                  remat: bool = True, jit: bool = True):
     """Deep Mutual Learning: L_big = CE + a*KD(big<-meme),
     L_meme = CE + b*KD(meme<-big).  The meme model is aggregated.
 
@@ -111,11 +120,14 @@ def make_fml_step(big_cfg: ModelConfig, meme_cfg: ModelConfig,
                               opt_t=opt_t), \
             {"loss_s": lm, "loss_t": lb, "grad_norm_s": gn}
 
+    if not jit:
+        return _step
     return jax.jit(_step, static_argnames=("teacher_on",))
 
 
 def make_fedgpd_step(cfg: ModelConfig, fed: FederationConfig, opt: Optimizer,
-                     *, grad_clip: float = 1.0, remat: bool = True):
+                     *, grad_clip: float = 1.0, remat: bool = True,
+                     jit: bool = True):
     """Global-prototype distillation: CE + MSE(f1, C̄(j)) + proto-CE, where
     proto-CE treats negative squared distances to global prototypes as
     logits (aligning local features with the global class anchors)."""
@@ -139,4 +151,6 @@ def make_fedgpd_step(cfg: ModelConfig, fed: FederationConfig, opt: Optimizer,
         return state._replace(student=params, opt_s=opt_state), \
             {"loss_s": l, "grad_norm_s": gn}
 
+    if not jit:
+        return _step
     return jax.jit(_step, static_argnames=("teacher_on",))

@@ -6,6 +6,30 @@ is aggregated.  Communication is metered analytically (Table II);
 per-round global-test F1 is the Fig. 2 curve; wall-time per algorithm is
 Table III.
 
+**Round engine.**  Node state is *stacked*: every :class:`NodeState`
+leaf carries a leading ``[N, ...]`` node axis, and one jitted program
+executes an entire round —
+
+1. local training: ``jax.lax.scan`` over the pre-stacked batch/epoch
+   axis with ``jax.vmap(step)`` over nodes (a per-node validity mask
+   handles unequal local batch counts),
+2. Eq. 3 prototype accumulation: a scanned einsum over a second stacked
+   batch stream (no per-call re-jitting),
+3. gossip + aggregation: the shared stacked-node-state math in
+   :mod:`repro.core.round_ops` (per-node quantize→exchange→weighted
+   mean, per-neighborhood Eq. 4) — the same functions the TPU mesh path
+   (``core/mesh_federation.py``) runs,
+
+with the node state donated to the round program so it is updated in
+place.  Node count is therefore no longer a Python-side multiplier:
+dispatch cost per round is O(1) in N.
+
+:func:`run_federation_loop` keeps the per-node Python-loop reference
+(the seed implementation) — it defines the semantics the stacked round
+must reproduce, serves ragged node datasets the stacked layout cannot
+express, and is the baseline ``benchmarks/round_step.py`` measures the
+jitted round against.
+
 This is the *node-level* simulator (paper-faithful, CPU).  The
 production mapping of the same round structure onto a TPU mesh ("pod"
 axis = federation node) lives in ``repro/launch`` and
@@ -15,7 +39,7 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -23,16 +47,18 @@ import numpy as np
 
 from repro.config.base import FederationConfig, ModelConfig, TrainConfig
 from repro.core import baselines as B
+from repro.core import round_ops as R
 from repro.core import topology as T
 from repro.core.aggregation import weighted_tree_mean
 from repro.core.comm import CommMeter
 from repro.core.distillation import teacher_active
 from repro.core.metrics import accuracy, macro_f1
 from repro.core.profe import (NodeState, compute_local_prototypes,
-                              init_node_state, make_profe_step)
+                              init_node_state, make_profe_step, proto_labels)
 from repro.core.prototypes import aggregate_prototypes
 from repro.core.quantization import quantize_dequantize_tree
 from repro.data import batches
+from repro.data.loader import batch_index_lists
 from repro.models import derive_student, forward, init_params
 from repro.optim import make_optimizer
 
@@ -74,63 +100,53 @@ def _eval_params(cfg: ModelConfig, params, test_data, batch_size: int = 256):
     return macro_f1(y_true, y_pred, ncls), accuracy(y_true, y_pred)
 
 
-def run_federation(teacher_cfg: ModelConfig, fed: FederationConfig,
-                   train: TrainConfig, node_data: List[Dict[str, np.ndarray]],
-                   test_data: Dict[str, np.ndarray],
-                   *, verbose: bool = False) -> FederationResult:
-    """Run one algorithm end-to-end; fed.algorithm selects it."""
-    algo = fed.algorithm
-    student_cfg = derive_student(teacher_cfg)
-    n_nodes = fed.num_nodes
-    assert len(node_data) == n_nodes
-    adj = T.adjacency(n_nodes, fed.topology)
-    meter = CommMeter(n_nodes)
-    ncls = _n_proto_classes(teacher_cfg)
-    sizes = [len(next(iter(d.values()))) for d in node_data]
+# ---------------------------------------------------------------------------
+# per-algorithm wiring (shared by the stacked and the loop engine)
+# ---------------------------------------------------------------------------
+
+def _algo_wiring(algo: str, teacher_cfg: ModelConfig,
+                 student_cfg: ModelConfig, fed: FederationConfig,
+                 train: TrainConfig, opt_s, opt_t, *, jit: bool):
+    """Returns (step, wire_model, share_protos, bits, model_cfgs).
+
+    wire_cfg: which model travels; share_protos: prototypes on the wire;
+    bits: wire precision for float tensors (None = fp32).
+    """
     remat = train.remat
-
-    opt_s = make_optimizer(train.optimizer, train.learning_rate,
-                           weight_decay=train.weight_decay,
-                           momentum=train.momentum)
-    opt_t = make_optimizer(train.optimizer, train.learning_rate,
-                           weight_decay=train.weight_decay,
-                           momentum=train.momentum)
-
-    # --- per-algorithm wiring ------------------------------------------------
-    # wire_cfg: which model travels; share_protos: prototypes on the wire;
-    # bits: wire precision for float tensors (None = fp32).
     if algo == "profe":
         step = make_profe_step(teacher_cfg, student_cfg, fed, opt_s, opt_t,
-                               grad_clip=train.grad_clip, remat=remat)
-        wire_model, share_protos, bits = "student", True, fed.quantize_bits
-        model_cfgs = (teacher_cfg, student_cfg)
-    elif algo == "fedavg":
+                               grad_clip=train.grad_clip, remat=remat, jit=jit)
+        return step, "student", True, fed.quantize_bits, \
+            (teacher_cfg, student_cfg)
+    if algo == "fedavg":
         step = B.make_fedavg_step(teacher_cfg, opt_s,
-                                  grad_clip=train.grad_clip, remat=remat)
-        wire_model, share_protos, bits = "student", False, None
-        model_cfgs = (teacher_cfg, teacher_cfg)   # "student" slot holds the model
-    elif algo == "fedproto":
+                                  grad_clip=train.grad_clip, remat=remat,
+                                  jit=jit)
+        # "student" slot holds the model
+        return step, "student", False, None, (teacher_cfg, teacher_cfg)
+    if algo == "fedproto":
         step = B.make_fedproto_step(teacher_cfg, fed, opt_s,
-                                    grad_clip=train.grad_clip, remat=remat)
-        wire_model, share_protos, bits = None, True, None
-        model_cfgs = (teacher_cfg, teacher_cfg)
-    elif algo == "fml":
+                                    grad_clip=train.grad_clip, remat=remat,
+                                    jit=jit)
+        return step, None, True, None, (teacher_cfg, teacher_cfg)
+    if algo == "fml":
         step = B.make_fml_step(teacher_cfg, student_cfg, fed, opt_t, opt_s,
-                               grad_clip=train.grad_clip, remat=remat)
-        wire_model, share_protos, bits = "student", False, None
-        model_cfgs = (teacher_cfg, student_cfg)
-    elif algo == "fedgpd":
+                               grad_clip=train.grad_clip, remat=remat,
+                               jit=jit)
+        return step, "student", False, None, (teacher_cfg, student_cfg)
+    if algo == "fedgpd":
         step = B.make_fedgpd_step(teacher_cfg, fed, opt_s,
-                                  grad_clip=train.grad_clip, remat=remat)
-        wire_model, share_protos, bits = "student", True, None
-        model_cfgs = (teacher_cfg, teacher_cfg)
-    else:
-        raise ValueError(f"unknown algorithm {algo!r}")
+                                  grad_clip=train.grad_clip, remat=remat,
+                                  jit=jit)
+        return step, "student", True, None, (teacher_cfg, teacher_cfg)
+    raise ValueError(f"unknown algorithm {algo!r}")
 
-    # --- node states ---------------------------------------------------------
+
+def _init_states(algo: str, model_cfgs, fed: FederationConfig, opt_s, opt_t,
+                 ncls: int) -> List[NodeState]:
     needs_teacher = algo in ("profe", "fml")
     states: List[NodeState] = []
-    for i in range(n_nodes):
+    for i in range(fed.num_nodes):
         rng = jax.random.PRNGKey(fed.seed * 1000 + i)
         if needs_teacher:
             st = init_node_state(model_cfgs[0], model_cfgs[1], rng, opt_s,
@@ -143,13 +159,309 @@ def run_federation(teacher_cfg: ModelConfig, fed: FederationConfig,
                            proto_mask=jnp.zeros((ncls,), jnp.float32),
                            round_idx=jnp.zeros((), jnp.int32))
         states.append(st)
+    return states
 
+
+def _payload_template(wire_model, share_protos, stacked: NodeState,
+                      ncls: int, proto_dim: int):
+    """Shape/dtype skeleton of one node's wire payload — the comm meter
+    reads only sizes and dtypes, so metering never touches device data."""
+    payload: Dict[str, Any] = {}
+    if wire_model is not None:
+        payload["model"] = jax.tree_util.tree_map(
+            lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype),
+            stacked.student)
+    if share_protos:
+        payload["protos"] = jax.ShapeDtypeStruct((ncls, proto_dim),
+                                                 np.dtype(np.float32))
+        payload["counts"] = jax.ShapeDtypeStruct((ncls,),
+                                                 np.dtype(np.float32))
+    return payload
+
+
+# ---------------------------------------------------------------------------
+# stacked batch staging
+# ---------------------------------------------------------------------------
+
+def _stack_round_batches(node_data, batch_size: int, seeds, epochs: int
+                         ) -> Optional[Tuple[Dict[str, jnp.ndarray],
+                                             jnp.ndarray]]:
+    """Gather every node's round batches into ``[T, N, B, ...]`` leaves
+    plus a ``[T, N]`` validity mask (nodes with fewer local batches are
+    padded with their first batch, masked out of the state update).
+
+    Returns None when the per-node batch shapes are ragged (some node
+    holds fewer than ``batch_size`` samples) — the caller falls back to
+    the per-node loop engine.
+    """
+    per_node = []
+    for data, seed in zip(node_data, seeds):
+        n = len(next(iter(data.values())))
+        per_node.append(batch_index_lists(n, batch_size, seed, epochs=epochs))
+    if any(not idxs for idxs in per_node):
+        return None                       # empty node: loop engine handles it
+    lens = {idx.shape[0] for idxs in per_node for idx in idxs}
+    if len(lens) != 1:
+        return None                       # ragged batch shapes: can't stack
+    n_steps = max(len(idxs) for idxs in per_node)
+    valid = np.zeros((n_steps, len(node_data)), np.float32)
+    for i, idxs in enumerate(per_node):
+        valid[:len(idxs), i] = 1.0
+        while len(idxs) < n_steps:        # pad: repeat batch 0, masked out
+            idxs.append(idxs[0])
+    stacked = {
+        k: jnp.asarray(np.stack(
+            [np.stack([node_data[i][k][per_node[i][t]]
+                       for i in range(len(node_data))])
+             for t in range(n_steps)]))
+        for k in node_data[0]
+    }
+    return stacked, jnp.asarray(valid)
+
+
+def _stack_states(states: List[NodeState]) -> NodeState:
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *states)
+
+
+def _node_slice(tree, i: int):
+    return jax.tree_util.tree_map(lambda x: x[i], tree)
+
+
+def _masked_select(v, new_tree, old_tree):
+    """Per-node select: leaf [N, ...] from ``new`` where v[n] else ``old``."""
+    def sel(n, o):
+        return jnp.where(v.reshape((v.shape[0],) + (1,) * (n.ndim - 1))
+                         .astype(bool), n, o)
+    return jax.tree_util.tree_map(sel, new_tree, old_tree)
+
+
+# ---------------------------------------------------------------------------
+# the jitted round program
+# ---------------------------------------------------------------------------
+
+# XLA:CPU executes while-loop bodies on the calling thread (no intra-op
+# parallelism), which makes a rolled scan ~5x slower than the same body
+# unrolled.  Short batch axes are fully unrolled on CPU; long ones and
+# accelerator backends keep the rolled scan (compile-time economy).
+_CPU_UNROLL_CAP = 32
+
+
+def _scan(body, init, xs, length: int):
+    full = length <= _CPU_UNROLL_CAP and jax.default_backend() == "cpu"
+    return jax.lax.scan(body, init, xs, unroll=length if full else 1)
+
+
+def _make_round_fn(step: Callable, proto_cfg: ModelConfig, ncls: int, *,
+                   share_protos: bool, wire_model: Optional[str],
+                   bits: Optional[int], w_self, w_neigh, include):
+    """One full federation round as a single compiled program over
+    stacked node state: scan(vmap(step)) → scanned Eq. 3 einsum →
+    round_ops gossip/aggregate.  ``teacher_on`` is a static arg (two
+    program variants, exactly like the per-node step)."""
+
+    def round_fn(state: NodeState, xb, valid, pxb, pvalid,
+                 teacher_on: bool, all_valid: bool = False) -> NodeState:
+        # 1) local training: scan over the batch axis, vmap over nodes.
+        # ``all_valid`` (static) skips the per-step mask merge when every
+        # node runs the same number of batches (the common, iid case).
+        def body(carry, inp):
+            batch, v = inp
+            new, _ = jax.vmap(lambda s, b: step(s, b, teacher_on))(carry,
+                                                                   batch)
+            return (new if all_valid else _masked_select(v, new, carry)), ()
+
+        state, _ = _scan(body, state, (xb, valid), valid.shape[0])
+        state = state._replace(round_idx=state.round_idx + 1)
+
+        if share_protos:
+            # 2) Eq. 3 prototype accumulation: scanned einsum, no
+            #    per-call re-jitting (post-training student forward)
+            proto_dim = proto_cfg.proto_dim
+            n_nodes = valid.shape[1]
+            sums0 = jnp.zeros((n_nodes, ncls, proto_dim), jnp.float32)
+            counts0 = jnp.zeros((n_nodes, ncls), jnp.float32)
+
+            def pbody(carry, inp):
+                sums, counts = carry
+                batch, v = inp
+                out = jax.vmap(
+                    lambda p, b: forward(proto_cfg, p, b, remat=False))(
+                        state.student, batch)
+                labels = proto_labels(proto_cfg, batch)        # [N, B]
+                onehot = jax.nn.one_hot(labels, ncls, dtype=jnp.float32)
+                f1 = out.f1.astype(jnp.float32)                # [N, B, P]
+                sums = sums + jnp.einsum("nbc,nbp->ncp", onehot,
+                                         f1) * v[:, None, None]
+                counts = counts + jnp.sum(onehot, axis=1) * v[:, None]
+                return (sums, counts), ()
+
+            (sums, counts), _ = _scan(pbody, (sums0, counts0), (pxb, pvalid),
+                                      pvalid.shape[0])
+            protos = sums / jnp.maximum(counts, 1.0)[..., None]
+
+        # 3) gossip + aggregation (shared round_ops core).  A node's own
+        #    model copy never crossed the wire, so it mixes unquantized;
+        #    prototypes (own included) mix from the receiver-side view,
+        #    exactly like the reference loop.
+        if wire_model is not None:
+            recv = R.quantize_dequantize_per_node(state.student, bits) \
+                if bits else state.student
+            state = state._replace(student=R.mix_node_trees(
+                w_self, w_neigh, state.student, recv))
+        if share_protos:
+            protos_rx = R.dequantize_leaf(
+                *R.quantize_leaf_per_node(protos, bits)) if bits else protos
+            gp, mask = R.neighborhood_prototype_aggregate(include, protos_rx,
+                                                          counts)
+            state = state._replace(global_protos=gp, proto_mask=mask)
+        return state
+
+    donate = (0,) if jax.default_backend() != "cpu" else ()
+    return jax.jit(round_fn, static_argnames=("teacher_on", "all_valid"),
+                   donate_argnums=donate)
+
+
+# ---------------------------------------------------------------------------
+# driver (stacked engine)
+# ---------------------------------------------------------------------------
+
+def run_federation(teacher_cfg: ModelConfig, fed: FederationConfig,
+                   train: TrainConfig, node_data: List[Dict[str, np.ndarray]],
+                   test_data: Dict[str, np.ndarray],
+                   *, verbose: bool = False) -> FederationResult:
+    """Run one algorithm end-to-end; fed.algorithm selects it.
+
+    Uses the vectorized stacked-node-state round engine; falls back to
+    :func:`run_federation_loop` when node datasets are too ragged to
+    stack (some node smaller than one batch).
+    """
+    algo = fed.algorithm
+    student_cfg = derive_student(teacher_cfg)
+    n_nodes = fed.num_nodes
+    assert len(node_data) == n_nodes
+    adj = T.adjacency(n_nodes, fed.topology)
+    ncls = _n_proto_classes(teacher_cfg)
+    sizes = [len(next(iter(d.values()))) for d in node_data]
+
+    opt_s = make_optimizer(train.optimizer, train.learning_rate,
+                           weight_decay=train.weight_decay,
+                           momentum=train.momentum)
+    opt_t = make_optimizer(train.optimizer, train.learning_rate,
+                           weight_decay=train.weight_decay,
+                           momentum=train.momentum)
+
+    step, wire_model, share_protos, bits, model_cfgs = _algo_wiring(
+        algo, teacher_cfg, student_cfg, fed, train, opt_s, opt_t, jit=False)
+
+    # stage round 0's batches up front so raggedness is known before any
+    # state is allocated (fallback keeps the per-node reference path)
+    probe = _stack_round_batches(
+        node_data, train.batch_size,
+        [fed.seed + 0 * 997 + i for i in range(n_nodes)], fed.local_epochs)
+    if probe is None:
+        return run_federation_loop(teacher_cfg, fed, train, node_data,
+                                   test_data, verbose=verbose)
+
+    meter = CommMeter(n_nodes)
+    stacked = _stack_states(
+        _init_states(algo, model_cfgs, fed, opt_s, opt_t, ncls))
+    eval_cfg = model_cfgs[1] if algo in ("profe", "fml") else model_cfgs[0]
+    proto_cfg = eval_cfg
+    needs_teacher = algo in ("profe", "fml")
+
+    w_self, w_neigh = R.gossip_matrix(adj, sizes)
+    include = R.include_matrix(adj)
+    round_fn = _make_round_fn(step, proto_cfg, ncls,
+                              share_protos=share_protos,
+                              wire_model=wire_model, bits=bits,
+                              w_self=w_self, w_neigh=w_neigh,
+                              include=include)
+    payload = _payload_template(wire_model, share_protos, stacked, ncls,
+                                proto_cfg.proto_dim)
+    neighbor_lists = [T.neighbors(adj, i) for i in range(n_nodes)]
+
+    result = FederationResult(comm=meter, algorithm=algo)
+    t0 = time.time()
+
+    empty = ({}, jnp.zeros((0, n_nodes), jnp.float32))
+    for rnd in range(fed.rounds):
+        t_on = teacher_active(fed.alpha_s, fed.alpha_limit, rnd) \
+            if algo == "profe" else needs_teacher
+        staged = probe if rnd == 0 else _stack_round_batches(
+            node_data, train.batch_size,
+            [fed.seed + rnd * 997 + i for i in range(n_nodes)],
+            fed.local_epochs)
+        proto_staged = _stack_round_batches(
+            node_data, train.batch_size, [fed.seed + rnd] * n_nodes, 1) \
+            if share_protos else empty
+        xb, valid = staged
+        pxb, pvalid = proto_staged
+
+        stacked = round_fn(stacked, xb, valid, pxb, pvalid, teacher_on=t_on,
+                           all_valid=bool(np.all(np.asarray(valid) == 1.0)))
+
+        # metering is analytic — per-copy bytes from the payload
+        # skeleton, identical to what the reference loop records
+        for i in range(n_nodes):
+            meter.record_broadcast(i, neighbor_lists[i], payload, kind=algo,
+                                   round_idx=rnd, bits=bits)
+
+        f1, acc = _eval_params(eval_cfg, _node_slice(stacked.student, 0),
+                               test_data)
+        result.f1_per_round.append(f1)
+        result.acc_per_round.append(acc)
+        if verbose:
+            print(f"[{algo}] round {rnd + 1}/{fed.rounds} "
+                  f"f1={f1:.4f} acc={acc:.4f} "
+                  f"sent={meter.avg_sent_gb():.4f}GB")
+
+    result.elapsed_s = time.time() - t0
+    result.extras["avg_sent_gb"] = meter.avg_sent_gb()
+    result.extras["avg_received_gb"] = meter.avg_received_gb()
+    return result
+
+
+# ---------------------------------------------------------------------------
+# reference engine: the per-node Python loop (seed semantics)
+# ---------------------------------------------------------------------------
+
+def run_federation_loop(teacher_cfg: ModelConfig, fed: FederationConfig,
+                        train: TrainConfig,
+                        node_data: List[Dict[str, np.ndarray]],
+                        test_data: Dict[str, np.ndarray],
+                        *, verbose: bool = False) -> FederationResult:
+    """Per-node Python-loop round engine (the seed implementation).
+
+    Kept as the executable definition of round semantics: the stacked
+    engine must match it to numerical noise (asserted in tests), ragged
+    node datasets fall back to it, and ``benchmarks/round_step.py``
+    measures the jitted round against it.
+    """
+    algo = fed.algorithm
+    student_cfg = derive_student(teacher_cfg)
+    n_nodes = fed.num_nodes
+    assert len(node_data) == n_nodes
+    adj = T.adjacency(n_nodes, fed.topology)
+    meter = CommMeter(n_nodes)
+    ncls = _n_proto_classes(teacher_cfg)
+    sizes = [len(next(iter(d.values()))) for d in node_data]
+
+    opt_s = make_optimizer(train.optimizer, train.learning_rate,
+                           weight_decay=train.weight_decay,
+                           momentum=train.momentum)
+    opt_t = make_optimizer(train.optimizer, train.learning_rate,
+                           weight_decay=train.weight_decay,
+                           momentum=train.momentum)
+
+    step, wire_model, share_protos, bits, model_cfgs = _algo_wiring(
+        algo, teacher_cfg, student_cfg, fed, train, opt_s, opt_t, jit=True)
+    needs_teacher = algo in ("profe", "fml")
+    states = _init_states(algo, model_cfgs, fed, opt_s, opt_t, ncls)
     eval_cfg = model_cfgs[1] if algo in ("profe", "fml") else model_cfgs[0]
     proto_cfg = eval_cfg
     result = FederationResult(comm=meter, algorithm=algo)
     t0 = time.time()
 
-    # --- rounds ---------------------------------------------------------------
     for rnd in range(fed.rounds):
         t_on = teacher_active(fed.alpha_s, fed.alpha_limit, rnd) \
             if algo == "profe" else needs_teacher
@@ -166,9 +478,8 @@ def run_federation(teacher_cfg: ModelConfig, fed: FederationConfig,
         protos, counts = [], []
         if share_protos:
             for i in range(n_nodes):
-                p_params = states[i].student
                 pr, ct = compute_local_prototypes(
-                    proto_cfg, p_params,
+                    proto_cfg, states[i].student,
                     batches(node_data[i], train.batch_size,
                             seed=fed.seed + rnd), ncls)
                 protos.append(pr)

@@ -6,6 +6,12 @@ mesh axis, so node divergence is explicit and *local training never
 crosses pods* (the train step is vmapped over the node dim — XLA
 partitions it over ``pod`` with zero cross-pod collectives).
 
+The per-node quantize / de-quantize / weighted-mean / Eq. 4 math is the
+shared stacked-node-state core in :mod:`repro.core.round_ops` — the CPU
+simulator (``core/federation.py``) runs the exact same functions over
+its jitted round; this module only adds the mesh resharding that turns
+the exchange into collectives.
+
 The gossip round is where inter-pod traffic happens, and the HLO shows
 exactly ProFe's wire content:
 
@@ -24,38 +30,13 @@ programs reproduces Table II on the mesh.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Tuple
-
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core.quantization import _qmax
-
-
-def _quantize_leaf_per_node(x, bits: int):
-    """x: [N, ...] fp — quantize each node's slice independently.
-    Returns (codes int16 [N, ...], scales fp32 [N]).
-
-    Shape-preserving (no reshape): flattening a sharded tensor would force
-    GSPMD to replicate it, which would silently inflate the wire bytes the
-    dry-run measures.
-    """
-    qm = _qmax(bits)
-    x32 = x.astype(jnp.float32)
-    reduce_axes = tuple(range(1, x.ndim))
-    amax = jnp.max(jnp.abs(x32), axis=reduce_axes)                # [N]
-    delta = jnp.maximum(amax / qm, jnp.finfo(jnp.float32).tiny)   # [N]
-    bshape = (x.shape[0],) + (1,) * (x.ndim - 1)
-    codes = jnp.floor(x32 / delta.reshape(bshape) + 0.5)
-    codes = jnp.clip(codes, -qm - 1, qm).astype(jnp.int16)
-    return codes, delta
-
-
-def _dequantize_leaf(codes, delta):
-    bshape = (codes.shape[0],) + (1,) * (codes.ndim - 1)
-    return codes.astype(jnp.float32) * delta.reshape(bshape)
+from repro.core.prototypes import aggregate_prototypes
+from repro.core.round_ops import (dequantize_leaf, quantize_leaf_per_node,
+                                  weighted_node_mean)
 
 
 def _replicate_over_pod(mesh, tree, specs_no_pod):
@@ -79,7 +60,7 @@ def make_profe_round(mesh, student_specs, bits: int = 16):
     def round_fn(students, protos, counts, sizes):
         # 1. quantize per node (vmapped math, stays in-pod)
         q = jax.tree_util.tree_map(
-            lambda x: _quantize_leaf_per_node(x, bits), students,
+            lambda x: quantize_leaf_per_node(x, bits), students,
             is_leaf=lambda x: hasattr(x, "shape"))
         codes = jax.tree_util.tree_map(lambda t: t[0], q,
                                        is_leaf=lambda t: isinstance(t, tuple))
@@ -91,7 +72,7 @@ def make_profe_round(mesh, student_specs, bits: int = 16):
         scales = jax.tree_util.tree_map(
             lambda d: jax.lax.with_sharding_constraint(
                 d, NamedSharding(mesh, P(None))), scales)
-        pq, pd = _quantize_leaf_per_node(protos, bits)
+        pq, pd = quantize_leaf_per_node(protos, bits)
         pq = jax.lax.with_sharding_constraint(
             pq, NamedSharding(mesh, P(None, None, None)))
         counts_r = jax.lax.with_sharding_constraint(
@@ -99,18 +80,15 @@ def make_profe_round(mesh, student_specs, bits: int = 16):
 
         # 3. local dequantize + dataset-size-weighted FedAvg over nodes
         w = sizes / jnp.sum(sizes)                                 # [N]
-        def agg(c, d):
-            deq = _dequantize_leaf(c, d)                           # [N, ...]
-            mean = jnp.tensordot(w.astype(jnp.float32), deq, axes=1)
-            return jnp.stack([mean] * c.shape[0]).astype(jnp.float32)
-        new_students = jax.tree_util.tree_map(agg, codes, scales)
+        deq = jax.tree_util.tree_map(dequantize_leaf, codes, scales)
+        means = weighted_node_mean(w, deq)
+        new_students = jax.tree_util.tree_map(
+            lambda m, c: jnp.stack([m] * c.shape[0]).astype(jnp.float32),
+            means, codes)
 
         # 4. Eq. 4 prototype aggregation (instance-count weighted)
-        protos_rx = _dequantize_leaf(pq, pd)                       # [N, C, P]
-        n_j = jnp.sum(counts_r, axis=0)                            # [C]
-        wc = counts_r / jnp.maximum(n_j, 1.0)[None, :]             # [N, C]
-        global_protos = jnp.einsum("nc,ncp->cp", wc, protos_rx)
-        proto_mask = (n_j > 0).astype(jnp.float32)
+        protos_rx = dequantize_leaf(pq, pd)                        # [N, C, P]
+        global_protos, proto_mask = aggregate_prototypes(protos_rx, counts_r)
         return new_students, global_protos, proto_mask
 
     return round_fn
@@ -121,9 +99,8 @@ def make_fedavg_round(mesh, model_specs):
     def round_fn(models, sizes):
         gathered = _replicate_over_pod(mesh, models, model_specs)
         w = sizes / jnp.sum(sizes)
-        def agg(x):
-            mean = jnp.tensordot(w.astype(jnp.float32),
-                                 x.astype(jnp.float32), axes=1)
-            return jnp.stack([mean] * x.shape[0]).astype(x.dtype)
-        return jax.tree_util.tree_map(agg, gathered)
+        means = weighted_node_mean(w, gathered)
+        return jax.tree_util.tree_map(
+            lambda m, x: jnp.stack([m] * x.shape[0]).astype(x.dtype),
+            means, gathered)
     return round_fn

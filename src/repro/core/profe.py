@@ -23,7 +23,6 @@ import jax.numpy as jnp
 from repro.config.base import FederationConfig, ModelConfig, TrainConfig
 from repro.core import distillation as D
 from repro.core import prototypes as P
-from repro.core.quantization import quantize_dequantize_tree
 from repro.models import forward
 from repro.optim import Optimizer, clip_by_global_norm
 
@@ -84,9 +83,14 @@ def teacher_loss(teacher_cfg: ModelConfig, tp, batch, global_protos,
 
 def make_profe_step(teacher_cfg: ModelConfig, student_cfg: ModelConfig,
                     fed: FederationConfig, opt_s: Optimizer, opt_t: Optimizer,
-                    *, grad_clip: float = 1.0, remat: bool = True):
+                    *, grad_clip: float = 1.0, remat: bool = True,
+                    jit: bool = True):
     """Returns ``step(state, batch, teacher_on) -> (state, metrics)``,
-    jitted with a static teacher_on flag."""
+    jitted with a static teacher_on flag.
+
+    ``jit=False`` returns the pure step instead — the stacked round
+    engine vmaps it over the node axis inside its own jitted round
+    program (jitting here too would be redundant nesting)."""
 
     def _step(state: NodeState, batch, teacher_on: bool):
         alpha = D.alpha_at_round(fed.alpha_s, fed.alpha_limit, state.round_idx)
@@ -126,6 +130,8 @@ def make_profe_step(teacher_cfg: ModelConfig, student_cfg: ModelConfig,
                                    opt_s=opt_s_state, opt_t=opt_t_state)
         return new_state, metrics
 
+    if not jit:
+        return _step
     return jax.jit(_step, static_argnames=("teacher_on",))
 
 
@@ -148,17 +154,29 @@ def init_node_state(teacher_cfg: ModelConfig, student_cfg: ModelConfig,
 
 
 # ---------------------------------------------------------------------------
-# round-boundary: prototypes + wire payloads
+# round-boundary: local prototypes (Eq. 3)
 # ---------------------------------------------------------------------------
 
-def compute_local_prototypes(cfg: ModelConfig, params, batches,
-                             n_classes: int):
-    """Stream local data once, accumulate Eq. 3 sums/counts."""
-    sums = jnp.zeros((n_classes, cfg.proto_dim), jnp.float32)
-    counts = jnp.zeros((n_classes,), jnp.float32)
+# Trace bookkeeping for the cached accumulator: the body of ``acc`` runs
+# only when jax (re)traces it, so the counter measures exactly the
+# retrace behavior the cache is meant to eliminate (asserted in tests).
+PROTO_ACC_TRACES: Dict[Tuple[str, int], int] = {}
 
-    @jax.jit
-    def acc(sums, counts, batch):
+
+@functools.lru_cache(maxsize=None)
+def _proto_acc_step(cfg: ModelConfig, n_classes: int):
+    """One jitted Eq. 3 accumulation step, cached by (config, classes).
+
+    The seed defined ``@jax.jit def acc`` *inside*
+    :func:`compute_local_prototypes`, closing over ``params`` — a fresh
+    function object per call, so jax re-traced it every round × node.
+    Hoisting it here (params as an argument) makes the trace happen once
+    per (cfg, n_classes, batch shape) for the whole federation run.
+    """
+    key = (cfg.name, n_classes)
+
+    def acc(params, sums, counts, batch):
+        PROTO_ACC_TRACES[key] = PROTO_ACC_TRACES.get(key, 0) + 1
         out = forward(cfg, params, batch, remat=False)
         labels_p = proto_labels(cfg, batch)
         onehot = jax.nn.one_hot(labels_p, n_classes, dtype=jnp.float32)
@@ -166,22 +184,16 @@ def compute_local_prototypes(cfg: ModelConfig, params, batches,
         counts = counts + jnp.sum(onehot, axis=0)
         return sums, counts
 
+    return jax.jit(acc)
+
+
+def compute_local_prototypes(cfg: ModelConfig, params, batches,
+                             n_classes: int):
+    """Stream local data once, accumulate Eq. 3 sums/counts."""
+    sums = jnp.zeros((n_classes, cfg.proto_dim), jnp.float32)
+    counts = jnp.zeros((n_classes,), jnp.float32)
+    acc = _proto_acc_step(cfg, n_classes)
     for batch in batches:
-        sums, counts = acc(sums, counts, batch)
+        sums, counts = acc(params, sums, counts, batch)
     protos = sums / jnp.maximum(counts, 1.0)[:, None]
     return protos, counts
-
-
-def wire_payload(state: NodeState, protos, counts, bits: int):
-    """What ProFe puts on the wire: the quantized student + prototypes.
-
-    Returned payload is already the receiver-side (de-quantized) view plus
-    the exact wire tree used for byte accounting.
-    """
-    wire = {"student": state.student, "protos": protos, "counts": counts}
-    recon = {
-        "student": quantize_dequantize_tree(state.student, bits),
-        "protos": quantize_dequantize_tree(protos, bits),
-        "counts": counts,
-    }
-    return wire, recon

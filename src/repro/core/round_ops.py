@@ -1,0 +1,176 @@
+"""Shared vectorized federation-round math (stacked node state).
+
+Both round engines — the CPU simulator (``core/federation.py``) and the
+TPU mesh path (``core/mesh_federation.py``) — run the gossip/aggregate
+phase on **stacked node state**: every pytree leaf carries a leading
+``[N, ...]`` node axis, so one program handles all N nodes at once
+instead of a Python loop dispatching per node.
+
+Contract (consumed by both engines):
+
+* ``quantize_leaf_per_node`` / ``dequantize_leaf`` — Sec. III-D wire
+  quantization applied independently per node slice (one scale per
+  node per tensor), shape-preserving so sharded mesh tensors are never
+  reshaped (a reshape would force GSPMD replication and silently
+  inflate the measured wire bytes).
+* ``quantize_dequantize_per_node`` — the receiver-side reconstruction
+  of a whole stacked pytree (round-trip through integer codes).
+* ``gossip_matrix`` — dataset-size-weighted neighborhood mixing
+  weights; ``mix_node_trees`` applies them with the ProFe simulator
+  convention that a node's *own* copy is never quantized (only what
+  traveled is).
+* ``neighborhood_prototype_aggregate`` — Eq. 4 instance-count-weighted
+  prototype aggregation evaluated per node over its neighborhood in
+  one einsum (the mesh path's all-node variant is the special case of
+  an all-ones include matrix, i.e. ``prototypes.aggregate_prototypes``).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.quantization import _qmax
+
+
+def _is_array(x) -> bool:
+    return hasattr(x, "shape") and hasattr(x, "dtype")
+
+
+def _is_float(x) -> bool:
+    return _is_array(x) and jnp.issubdtype(x.dtype, jnp.floating)
+
+
+# ---------------------------------------------------------------------------
+# per-node quantization (stacked [N, ...] leaves)
+# ---------------------------------------------------------------------------
+
+def quantize_leaf_per_node(x, bits: int):
+    """x: [N, ...] fp — quantize each node's slice independently.
+    Returns (codes int16 [N, ...], scales fp32 [N]).
+
+    Shape-preserving (no reshape): flattening a sharded tensor would
+    force GSPMD to replicate it, which would silently inflate the wire
+    bytes the dry-run measures.
+    """
+    qm = _qmax(bits)
+    x32 = x.astype(jnp.float32)
+    reduce_axes = tuple(range(1, x.ndim))
+    amax = jnp.max(jnp.abs(x32), axis=reduce_axes)                # [N]
+    delta = jnp.maximum(amax / qm, jnp.finfo(jnp.float32).tiny)   # [N]
+    bshape = (x.shape[0],) + (1,) * (x.ndim - 1)
+    codes = jnp.floor(x32 / delta.reshape(bshape) + 0.5)
+    codes = jnp.clip(codes, -qm - 1, qm).astype(jnp.int16)
+    return codes, delta
+
+
+def dequantize_leaf(codes, delta):
+    """codes: [N, ...] int, delta: [N] fp32 -> fp32 [N, ...]."""
+    bshape = (codes.shape[0],) + (1,) * (codes.ndim - 1)
+    return codes.astype(jnp.float32) * delta.reshape(bshape)
+
+
+def quantize_dequantize_per_node(tree, bits: int, *,
+                                 use_kernels: Optional[bool] = None):
+    """Receiver-side reconstruction of a stacked pytree: every float
+    leaf [N, ...] goes through per-node codes and back to fp32.
+    Non-float leaves pass through untouched.
+
+    On TPU (``use_kernels`` defaults to the backend check) this routes
+    through the packed-tree Pallas path — all leaves flattened into one
+    buffer with per-(leaf, node) segment scales, a handful of kernel
+    launches total and bit-identical to the jnp math below.
+    """
+    if use_kernels is None:
+        use_kernels = jax.default_backend() == "tpu"
+    if use_kernels:
+        from repro.kernels.quantize.ops import quantize_dequantize_tree_packed
+        return quantize_dequantize_tree_packed(tree, bits, node_axis=True)
+
+    def rt(x):
+        if not _is_float(x):
+            return x
+        codes, delta = quantize_leaf_per_node(x, bits)
+        return dequantize_leaf(codes, delta)
+    return jax.tree_util.tree_map(rt, tree)
+
+
+# ---------------------------------------------------------------------------
+# gossip mixing
+# ---------------------------------------------------------------------------
+
+def gossip_matrix(adj: np.ndarray, sizes) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Dataset-size-weighted neighborhood-mean weights.
+
+    Returns ``(w_self [N], w_neigh [N, N])`` with
+    ``w_self[i] + sum_j w_neigh[i, j] == 1`` per row: node i averages its
+    own model (weight ``sizes[i]``) with each neighbour j's received
+    model (weight ``sizes[j]``), normalized over ``{i} ∪ neigh(i)``.
+    Computed in float64 (like the reference ``weighted_tree_mean``) and
+    cast to fp32 for the device program.
+    """
+    a = np.asarray(adj, np.float64)
+    s = np.asarray(sizes, np.float64)
+    n = a.shape[0]
+    w = a * s[None, :]
+    denom = w.sum(axis=1) + s          # own weight included
+    denom = np.maximum(denom, 1e-30)
+    w_neigh = w / denom[:, None]
+    w_self = s / denom
+    assert w_neigh.shape == (n, n)
+    return jnp.asarray(w_self, jnp.float32), jnp.asarray(w_neigh, jnp.float32)
+
+
+def mix_node_trees(w_self, w_neigh, own_tree, recv_tree):
+    """Per-node weighted mean over the node axis.
+
+    ``own_tree`` leaves [N, ...] are each node's *local* (unquantized)
+    copy; ``recv_tree`` is what traveled (de-quantized).  New leaf:
+    ``w_self[i]·own[i] + Σ_j w_neigh[i,j]·recv[j]`` — one tensordot per
+    leaf instead of a per-node Python loop.
+    """
+    def mix(own, recv):
+        recv32 = recv.astype(jnp.float32)
+        mixed = jnp.tensordot(w_neigh, recv32, axes=1)
+        bshape = (own.shape[0],) + (1,) * (own.ndim - 1)
+        mixed = mixed + w_self.reshape(bshape) * own.astype(jnp.float32)
+        return mixed.astype(own.dtype)
+    return jax.tree_util.tree_map(mix, own_tree, recv_tree)
+
+
+def weighted_node_mean(w, tree):
+    """Global size-weighted mean over the node axis: leaf [N, ...] ->
+    [...] (every node receives the identical aggregate — the full-mesh
+    special case used by the TPU path)."""
+    w32 = w.astype(jnp.float32)
+    return jax.tree_util.tree_map(
+        lambda x: jnp.tensordot(w32, x.astype(jnp.float32), axes=1), tree)
+
+
+# ---------------------------------------------------------------------------
+# Eq. 4 prototype aggregation, per node neighborhood
+# ---------------------------------------------------------------------------
+
+def include_matrix(adj: np.ndarray) -> jnp.ndarray:
+    """adj + self-loops as fp32 [N, N]: who contributes prototypes to
+    whom (every node includes its own prototypes)."""
+    m = np.asarray(adj, np.float64) + np.eye(adj.shape[0])
+    return jnp.asarray(np.minimum(m, 1.0), jnp.float32)
+
+
+def neighborhood_prototype_aggregate(include, protos, counts):
+    """Eq. 4 evaluated for every node's neighborhood at once.
+
+    include: [N, N] 0/1 (who node i listens to, incl. itself),
+    protos:  [N, C, P] (already de-quantized receiver-side view),
+    counts:  [N, C] instance counts.
+    Returns (global_protos [N, C, P], proto_mask [N, C]).
+    """
+    eff = include[:, :, None] * counts[None, :, :]          # [N, N, C]
+    n_j = jnp.sum(eff, axis=1)                              # [N, C]
+    w = eff / jnp.maximum(n_j, 1.0)[:, None, :]             # [N, N, C]
+    glob = jnp.einsum("ijc,jcp->icp", w, protos.astype(jnp.float32))
+    mask = (n_j > 0).astype(jnp.float32)
+    return glob, mask

@@ -1,4 +1,4 @@
-from repro.data.loader import batches, num_batches
+from repro.data.loader import batch_index_lists, batches, num_batches
 from repro.data.partition import (
     dirichlet_partition,
     iid_partition,
@@ -12,7 +12,8 @@ from repro.data.synthetic import (
 )
 
 __all__ = [
-    "batches", "num_batches", "dirichlet_partition", "iid_partition",
+    "batch_index_lists", "batches", "num_batches", "dirichlet_partition",
+    "iid_partition",
     "partition", "pathological_partition", "make_image_dataset",
     "make_token_dataset", "train_test_split",
 ]

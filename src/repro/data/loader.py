@@ -7,21 +7,33 @@ import jax.numpy as jnp
 import numpy as np
 
 
-def batches(data: Dict[str, np.ndarray], batch_size: int, seed: int,
-            *, epochs: int = 1, drop_remainder: bool = True
-            ) -> Iterator[Dict[str, jnp.ndarray]]:
-    n = len(next(iter(data.values())))
+def batch_index_lists(n: int, batch_size: int, seed: int, *, epochs: int = 1,
+                      drop_remainder: bool = True) -> list:
+    """The per-batch index arrays :func:`batches` would gather, without
+    touching the data.  The stacked round engine uses these to slice all
+    nodes' epochs into one host array and ship it in a single transfer
+    (identical RNG stream to :func:`batches`, so batch content and order
+    match the per-batch iterator exactly)."""
     rng = np.random.default_rng(seed)
+    out = []
     for _ in range(epochs):
         perm = rng.permutation(n)
         end = (n // batch_size) * batch_size if drop_remainder else n
         if end == 0 and n > 0:   # tiny node datasets: one short batch
-            idx = perm
-            yield {k: jnp.asarray(v[idx]) for k, v in data.items()}
+            out.append(perm)
             continue
         for i in range(0, end, batch_size):
-            idx = perm[i:i + batch_size]
-            yield {k: jnp.asarray(v[idx]) for k, v in data.items()}
+            out.append(perm[i:i + batch_size])
+    return out
+
+
+def batches(data: Dict[str, np.ndarray], batch_size: int, seed: int,
+            *, epochs: int = 1, drop_remainder: bool = True
+            ) -> Iterator[Dict[str, jnp.ndarray]]:
+    n = len(next(iter(data.values())))
+    for idx in batch_index_lists(n, batch_size, seed, epochs=epochs,
+                                 drop_remainder=drop_remainder):
+        yield {k: jnp.asarray(v[idx]) for k, v in data.items()}
 
 
 def num_batches(n: int, batch_size: int, epochs: int = 1) -> int:

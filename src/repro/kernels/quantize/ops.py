@@ -1,18 +1,38 @@
 """Jitted public API over the quantize kernels.
 
 Pads arbitrary tensors to (8,128)-aligned 2-D, runs the Pallas kernels
-(interpret mode off-TPU), and restores the original shape.
+(interpret mode off-TPU), and restores the original shape.  Two tiers:
+
+* per-tensor: :func:`quantize` / :func:`dequantize` /
+  :func:`quantize_dequantize` — one fused single-launch kernel per
+  tensor (absmax + quantize share the launch; see ``quantize.py``).
+* packed tree: :func:`quantize_tree_packed` /
+  :func:`dequantize_tree_packed` / :func:`quantize_dequantize_tree_packed`
+  — every float leaf of a pytree is flattened into ONE padded ``[R, C]``
+  buffer whose rows carry per-tensor segment ids, so a 100+-leaf student
+  costs a handful of kernel launches (row-absmax, segment-max, row-scaled
+  quantize) instead of hundreds.  ``node_axis=True`` treats each slice
+  along a leaf's leading ``[N, ...]`` axis as its own segment — the
+  stacked-node-state wire format of ``core/round_ops.py``.
 """
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Any, Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.kernels.quantize.quantize import (absmax_pallas, dequantize_pallas,
-                                             quantize_pallas)
+from repro.kernels.quantize.quantize import (dequantize_pallas,
+                                             dequantize_rows_pallas,
+                                             fused_quantize_dequantize_pallas,
+                                             fused_quantize_pallas,
+                                             quantize_dequantize_rows_pallas,
+                                             quantize_rows_pallas,
+                                             rowabs_pallas)
+
+_COLS = 512
 
 
 def _interpret() -> bool:
@@ -23,7 +43,7 @@ def _to_2d(x) -> Tuple[jnp.ndarray, Tuple[int, ...]]:
     shape = x.shape
     flat = x.reshape(-1)
     n = flat.shape[0]
-    cols = 512 if n >= 512 else 128
+    cols = _COLS if n >= _COLS else 128
     pad = (-n) % cols
     flat = jnp.pad(flat, (0, pad))
     x2d = flat.reshape(-1, cols)
@@ -40,16 +60,27 @@ def _from_2d(x2d, shape) -> jnp.ndarray:
     return x2d.reshape(-1)[:n].reshape(shape)
 
 
+def _qmax_arr(bits: int) -> jnp.ndarray:
+    """(1,1) runtime qmax, created OUTSIDE the jit boundary: as a jaxpr
+    constant the Δ division ``amax / qmax`` gets strength-reduced to a
+    reciprocal multiply by XLA:CPU fast-math (1 ulp off the oracle); as
+    a traced argument it stays an exact IEEE division."""
+    return jnp.full((1, 1), float((1 << (bits - 1)) - 1), jnp.float32)
+
+
 @functools.partial(jax.jit, static_argnames=("bits",))
-def quantize(x, bits: int = 16):
-    """-> (codes int32 [same shape], delta scalar fp32)."""
+def _quantize_impl(x, qmax2d, bits: int):
     x2d, shape = _to_2d(x)
-    interp = _interpret()
-    qmax = (1 << (bits - 1)) - 1
-    amax = absmax_pallas(x2d, interpret=interp)
-    delta = jnp.maximum(amax / qmax, jnp.finfo(jnp.float32).tiny)
-    codes2d = quantize_pallas(x2d, delta, bits=bits, interpret=interp)
+    codes2d, delta = fused_quantize_pallas(x2d, qmax2d, bits=bits,
+                                           interpret=_interpret())
     return _from_2d(codes2d, shape), delta
+
+
+def quantize(x, bits: int = 16):
+    """-> (codes int32 [same shape], delta scalar fp32). Single fused
+    launch: the absmax reduction and the quantize sweep share one
+    kernel (phase axis on the grid), no host round-trip for delta."""
+    return _quantize_impl(x, _qmax_arr(bits), bits)
 
 
 @jax.jit
@@ -60,6 +91,153 @@ def dequantize(codes, delta):
 
 
 @functools.partial(jax.jit, static_argnames=("bits",))
+def _quantize_dequantize_impl(x, qmax2d, bits: int):
+    x2d, shape = _to_2d(x)
+    out2d, _ = fused_quantize_dequantize_pallas(x2d, qmax2d, bits=bits,
+                                                interpret=_interpret())
+    return _from_2d(out2d, shape).astype(x.dtype)
+
+
 def quantize_dequantize(x, bits: int = 16):
-    codes, delta = quantize(x, bits)
-    return dequantize(codes, delta).astype(x.dtype)
+    """Receiver-side reconstruction in ONE launch — integer codes never
+    round-trip through HBM."""
+    return _quantize_dequantize_impl(x, _qmax_arr(bits), bits)
+
+
+# ---------------------------------------------------------------------------
+# packed tree path: one buffer, per-tensor segment scales
+# ---------------------------------------------------------------------------
+
+def _leaf_segments(leaf, node_axis: bool) -> int:
+    return leaf.shape[0] if (node_axis and leaf.ndim >= 1) else 1
+
+
+def _pack_leaf(leaf, node_axis: bool) -> jnp.ndarray:
+    """-> [rows, _COLS] fp32; node_axis packs each leading-axis slice
+    into its own whole rows (so rows never mix segments)."""
+    if node_axis and leaf.ndim >= 1:
+        n = leaf.shape[0]
+        flat = leaf.reshape(n, -1).astype(jnp.float32)
+        pad = (-flat.shape[1]) % _COLS
+        flat = jnp.pad(flat, ((0, 0), (0, pad)))
+        return flat.reshape(-1, _COLS)
+    flat = leaf.reshape(-1).astype(jnp.float32)
+    pad = (-flat.shape[0]) % _COLS
+    return jnp.pad(flat, (0, pad)).reshape(-1, _COLS)
+
+
+def _unpack_leaf(rows, shape, node_axis: bool) -> jnp.ndarray:
+    if node_axis and len(shape) >= 1:
+        n = shape[0]
+        per = 1
+        for s in shape[1:]:
+            per *= s
+        return rows.reshape(n, -1)[:, :per].reshape(shape)
+    total = 1
+    for s in shape:
+        total *= s
+    return rows.reshape(-1)[:total].reshape(shape)
+
+
+def pack_tree(tree, *, node_axis: bool = False):
+    """Flatten every float leaf into one ``[R, _COLS]`` fp32 buffer.
+
+    Returns ``(buf, seg_ids [R] int32, meta)`` where meta is the static
+    recipe (treedef, per-leaf shape/dtype/row-span/float flag, total
+    segment count) :func:`unpack_tree` needs.  Non-float leaves are
+    carried in meta untouched.
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    parts: List[jnp.ndarray] = []
+    seg_parts: List[np.ndarray] = []
+    recipe = []
+    seg = 0
+    row = 0
+    for leaf in leaves:
+        is_float = hasattr(leaf, "dtype") and \
+            jnp.issubdtype(leaf.dtype, jnp.floating)
+        if not is_float:
+            recipe.append(("raw", leaf))
+            continue
+        rows = _pack_leaf(leaf, node_axis)
+        nseg = _leaf_segments(leaf, node_axis)
+        rows_per_seg = rows.shape[0] // nseg
+        seg_parts.append(np.repeat(np.arange(seg, seg + nseg), rows_per_seg))
+        recipe.append(("packed", leaf.shape, leaf.dtype, row, rows.shape[0],
+                       seg, nseg))
+        parts.append(rows)
+        seg += nseg
+        row += rows.shape[0]
+    if not parts:
+        buf = jnp.zeros((8, _COLS), jnp.float32)
+        seg_ids = np.zeros((8,), np.int32)
+        return buf, jnp.asarray(seg_ids), (treedef, tuple(
+            r if r[0] == "raw" else r for r in recipe), max(seg, 1))
+    buf = jnp.concatenate(parts, axis=0)
+    seg_ids = np.concatenate(seg_parts).astype(np.int32)
+    rpad = (-buf.shape[0]) % 8
+    if rpad:   # alignment rows: zeros tagged with the LAST segment id so
+        # seg_ids stay sorted (segment_max relies on the sorted hint);
+        # zero rows cannot raise that segment's absmax and the codes are
+        # discarded at unpack
+        buf = jnp.pad(buf, ((0, rpad), (0, 0)))
+        seg_ids = np.concatenate(
+            [seg_ids, np.full((rpad,), seg - 1, np.int32)])
+    return buf, jnp.asarray(seg_ids), (treedef, tuple(recipe), seg)
+
+
+def unpack_tree(buf, meta):
+    """Inverse of :func:`pack_tree` (float leaves come back fp32)."""
+    treedef, recipe, _ = meta
+    leaves = []
+    for item in recipe:
+        if item[0] == "raw":
+            leaves.append(item[1])
+            continue
+        _, shape, _dtype, row, nrows, _s, _n = item
+        leaves.append(_unpack_leaf(buf[row:row + nrows], shape,
+                                   node_axis=len(shape) >= 1 and _n > 1))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def _segment_deltas(buf, seg_ids, n_seg: int, bits: int):
+    """Per-segment Δ from one row-absmax launch + a tiny segment-max."""
+    qmax = (1 << (bits - 1)) - 1
+    row_amax = rowabs_pallas(buf, interpret=_interpret())[:, 0]     # [R]
+    seg_amax = jax.ops.segment_max(row_amax, seg_ids,
+                                   num_segments=n_seg,
+                                   indices_are_sorted=True)
+    seg_amax = jnp.maximum(seg_amax, 0.0)    # empty segments -> -inf
+    deltas = jnp.maximum(seg_amax / qmax, jnp.finfo(jnp.float32).tiny)
+    return deltas, deltas[seg_ids][:, None]                         # [T],[R,1]
+
+
+def quantize_tree_packed(tree, bits: int = 16, *, node_axis: bool = False
+                         ) -> Dict[str, Any]:
+    """Quantize a whole pytree in 2 kernel launches (+ a tiny segment
+    reduction), independent of leaf count.  Returns the wire payload
+    ``{"codes": [R,C] int32, "scales": [T] fp32, "meta", "bits"}``."""
+    buf, seg_ids, meta = pack_tree(tree, node_axis=node_axis)
+    deltas, row_delta = _segment_deltas(buf, seg_ids, meta[2], bits)
+    codes = quantize_rows_pallas(buf, row_delta, bits=bits,
+                                 interpret=_interpret())
+    return {"codes": codes, "scales": deltas, "seg_ids": seg_ids,
+            "meta": meta, "bits": bits}
+
+
+def dequantize_tree_packed(payload):
+    row_delta = payload["scales"][payload["seg_ids"]][:, None]
+    buf = dequantize_rows_pallas(payload["codes"], row_delta,
+                                 interpret=_interpret())
+    return unpack_tree(buf, payload["meta"])
+
+
+def quantize_dequantize_tree_packed(tree, bits: int = 16, *,
+                                    node_axis: bool = False):
+    """Receiver-side reconstruction of a whole pytree: 3 launches total
+    (row-absmax, fused row-scaled round-trip), no integer HBM traffic."""
+    buf, seg_ids, meta = pack_tree(tree, node_axis=node_axis)
+    _, row_delta = _segment_deltas(buf, seg_ids, meta[2], bits)
+    out = quantize_dequantize_rows_pallas(buf, row_delta, bits=bits,
+                                          interpret=_interpret())
+    return unpack_tree(out, meta)

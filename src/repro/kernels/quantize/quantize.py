@@ -2,12 +2,29 @@
 
 Bandwidth-bound elementwise op: every gossip payload is pushed through
 ``Q(x) = floor(x/Δ + 0.5)·Δ`` with Δ = max|x| / 32767 (16-bit).  The
-kernels tile HBM→VMEM in (8,128)-aligned blocks (fp32 min tile) so each
-element is read exactly once:
+kernels tile HBM→VMEM in (8,128)-aligned blocks (fp32 min tile).
 
-* ``absmax``   — block-wise |x| max reduction (pass 1, gives Δ)
-* ``quantize`` — codes = clip(floor(x/Δ + .5)) as int16 (pass 2)
-* ``dequantize`` — x' = codes·Δ back to fp32 on the receiver
+**Fused single-launch kernels.**  The seed ran two ``pallas_call``s per
+tensor (absmax walk, then quantize walk) with a host-side Δ round-trip
+in between.  Here one kernel does both: the grid gains a leading
+*phase* axis ``(2, nr, nc)`` — phase 0 accumulates the global abs-max
+into the (1,1) Δ output block (which stays resident across grid steps,
+acting as the reduction scratch) and finalizes Δ at the last block;
+phase 1 re-reads the tiles and writes codes.  One launch, no host
+synchronization, and the Δ block lives in registers/SMEM for the whole
+sweep:
+
+* ``fused_quantize``            — x -> (int32 codes, Δ)
+* ``fused_quantize_dequantize`` — x -> (Q(x)·Δ fp32, Δ); the receiver-
+  side reconstruction the DFL simulator uses, saving the separate
+  dequantize launch and the int round-trip through HBM
+* ``dequantize``                — codes·Δ for payloads received as ints
+
+**Row-scaled variants** (``*_rows``) take a per-row Δ column instead of
+a scalar — the building block of the packed-tree path in ``ops.py``
+that quantizes a 100+-leaf pytree in a handful of launches: all float
+leaves are flattened into one padded ``[R, C]`` buffer whose rows carry
+per-tensor segment scales.
 """
 from __future__ import annotations
 
@@ -21,58 +38,109 @@ BLOCK_R = 256
 BLOCK_C = 512
 
 
-def _absmax_kernel(x_ref, out_ref):
-    out_ref[0, 0] = jnp.max(jnp.abs(x_ref[...]))
+def _qmaxf(bits: int) -> float:
+    return float((1 << (bits - 1)) - 1)
 
 
-def absmax_pallas(x2d, *, interpret: bool = False) -> jnp.ndarray:
-    """x2d: [R, C] (padded to block multiples) -> scalar max|x|."""
+def _masked_abs(x_ref, i, j, r, c, br, bc):
+    """|block| with out-of-bounds lanes zeroed: partial edge blocks are
+    padded by Pallas (NaN in interpret mode, undefined on hardware) and
+    must not leak into the absmax reduction."""
+    a = jnp.abs(x_ref[...].astype(jnp.float32))
+    rows = jax.lax.broadcasted_iota(jnp.int32, a.shape, 0) + i * br
+    cols = jax.lax.broadcasted_iota(jnp.int32, a.shape, 1) + j * bc
+    return jnp.where((rows < r) & (cols < c), a, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# fused single-launch absmax + quantize (scalar Δ)
+# ---------------------------------------------------------------------------
+
+def _fused_quantize_kernel(qmax: float, dequant: bool, dims, x_ref, qmax_ref,
+                           out_ref, delta_ref):
+    # qmax arrives BOTH static (for the clip bounds, which tolerate
+    # constant folding) and as a (1,1) runtime input (for the Δ
+    # division): dividing by a compile-time constant lets XLA strength-
+    # reduce to a reciprocal multiply, off by 1 ulp from the fp32 oracle.
+    r, c, br, bc = dims
+    p = pl.program_id(0)
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+    last = (i == pl.num_programs(1) - 1) & (j == pl.num_programs(2) - 1)
+
+    @pl.when((p == 0) & (i == 0) & (j == 0))
+    def _():
+        delta_ref[0, 0] = 0.0
+
+    @pl.when(p == 0)
+    def _():
+        bm = jnp.max(_masked_abs(x_ref, i, j, r, c, br, bc))
+        delta_ref[0, 0] = jnp.maximum(delta_ref[0, 0], bm)
+
+    @pl.when((p == 0) & last)
+    def _():
+        # amax -> Δ, once, while the block is still resident
+        delta_ref[0, 0] = jnp.maximum(delta_ref[0, 0] / qmax_ref[0, 0],
+                                      jnp.finfo(jnp.float32).tiny)
+
+    @pl.when(p == 1)
+    def _():
+        # exact division (not reciprocal-multiply): bit-identical to the
+        # fp32 oracle, and this kernel is bandwidth-bound anyway
+        delta = delta_ref[0, 0]
+        codes = jnp.floor(x_ref[...].astype(jnp.float32) / delta + 0.5)
+        codes = jnp.clip(codes, -qmax - 1, qmax)
+        if dequant:
+            out_ref[...] = codes * delta
+        else:
+            out_ref[...] = codes.astype(jnp.int32)
+
+
+def _fused_call(x2d, qmax2d, *, bits: int, dequant: bool, interpret: bool):
     r, c = x2d.shape
     br, bc = min(BLOCK_R, r), min(BLOCK_C, c)
-    grid = (pl.cdiv(r, br), pl.cdiv(c, bc))
-    partial = pl.pallas_call(
-        _absmax_kernel,
-        grid=grid,
-        in_specs=[pl.BlockSpec((br, bc), lambda i, j: (i, j))],
-        out_specs=pl.BlockSpec((1, 1), lambda i, j: (i, j)),
-        out_shape=jax.ShapeDtypeStruct(grid, jnp.float32),
+    out_dtype = jnp.float32 if dequant else jnp.int32
+    if qmax2d is None:   # standalone use: correct off-jit, see ops._qmax_arr
+        qmax2d = jnp.full((1, 1), _qmaxf(bits), jnp.float32)
+    out, delta = pl.pallas_call(
+        functools.partial(_fused_quantize_kernel, _qmaxf(bits), dequant,
+                          (r, c, br, bc)),
+        grid=(2, pl.cdiv(r, br), pl.cdiv(c, bc)),
+        in_specs=[pl.BlockSpec((br, bc), lambda p, i, j: (i, j)),
+                  pl.BlockSpec((1, 1), lambda p, i, j: (0, 0))],
+        out_specs=[pl.BlockSpec((br, bc), lambda p, i, j: (i, j)),
+                   pl.BlockSpec((1, 1), lambda p, i, j: (0, 0))],
+        out_shape=[jax.ShapeDtypeStruct((r, c), out_dtype),
+                   jax.ShapeDtypeStruct((1, 1), jnp.float32)],
         interpret=interpret,
-    )(x2d.astype(jnp.float32))
-    return jnp.max(partial)
+    )(x2d.astype(jnp.float32), qmax2d)
+    return out, delta[0, 0]
 
 
-def _quantize_kernel(qmax: float, x_ref, delta_ref, out_ref):
-    # exact division (not reciprocal-multiply): bit-identical to the
-    # fp32 oracle, and this kernel is bandwidth-bound anyway
-    delta = delta_ref[0, 0]
-    codes = jnp.floor(x_ref[...].astype(jnp.float32) / delta + 0.5)
-    out_ref[...] = jnp.clip(codes, -qmax - 1, qmax).astype(jnp.int32)
+def fused_quantize_pallas(x2d, qmax2d=None, *, bits: int = 16,
+                          interpret: bool = False):
+    """x2d: [R, C] fp -> (int32 codes [R, C], Δ scalar fp32). One launch.
 
-
-def quantize_pallas(x2d, delta, *, bits: int = 16,
-                    interpret: bool = False) -> jnp.ndarray:
-    """x2d: [R, C] fp, delta: scalar -> int32 codes (int16 range).
-
-    int32 block output (TPU-native word size); the wire format narrows to
-    int16 on serialization — byte accounting uses ``bits``, not the
-    in-memory dtype.
+    int32 block output (TPU-native word size); the wire format narrows
+    to int16/int8 on serialization — byte accounting uses ``bits``, not
+    the in-memory dtype.  ``qmax2d``: optional (1,1) runtime qmax (pass
+    one created outside any enclosing jit for bit-exact Δ on CPU).
     """
-    r, c = x2d.shape
-    br, bc = min(BLOCK_R, r), min(BLOCK_C, c)
-    qmax = float((1 << (bits - 1)) - 1)
-    delta2d = jnp.reshape(delta.astype(jnp.float32), (1, 1))
-    return pl.pallas_call(
-        functools.partial(_quantize_kernel, qmax),
-        grid=(pl.cdiv(r, br), pl.cdiv(c, bc)),
-        in_specs=[
-            pl.BlockSpec((br, bc), lambda i, j: (i, j)),
-            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
-        ],
-        out_specs=pl.BlockSpec((br, bc), lambda i, j: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((r, c), jnp.int32),
-        interpret=interpret,
-    )(x2d, delta2d)
+    return _fused_call(x2d, qmax2d, bits=bits, dequant=False,
+                       interpret=interpret)
 
+
+def fused_quantize_dequantize_pallas(x2d, qmax2d=None, *, bits: int = 16,
+                                     interpret: bool = False):
+    """x2d -> (Q(x)·Δ fp32 [R, C], Δ). The receiver-side view in one
+    launch — codes never materialize in HBM."""
+    return _fused_call(x2d, qmax2d, bits=bits, dequant=True,
+                       interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# dequantize (scalar Δ) — payloads that arrive as integer codes
+# ---------------------------------------------------------------------------
 
 def _dequantize_kernel(codes_ref, delta_ref, out_ref):
     out_ref[...] = codes_ref[...].astype(jnp.float32) * delta_ref[0, 0]
@@ -93,3 +161,104 @@ def dequantize_pallas(codes2d, delta, *, interpret: bool = False) -> jnp.ndarray
         out_shape=jax.ShapeDtypeStruct((r, c), jnp.float32),
         interpret=interpret,
     )(codes2d, delta2d)
+
+
+# ---------------------------------------------------------------------------
+# row-scaled variants: per-row Δ column (packed-tree segments)
+# ---------------------------------------------------------------------------
+
+def _rowabs_kernel(dims, x_ref, out_ref):
+    r, c, br, bc = dims
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    bm = jnp.max(_masked_abs(x_ref, i, j, r, c, br, bc), axis=1,
+                 keepdims=True)
+
+    @pl.when(j == 0)
+    def _():
+        out_ref[...] = bm
+
+    @pl.when(j > 0)
+    def _():
+        out_ref[...] = jnp.maximum(out_ref[...], bm)
+
+
+def rowabs_pallas(x2d, *, interpret: bool = False) -> jnp.ndarray:
+    """x2d: [R, C] -> per-row max|x| [R, 1], accumulated across column
+    blocks (the out block for row-stripe i stays resident while j
+    sweeps)."""
+    r, c = x2d.shape
+    br, bc = min(BLOCK_R, r), min(BLOCK_C, c)
+    return pl.pallas_call(
+        functools.partial(_rowabs_kernel, (r, c, br, bc)),
+        grid=(pl.cdiv(r, br), pl.cdiv(c, bc)),
+        in_specs=[pl.BlockSpec((br, bc), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((br, 1), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, 1), jnp.float32),
+        interpret=interpret,
+    )(x2d.astype(jnp.float32))
+
+
+def _quantize_rows_kernel(qmax: float, dequant: bool, x_ref, delta_ref,
+                          out_ref):
+    delta = delta_ref[...]                                  # [br, 1]
+    codes = jnp.floor(x_ref[...].astype(jnp.float32) / delta + 0.5)
+    codes = jnp.clip(codes, -qmax - 1, qmax)
+    if dequant:
+        out_ref[...] = codes * delta
+    else:
+        out_ref[...] = codes.astype(jnp.int32)
+
+
+def _rows_call(x2d, row_delta, *, bits: int, dequant: bool, interpret: bool):
+    r, c = x2d.shape
+    br, bc = min(BLOCK_R, r), min(BLOCK_C, c)
+    out_dtype = jnp.float32 if dequant else jnp.int32
+    return pl.pallas_call(
+        functools.partial(_quantize_rows_kernel, _qmaxf(bits), dequant),
+        grid=(pl.cdiv(r, br), pl.cdiv(c, bc)),
+        in_specs=[
+            pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+            pl.BlockSpec((br, 1), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((r, c), out_dtype),
+        interpret=interpret,
+    )(x2d.astype(jnp.float32), row_delta.astype(jnp.float32))
+
+
+def quantize_rows_pallas(x2d, row_delta, *, bits: int = 16,
+                         interpret: bool = False) -> jnp.ndarray:
+    """x2d: [R, C], row_delta: [R, 1] -> int32 codes, each row scaled by
+    its own Δ (rows of one packed tensor share a segment Δ)."""
+    return _rows_call(x2d, row_delta, bits=bits, dequant=False,
+                      interpret=interpret)
+
+
+def quantize_dequantize_rows_pallas(x2d, row_delta, *, bits: int = 16,
+                                    interpret: bool = False) -> jnp.ndarray:
+    """Fused per-row round-trip: the receiver-side view of a packed
+    buffer in one launch."""
+    return _rows_call(x2d, row_delta, bits=bits, dequant=True,
+                      interpret=interpret)
+
+
+def _dequantize_rows_kernel(codes_ref, delta_ref, out_ref):
+    out_ref[...] = codes_ref[...].astype(jnp.float32) * delta_ref[...]
+
+
+def dequantize_rows_pallas(codes2d, row_delta, *,
+                           interpret: bool = False) -> jnp.ndarray:
+    r, c = codes2d.shape
+    br, bc = min(BLOCK_R, r), min(BLOCK_C, c)
+    return pl.pallas_call(
+        _dequantize_rows_kernel,
+        grid=(pl.cdiv(r, br), pl.cdiv(c, bc)),
+        in_specs=[
+            pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+            pl.BlockSpec((br, 1), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((r, c), jnp.float32),
+        interpret=interpret,
+    )(codes2d, row_delta.astype(jnp.float32))

@@ -34,8 +34,16 @@ def init_moe(rng, d_model: int, d_ff: int, num_experts: int,
 
 def moe_ffn(params, x, *, num_experts: int, top_k: int,
             capacity_factor: float = 1.25, act_name: str = "silu",
-            group_size: int = DEFAULT_GROUP) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Returns (output [B,S,D], aux load-balance loss scalar)."""
+            group_size: int = DEFAULT_GROUP,
+            no_drop: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (output [B,S,D], aux load-balance loss scalar).
+
+    ``no_drop=True`` sizes capacity to cover every routing slot so no
+    token is ever dropped — the serving contract: a decode step must
+    not drop the very token being decoded (capacity_factor is a
+    *training* regularizer).  The decode path sets it; training keeps
+    the configured capacity.
+    """
     B, S, D = x.shape
     E, K = num_experts, top_k
     tokens = x.reshape(-1, D)
@@ -57,7 +65,18 @@ def moe_ffn(params, x, *, num_experts: int, top_k: int,
     onehot = jax.nn.one_hot(idx, E, dtype=jnp.float32)           # [G,g,K,E]
     flat = onehot.reshape(G, g * K, E)
     pos = jnp.cumsum(flat, axis=1) - 1.0                         # [G,gK,E]
-    C = max(int(math.ceil(g * K / E * capacity_factor)), 1)
+    if no_drop:
+        C = g * K                      # serving: cover every routing slot
+    else:
+        C = max(int(math.ceil(g * K / E * capacity_factor)), 1)
+        # Tiny-group floor: with <=64 tokens the cf-based capacity is so
+        # quantized that "dropping" is sampling noise, not load-balance
+        # pressure — and forward/prefill must route identically to a
+        # no-drop decode for the serving invariant to hold at small
+        # batch.  Real training groups (DEFAULT_GROUP=2048) keep the
+        # configured capacity_factor semantics.
+        if g <= 64:
+            C = g * K
     keep = (pos < C) & (flat > 0)                                # [G,gK,E]
     pos = pos.reshape(G, g, K, E)
     keep = keep.reshape(G, g, K, E)

@@ -91,14 +91,15 @@ def _init_ffn(cfg, rng, dtype):
     return F.init_mlp(rng, cfg.d_model, cfg.d_ff, dtype=dtype)
 
 
-def _apply_ffn(cfg, p, x):
-    """Returns (out, aux)."""
+def _apply_ffn(cfg, p, x, *, no_drop: bool = False):
+    """Returns (out, aux).  ``no_drop`` is the MoE serving contract:
+    decode steps must never capacity-drop the token being decoded."""
     if cfg.is_moe:
         from repro.models.moe import moe_ffn
         return moe_ffn(p, x, num_experts=cfg.num_experts,
                        top_k=cfg.num_experts_per_tok,
                        capacity_factor=cfg.capacity_factor,
-                       act_name=cfg.activation)
+                       act_name=cfg.activation, no_drop=no_drop)
     if cfg.ffn == "gated":
         return F.gated_ffn(p, x, cfg.activation), 0.0
     return F.mlp(p, x, cfg.activation), 0.0
@@ -239,14 +240,16 @@ def block_decode(cfg: ModelConfig, kind: str, p, x, cache, index,
                                   num_kv_heads=cfg.num_kv_heads,
                                   head_dim=cfg.head_dim, norm_eps=cfg.norm_eps)
             x = x + h
-        h, _ = _apply_ffn(cfg, p["ffn"], _apply_norm(cfg, p["ln2"], x))
+        h, _ = _apply_ffn(cfg, p["ffn"], _apply_norm(cfg, p["ln2"], x),
+                          no_drop=True)
         return x + h, {"kv": kv}
     if kind == "rec":
         h, st = R.recurrent_block_decode(p["rec"],
                                          _apply_norm(cfg, p["ln1"], x),
                                          cache["rec"])
         x = x + h
-        h, _ = _apply_ffn(cfg, p["ffn"], _apply_norm(cfg, p["ln2"], x))
+        h, _ = _apply_ffn(cfg, p["ffn"], _apply_norm(cfg, p["ln2"], x),
+                          no_drop=True)
         return x + h, {"rec": st}
     if kind == "ssm":
         h, st = S.mamba2_decode_step(p["mixer"], _apply_norm(cfg, p["ln1"], x),

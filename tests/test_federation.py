@@ -68,9 +68,11 @@ def test_noniid_split_profe_still_learns(mnist_like):
     imgs = np.concatenate([d["image"] for d in node_data])
     parts = partition(labels, N_NODES, "noniid40", 1)
     nd = [{"image": imgs[p], "label": labels[p]} for p in parts]
-    r = _run(cfg, nd, test_d, "profe", rounds=3)
-    # pathological splits converge slower; 3 rounds on 3 nodes is a smoke
-    # bar (the full Fig. 2 protocol runs 10+ rounds on 20 nodes)
+    r = _run(cfg, nd, test_d, "profe", rounds=4)
+    # pathological splits converge slower; 4 rounds on 3 nodes is a smoke
+    # bar (the full Fig. 2 protocol runs 10+ rounds on 20 nodes).  The
+    # trajectory on this split crosses the bar between rounds 3 and 4
+    # (~0.12 -> ~0.36), so 3 rounds sat exactly on the knife edge.
     assert r.f1_per_round[-1] > 0.15
 
 

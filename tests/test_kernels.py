@@ -5,8 +5,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core import round_ops
 from repro.core.distillation import kd_loss as kd_oracle
-from repro.core.quantization import quantize_dequantize_tree
+from repro.core.quantization import quantize_array, quantize_dequantize_tree
 from repro.kernels.kd_loss import ops as kd_ops
 from repro.kernels.kd_loss.ref import kd_loss_rows_ref
 from repro.kernels.proto_dist import ops as pd_ops
@@ -18,11 +19,15 @@ RNG = np.random.default_rng(42)
 
 
 # ---------------------------------------------------------------------------
-# quantize
+# quantize — fused single-launch kernel vs the core oracle, bit-exact
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("shape", [(16,), (1000,), (64, 130), (3, 7, 11),
-                                   (8, 128), (2, 3, 5, 7)])
+# deliberately not multiples of the kernel tile (BLOCK_R, BLOCK_C) = (256, 512)
+ODD_SHAPES = [(16,), (1000,), (64, 130), (3, 7, 11), (8, 128), (2, 3, 5, 7),
+              (257, 33), (300, 777), (1,), (511,), (129, 513)]
+
+
+@pytest.mark.parametrize("shape", ODD_SHAPES)
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_quantize_roundtrip_matches_core(shape, dtype):
     x = jnp.asarray(RNG.standard_normal(shape) * 3, dtype)
@@ -30,6 +35,23 @@ def test_quantize_roundtrip_matches_core(shape, dtype):
     want = quantize_dequantize_tree(x, 16).astype(dtype)  # core keeps fp32
     np.testing.assert_allclose(np.asarray(got, np.float32),
                                np.asarray(want, np.float32), rtol=0, atol=0)
+
+
+@pytest.mark.parametrize("shape", [(100,), (257, 33), (5, 9, 13), (640, 384)])
+@pytest.mark.parametrize("bits", [8, 16])
+def test_fused_quantize_bit_identical_to_oracle(shape, bits):
+    """codes AND delta from the fused single-launch kernel must equal
+    ``quantize_array`` exactly (interpret mode on CPU)."""
+    x = jnp.asarray(RNG.standard_normal(shape) * 7, jnp.float32)
+    codes, delta = q_ops.quantize(x, bits)
+    want_codes, want_delta = quantize_array(x, bits)
+    assert float(delta) == float(want_delta)
+    np.testing.assert_array_equal(np.asarray(codes),
+                                  np.asarray(want_codes, np.int32))
+    # and the fused round-trip is the dequantized codes
+    rt = q_ops.quantize_dequantize(x, bits)
+    np.testing.assert_array_equal(
+        np.asarray(rt), np.asarray(want_codes, np.float32) * float(want_delta))
 
 
 @pytest.mark.parametrize("bits", [8, 16])
@@ -47,6 +69,59 @@ def test_quantize_codes_within_range():
     codes, delta = q_ops.quantize(x, 16)
     assert int(jnp.max(codes)) <= 32767
     assert int(jnp.min(codes)) >= -32768
+
+
+# ---------------------------------------------------------------------------
+# quantize — packed tree path (one buffer, per-tensor segment scales)
+# ---------------------------------------------------------------------------
+
+def _mixed_tree():
+    return {
+        "w": jnp.asarray(RNG.standard_normal((33, 17)), jnp.float32),
+        "nested": {
+            "v": jnp.asarray(RNG.standard_normal((1000,)) * 10, jnp.bfloat16),
+            "idx": jnp.arange(7, dtype=jnp.int32),       # passes through
+            "scalar": jnp.float32(3.5),
+        },
+        "aligned": jnp.asarray(RNG.standard_normal((8, 128)), jnp.float32),
+    }
+
+
+@pytest.mark.parametrize("bits", [8, 16])
+def test_packed_tree_roundtrip_bit_identical(bits):
+    """Whole-pytree packed path == per-leaf ``quantize_dequantize_tree``
+    bit-for-bit (each leaf is its own scale segment)."""
+    tree = _mixed_tree()
+    got = q_ops.quantize_dequantize_tree_packed(tree, bits)
+    want = quantize_dequantize_tree(tree, bits)
+    for g, w in zip(jax.tree_util.tree_leaves(got),
+                    jax.tree_util.tree_leaves(want)):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+def test_packed_tree_codes_and_scales_roundtrip():
+    tree = _mixed_tree()
+    payload = q_ops.quantize_tree_packed(tree, 16)
+    assert payload["codes"].dtype == jnp.int32
+    assert payload["scales"].shape == (payload["meta"][2],)
+    back = q_ops.dequantize_tree_packed(payload)
+    want = quantize_dequantize_tree(tree, 16)
+    for g, w in zip(jax.tree_util.tree_leaves(back),
+                    jax.tree_util.tree_leaves(want)):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+def test_packed_node_axis_matches_round_ops():
+    """node_axis=True segments == the simulator's per-node quantization
+    (one scale per node per leaf), bit-for-bit."""
+    stacked = {"w": jnp.asarray(RNG.standard_normal((4, 33, 9)), jnp.float32),
+               "b": jnp.asarray(RNG.standard_normal((4, 5)), jnp.float32)}
+    got = q_ops.quantize_dequantize_tree_packed(stacked, 16, node_axis=True)
+    want = round_ops.quantize_dequantize_per_node(stacked, 16,
+                                                  use_kernels=False)
+    for g, w in zip(jax.tree_util.tree_leaves(got),
+                    jax.tree_util.tree_leaves(want)):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
 
 
 # ---------------------------------------------------------------------------

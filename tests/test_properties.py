@@ -1,8 +1,16 @@
-"""Property-based tests (hypothesis) on the system's invariants."""
+"""Property-based tests (hypothesis) on the system's invariants.
+
+Skipped cleanly when hypothesis is not installed (the container does not
+ship it); the invariants themselves are also exercised deterministically
+in test_core.py.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import distillation as D
 from repro.core import prototypes as P

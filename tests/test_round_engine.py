@@ -1,0 +1,153 @@
+"""The vectorized stacked-node-state round engine vs the per-node
+reference loop: same comm bytes exactly, same learning to numerical
+noise — plus the round_ops contract and the no-retrace guarantee of the
+hoisted prototype accumulator."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import FederationConfig, TrainConfig, get_config
+from repro.core import profe
+from repro.core import round_ops as R
+from repro.core import topology as T
+from repro.core.aggregation import weighted_tree_mean
+from repro.core.federation import run_federation, run_federation_loop
+from repro.core.prototypes import aggregate_prototypes
+from repro.core.quantization import quantize_dequantize_tree
+from repro.data import batches, make_image_dataset, partition, train_test_split
+
+RNG = np.random.default_rng(11)
+N_NODES = 3
+
+
+@pytest.fixture(scope="module")
+def mnist_like():
+    cfg = get_config("mnist-cnn")
+    data = make_image_dataset(0, 900, cfg.input_hw, cfg.num_classes)
+    train_d, test_d = train_test_split(data, 0.1, 0)
+    parts = partition(train_d["label"], N_NODES, "iid", 0)
+    node_data = [{k: v[i] for k, v in train_d.items()} for i in parts]
+    return cfg, node_data, test_d
+
+
+TRAIN = TrainConfig(batch_size=64, learning_rate=1e-3, optimizer="adamw",
+                    remat=False)
+
+
+# ---------------------------------------------------------------------------
+# stacked engine == reference loop
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("algo", ["profe", "fedavg"])
+def test_stacked_round_matches_reference_loop(mnist_like, algo):
+    cfg, node_data, test_d = mnist_like
+    fed = FederationConfig(num_nodes=N_NODES, rounds=2, local_epochs=1,
+                           algorithm=algo)
+    new = run_federation(cfg, fed, TRAIN, node_data, test_d)
+    old = run_federation_loop(cfg, fed, TRAIN, node_data, test_d)
+    # byte accounting must be *identical* (same payloads, same topology)
+    assert new.extras["avg_sent_gb"] == old.extras["avg_sent_gb"]
+    assert new.extras["avg_received_gb"] == old.extras["avg_received_gb"]
+    # learning curve within numerical noise (fp32 reassociation only)
+    np.testing.assert_allclose(new.f1_per_round, old.f1_per_round, atol=0.05)
+    np.testing.assert_allclose(new.acc_per_round, old.acc_per_round,
+                               atol=0.05)
+
+
+def test_ragged_nodes_fall_back_to_loop(mnist_like):
+    """A node smaller than one batch can't be stacked; the driver must
+    still produce a result (reference-loop fallback)."""
+    cfg, node_data, test_d = mnist_like
+    ragged = [
+        {k: v[:40] for k, v in node_data[0].items()},   # < batch_size
+        node_data[1], node_data[2],
+    ]
+    fed = FederationConfig(num_nodes=N_NODES, rounds=1, algorithm="fedavg")
+    r = run_federation(cfg, fed, TRAIN, ragged, test_d)
+    assert len(r.f1_per_round) == 1
+
+
+# ---------------------------------------------------------------------------
+# round_ops contract
+# ---------------------------------------------------------------------------
+
+def test_gossip_matrix_rows_sum_to_one():
+    adj = T.adjacency(5, "ring")
+    sizes = [10, 20, 30, 40, 50]
+    w_self, w_neigh = R.gossip_matrix(adj, sizes)
+    rows = np.asarray(w_self) + np.asarray(w_neigh).sum(axis=1)
+    np.testing.assert_allclose(rows, np.ones(5), rtol=1e-6)
+    # non-neighbors contribute nothing
+    assert float(np.asarray(w_neigh)[0, 2]) == 0.0
+
+
+def test_mix_node_trees_matches_weighted_tree_mean():
+    """The one-einsum mix must equal the per-node reference aggregation
+    (own model unquantized + de-quantized neighbor copies)."""
+    n, bits = 4, 16
+    adj = T.adjacency(n, "full")
+    sizes = [100, 200, 300, 400]
+    stacked = {"w": jnp.asarray(RNG.standard_normal((n, 7, 5)), jnp.float32),
+               "b": jnp.asarray(RNG.standard_normal((n, 11)), jnp.float32)}
+    recv = R.quantize_dequantize_per_node(stacked, bits, use_kernels=False)
+    w_self, w_neigh = R.gossip_matrix(adj, sizes)
+    got = R.mix_node_trees(w_self, w_neigh, stacked, recv)
+    for i in range(n):
+        own = jax.tree_util.tree_map(lambda x: x[i], stacked)
+        neigh = T.neighbors(adj, i)
+        rx = [quantize_dequantize_tree(
+            jax.tree_util.tree_map(lambda x: x[j], stacked), bits)
+            for j in neigh]
+        want = weighted_tree_mean([own] + rx,
+                                  [sizes[i]] + [sizes[j] for j in neigh])
+        for g, w in zip(jax.tree_util.tree_leaves(
+                jax.tree_util.tree_map(lambda x: x[i], got)),
+                jax.tree_util.tree_leaves(want)):
+            np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                       rtol=1e-5, atol=1e-6)
+
+
+def test_neighborhood_prototype_aggregate_matches_eq4():
+    n, c, p = 4, 6, 8
+    adj = T.adjacency(n, "ring")
+    protos = jnp.asarray(RNG.standard_normal((n, c, p)), jnp.float32)
+    counts = jnp.asarray(RNG.integers(0, 5, (n, c)), jnp.float32)
+    include = R.include_matrix(adj)
+    gp, mask = R.neighborhood_prototype_aggregate(include, protos, counts)
+    for i in range(n):
+        sel = np.array(T.neighbors(adj, i) + [i])
+        want_gp, want_mask = aggregate_prototypes(protos[sel], counts[sel])
+        np.testing.assert_allclose(np.asarray(gp[i]), np.asarray(want_gp),
+                                   rtol=1e-5, atol=1e-6)
+        np.testing.assert_array_equal(np.asarray(mask[i]),
+                                      np.asarray(want_mask))
+
+
+def test_per_node_quantization_matches_per_tensor():
+    """One scale per node slice == quantizing each node's tensor alone."""
+    stacked = jnp.asarray(RNG.standard_normal((3, 17, 9)) * 5, jnp.float32)
+    codes, deltas = R.quantize_leaf_per_node(stacked, 16)
+    for i in range(3):
+        want = quantize_dequantize_tree(stacked[i], 16)
+        got = R.dequantize_leaf(codes, deltas)[i]
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# hoisted prototype accumulator: traces once, not once per round × node
+# ---------------------------------------------------------------------------
+
+def test_proto_accumulator_traces_once(mnist_like):
+    cfg, node_data, _ = mnist_like
+    from repro.models import init_params
+    ncls = cfg.num_classes
+    profe._proto_acc_step.cache_clear()
+    profe.PROTO_ACC_TRACES.clear()
+    for trial in range(3):                      # 3 "rounds" × 2 "nodes"
+        for node in range(2):
+            params = init_params(cfg, jax.random.PRNGKey(trial * 2 + node))
+            profe.compute_local_prototypes(
+                cfg, params, batches(node_data[node], 64, seed=trial), ncls)
+    assert profe.PROTO_ACC_TRACES[(cfg.name, ncls)] == 1, \
+        profe.PROTO_ACC_TRACES
