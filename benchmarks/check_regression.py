@@ -1,0 +1,73 @@
+"""Round-step perf regression gate against the committed baseline.
+
+Re-runs ``benchmarks/round_step.py``'s jitted-round measurement for the
+node counts recorded in ``BENCH_round_step.json`` and fails (exit 1)
+when the fresh per-round time exceeds the committed one by more than
+``--threshold`` (default 1.3x — wide enough to absorb container noise,
+tight enough to catch a dispatch-path regression).
+
+Tier-1-adjacent invocation (see ROADMAP):
+
+    PYTHONPATH=src python benchmarks/check_regression.py
+
+Refresh the baseline after an intentional perf change with:
+
+    PYTHONPATH=src python benchmarks/round_step.py --nodes 2 4 8
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from round_step import measure
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default="BENCH_round_step.json")
+    ap.add_argument("--threshold", type=float, default=1.3,
+                    help="fail when fresh jitted ms/round > threshold x "
+                         "committed")
+    ap.add_argument("--nodes", nargs="+", type=int, default=None,
+                    help="subset of baseline node counts to check "
+                         "(default: all)")
+    ap.add_argument("--rounds", type=int, default=3,
+                    help="timed rounds per node count (median)")
+    args = ap.parse_args()
+
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    cfg = baseline["config"]
+    node_counts = [str(n) for n in args.nodes] if args.nodes \
+        else sorted(baseline["nodes"], key=int)
+
+    failed = False
+    for n in node_counts:
+        if n not in baseline["nodes"]:
+            print(f"N={n}: not in baseline, skipping")
+            continue
+        committed = baseline["nodes"][n]["jitted_ms"]
+        fresh = measure(int(n),
+                        samples_per_node=cfg["samples_per_node"],
+                        batch_size=cfg["batch_size"],
+                        rounds=args.rounds,
+                        jitted_only=True)["jitted_ms"]
+        ratio = fresh / committed
+        verdict = "OK" if ratio <= args.threshold else "REGRESSION"
+        if verdict == "REGRESSION":
+            failed = True
+        print(f"N={n}: jitted {fresh:8.1f} ms/round vs committed "
+              f"{committed:8.1f} ms  ({ratio:.2f}x)  {verdict}")
+
+    if failed:
+        print(f"\nFAIL: per-round slowdown exceeds {args.threshold:.1f}x "
+              f"the committed baseline ({args.baseline})")
+        return 1
+    print(f"\nall node counts within {args.threshold:.1f}x of the "
+          f"committed baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

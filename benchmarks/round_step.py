@@ -128,23 +128,27 @@ def legacy_round(step, states, node_data, cfg, student_cfg, fed, train,
 
 
 def measure(n_nodes: int, *, samples_per_node: int, batch_size: int,
-            rounds: int):
+            rounds: int, jitted_only: bool = False):
+    """``jitted_only`` skips the (4-5x slower) seed-loop measurement —
+    for callers like ``check_regression.py`` that only gate on
+    ``jitted_ms``."""
     cfg, fed, train, node_data = _setup(n_nodes, samples_per_node, batch_size)
     adj = T.adjacency(n_nodes, fed.topology)
     sizes = [len(d["label"]) for d in node_data]
     n_steps = sum(len(d["label"]) // batch_size for d in node_data)
 
     # --- seed Python-loop engine --------------------------------------
-    step, bits, ncls, model_cfgs, states, student_cfg = _wiring(
-        cfg, fed, train, jit=True)
-    states = legacy_round(step, states, node_data, cfg, student_cfg, fed,
-                          train, adj, sizes, ncls, bits, 0)   # warmup/compile
     t_legacy = []
-    for rnd in range(1, rounds + 1):
-        t0 = time.perf_counter()
+    if not jitted_only:
+        step, bits, ncls, model_cfgs, states, student_cfg = _wiring(
+            cfg, fed, train, jit=True)
         states = legacy_round(step, states, node_data, cfg, student_cfg, fed,
-                              train, adj, sizes, ncls, bits, rnd)
-        t_legacy.append((time.perf_counter() - t0) * 1e3)
+                              train, adj, sizes, ncls, bits, 0)  # warmup
+        for rnd in range(1, rounds + 1):
+            t0 = time.perf_counter()
+            states = legacy_round(step, states, node_data, cfg, student_cfg,
+                                  fed, train, adj, sizes, ncls, bits, rnd)
+            t_legacy.append((time.perf_counter() - t0) * 1e3)
 
     # --- jitted stacked round -----------------------------------------
     step_p, bits, ncls, model_cfgs, states, student_cfg = _wiring(
@@ -153,9 +157,7 @@ def measure(n_nodes: int, *, samples_per_node: int, batch_size: int,
     w_self, w_neigh = R.gossip_matrix(adj, sizes)
     include = R.include_matrix(adj)
     round_fn = F._make_round_fn(step_p, student_cfg, ncls, share_protos=True,
-                                wire_model="student", bits=bits,
-                                w_self=w_self, w_neigh=w_neigh,
-                                include=include)
+                                wire_model="student", bits=bits)
 
     def jitted_round(stacked, rnd):
         xb, valid = F._stack_round_batches(
@@ -164,7 +166,8 @@ def measure(n_nodes: int, *, samples_per_node: int, batch_size: int,
             fed.local_epochs)
         pxb, pvalid = F._stack_round_batches(
             node_data, batch_size, [fed.seed + rnd] * n_nodes, 1)
-        out = round_fn(stacked, xb, valid, pxb, pvalid, teacher_on=True,
+        out = round_fn(stacked, xb, valid, pxb, pvalid, w_self, w_neigh,
+                       include, teacher_on=True,
                        all_valid=bool(np.all(np.asarray(valid) == 1.0)))
         _block(out)
         return out
@@ -176,16 +179,20 @@ def measure(n_nodes: int, *, samples_per_node: int, batch_size: int,
         stacked = jitted_round(stacked, rnd)
         t_jit.append((time.perf_counter() - t0) * 1e3)
 
-    legacy_ms = statistics.median(t_legacy)
     jit_ms = statistics.median(t_jit)
-    return {
-        "legacy_ms": round(legacy_ms, 2),
+    out = {
         "jitted_ms": round(jit_ms, 2),
-        "speedup": round(legacy_ms / jit_ms, 2),
         "local_steps_per_round": n_steps,
-        "steps_per_s_legacy": round(n_steps / (legacy_ms / 1e3), 1),
         "steps_per_s_jitted": round(n_steps / (jit_ms / 1e3), 1),
     }
+    if not jitted_only:
+        legacy_ms = statistics.median(t_legacy)
+        out.update({
+            "legacy_ms": round(legacy_ms, 2),
+            "speedup": round(legacy_ms / jit_ms, 2),
+            "steps_per_s_legacy": round(n_steps / (legacy_ms / 1e3), 1),
+        })
+    return out
 
 
 def main():

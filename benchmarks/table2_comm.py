@@ -5,6 +5,9 @@ Byte counts are *analytic serialized payload sizes* (exact), so this
 table does not need long training — one round with the real models gives
 the exact per-round payload; total = payload x rounds x neighbours.
 ``--full`` uses the paper's 20-node/10-20-80-round protocol numbers.
+``--topology`` accepts any ``core/topology.make_schedule`` spec: the
+numbers come from the schedule-derived vectorized accounting
+(``ScheduleCommAccountant``), byte-identical to the seed per-edge meter.
 """
 from __future__ import annotations
 
@@ -15,7 +18,6 @@ import os
 import numpy as np
 
 from repro.config import FederationConfig, TrainConfig, get_config
-from repro.core.comm import CommMeter
 from repro.core.federation import run_federation
 from repro.data import make_image_dataset, partition, train_test_split
 
@@ -25,7 +27,7 @@ PAPER_ROUNDS = {"mnist-cnn": 10, "cifar10-resnet18": 20,
 
 
 def measure(dataset: str, *, nodes: int, rounds: int,
-            n_samples: int = 1200, seed: int = 0):
+            n_samples: int = 1200, seed: int = 0, topology: str = "full"):
     cfg = get_config(dataset)
     data = make_image_dataset(seed, n_samples, cfg.input_hw, cfg.num_classes)
     train_d, test_d = train_test_split(data, 0.1, seed)
@@ -36,7 +38,8 @@ def measure(dataset: str, *, nodes: int, rounds: int,
     rows = {}
     for algo in ALGOS:
         fed = FederationConfig(num_nodes=nodes, rounds=rounds,
-                               local_epochs=1, algorithm=algo, seed=seed)
+                               local_epochs=1, algorithm=algo, seed=seed,
+                               topology=topology)
         res = run_federation(cfg, fed, train, node_data, test_d)
         rows[algo] = {
             "sent_gb": res.extras["avg_sent_gb"],
@@ -52,6 +55,8 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--datasets", nargs="+", default=["mnist-cnn"])
+    ap.add_argument("--topology", default="full",
+                    help="gossip graph spec (core/topology.make_schedule)")
     ap.add_argument("--out", default="reports/table2_comm.json")
     args = ap.parse_args()
 
@@ -59,9 +64,11 @@ def main():
     for ds in args.datasets:
         nodes = 20 if args.full else 4
         rounds = PAPER_ROUNDS.get(ds, 10) if args.full else 2
-        print(f"== {ds} ({nodes} nodes, {rounds} rounds) ==")
+        print(f"== {ds} ({nodes} nodes, {rounds} rounds, "
+              f"topology={args.topology}) ==")
         rows = measure(ds, nodes=nodes, rounds=rounds,
-                       n_samples=20000 if args.full else 1200)
+                       n_samples=20000 if args.full else 1200,
+                       topology=args.topology)
         results[ds] = rows
         print(f"  {'algo':9s} {'sent GB':>10s} {'recv GB':>10s} {'% vs FedAvg':>12s}")
         for algo, r in rows.items():

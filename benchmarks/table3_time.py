@@ -4,12 +4,22 @@ Wall time on this CPU container is only meaningful *relatively* (the
 paper used 2x RTX 3080); the claim under test is the ORDERING and the
 ProFe overhead band (~+18-20% on CIFAR-scale, ~0% on MNIST-scale) vs the
 FedProto floor (~-65%).
+
+``--full`` runs the paper's N=20 protocol on the stacked round engine
+(one jitted program per round, dispatch O(1) in N).  ``--topologies``
+sweeps gossip graphs (full/ring/star/random-k/...; see
+``core/topology.make_schedule``) and the JSON output carries the
+per-round timings for each topology.
+
+    PYTHONPATH=src python benchmarks/table3_time.py [--full] \\
+        [--topologies full ring star]
 """
 from __future__ import annotations
 
 import argparse
 import json
 import os
+import statistics
 
 from repro.config import FederationConfig, TrainConfig, get_config
 from repro.core.federation import run_federation, run_federation_loop
@@ -19,7 +29,7 @@ ALGOS = ["fedavg", "fedgpd", "fml", "fedproto", "profe"]
 
 
 def measure(dataset: str, *, nodes: int, rounds: int, n_samples: int,
-            seed: int = 0, engine: str = "stacked"):
+            seed: int = 0, engine: str = "stacked", topology: str = "full"):
     cfg = get_config(dataset)
     data = make_image_dataset(seed, n_samples, cfg.input_hw, cfg.num_classes)
     train_d, test_d = train_test_split(data, 0.1, seed)
@@ -31,9 +41,15 @@ def measure(dataset: str, *, nodes: int, rounds: int, n_samples: int,
     rows = {}
     for algo in ALGOS:
         fed = FederationConfig(num_nodes=nodes, rounds=rounds, local_epochs=1,
-                               algorithm=algo, seed=seed)
+                               algorithm=algo, seed=seed, topology=topology)
         res = run(cfg, fed, train, node_data, test_d)
-        rows[algo] = {"elapsed_s": res.elapsed_s}
+        times = res.extras.get("round_times_s", [])
+        rows[algo] = {
+            "elapsed_s": res.elapsed_s,
+            "round_times_s": [round(t, 4) for t in times],
+            "median_round_s": round(statistics.median(times), 4)
+            if times else None,
+        }
     base = rows["fedavg"]["elapsed_s"]
     for algo in ALGOS:
         rows[algo]["pct_vs_fedavg"] = 100.0 * (rows[algo]["elapsed_s"] / base - 1)
@@ -42,8 +58,12 @@ def measure(dataset: str, *, nodes: int, rounds: int, n_samples: int,
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--full", action="store_true",
+                    help="the paper's N=20 protocol on the stacked engine")
     ap.add_argument("--datasets", nargs="+", default=["mnist-cnn"])
+    ap.add_argument("--topologies", nargs="+", default=["full"],
+                    help="gossip graphs to sweep (any "
+                         "core/topology.make_schedule spec)")
     ap.add_argument("--engine", choices=["stacked", "loop"],
                     default="stacked",
                     help="round engine: jitted stacked rounds (default) or "
@@ -54,13 +74,16 @@ def main():
     results = {}
     for ds in args.datasets:
         nodes, rounds, n = (20, 10, 20000) if args.full else (3, 2, 900)
-        print(f"== {ds} ==")
-        rows = measure(ds, nodes=nodes, rounds=rounds, n_samples=n,
-                       engine=args.engine)
-        results[ds] = rows
-        for algo, r in rows.items():
-            print(f"  {algo:9s} {r['elapsed_s']:8.1f}s "
-                  f"({r['pct_vs_fedavg']:+.0f}% vs FedAvg)")
+        results[ds] = {}
+        for topo in args.topologies:
+            print(f"== {ds} ({nodes} nodes, topology={topo}) ==")
+            rows = measure(ds, nodes=nodes, rounds=rounds, n_samples=n,
+                           engine=args.engine, topology=topo)
+            results[ds][topo] = rows
+            for algo, r in rows.items():
+                print(f"  {algo:9s} {r['elapsed_s']:8.1f}s "
+                      f"({r['pct_vs_fedavg']:+.0f}% vs FedAvg, "
+                      f"median {r['median_round_s']}s/round)")
     os.makedirs(os.path.dirname(args.out), exist_ok=True)
     with open(args.out, "w") as f:
         json.dump(results, f, indent=2)

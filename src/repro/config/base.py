@@ -167,7 +167,10 @@ SHAPES: Dict[str, ShapeConfig] = {
 @dataclass(frozen=True)
 class FederationConfig:
     num_nodes: int = 20
-    topology: str = "full"          # "full" | "ring" | "star"
+    # Topology spec (core/topology.make_schedule): "full" | "ring" |
+    # "star" | "random-k<k>" | "er-<p>" | "dynamic:<a>,<b>,..." |
+    # "resample:<sub>"
+    topology: str = "full"
     rounds: int = 10
     local_epochs: int = 1
     algorithm: str = "profe"        # "profe"|"fedavg"|"fedproto"|"fml"|"fedgpd"

@@ -16,6 +16,14 @@ return the pure per-node step instead — the stacked round engine in
 ``core/federation.py`` vmaps that over a leading ``[N, ...]`` node axis
 inside its own jitted round program, so one compiled program trains
 every node.
+
+Steps are topology-agnostic by design: *what* travels (model /
+prototypes / both, and at what precision) is declared per algorithm in
+``federation._algo_wiring``, while *who* exchanges with whom each round
+is owned entirely by the ``TopologySchedule`` (``core/topology.py``)
+the driver lowers into gossip/include matrices — so every baseline runs
+unchanged on full, ring, star, random-k, or time-varying graphs, on
+both the stacked CPU engine and the mesh path.
 """
 from __future__ import annotations
 

@@ -1,15 +1,26 @@
 """Communication accounting — reproduces Table II analytically.
 
 Every gossip payload is measured in *serialized wire bytes* (quantized
-width for float tensors + per-tensor scale overhead).  The meter tracks
-bytes sent/received per node, per round, per payload kind ("model",
-"prototypes", ...), so `benchmarks/table2_comm.py` can print the exact
-FedAvg/FedProto/FML/FedGPD/ProFe comparison.
+width for float tensors + per-tensor scale overhead).  Two accountants
+share one summary surface:
+
+* :class:`CommMeter` — the seed per-edge Python loop (``record_broadcast``
+  per sender).  Kept as the reference semantics the vectorized path is
+  asserted byte-identical to.
+* :class:`ScheduleCommAccountant` — derives the same integers from a
+  :class:`repro.core.topology.TopologySchedule` in one degree-vector
+  multiply per round (``bytes × out/in-degree``), so Table II numbers
+  are provably the bytes the stacked engine's gossip matrices move.
+
+`benchmarks/table2_comm.py` prints the exact
+FedAvg/FedProto/FML/FedGPD/ProFe comparison from either.
 """
 from __future__ import annotations
 
 from collections import defaultdict
 from typing import Dict, Optional
+
+import numpy as np
 
 from repro.core.quantization import tree_wire_bytes
 
@@ -48,3 +59,38 @@ class CommMeter:
             "total_gb": (sum(self.sent.values())) / 1e9,
             "by_kind_gb": {k: v / 1e9 for k, v in self.by_kind.items()},
         }
+
+
+class ScheduleCommAccountant(CommMeter):
+    """Wire-byte accounting computed from a ``TopologySchedule``.
+
+    Exposes the :class:`CommMeter` counters/summaries, but one round of
+    all-node gossip is a single vectorized update — per-copy bytes from
+    ``tree_wire_bytes`` times the schedule's integer out/in-degree
+    vectors — instead of a per-sender/per-receiver Python loop.  All
+    arithmetic is exact integers, so the result is *byte-identical* to
+    running ``record_broadcast`` over every edge (asserted in
+    ``tests/test_topology.py``).
+    """
+
+    def __init__(self, schedule):
+        super().__init__(schedule.num_nodes)
+        self.schedule = schedule
+        self._out = schedule.out_degrees()      # [R, N] int64
+        self._in = schedule.in_degrees()        # [R, N] int64
+
+    def record_round(self, payload_tree, kind: str, round_idx: int,
+                     bits: Optional[int] = None) -> int:
+        """Every node broadcasts ``payload_tree`` to that round's
+        neighbors.  Returns bytes per copy."""
+        nbytes = tree_wire_bytes(payload_tree, bits)
+        p = self.schedule.phase_index(round_idx)
+        out_d, in_d = self._out[p], self._in[p]
+        for i in np.nonzero(out_d)[0]:
+            self.sent[int(i)] += nbytes * int(out_d[i])
+        for i in np.nonzero(in_d)[0]:
+            self.received[int(i)] += nbytes * int(in_d[i])
+        edges = int(out_d.sum())
+        self.by_kind[kind] += nbytes * edges
+        self.by_round[round_idx] += nbytes * edges
+        return nbytes

@@ -1,10 +1,14 @@
 """Decentralized-federated-learning simulator (paper Sec. IV setup).
 
-Runs N nodes over a topology for R rounds of E local epochs, handling —
-per algorithm — what travels on the wire, at what precision, and how it
-is aggregated.  Communication is metered analytically (Table II);
-per-round global-test F1 is the Fig. 2 curve; wall-time per algorithm is
-Table III.
+Runs N nodes over a :class:`~repro.core.topology.TopologySchedule` for R
+rounds of E local epochs, handling — per algorithm — what travels on the
+wire, at what precision, and how it is aggregated.  The schedule (static
+full/ring/star, seeded random-k/Erdős–Rényi, or a time-varying
+``[R, N, N]`` stack) lowers once to gossip/include matrices whose
+per-round slices enter the jitted round as traced operands.
+Communication is metered analytically from the same schedule (Table II,
+vectorized ``ScheduleCommAccountant``); per-round global-test F1 is the
+Fig. 2 curve; wall-time per algorithm is Table III.
 
 **Round engine.**  Node state is *stacked*: every :class:`NodeState`
 leaf carries a leading ``[N, ...]`` node axis, and one jitted program
@@ -37,6 +41,7 @@ axis = federation node) lives in ``repro/launch`` and
 """
 from __future__ import annotations
 
+import os
 import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Tuple
@@ -50,7 +55,7 @@ from repro.core import baselines as B
 from repro.core import round_ops as R
 from repro.core import topology as T
 from repro.core.aggregation import weighted_tree_mean
-from repro.core.comm import CommMeter
+from repro.core.comm import CommMeter, ScheduleCommAccountant
 from repro.core.distillation import teacher_active
 from repro.core.metrics import accuracy, macro_f1
 from repro.core.profe import (NodeState, compute_local_prototypes,
@@ -242,24 +247,41 @@ def _masked_select(v, new_tree, old_tree):
 # XLA:CPU executes while-loop bodies on the calling thread (no intra-op
 # parallelism), which makes a rolled scan ~5x slower than the same body
 # unrolled.  Short batch axes are fully unrolled on CPU; long ones and
-# accelerator backends keep the rolled scan (compile-time economy).
-_CPU_UNROLL_CAP = 32
+# accelerator backends keep the rolled scan (compile-time economy).  The
+# threshold is a config knob: set the ``REPRO_CPU_UNROLL_CAP`` env var
+# (0 forces rolled scans everywhere, large values trade compile time for
+# run time) or pass ``unroll_cap`` to ``_scan`` directly.  Both paths
+# compute identical results (asserted in ``tests/test_topology.py``).
+_DEFAULT_CPU_UNROLL_CAP = 32
 
 
-def _scan(body, init, xs, length: int):
-    full = length <= _CPU_UNROLL_CAP and jax.default_backend() == "cpu"
+def cpu_unroll_cap() -> int:
+    """Batch-axis length at or below which CPU scans fully unroll."""
+    return int(os.environ.get("REPRO_CPU_UNROLL_CAP",
+                              _DEFAULT_CPU_UNROLL_CAP))
+
+
+def _scan(body, init, xs, length: int, *, unroll_cap: Optional[int] = None):
+    cap = cpu_unroll_cap() if unroll_cap is None else unroll_cap
+    full = length <= cap and jax.default_backend() == "cpu"
     return jax.lax.scan(body, init, xs, unroll=length if full else 1)
 
 
 def _make_round_fn(step: Callable, proto_cfg: ModelConfig, ncls: int, *,
                    share_protos: bool, wire_model: Optional[str],
-                   bits: Optional[int], w_self, w_neigh, include):
+                   bits: Optional[int]):
     """One full federation round as a single compiled program over
     stacked node state: scan(vmap(step)) → scanned Eq. 3 einsum →
     round_ops gossip/aggregate.  ``teacher_on`` is a static arg (two
-    program variants, exactly like the per-node step)."""
+    program variants, exactly like the per-node step).
+
+    The gossip/include matrices ``(w_self [N], w_neigh [N, N],
+    include [N, N])`` are *traced operands* — the driver passes the
+    current round's slice of the lowered ``TopologySchedule`` stacks, so
+    a round-varying topology never rebuilds or retraces the program."""
 
     def round_fn(state: NodeState, xb, valid, pxb, pvalid,
+                 w_self, w_neigh, include,
                  teacher_on: bool, all_valid: bool = False) -> NodeState:
         # 1) local training: scan over the batch axis, vmap over nodes.
         # ``all_valid`` (static) skips the per-step mask merge when every
@@ -339,7 +361,8 @@ def run_federation(teacher_cfg: ModelConfig, fed: FederationConfig,
     student_cfg = derive_student(teacher_cfg)
     n_nodes = fed.num_nodes
     assert len(node_data) == n_nodes
-    adj = T.adjacency(n_nodes, fed.topology)
+    sched = T.make_schedule(n_nodes, fed.topology, rounds=fed.rounds,
+                            seed=fed.seed)
     ncls = _n_proto_classes(teacher_cfg)
     sizes = [len(next(iter(d.values()))) for d in node_data]
 
@@ -362,29 +385,30 @@ def run_federation(teacher_cfg: ModelConfig, fed: FederationConfig,
         return run_federation_loop(teacher_cfg, fed, train, node_data,
                                    test_data, verbose=verbose)
 
-    meter = CommMeter(n_nodes)
+    meter = ScheduleCommAccountant(sched)
     stacked = _stack_states(
         _init_states(algo, model_cfgs, fed, opt_s, opt_t, ncls))
     eval_cfg = model_cfgs[1] if algo in ("profe", "fml") else model_cfgs[0]
     proto_cfg = eval_cfg
     needs_teacher = algo in ("profe", "fml")
 
-    w_self, w_neigh = R.gossip_matrix(adj, sizes)
-    include = R.include_matrix(adj)
+    # the lowered schedule: [R, N]/[R, N, N] stacks indexed per round and
+    # fed to the jitted round as traced operands (R == 1 for static)
+    w_self_st, w_neigh_st, include_st = sched.lower(sizes)
     round_fn = _make_round_fn(step, proto_cfg, ncls,
                               share_protos=share_protos,
-                              wire_model=wire_model, bits=bits,
-                              w_self=w_self, w_neigh=w_neigh,
-                              include=include)
+                              wire_model=wire_model, bits=bits)
     payload = _payload_template(wire_model, share_protos, stacked, ncls,
                                 proto_cfg.proto_dim)
-    neighbor_lists = [T.neighbors(adj, i) for i in range(n_nodes)]
 
     result = FederationResult(comm=meter, algorithm=algo)
+    round_times: List[float] = []
+    result.extras["round_times_s"] = round_times
     t0 = time.time()
 
     empty = ({}, jnp.zeros((0, n_nodes), jnp.float32))
     for rnd in range(fed.rounds):
+        t_r = time.time()
         t_on = teacher_active(fed.alpha_s, fed.alpha_limit, rnd) \
             if algo == "profe" else needs_teacher
         staged = probe if rnd == 0 else _stack_round_batches(
@@ -397,19 +421,22 @@ def run_federation(teacher_cfg: ModelConfig, fed: FederationConfig,
         xb, valid = staged
         pxb, pvalid = proto_staged
 
-        stacked = round_fn(stacked, xb, valid, pxb, pvalid, teacher_on=t_on,
+        p = sched.phase_index(rnd)
+        stacked = round_fn(stacked, xb, valid, pxb, pvalid,
+                           w_self_st[p], w_neigh_st[p], include_st[p],
+                           teacher_on=t_on,
                            all_valid=bool(np.all(np.asarray(valid) == 1.0)))
 
-        # metering is analytic — per-copy bytes from the payload
-        # skeleton, identical to what the reference loop records
-        for i in range(n_nodes):
-            meter.record_broadcast(i, neighbor_lists[i], payload, kind=algo,
-                                   round_idx=rnd, bits=bits)
+        # metering is analytic and vectorized — per-copy bytes from the
+        # payload skeleton times the schedule's degree vectors,
+        # byte-identical to the reference loop's per-edge meter
+        meter.record_round(payload, kind=algo, round_idx=rnd, bits=bits)
 
         f1, acc = _eval_params(eval_cfg, _node_slice(stacked.student, 0),
                                test_data)
         result.f1_per_round.append(f1)
         result.acc_per_round.append(acc)
+        round_times.append(time.time() - t_r)
         if verbose:
             print(f"[{algo}] round {rnd + 1}/{fed.rounds} "
                   f"f1={f1:.4f} acc={acc:.4f} "
@@ -435,13 +462,18 @@ def run_federation_loop(teacher_cfg: ModelConfig, fed: FederationConfig,
     Kept as the executable definition of round semantics: the stacked
     engine must match it to numerical noise (asserted in tests), ragged
     node datasets fall back to it, and ``benchmarks/round_step.py``
-    measures the jitted round against it.
+    measures the jitted round against it.  It walks the same
+    :class:`~repro.core.topology.TopologySchedule` as the stacked engine
+    (per-round adjacency for time-varying specs) but keeps the per-edge
+    ``CommMeter`` loop — the reference the vectorized accounting is
+    asserted byte-identical to.
     """
     algo = fed.algorithm
     student_cfg = derive_student(teacher_cfg)
     n_nodes = fed.num_nodes
     assert len(node_data) == n_nodes
-    adj = T.adjacency(n_nodes, fed.topology)
+    sched = T.make_schedule(n_nodes, fed.topology, rounds=fed.rounds,
+                            seed=fed.seed)
     meter = CommMeter(n_nodes)
     ncls = _n_proto_classes(teacher_cfg)
     sizes = [len(next(iter(d.values()))) for d in node_data]
@@ -460,9 +492,13 @@ def run_federation_loop(teacher_cfg: ModelConfig, fed: FederationConfig,
     eval_cfg = model_cfgs[1] if algo in ("profe", "fml") else model_cfgs[0]
     proto_cfg = eval_cfg
     result = FederationResult(comm=meter, algorithm=algo)
+    round_times: List[float] = []
+    result.extras["round_times_s"] = round_times
     t0 = time.time()
 
     for rnd in range(fed.rounds):
+        t_r = time.time()
+        adj = sched.adjacency_at(rnd)
         t_on = teacher_active(fed.alpha_s, fed.alpha_limit, rnd) \
             if algo == "profe" else needs_teacher
         # 1) local training
@@ -534,6 +570,7 @@ def run_federation_loop(teacher_cfg: ModelConfig, fed: FederationConfig,
         f1, acc = _eval_params(eval_cfg, states[0].student, test_data)
         result.f1_per_round.append(f1)
         result.acc_per_round.append(acc)
+        round_times.append(time.time() - t_r)
         if verbose:
             print(f"[{algo}] round {rnd + 1}/{fed.rounds} "
                   f"f1={f1:.4f} acc={acc:.4f} "

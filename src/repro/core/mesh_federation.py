@@ -24,39 +24,73 @@ exactly ProFe's wire content:
 3. local de-quantization + dataset-size-weighted averaging (student) and
    Eq. 4 instance-count-weighted prototype aggregation.
 
+**Topologies.**  Pass ``adjacency`` (a 0/1 ``[N, N]`` phase of a
+:class:`repro.core.topology.TopologySchedule`) to run ring/star/random-k
+ProFe or FedAvg rounds on the mesh: the mix becomes a
+**neighborhood-masked weighted einsum** over the gathered codes —
+``gossip_matrix_dyn`` zeroes non-neighbor columns, every node keeps its
+own unquantized copy (the CPU simulator convention), and Eq. 4 runs per
+neighborhood via ``neighborhood_prototype_aggregate``.  Outputs stay
+node-distinct and sharded back to P("pod", ...), so node divergence
+under sparse gossip is explicit on the mesh for the first time.  With
+``adjacency=None`` (default) the legacy full/fedavg behavior is
+unchanged: a bare size-weighted mean where every node ends identical.
+
 ``make_fedavg_round`` is the baseline: same exchange of the *full-size*
 model at fp32 — the dry-run diff of collective bytes between the two
 programs reproduces Table II on the mesh.
 """
 from __future__ import annotations
 
+from typing import Optional
+
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.prototypes import aggregate_prototypes
-from repro.core.round_ops import (dequantize_leaf, quantize_leaf_per_node,
-                                  weighted_node_mean)
+from repro.core.round_ops import (dequantize_leaf, gossip_matrix_dyn,
+                                  include_matrix, mix_node_trees,
+                                  neighborhood_prototype_aggregate,
+                                  quantize_leaf_per_node, weighted_node_mean)
 
 
-def _replicate_over_pod(mesh, tree, specs_no_pod):
-    """Reshard [N, ...] leaves from P("pod", ...) to P(None, ...): the
-    all-gather over the pod axis == the wire exchange."""
+def _constrain_over_pod(mesh, tree, specs_no_pod, axis):
+    """Reshard [N, ...] leaves to P(axis, ...): ``axis=None`` replicates
+    (the all-gather over the pod axis == the wire exchange), ``axis="pod"``
+    shards the node dim back after the masked mix."""
     def cons(x, spec):
         return jax.lax.with_sharding_constraint(
-            x, NamedSharding(mesh, P(None, *spec)))
+            x, NamedSharding(mesh, P(axis, *spec)))
     return jax.tree_util.tree_map(
         cons, tree, specs_no_pod,
         is_leaf=lambda x: not isinstance(x, (dict, list, tuple)))
 
 
-def make_profe_round(mesh, student_specs, bits: int = 16):
+def _replicate_over_pod(mesh, tree, specs_no_pod):
+    return _constrain_over_pod(mesh, tree, specs_no_pod, None)
+
+
+def make_profe_round(mesh, student_specs, bits: int = 16,
+                     adjacency: Optional[np.ndarray] = None):
     """Returns round_fn(students, protos, counts, sizes) for stacked
     node state; students leaves [N, ...] sharded P("pod", *student_spec).
 
-    Output: aggregated students (every node identical), global prototypes
+    ``adjacency=None`` (the paper's fully-connected protocol): output is
+    aggregated students (every node identical), global prototypes
     [C, P] + mask [C] (Eq. 4), replicated.
+
+    With a 0/1 ``[N, N]`` ``adjacency`` (one phase of a
+    ``TopologySchedule``): neighborhood-masked gossip — students mix per
+    node over ``{i} ∪ neigh(i)`` (own copy unquantized, weighted einsum
+    over the gathered int16 codes), prototypes aggregate per
+    neighborhood.  Output: node-distinct students sharded P("pod", ...),
+    prototypes [N, C, P] + mask [N, C] sharded P("pod", ...).
     """
+    adj = None if adjacency is None else np.asarray(adjacency)
+    include = None if adj is None else include_matrix(adj)
+
     def round_fn(students, protos, counts, sizes):
         # 1. quantize per node (vmapped math, stays in-pod)
         q = jax.tree_util.tree_map(
@@ -78,29 +112,58 @@ def make_profe_round(mesh, student_specs, bits: int = 16):
         counts_r = jax.lax.with_sharding_constraint(
             counts, NamedSharding(mesh, P(None, None)))
 
-        # 3. local dequantize + dataset-size-weighted FedAvg over nodes
-        w = sizes / jnp.sum(sizes)                                 # [N]
+        # 3. local dequantize + size-weighted mix
         deq = jax.tree_util.tree_map(dequantize_leaf, codes, scales)
-        means = weighted_node_mean(w, deq)
-        new_students = jax.tree_util.tree_map(
-            lambda m, c: jnp.stack([m] * c.shape[0]).astype(jnp.float32),
-            means, codes)
+        protos_rx = dequantize_leaf(pq, pd)                    # [N, C, P]
+        if adj is None:
+            # full mesh: plain FedAvg over all nodes, every node identical
+            w = sizes / jnp.sum(sizes)                         # [N]
+            means = weighted_node_mean(w, deq)
+            new_students = jax.tree_util.tree_map(
+                lambda m, c: jnp.stack([m] * c.shape[0]).astype(jnp.float32),
+                means, codes)
+            global_protos, proto_mask = aggregate_prototypes(protos_rx,
+                                                             counts_r)
+            return new_students, global_protos, proto_mask
 
-        # 4. Eq. 4 prototype aggregation (instance-count weighted)
-        protos_rx = dequantize_leaf(pq, pd)                        # [N, C, P]
-        global_protos, proto_mask = aggregate_prototypes(protos_rx, counts_r)
+        # masked gossip: per-node weighted einsum over the gathered
+        # codes; non-neighbor columns are zero, own copy unquantized
+        w_self, w_neigh = gossip_matrix_dyn(adj, sizes)
+        new_students = mix_node_trees(w_self, w_neigh, students, deq)
+        new_students = _constrain_over_pod(mesh, new_students,
+                                           student_specs, "pod")
+        global_protos, proto_mask = neighborhood_prototype_aggregate(
+            include, protos_rx, counts_r)
+        global_protos = jax.lax.with_sharding_constraint(
+            global_protos, NamedSharding(mesh, P("pod", None, None)))
+        proto_mask = jax.lax.with_sharding_constraint(
+            proto_mask, NamedSharding(mesh, P("pod", None)))
         return new_students, global_protos, proto_mask
 
     return round_fn
 
 
-def make_fedavg_round(mesh, model_specs):
-    """Baseline exchange: full model, fp32, no quantization."""
+def make_fedavg_round(mesh, model_specs,
+                      adjacency: Optional[np.ndarray] = None):
+    """Baseline exchange: full model, fp32, no quantization.
+
+    ``adjacency=None``: global size-weighted mean, every node identical.
+    With a 0/1 ``[N, N]`` adjacency: the same neighborhood-masked
+    weighted-einsum mix as ProFe (sans quantization), node-distinct
+    output sharded P("pod", ...).
+    """
+    adj = None if adjacency is None else np.asarray(adjacency)
+
     def round_fn(models, sizes):
         gathered = _replicate_over_pod(mesh, models, model_specs)
-        w = sizes / jnp.sum(sizes)
-        means = weighted_node_mean(w, gathered)
-        return jax.tree_util.tree_map(
-            lambda m, x: jnp.stack([m] * x.shape[0]).astype(x.dtype),
-            means, gathered)
+        if adj is None:
+            w = sizes / jnp.sum(sizes)
+            means = weighted_node_mean(w, gathered)
+            return jax.tree_util.tree_map(
+                lambda m, x: jnp.stack([m] * x.shape[0]).astype(x.dtype),
+                means, gathered)
+        w_self, w_neigh = gossip_matrix_dyn(adj, sizes)
+        mixed = mix_node_trees(w_self, w_neigh, models, gathered)
+        return _constrain_over_pod(mesh, mixed, model_specs, "pod")
+
     return round_fn

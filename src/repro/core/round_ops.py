@@ -104,7 +104,9 @@ def quantize_dequantize_per_node(tree, bits: int, *,
 def gossip_matrix(adj: np.ndarray, sizes) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Dataset-size-weighted neighborhood-mean weights.
 
-    Returns ``(w_self [N], w_neigh [N, N])`` with
+    ``adj`` is either a static ``[N, N]`` adjacency or a round-stacked
+    ``[R, N, N]`` topology schedule.  Returns ``(w_self, w_neigh)`` of
+    shape ``([N], [N, N])`` respectively ``([R, N], [R, N, N])`` with
     ``w_self[i] + sum_j w_neigh[i, j] == 1`` per row: node i averages its
     own model (weight ``sizes[i]``) with each neighbour j's received
     model (weight ``sizes[j]``), normalized over ``{i} ∪ neigh(i)``.
@@ -113,14 +115,32 @@ def gossip_matrix(adj: np.ndarray, sizes) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """
     a = np.asarray(adj, np.float64)
     s = np.asarray(sizes, np.float64)
-    n = a.shape[0]
-    w = a * s[None, :]
-    denom = w.sum(axis=1) + s          # own weight included
+    squeeze = a.ndim == 2
+    if squeeze:
+        a = a[None]
+    n = a.shape[-1]
+    w = a * s[None, None, :]
+    denom = w.sum(axis=2) + s[None, :]      # own weight included
     denom = np.maximum(denom, 1e-30)
-    w_neigh = w / denom[:, None]
-    w_self = s / denom
-    assert w_neigh.shape == (n, n)
+    w_neigh = w / denom[:, :, None]
+    w_self = s[None, :] / denom
+    assert w_neigh.shape[-2:] == (n, n)
+    if squeeze:
+        w_self, w_neigh = w_self[0], w_neigh[0]
     return jnp.asarray(w_self, jnp.float32), jnp.asarray(w_neigh, jnp.float32)
+
+
+def gossip_matrix_dyn(adj, sizes) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Traceable fp32 variant of :func:`gossip_matrix` for device
+    programs: ``adj`` is a static 0/1 ``[N, N]`` array baked into the
+    program, ``sizes`` a traced ``[N]`` operand (the mesh round receives
+    dataset sizes at run time, so the weights must be computed in-graph).
+    """
+    a = jnp.asarray(adj, jnp.float32)
+    s = jnp.asarray(sizes, jnp.float32)
+    w = a * s[None, :]
+    denom = jnp.maximum(w.sum(axis=1) + s, 1e-30)
+    return s / denom, w / denom[:, None]
 
 
 def mix_node_trees(w_self, w_neigh, own_tree, recv_tree):
@@ -129,7 +149,11 @@ def mix_node_trees(w_self, w_neigh, own_tree, recv_tree):
     ``own_tree`` leaves [N, ...] are each node's *local* (unquantized)
     copy; ``recv_tree`` is what traveled (de-quantized).  New leaf:
     ``w_self[i]·own[i] + Σ_j w_neigh[i,j]·recv[j]`` — one tensordot per
-    leaf instead of a per-node Python loop.
+    leaf instead of a per-node Python loop.  ``(w_self, w_neigh)`` is one
+    round's ``([N], [N, N])`` slice; a round-varying topology passes the
+    current round's slice of its lowered ``[R, N(, N)]`` stacks as traced
+    operands (same shapes every round, so the jitted round never
+    retraces).
     """
     def mix(own, recv):
         recv32 = recv.astype(jnp.float32)
@@ -154,16 +178,19 @@ def weighted_node_mean(w, tree):
 # ---------------------------------------------------------------------------
 
 def include_matrix(adj: np.ndarray) -> jnp.ndarray:
-    """adj + self-loops as fp32 [N, N]: who contributes prototypes to
-    whom (every node includes its own prototypes)."""
-    m = np.asarray(adj, np.float64) + np.eye(adj.shape[0])
+    """adj + self-loops as fp32 ``[N, N]`` (or round-stacked
+    ``[R, N, N]``): who contributes prototypes to whom (every node
+    includes its own prototypes)."""
+    m = np.asarray(adj, np.float64) + np.eye(np.asarray(adj).shape[-1])
     return jnp.asarray(np.minimum(m, 1.0), jnp.float32)
 
 
 def neighborhood_prototype_aggregate(include, protos, counts):
     """Eq. 4 evaluated for every node's neighborhood at once.
 
-    include: [N, N] 0/1 (who node i listens to, incl. itself),
+    include: [N, N] 0/1 (who node i listens to, incl. itself) — one
+             round's slice of a lowered topology schedule, passed as a
+             traced operand so round-varying graphs never retrace,
     protos:  [N, C, P] (already de-quantized receiver-side view),
     counts:  [N, C] instance counts.
     Returns (global_protos [N, C, P], proto_mask [N, C]).

@@ -170,3 +170,68 @@ def test_mesh_profe_round_math():
     np.testing.assert_allclose(np.asarray(glob[0]),
                                np.full(cfg.proto_dim, 2.5), atol=1e-2)
     np.testing.assert_array_equal(np.asarray(mask), [1, 0, 1, 0])
+
+
+@pytest.mark.parametrize("topo", ["ring", "star", "random-k2"])
+def test_mesh_masked_topology_round(topo):
+    """Neighborhood-masked gossip on the pod axis: ring/star/random-k
+    ProFe rounds keep nodes distinct and match the CPU round_ops
+    reference (own copy unquantized, Eq. 4 per neighborhood)."""
+    from repro.core import round_ops as R
+    from repro.core import topology as T
+    from repro.core.mesh_federation import (make_fedavg_round,
+                                            make_profe_round)
+    from repro.sharding import param_specs
+    n = 4
+    adj = T.make_schedule(n, topo, seed=0).adjacency_at(0)
+    mesh = jax.make_mesh((1, 1, 1), ("pod", "data", "model"))
+    cfg = get_config("yi-6b").smoke()
+    student_cfg = derive_student(cfg)
+    params = [init_params(student_cfg, jax.random.PRNGKey(i))
+              for i in range(n)]
+    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *params)
+    shapes = jax.eval_shape(lambda: init_params(student_cfg,
+                                                jax.random.PRNGKey(0)))
+    specs = param_specs(student_cfg, shapes, mesh)
+    C, Pdim = 4, student_cfg.proto_dim
+    protos = jnp.stack([(i + 1.0) * jnp.ones((C, Pdim)) for i in range(n)])
+    counts = jnp.asarray([[1.0, 0, 2, 0], [3.0, 0, 2, 0],
+                          [2.0, 1, 0, 0], [0.0, 2, 1, 1]])
+    sizes = jnp.asarray([1.0, 2.0, 3.0, 4.0])
+
+    round_fn = make_profe_round(mesh, specs, bits=16, adjacency=adj)
+    with mesh:
+        new_students, glob, mask = jax.jit(round_fn)(stacked, protos,
+                                                     counts, sizes)
+    assert glob.shape == (n, C, Pdim) and mask.shape == (n, C)
+
+    # CPU reference: masked mix with own copy unquantized.  The fused
+    # device program may round codes sitting exactly on a .5 boundary
+    # the other way, so allow one quantization step of slack.
+    recv = R.quantize_dequantize_per_node(stacked, 16, use_kernels=False)
+    w_self, w_neigh = R.gossip_matrix_dyn(adj, sizes)
+    want = R.mix_node_trees(w_self, w_neigh, stacked, recv)
+    for g, w in zip(jax.tree_util.tree_leaves(new_students),
+                    jax.tree_util.tree_leaves(want)):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=1e-5, atol=2e-4)
+    protos_rx = R.dequantize_leaf(*R.quantize_leaf_per_node(protos, 16))
+    want_gp, want_mask = R.neighborhood_prototype_aggregate(
+        R.include_matrix(adj), protos_rx, counts)
+    np.testing.assert_allclose(np.asarray(glob), np.asarray(want_gp),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(mask), np.asarray(want_mask))
+    # sparse gossip keeps nodes distinct (unlike the full-mesh round)
+    if topo in ("ring", "star"):
+        leaf = jax.tree_util.tree_leaves(new_students)[0]
+        assert float(jnp.max(jnp.abs(leaf[1] - leaf[2]))) > 0
+
+    # FedAvg baseline with the same mask, no quantization
+    fed_fn = make_fedavg_round(mesh, specs, adjacency=adj)
+    with mesh:
+        mixed = jax.jit(fed_fn)(stacked, sizes)
+    want_f = R.mix_node_trees(w_self, w_neigh, stacked, stacked)
+    for g, w in zip(jax.tree_util.tree_leaves(mixed),
+                    jax.tree_util.tree_leaves(want_f)):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=1e-5, atol=1e-6)

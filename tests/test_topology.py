@@ -1,0 +1,198 @@
+"""Topology subsystem invariants: generators (random-k, Erdős–Rényi),
+round-indexed ``[R, N, N]`` schedules, batched gossip/include lowering,
+schedule-derived comm accounting byte-identical to the seed per-edge
+meter, and the CPU scan-unroll knob."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import federation as F
+from repro.core import round_ops as R
+from repro.core import topology as T
+from repro.core.comm import CommMeter, ScheduleCommAccountant
+
+RNG = np.random.default_rng(5)
+
+
+# ---------------------------------------------------------------------------
+# generators
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,k", [(8, 3), (10, 4), (20, 4)])
+def test_random_k_regular_invariants(n, k):
+    a = T.random_k_regular(n, k, seed=12)
+    assert (a.sum(axis=1) == k).all()           # exactly k-regular
+    assert (a == a.T).all()                     # symmetric
+    assert not a.diagonal().any()               # no self-loops
+    assert T.connected(a)                       # one component
+    # deterministic under a fixed seed
+    np.testing.assert_array_equal(a, T.random_k_regular(n, k, seed=12))
+
+
+def test_random_k_regular_rejects_bad_params():
+    with pytest.raises(ValueError):
+        T.random_k_regular(5, 3, seed=0)        # N*k odd
+    with pytest.raises(ValueError):
+        T.random_k_regular(4, 4, seed=0)        # k >= N
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_erdos_renyi_connected_symmetric(seed):
+    a = T.erdos_renyi(12, 0.2, seed=seed)
+    assert (a == a.T).all()
+    assert not a.diagonal().any()
+    assert T.connected(a)                       # patched if needed
+    np.testing.assert_array_equal(a, T.erdos_renyi(12, 0.2, seed=seed))
+
+
+# ---------------------------------------------------------------------------
+# schedules: [R, N, N] round indexing
+# ---------------------------------------------------------------------------
+
+def test_dynamic_schedule_cycles_phases():
+    s = T.make_schedule(6, "dynamic:ring,star", seed=0)
+    assert s.num_phases == 2 and s.num_nodes == 6
+    np.testing.assert_array_equal(s.adjacency_at(0), T.adjacency(6, "ring"))
+    np.testing.assert_array_equal(s.adjacency_at(1), T.adjacency(6, "star"))
+    # round R wraps back to phase 0
+    np.testing.assert_array_equal(s.adjacency_at(2), s.stack[0])
+    assert s.neighbors_at(1, 3) == [0]          # star leaf talks to hub
+
+
+def test_resample_schedule_one_graph_per_round():
+    s = T.make_schedule(10, "resample:er-0.4", rounds=4, seed=9)
+    assert s.num_phases == 4
+    assert all(T.connected(a) for a in s.stack)
+    # seeded per round: at least one pair of rounds differs
+    assert any(not np.array_equal(s.stack[0], s.stack[r]) for r in range(1, 4))
+
+
+def test_static_schedule_and_from_stack():
+    s = T.make_schedule(5, "ring")
+    assert s.num_phases == 1
+    np.testing.assert_array_equal(s.adjacency_at(7), T.adjacency(5, "ring"))
+    custom = T.from_stack(T.adjacency(5, "star"))
+    assert custom.num_phases == 1 and custom.num_nodes == 5
+    with pytest.raises(ValueError):             # self-loops rejected
+        T.from_stack(np.ones((3, 3), bool))
+    with pytest.raises(ValueError):
+        T.make_schedule(5, "no-such-topology")
+
+
+# ---------------------------------------------------------------------------
+# lowering: batched gossip/include matrices
+# ---------------------------------------------------------------------------
+
+def test_batched_gossip_matrix_matches_per_phase():
+    s = T.make_schedule(7, "dynamic:ring,star,random-k2", seed=4)
+    sizes = RNG.integers(50, 200, 7)
+    ws_b, wn_b = R.gossip_matrix(s.stack, sizes)
+    assert ws_b.shape == (3, 7) and wn_b.shape == (3, 7, 7)
+    inc_b = R.include_matrix(s.stack)
+    for p in range(3):
+        ws, wn = R.gossip_matrix(s.stack[p], sizes)
+        np.testing.assert_array_equal(np.asarray(ws_b[p]), np.asarray(ws))
+        np.testing.assert_array_equal(np.asarray(wn_b[p]), np.asarray(wn))
+        np.testing.assert_array_equal(np.asarray(inc_b[p]),
+                                      np.asarray(R.include_matrix(s.stack[p])))
+
+
+@pytest.mark.parametrize("spec", ["full", "ring", "star", "random-k4",
+                                  "er-0.3", "dynamic:ring,star"])
+def test_lowered_schedule_row_stochastic(spec):
+    s = T.make_schedule(9, spec, seed=2)
+    sizes = RNG.integers(10, 500, 9)
+    w_self, w_neigh, include = s.lower(sizes)
+    rows = np.asarray(w_self) + np.asarray(w_neigh).sum(axis=-1)
+    np.testing.assert_allclose(rows, np.ones_like(rows), rtol=1e-6)
+    # include == adjacency + self-loops, phase for phase
+    np.testing.assert_array_equal(
+        np.asarray(include) > 0,
+        s.stack | np.eye(9, dtype=bool)[None])
+    # weights vanish exactly on non-edges
+    assert (np.asarray(w_neigh)[~s.stack] == 0).all()
+
+
+def test_gossip_matrix_dyn_matches_host_version():
+    adj = T.adjacency(6, "ring")
+    sizes = jnp.asarray([10.0, 20, 30, 40, 50, 60])
+    ws_d, wn_d = jax.jit(lambda s: R.gossip_matrix_dyn(adj, s))(sizes)
+    ws, wn = R.gossip_matrix(adj, np.asarray(sizes))
+    np.testing.assert_allclose(np.asarray(ws_d), np.asarray(ws), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(wn_d), np.asarray(wn), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# schedule-derived comm accounting == seed per-edge meter, byte for byte
+# ---------------------------------------------------------------------------
+
+PAYLOAD = {"w": jnp.zeros((123, 7), jnp.float32),
+           "b": jnp.zeros((31,), jnp.float32),
+           "idx": jnp.zeros((11,), jnp.int32)}
+
+
+def _reference_meter(sched, rounds, bits):
+    ref = CommMeter(sched.num_nodes)
+    for rnd in range(rounds):
+        adj = sched.adjacency_at(rnd)
+        for i in range(sched.num_nodes):
+            ref.record_broadcast(i, T.neighbors(adj, i), PAYLOAD,
+                                 kind="model", round_idx=rnd, bits=bits)
+    return ref
+
+
+@pytest.mark.parametrize("spec", ["full", "ring", "star", "random-k4",
+                                  "dynamic:ring,star", "resample:er-0.4"])
+@pytest.mark.parametrize("bits", [None, 16])
+def test_accountant_byte_identical_to_seed_meter(spec, bits):
+    sched = T.make_schedule(8, spec, rounds=5, seed=3)
+    ref = _reference_meter(sched, 5, bits)
+    acc = ScheduleCommAccountant(sched)
+    for rnd in range(5):
+        acc.record_round(PAYLOAD, kind="model", round_idx=rnd, bits=bits)
+    assert dict(acc.sent) == dict(ref.sent)
+    assert dict(acc.received) == dict(ref.received)
+    assert dict(acc.by_round) == dict(ref.by_round)
+    assert dict(acc.by_kind) == dict(ref.by_kind)
+    assert acc.summary() == ref.summary()
+
+
+def test_asymmetric_stack_rejected():
+    """Directed gossip is a follow-up: until then the engines'
+    edge-direction conventions only agree on undirected graphs, so an
+    asymmetric stack must be an error, not a silent divergence."""
+    a = np.zeros((4, 4), bool)
+    a[0, 1] = True                              # edge with no reverse
+    with pytest.raises(ValueError):
+        T.from_stack(a)
+
+
+# ---------------------------------------------------------------------------
+# CPU scan-unroll cap: config knob, rolled == unrolled
+# ---------------------------------------------------------------------------
+
+def test_cpu_unroll_cap_env_knob(monkeypatch):
+    monkeypatch.delenv("REPRO_CPU_UNROLL_CAP", raising=False)
+    assert F.cpu_unroll_cap() == F._DEFAULT_CPU_UNROLL_CAP
+    monkeypatch.setenv("REPRO_CPU_UNROLL_CAP", "0")
+    assert F.cpu_unroll_cap() == 0
+
+
+def test_scan_rolled_and_unrolled_agree():
+    """The unroll decision is a perf choice only — both paths must
+    produce the same numbers for a representative accumulate body."""
+    w = jnp.asarray(RNG.standard_normal((16, 16)), jnp.float32)
+    xs = jnp.asarray(RNG.standard_normal((12, 16)), jnp.float32)
+
+    def body(carry, x):
+        carry = jnp.tanh(carry @ w + x)
+        return carry, jnp.sum(carry)
+
+    init = jnp.zeros((16,), jnp.float32)
+    rolled, ys_r = F._scan(body, init, xs, 12, unroll_cap=0)
+    unrolled, ys_u = F._scan(body, init, xs, 12, unroll_cap=64)
+    np.testing.assert_allclose(np.asarray(rolled), np.asarray(unrolled),
+                               rtol=1e-6, atol=1e-7)
+    np.testing.assert_allclose(np.asarray(ys_r), np.asarray(ys_u),
+                               rtol=1e-6, atol=1e-6)
