@@ -1,4 +1,5 @@
-"""Round-step perf regression gate against the committed baseline.
+"""Round-step + wire-exchange perf regression gates against the
+committed baselines.
 
 Re-runs ``benchmarks/round_step.py``'s jitted-round measurement for the
 node counts recorded in ``BENCH_round_step.json`` and fails (exit 1)
@@ -6,26 +7,88 @@ when the fresh per-round time exceeds the committed one by more than
 ``--threshold`` (default 1.3x — wide enough to absorb container noise,
 tight enough to catch a dispatch-path regression).
 
+When ``BENCH_wire_exchange.json`` exists, the wire-exchange microbench
+is also re-run (in a subprocess — it forces one host device per
+federation node) and gated: per-node collective bytes must match the
+baseline EXACTLY (the packed codec and permutation lowering are
+deterministic — any drift is a wire-format change that needs a
+deliberate baseline refresh), and the jitted packed-codec round-trip ms
+must stay within the same threshold.
+
 Tier-1-adjacent invocation (see ROADMAP):
 
     PYTHONPATH=src python benchmarks/check_regression.py
 
-Refresh the baseline after an intentional perf change with:
+Refresh the baselines after an intentional perf change with:
 
     PYTHONPATH=src python benchmarks/round_step.py --nodes 2 4 8
+    PYTHONPATH=src python benchmarks/round_step.py --wire
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
+import subprocess
 import sys
+import tempfile
 
 from round_step import measure
+
+
+def check_wire(baseline_path: str, threshold: float) -> bool:
+    """Wire-exchange gate.  Returns True on failure."""
+    with open(baseline_path) as f:
+        base = json.load(f)
+    cfg = base["config"]
+    with tempfile.NamedTemporaryFile(suffix=".json", delete=False) as tf:
+        out = tf.name
+    script = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                          "round_step.py")
+    try:
+        r = subprocess.run(
+            [sys.executable, script, "--wire",
+             "--wire-nodes", str(cfg["nodes"]),
+             "--wire-topology", cfg["topology"], "--out", out],
+            capture_output=True, text=True)
+        if r.returncode != 0:
+            print(f"wire bench failed to run:\n{r.stdout}\n{r.stderr}")
+            return True
+        with open(out) as f:
+            fresh = json.load(f)
+    finally:
+        if os.path.exists(out):
+            os.unlink(out)
+
+    failed = False
+    b_ms = base["codec"]["packed_ms"]
+    f_ms = fresh["codec"]["packed_ms"]
+    ratio = f_ms / b_ms
+    verdict = "OK" if ratio <= threshold else "REGRESSION"
+    failed |= verdict == "REGRESSION"
+    print(f"wire codec: packed qdq {f_ms:7.2f} ms vs committed "
+          f"{b_ms:7.2f} ms  ({ratio:.2f}x)  {verdict}")
+    for ex, rep in base["exchange"]["exchanges"].items():
+        if "error" in rep:
+            # visible, so an error'd baseline mode can't hide forever —
+            # regenerate the baseline to bring it under the gate
+            print(f"wire bytes [{ex}]: UNCHECKED (baseline recorded "
+                  f"{rep['error']!r} — refresh BENCH_wire_exchange.json)")
+            continue
+        fb = rep["collective_bytes_per_node"]
+        ff = fresh["exchange"]["exchanges"].get(ex, {}).get(
+            "collective_bytes_per_node")
+        ok = ff == fb
+        failed |= not ok
+        print(f"wire bytes [{ex}]: {ff} vs committed {fb}  "
+              f"{'OK' if ok else 'WIRE-FORMAT DRIFT'}")
+    return failed
 
 
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--baseline", default="BENCH_round_step.json")
+    ap.add_argument("--wire-baseline", default="BENCH_wire_exchange.json")
     ap.add_argument("--threshold", type=float, default=1.3,
                     help="fail when fresh jitted ms/round > threshold x "
                          "committed")
@@ -34,6 +97,7 @@ def main() -> int:
                          "(default: all)")
     ap.add_argument("--rounds", type=int, default=3,
                     help="timed rounds per node count (median)")
+    ap.add_argument("--skip-wire", action="store_true")
     args = ap.parse_args()
 
     with open(args.baseline) as f:
@@ -60,12 +124,15 @@ def main() -> int:
         print(f"N={n}: jitted {fresh:8.1f} ms/round vs committed "
               f"{committed:8.1f} ms  ({ratio:.2f}x)  {verdict}")
 
+    if not args.skip_wire and os.path.exists(args.wire_baseline):
+        failed |= check_wire(args.wire_baseline, args.threshold)
+
     if failed:
-        print(f"\nFAIL: per-round slowdown exceeds {args.threshold:.1f}x "
-              f"the committed baseline ({args.baseline})")
+        print(f"\nFAIL: regression vs the committed baselines "
+              f"({args.baseline}, {args.wire_baseline})")
         return 1
-    print(f"\nall node counts within {args.threshold:.1f}x of the "
-          f"committed baseline")
+    print(f"\nall measurements within {args.threshold:.1f}x of the "
+          f"committed baselines")
     return 0
 
 

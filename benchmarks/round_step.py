@@ -10,12 +10,25 @@ in node count.  This benchmark records that gap per node count so the
 perf trajectory is tracked in ``BENCH_round_step.json``.
 
     PYTHONPATH=src python benchmarks/round_step.py --nodes 2 4 8
+
+**Wire-exchange microbench** (``--wire``): the packed single-buffer
+codec vs the per-leaf path (jitted round-trip ms), and the gather vs
+ppermute exchange on an (N, 1, 1) federation mesh (per-node HLO
+collective bytes + wall ms per round).  Recorded in
+``BENCH_wire_exchange.json`` and gated by ``check_regression.py``:
+
+    PYTHONPATH=src python benchmarks/round_step.py --wire
+
+(re-executes itself with forced host devices when the exchange needs
+more nodes than the backend exposes).
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import statistics
+import sys
 import time
 
 import jax
@@ -195,6 +208,117 @@ def measure(n_nodes: int, *, samples_per_node: int, batch_size: int,
     return out
 
 
+# ---------------------------------------------------------------------------
+# wire-exchange microbench (--wire)
+# ---------------------------------------------------------------------------
+
+def _median_ms(fn, *args, rounds: int = 20):
+    _block(fn(*args))                                   # compile/warmup
+    ts = []
+    for _ in range(rounds):
+        t0 = time.perf_counter()
+        _block(fn(*args))
+        ts.append((time.perf_counter() - t0) * 1e3)
+    return round(statistics.median(ts), 3)
+
+
+def measure_wire(n_nodes: int = 8, topology: str = "ring", *,
+                 arch: str = "mnist-cnn", bits: int = 16,
+                 rounds: int = 20):
+    """Packed vs per-leaf codec (jitted qdq round-trip) and gather vs
+    ppermute exchange (HLO collective bytes + wall ms) for one gossip
+    round of a stacked student + prototypes payload."""
+    from repro.core.mesh_federation import make_profe_round
+    from repro.launch import wire as W
+    from repro.models import init_params
+    from repro.sharding import param_specs
+
+    # single owner of the arch -> (student, proto-classes) derivation,
+    # so the timed payload matches the payload whose bytes are lowered
+    _cfg, student_cfg, _struct, ncls = W._student_setup(arch)
+    params = [init_params(student_cfg, jax.random.PRNGKey(i))
+              for i in range(n_nodes)]
+    students = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *params)
+    protos = jnp.asarray(
+        np.random.default_rng(0).standard_normal(
+            (n_nodes, ncls, student_cfg.proto_dim)), jnp.float32)
+    payload = {"protos": protos, "student": students}
+
+    qdq_leaf = jax.jit(lambda t: R.quantize_dequantize_per_node(
+        t, bits, packed=False))
+    qdq_packed = jax.jit(lambda t: R.quantize_dequantize_per_node(t, bits))
+    codec = {
+        "per_leaf_ms": _median_ms(qdq_leaf, payload, rounds=rounds),
+        "packed_ms": _median_ms(qdq_packed, payload, rounds=rounds),
+    }
+
+    # exchange: bytes from compiled HLO, wall ms on the federation mesh
+    report = W.measure_exchange_bytes(arch, n_nodes, topology, bits=bits)
+    mesh = W.fed_mesh(n_nodes)
+    shapes = jax.eval_shape(lambda: init_params(student_cfg,
+                                                jax.random.PRNGKey(0)))
+    specs = param_specs(student_cfg, shapes, mesh)
+    adj = T.make_schedule(n_nodes, topology, seed=0).adjacency_at(0)
+    counts = jnp.ones((n_nodes, ncls), jnp.float32)
+    sizes = jnp.ones((n_nodes,), jnp.float32)
+    for ex, rep in report["exchanges"].items():
+        if "error" in rep:
+            continue
+        fn = make_profe_round(mesh, specs, bits=bits, adjacency=adj,
+                              exchange=ex)
+        with mesh:
+            jitted = jax.jit(fn)
+            rep["round_ms"] = _median_ms(
+                jitted, students, protos, counts, sizes, rounds=rounds)
+    return {"codec": codec, "exchange": report}
+
+
+def run_wire(args):
+    res = measure_wire(args.wire_nodes, args.wire_topology,
+                       rounds=args.rounds)
+    ex = res["exchange"]["exchanges"]
+    out = {
+        "benchmark": "wire exchange: packed single-buffer codec vs "
+                     "per-leaf, gather vs ppermute neighbor collectives "
+                     f"({args.wire_topology}, N={args.wire_nodes}, "
+                     "mnist-cnn student+protos payload)",
+        "backend": jax.default_backend(),
+        "config": {"nodes": args.wire_nodes,
+                   "topology": args.wire_topology,
+                   "timed_rounds": args.rounds, "bits": 16},
+        **res,
+    }
+    print(f"codec qdq: per-leaf {res['codec']['per_leaf_ms']:7.2f} ms   "
+          f"packed {res['codec']['packed_ms']:7.2f} ms")
+    for name, rep in ex.items():
+        if "error" in rep:
+            print(f"  {name:9s} {rep['error']}")
+            continue
+        print(f"  {name:9s} {rep['collective_bytes_per_node']/1e3:9.1f} "
+              f"KB/node   {rep.get('round_ms', float('nan')):7.2f} ms/round")
+    if "ppermute" in ex and "error" not in ex["ppermute"]:
+        full = res["exchange"].get("full_gather_bytes_per_node") or 0
+        if full:
+            frac = ex["ppermute"]["collective_bytes_per_node"] / full
+            out["ppermute_vs_full_gather"] = round(frac, 4)
+            print(f"  ppermute wire = {frac:.2%} of the full-graph "
+                  f"all-gather exchange")
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"wrote {args.out}")
+
+
+def _reexec_with_devices(n: int):
+    from repro.launch.wire import ensure_host_device_flag
+    env = ensure_host_device_flag(n, dict(os.environ))
+    if env.get("XLA_FLAGS") == os.environ.get("XLA_FLAGS"):
+        raise RuntimeError(
+            f"need {n} host devices but XLA_FLAGS pins a smaller count")
+    os.execve(sys.executable,
+              [sys.executable, os.path.abspath(__file__)] + sys.argv[1:],
+              env)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--nodes", nargs="+", type=int, default=[2, 4, 8])
@@ -202,7 +326,21 @@ def main():
     ap.add_argument("--batch-size", type=int, default=8)
     ap.add_argument("--rounds", type=int, default=5)
     ap.add_argument("--out", default="BENCH_round_step.json")
+    ap.add_argument("--wire", action="store_true",
+                    help="wire-exchange microbench instead of the round "
+                         "step (writes BENCH_wire_exchange.json)")
+    ap.add_argument("--wire-nodes", type=int, default=8)
+    ap.add_argument("--wire-topology", default="ring")
     args = ap.parse_args()
+
+    if args.wire:
+        if args.out == "BENCH_round_step.json":
+            args.out = "BENCH_wire_exchange.json"
+        if jax.device_count() < args.wire_nodes:
+            _reexec_with_devices(args.wire_nodes)
+        args.rounds = max(args.rounds, 10)
+        run_wire(args)
+        return
 
     results = {}
     for n in args.nodes:

@@ -1,5 +1,6 @@
 """Table II reproduction: network bytes sent/received per node (GB) and
-% vs FedAvg, per algorithm.
+% vs FedAvg, per algorithm — logical (accountant) next to physical
+(dry-run HLO) wire bytes per topology.
 
 Byte counts are *analytic serialized payload sizes* (exact), so this
 table does not need long training — one round with the real models gives
@@ -8,6 +9,11 @@ the exact per-round payload; total = payload x rounds x neighbours.
 ``--topology`` accepts any ``core/topology.make_schedule`` spec: the
 numbers come from the schedule-derived vectorized accounting
 (``ScheduleCommAccountant``), byte-identical to the seed per-edge meter.
+
+``--physical`` additionally compiles the mesh gossip round on an
+(N, 1, 1) federation mesh and prints the HLO collective bytes per
+exchange mode next to the accountant's prediction — the gap the packed
+ppermute exchange closes is *measured*, not asserted.
 """
 from __future__ import annotations
 
@@ -51,18 +57,33 @@ def measure(dataset: str, *, nodes: int, rounds: int,
     return rows
 
 
+def physical_wire(dataset: str, nodes: int, topology: str):
+    """Compile the mesh ProFe round per exchange mode on an (N, 1, 1)
+    federation mesh; per-node HLO collective bytes vs the accountant."""
+    from repro.launch.wire import measure_exchange_bytes
+    return measure_exchange_bytes(dataset, nodes, topology, bits=16)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--datasets", nargs="+", default=["mnist-cnn"])
     ap.add_argument("--topology", default="full",
                     help="gossip graph spec (core/topology.make_schedule)")
+    ap.add_argument("--physical", action="store_true",
+                    help="also compile the mesh round and print physical "
+                         "HLO collective bytes per exchange mode")
     ap.add_argument("--out", default="reports/table2_comm.json")
     args = ap.parse_args()
 
+    nodes = 20 if args.full else 4
+    if args.physical:
+        # one host device per federation node, BEFORE first jax use
+        from repro.launch.wire import ensure_host_device_flag
+        ensure_host_device_flag(nodes)
+
     results = {}
     for ds in args.datasets:
-        nodes = 20 if args.full else 4
         rounds = PAPER_ROUNDS.get(ds, 10) if args.full else 2
         print(f"== {ds} ({nodes} nodes, {rounds} rounds, "
               f"topology={args.topology}) ==")
@@ -74,6 +95,21 @@ def main():
         for algo, r in rows.items():
             print(f"  {algo:9s} {r['sent_gb']:10.4f} {r['received_gb']:10.4f} "
                   f"{r['pct_vs_fedavg']:+11.1f}%")
+        if args.physical:
+            wire = physical_wire(ds, nodes, args.topology)
+            rows["wire"] = wire
+            print(f"  profe wire, per round per node "
+                  f"(topology={args.topology}):")
+            print(f"    logical (accountant)  "
+                  f"{wire['logical_bytes_per_node']/1e6:9.3f} MB   "
+                  f"packed codec {wire['packed_pred_bytes_per_node']/1e6:9.3f} MB")
+            for ex, rep in wire["exchanges"].items():
+                if "error" in rep:
+                    print(f"    physical [{ex:8s}]  {rep['error']}")
+                    continue
+                print(f"    physical [{ex:8s}]  "
+                      f"{rep['collective_bytes_per_node']/1e6:9.3f} MB "
+                      f"({', '.join(f'{k}:{int(v)}' for k, v in rep['counts'].items())} launches)")
     os.makedirs(os.path.dirname(args.out), exist_ok=True)
     with open(args.out, "w") as f:
         json.dump(results, f, indent=2)

@@ -1,16 +1,26 @@
 """Topology sweep: how the gossip graph trades communication for
-convergence on CIFAR-style synthetic data.
+convergence on CIFAR-style synthetic data — logical accountant bytes
+printed NEXT TO the physical HLO collective bytes of the mesh exchange.
 
 Runs the same ProFe federation (stacked round engine) over a
 fully-connected graph, a ring, and a time-varying ring/star schedule —
 the ``TopologySchedule`` lowers each to per-round gossip matrices, so
 every variant is the *same* jitted round program fed different traced
 operands.  Comm bytes come from the schedule-derived vectorized
-accounting (Table II math).
+accounting (Table II math); the physical bytes come from compiling the
+mesh gossip round per topology on an (N, 1, 1) federation mesh — on a
+ring the ppermute exchange moves O(degree), not O(N), per node.
 
     PYTHONPATH=src python examples/topology_sweep.py [--rounds 3]
 """
 import argparse
+
+from repro.launch.wire import ensure_host_device_flag
+
+_N_DEFAULT = 4
+# one host device per federation node for the physical-bytes lowering
+# (must precede the first jax use; --nodes above 8 needs a manual flag)
+ensure_host_device_flag(8)
 
 from repro.config import FederationConfig, TrainConfig, get_config
 from repro.core import topology as T
@@ -21,11 +31,13 @@ from repro.data import make_image_dataset, partition, train_test_split
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--rounds", type=int, default=2)
-    ap.add_argument("--nodes", type=int, default=4)
+    ap.add_argument("--nodes", type=int, default=_N_DEFAULT)
     ap.add_argument("--samples", type=int, default=1200)
     ap.add_argument("--topologies", nargs="+",
                     default=["full", "ring", "dynamic:ring,star",
                              "random-k2"])
+    ap.add_argument("--no-physical", action="store_true",
+                    help="skip the per-topology mesh-round compilation")
     args = ap.parse_args()
 
     cfg = get_config("cifar10-resnet18")
@@ -47,8 +59,24 @@ def main():
         res = run_federation(cfg, fed, train, node_data, test_d,
                              verbose=True)
         print(f"[{topo}] final F1 {res.f1_per_round[-1]:.3f} | "
-              f"{res.extras['avg_sent_gb'] * 1e3:.1f} MB sent/node | "
-              f"{res.elapsed_s:.0f}s\n")
+              f"{res.extras['avg_sent_gb'] * 1e3:.1f} MB sent/node "
+              f"(logical) | {res.elapsed_s:.0f}s")
+        if not args.no_physical and sched.num_phases == 1:
+            from repro.launch.wire import measure_exchange_bytes
+            try:
+                wire = measure_exchange_bytes("cifar10-resnet18",
+                                              args.nodes, topo)
+            except RuntimeError as e:
+                print(f"[{topo}] physical bytes skipped: {e}\n")
+                continue
+            print(f"[{topo}] wire per round/node: "
+                  f"logical {wire['logical_bytes_per_node']/1e6:.2f} MB | "
+                  + " | ".join(
+                      f"physical {ex} "
+                      f"{rep['collective_bytes_per_node']/1e6:.2f} MB"
+                      for ex, rep in wire["exchanges"].items()
+                      if "error" not in rep))
+        print()
 
 
 if __name__ == "__main__":

@@ -24,6 +24,39 @@ import numpy as np
 
 from repro.core.quantization import tree_wire_bytes
 
+def packed_copy_bytes(payload_tree, bits: Optional[int] = None) -> int:
+    """Physical bytes of ONE serialized copy under the packed node wire
+    codec: quantized float leaves ride the single 512-lane intN row
+    buffer of ``kernels/quantize/ops.pack_tree_nodes`` (whose layout
+    math this delegates to — one source of truth for lane width and row
+    alignment) with one fp32 scale per leaf; the ``counts`` vector (and
+    any non-float leaf) rides raw fp32/int.
+
+    This is the per-copy number the dry-run's HLO collective-bytes
+    breakdown measures; ``tree_wire_bytes`` is its logical (Table II)
+    counterpart — they differ only by lane/sublane padding.
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels.quantize.ops import packed_wire_bytes_per_node
+
+    packed_leaves = []
+    raw = 0
+    items = payload_tree.items() if isinstance(payload_tree, dict) \
+        else [(None, payload_tree)]
+    for key, sub in items:
+        for leaf in jax.tree_util.tree_leaves(sub):
+            if not hasattr(leaf, "dtype"):
+                continue
+            if key == "counts" or not jnp.issubdtype(leaf.dtype,
+                                                     jnp.floating):
+                raw += int(np.prod(leaf.shape, dtype=np.int64)) * \
+                    np.dtype(leaf.dtype).itemsize
+            else:
+                packed_leaves.append(leaf)
+    return packed_wire_bytes_per_node(packed_leaves, bits,
+                                      node_axis=False) + raw
+
 
 class CommMeter:
     def __init__(self, num_nodes: int):
@@ -94,3 +127,23 @@ class ScheduleCommAccountant(CommMeter):
         self.by_kind[kind] += nbytes * edges
         self.by_round[round_idx] += nbytes * edges
         return nbytes
+
+    def predicted_node_bytes(self, payload_tree, round_idx: int,
+                             bits: Optional[int] = None,
+                             wire: str = "dense") -> np.ndarray:
+        """Per-node bytes *sent* in one round without mutating the
+        counters: ``out_degree x bytes-per-copy``.  ``wire="dense"`` is
+        the logical Table II payload (``tree_wire_bytes``);
+        ``wire="packed"`` is the physical packed-codec payload
+        (:func:`packed_copy_bytes`) — what ``launch/dryrun.py
+        --topology`` asserts the compiled HLO's collective bytes match.
+        """
+        if wire == "packed":
+            nbytes = packed_copy_bytes(payload_tree, bits)
+        elif wire == "dense":
+            nbytes = tree_wire_bytes(payload_tree, bits)
+        else:
+            raise ValueError(f"wire must be 'dense' or 'packed', "
+                             f"got {wire!r}")
+        p = self.schedule.phase_index(round_idx)
+        return self._out[p].astype(np.int64) * nbytes

@@ -324,15 +324,28 @@ def _make_round_fn(step: Callable, proto_cfg: ModelConfig, ncls: int, *,
         # 3) gossip + aggregation (shared round_ops core).  A node's own
         #    model copy never crossed the wire, so it mixes unquantized;
         #    prototypes (own included) mix from the receiver-side view,
-        #    exactly like the reference loop.
+        #    exactly like the reference loop.  The receiver-side view is
+        #    reconstructed through the packed node wire codec — student
+        #    and prototypes ride ONE [N, R, 512] buffer with per-(leaf,
+        #    node) segment scales, exactly what the mesh path's sparse
+        #    exchange physically moves (bit-identical to per-leaf codes).
+        if wire_model is not None and bits and share_protos:
+            recv = R.quantize_dequantize_per_node(
+                {"protos": protos, "student": state.student}, bits)
+            recv_student, protos_rx = recv["student"], recv["protos"]
+        else:
+            recv_student = (R.quantize_dequantize_per_node(state.student,
+                                                           bits)
+                            if (wire_model is not None and bits)
+                            else state.student)
+            protos_rx = (R.dequantize_leaf(
+                *R.quantize_leaf_per_node(protos, bits))
+                if (share_protos and bits) else
+                (protos if share_protos else None))
         if wire_model is not None:
-            recv = R.quantize_dequantize_per_node(state.student, bits) \
-                if bits else state.student
             state = state._replace(student=R.mix_node_trees(
-                w_self, w_neigh, state.student, recv))
+                w_self, w_neigh, state.student, recv_student))
         if share_protos:
-            protos_rx = R.dequantize_leaf(
-                *R.quantize_leaf_per_node(protos, bits)) if bits else protos
             gp, mask = R.neighborhood_prototype_aggregate(include, protos_rx,
                                                           counts)
             state = state._replace(global_protos=gp, proto_mask=mask)
@@ -347,10 +360,30 @@ def _make_round_fn(step: Callable, proto_cfg: ModelConfig, ncls: int, *,
 # driver (stacked engine)
 # ---------------------------------------------------------------------------
 
+def _eval_nodes(eval_cfg, students_of, n_nodes: int, test_data,
+                eval_all_nodes: bool, extras: Dict[str, Any]):
+    """Per-round evaluation.  Default: node 0 (cheap; exact on full
+    graphs where every node ends identical).  ``eval_all_nodes``
+    evaluates every node and returns the mean — the per-node curves and
+    spread land in extras, so sparse-topology divergence is visible
+    (Fig. 2 as mean±spread over nodes)."""
+    if not eval_all_nodes:
+        return _eval_params(eval_cfg, students_of(0), test_data)
+    per_node = [_eval_params(eval_cfg, students_of(i), test_data)
+                for i in range(n_nodes)]
+    f1s = [p[0] for p in per_node]
+    accs = [p[1] for p in per_node]
+    extras.setdefault("f1_per_round_nodes", []).append(f1s)
+    extras.setdefault("acc_per_round_nodes", []).append(accs)
+    extras.setdefault("f1_std_per_round", []).append(float(np.std(f1s)))
+    return float(np.mean(f1s)), float(np.mean(accs))
+
+
 def run_federation(teacher_cfg: ModelConfig, fed: FederationConfig,
                    train: TrainConfig, node_data: List[Dict[str, np.ndarray]],
                    test_data: Dict[str, np.ndarray],
-                   *, verbose: bool = False) -> FederationResult:
+                   *, verbose: bool = False,
+                   eval_all_nodes: bool = False) -> FederationResult:
     """Run one algorithm end-to-end; fed.algorithm selects it.
 
     Uses the vectorized stacked-node-state round engine; falls back to
@@ -383,7 +416,8 @@ def run_federation(teacher_cfg: ModelConfig, fed: FederationConfig,
         [fed.seed + 0 * 997 + i for i in range(n_nodes)], fed.local_epochs)
     if probe is None:
         return run_federation_loop(teacher_cfg, fed, train, node_data,
-                                   test_data, verbose=verbose)
+                                   test_data, verbose=verbose,
+                                   eval_all_nodes=eval_all_nodes)
 
     meter = ScheduleCommAccountant(sched)
     stacked = _stack_states(
@@ -402,6 +436,13 @@ def run_federation(teacher_cfg: ModelConfig, fed: FederationConfig,
                                 proto_cfg.proto_dim)
 
     result = FederationResult(comm=meter, algorithm=algo)
+    # one consistent wire number: the logical (Table II) bytes per copy
+    # next to the physical packed-codec bytes the mesh exchange moves
+    from repro.core.comm import packed_copy_bytes
+    from repro.core.quantization import tree_wire_bytes
+    result.extras["wire_bytes_per_copy"] = tree_wire_bytes(payload, bits)
+    result.extras["wire_bytes_packed_per_copy"] = \
+        packed_copy_bytes(payload, bits)
     round_times: List[float] = []
     result.extras["round_times_s"] = round_times
     t0 = time.time()
@@ -432,8 +473,10 @@ def run_federation(teacher_cfg: ModelConfig, fed: FederationConfig,
         # byte-identical to the reference loop's per-edge meter
         meter.record_round(payload, kind=algo, round_idx=rnd, bits=bits)
 
-        f1, acc = _eval_params(eval_cfg, _node_slice(stacked.student, 0),
-                               test_data)
+        f1, acc = _eval_nodes(eval_cfg,
+                              lambda i: _node_slice(stacked.student, i),
+                              n_nodes, test_data, eval_all_nodes,
+                              result.extras)
         result.f1_per_round.append(f1)
         result.acc_per_round.append(acc)
         round_times.append(time.time() - t_r)
@@ -456,7 +499,8 @@ def run_federation_loop(teacher_cfg: ModelConfig, fed: FederationConfig,
                         train: TrainConfig,
                         node_data: List[Dict[str, np.ndarray]],
                         test_data: Dict[str, np.ndarray],
-                        *, verbose: bool = False) -> FederationResult:
+                        *, verbose: bool = False,
+                        eval_all_nodes: bool = False) -> FederationResult:
     """Per-node Python-loop round engine (the seed implementation).
 
     Kept as the executable definition of round semantics: the stacked
@@ -565,9 +609,11 @@ def run_federation_loop(teacher_cfg: ModelConfig, fed: FederationConfig,
             for i in range(n_nodes):
                 states[i] = states[i]._replace(student=new_models[i])
 
-        # 5) evaluation (average node F1 == all nodes share the model on a
-        #    full topology; evaluate node 0's and the mean of a sample)
-        f1, acc = _eval_params(eval_cfg, states[0].student, test_data)
+        # 5) evaluation (node 0 by default — exact on full topologies
+        #    where all nodes share the model; eval_all_nodes for spread)
+        f1, acc = _eval_nodes(eval_cfg, lambda i: states[i].student,
+                              n_nodes, test_data, eval_all_nodes,
+                              result.extras)
         result.f1_per_round.append(f1)
         result.acc_per_round.append(acc)
         round_times.append(time.time() - t_r)

@@ -1,4 +1,4 @@
-"""ProFe federation round on the production mesh.
+"""ProFe federation round on the production mesh — physically sparse.
 
 Mapping (DESIGN.md §2): each **pod is a federation node**.  All federation
 state is stacked along a leading node dimension sharded over the ``pod``
@@ -7,53 +7,70 @@ crosses pods* (the train step is vmapped over the node dim — XLA
 partitions it over ``pod`` with zero cross-pod collectives).
 
 The per-node quantize / de-quantize / weighted-mean / Eq. 4 math is the
-shared stacked-node-state core in :mod:`repro.core.round_ops` — the CPU
-simulator (``core/federation.py``) runs the exact same functions over
-its jitted round; this module only adds the mesh resharding that turns
-the exchange into collectives.
+shared stacked-node-state core in :mod:`repro.core.round_ops`; the wire
+codec is the packed node format of :mod:`repro.kernels.quantize.ops`.
 
-The gossip round is where inter-pod traffic happens, and the HLO shows
-exactly ProFe's wire content:
+**Wire content.**  The whole quantized payload of one node — student
+leaves *and* prototypes — is ONE contiguous ``[N, R, 512]`` int16 buffer
+plus per-(leaf, node) segment scales ``[N, T]`` (``pack_tree_nodes`` /
+``quantize_packed_buffer``).  The exchange therefore costs one
+collective launch per round, not one per leaf, and the receiver applies
+``w_self`` / ``w_neigh`` *directly on packed codes* (fused
+dequant-and-accumulate, ``mix_packed`` — a single Pallas launch on TPU).
 
-1. per-node 16-bit quantization of the student + prototypes
-   (int16 codes + one fp32 scale per tensor),
-2. exchange == resharding the stacked int16 codes from P("pod", ...) to
-   replicated — an **all-gather over the pod axis of int16 payloads**
-   (half the bytes of FedAvg's fp32 model exchange, on a model
-   |student| ≪ |teacher|),
-3. local de-quantization + dataset-size-weighted averaging (student) and
-   Eq. 4 instance-count-weighted prototype aggregation.
+**Exchange modes** (``exchange=`` kwarg, both round factories):
+
+* ``"ppermute"`` — physical sparse gossip: the adjacency is lowered by
+  :func:`repro.core.topology.permutation_rounds` to per-round
+  ``jax.lax.ppermute`` permutation lists, run under ``shard_map`` on the
+  pod axis.  A ring round moves **O(degree)** bytes per node — degree
+  collective-permutes of the packed buffer — so the physical wire bytes
+  finally match the logical topology that
+  ``comm.ScheduleCommAccountant`` charges (asserted by
+  ``launch/dryrun.py --topology``).  Requires one device per node on the
+  pod axis (federation meshes; multi-axis pods keep the gather exchange).
+* ``"packed"`` — one all-gather of the single int16 buffer over the pod
+  axis, then the masked weighted mix on the gathered codes.  The
+  gather-subset fallback for irregular graphs and the full-graph / legacy
+  protocol path (where O(N) physical bytes *are* the logical cost).
+* ``"gather"`` — the PR-2 reference: per-leaf all-gather of shape-
+  preserving int16 codes + masked ``mix_node_trees``.  Kept as the
+  semantics oracle the packed paths are asserted equivalent to.
+* ``"auto"`` (default) — ``ppermute`` when the graph is regular and the
+  pod axis has one device per node, else ``packed``.
 
 **Topologies.**  Pass ``adjacency`` (a 0/1 ``[N, N]`` phase of a
-:class:`repro.core.topology.TopologySchedule`) to run ring/star/random-k
-ProFe or FedAvg rounds on the mesh: the mix becomes a
-**neighborhood-masked weighted einsum** over the gathered codes —
-``gossip_matrix_dyn`` zeroes non-neighbor columns, every node keeps its
-own unquantized copy (the CPU simulator convention), and Eq. 4 runs per
-neighborhood via ``neighborhood_prototype_aggregate``.  Outputs stay
-node-distinct and sharded back to P("pod", ...), so node divergence
-under sparse gossip is explicit on the mesh for the first time.  With
-``adjacency=None`` (default) the legacy full/fedavg behavior is
-unchanged: a bare size-weighted mean where every node ends identical.
+:class:`repro.core.topology.TopologySchedule`) for ring/star/random-k
+rounds: students mix per node over ``{i} ∪ neigh(i)`` (own copy
+unquantized, the CPU-simulator convention), prototypes aggregate per
+neighborhood (Eq. 4).  Outputs stay node-distinct and sharded back to
+``P("pod", ...)``.  With ``adjacency=None`` the paper's fully-connected
+protocol runs: a size-weighted mean where every node ends identical.
 
-``make_fedavg_round`` is the baseline: same exchange of the *full-size*
-model at fp32 — the dry-run diff of collective bytes between the two
-programs reproduces Table II on the mesh.
+``make_fedavg_round`` is the baseline: the same exchange machinery on
+the *full-size* model at fp32 — the dry-run diff of collective bytes
+between the two programs reproduces Table II on the mesh.
 """
 from __future__ import annotations
 
+from functools import partial
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.core import topology as T
 from repro.core.prototypes import aggregate_prototypes
 from repro.core.round_ops import (dequantize_leaf, gossip_matrix_dyn,
                                   include_matrix, mix_node_trees,
                                   neighborhood_prototype_aggregate,
                                   quantize_leaf_per_node, weighted_node_mean)
+from repro.kernels.quantize import ops as Q
+
+EXCHANGES = ("auto", "gather", "packed", "ppermute")
 
 
 def _constrain_over_pod(mesh, tree, specs_no_pod, axis):
@@ -72,8 +89,109 @@ def _replicate_over_pod(mesh, tree, specs_no_pod):
     return _constrain_over_pod(mesh, tree, specs_no_pod, None)
 
 
+def _pod_size(mesh) -> int:
+    return int(dict(mesh.shape).get("pod", 1))
+
+
+def _inner_axes(mesh):
+    """Non-pod mesh axes — the packed buffer's row dim shards over them
+    so per-device wire bytes stay shard-sized on multi-axis pods."""
+    inner = tuple(a for a in mesh.axis_names if a != "pod")
+    return inner if inner else None
+
+
+def _inner_size(mesh) -> int:
+    n = 1
+    for a in mesh.axis_names:
+        if a != "pod":
+            n *= int(dict(mesh.shape)[a])
+    return n
+
+
+def _resolve_exchange(exchange: str, adj, mesh) -> str:
+    if exchange not in EXCHANGES:
+        raise ValueError(f"exchange must be one of {EXCHANGES}, "
+                         f"got {exchange!r}")
+    if exchange == "ppermute":
+        if adj is None:
+            raise ValueError("exchange='ppermute' needs an adjacency")
+        if _pod_size(mesh) != adj.shape[0]:
+            raise ValueError(
+                f"exchange='ppermute' needs one pod-axis device per node "
+                f"(pod={_pod_size(mesh)}, N={adj.shape[0]})")
+        if _inner_size(mesh) != 1:
+            raise ValueError("exchange='ppermute' runs on federation "
+                             "meshes (inner axes of size 1); multi-axis "
+                             "pods use the packed gather exchange")
+        return exchange
+    if exchange != "auto":
+        return exchange
+    if (adj is not None and _pod_size(mesh) == adj.shape[0]
+            and _inner_size(mesh) == 1 and T.is_regular(adj)):
+        return "ppermute"
+    return "packed"
+
+
+def _constrain_buf(mesh, buf, pod_axis):
+    inner = _inner_axes(mesh)
+    spec = P(pod_axis, inner, None) if buf.ndim == 3 else P(pod_axis, None)
+    return jax.lax.with_sharding_constraint(buf, NamedSharding(mesh, spec))
+
+
+def _proto_recipe(payload, meta, key: str = "protos"):
+    """Row span of the prototype leaf inside the packed buffer, located
+    by its key path in the payload tree (recipe order == float-leaf
+    flatten order, so sort-order assumptions never slice student rows
+    as prototypes)."""
+    _treedef, recipe, _seg, _n = meta
+    target = None
+    idx = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(payload)[0]:
+        if not (hasattr(leaf, "dtype")
+                and jnp.issubdtype(leaf.dtype, jnp.floating)):
+            continue
+        if getattr(path[0], "key", None) == key:
+            target = idx
+        idx += 1
+    if target is None:
+        raise ValueError(f"no float leaf under {key!r} in the payload")
+    packed = [it for it in recipe if it[0] == "packed"]
+    _, shape, _dtype, row, nrows, _s = packed[target]
+    return row, nrows, shape
+
+
+def _perm_lowering(adj: np.ndarray):
+    """Lower an adjacency to its ppermute schedule: ``(perms, srcs)`` —
+    the permutation step lists and, per step, the receiver -> sender map
+    (``-1`` = no sender reaches this node that step).  The single
+    source of the valid/weight conventions both round factories share."""
+    n = adj.shape[0]
+    perms = T.permutation_rounds(adj)
+    srcs = []
+    for step in perms:
+        src = np.full((n,), -1, np.int64)
+        for s, d in step:
+            src[d] = s
+        srcs.append(src)
+    return perms, srcs
+
+
+def _step_weight(src, me, w_row):
+    """This device's (valid, mix-weight) for one permutation step:
+    zero when nobody sends to it, else its ``w_neigh`` entry for the
+    sender."""
+    src_me = jnp.asarray(src)[me]
+    valid = (src_me >= 0).astype(jnp.float32)
+    return valid, valid * w_row[0, jnp.maximum(src_me, 0)]
+
+
+# ---------------------------------------------------------------------------
+# ProFe round
+# ---------------------------------------------------------------------------
+
 def make_profe_round(mesh, student_specs, bits: int = 16,
-                     adjacency: Optional[np.ndarray] = None):
+                     adjacency: Optional[np.ndarray] = None,
+                     exchange: str = "auto"):
     """Returns round_fn(students, protos, counts, sizes) for stacked
     node state; students leaves [N, ...] sharded P("pod", *student_spec).
 
@@ -82,13 +200,165 @@ def make_profe_round(mesh, student_specs, bits: int = 16,
     [C, P] + mask [C] (Eq. 4), replicated.
 
     With a 0/1 ``[N, N]`` ``adjacency`` (one phase of a
-    ``TopologySchedule``): neighborhood-masked gossip — students mix per
-    node over ``{i} ∪ neigh(i)`` (own copy unquantized, weighted einsum
-    over the gathered int16 codes), prototypes aggregate per
-    neighborhood.  Output: node-distinct students sharded P("pod", ...),
-    prototypes [N, C, P] + mask [N, C] sharded P("pod", ...).
+    ``TopologySchedule``): neighborhood gossip — students mix per node
+    over ``{i} ∪ neigh(i)`` (own copy unquantized), prototypes aggregate
+    per neighborhood.  Output: node-distinct students sharded
+    P("pod", ...), prototypes [N, C, P] + mask [N, C] sharded
+    P("pod", ...).
+
+    ``exchange`` picks the wire mechanism (see module docstring); all
+    modes are numerically equivalent — only the physical bytes differ.
     """
     adj = None if adjacency is None else np.asarray(adjacency)
+    mode = _resolve_exchange(exchange, adj, mesh)
+    if mode == "gather":
+        return _make_profe_round_gather(mesh, student_specs, bits, adj)
+    if mode == "ppermute":
+        return _make_profe_round_ppermute(mesh, student_specs, bits, adj)
+    return _make_profe_round_packed(mesh, student_specs, bits, adj)
+
+
+def _make_profe_round_packed(mesh, student_specs, bits: int, adj):
+    """Packed single-buffer exchange: quantize+pack -> ONE all-gather of
+    the [N, R, 512] int16 buffer over the pod axis -> fused weighted mix
+    on the gathered codes -> unpack."""
+    include = None if adj is None else include_matrix(adj)
+
+    def round_fn(students, protos, counts, sizes):
+        n = counts.shape[0]
+        payload = {"protos": protos, "student": students}
+        buf, seg_ids, meta = Q.pack_tree_nodes(payload)
+        buf = _constrain_buf(mesh, buf, "pod")
+        # jnp codec flavor: GSPMD partitions it over the mesh (the
+        # Pallas kernels run per-device under shard_map, see ppermute)
+        codes, scales = Q.quantize_packed_buffer(buf, seg_ids, meta[2],
+                                                 bits, use_kernels=False)
+
+        # the exchange: ONE all-gather of int16 codes over the pod axis
+        codes = _constrain_buf(mesh, codes, None)
+        scales = _constrain_buf(mesh, scales, None)
+        counts_r = jax.lax.with_sharding_constraint(
+            counts, NamedSharding(mesh, P(None, None)))
+
+        # receiver side: mixing weights applied directly on packed codes
+        row_delta = scales[:, seg_ids]                         # [N, R]
+        if adj is None:
+            w = sizes / jnp.sum(sizes)                         # [N]
+            w_self_v = jnp.zeros((n,), jnp.float32)
+            w_rows = jnp.broadcast_to(w[None, :], (n, n))
+        else:
+            w_self_v, w_rows = gossip_matrix_dyn(adj, sizes)
+        mixed = Q.mix_packed(buf, codes, row_delta, w_self_v, w_rows,
+                             use_kernels=False)
+        mixed = _constrain_buf(mesh, mixed, "pod")
+        new_students = jax.tree_util.tree_map(
+            lambda new, old: new.astype(old.dtype),
+            Q.unpack_tree_nodes(mixed, meta)["student"], students)
+        new_students = _constrain_over_pod(mesh, new_students,
+                                           student_specs, "pod")
+
+        # prototypes: receiver-side view straight from the packed codes
+        prow, pnrows, pshape = _proto_recipe(payload, meta)
+        pdeq = codes[:, prow:prow + pnrows].astype(jnp.float32) * \
+            row_delta[:, prow:prow + pnrows, None]
+        cdim = pshape[1] * pshape[2]
+        protos_rx = pdeq.reshape(n, -1)[:, :cdim].reshape(pshape)
+        if adj is None:
+            global_protos, proto_mask = aggregate_prototypes(protos_rx,
+                                                             counts_r)
+            return new_students, global_protos, proto_mask
+        global_protos, proto_mask = neighborhood_prototype_aggregate(
+            include, protos_rx, counts_r)
+        global_protos = jax.lax.with_sharding_constraint(
+            global_protos, NamedSharding(mesh, P("pod", None, None)))
+        proto_mask = jax.lax.with_sharding_constraint(
+            proto_mask, NamedSharding(mesh, P("pod", None)))
+        return new_students, global_protos, proto_mask
+
+    return round_fn
+
+
+def _make_profe_round_ppermute(mesh, student_specs, bits: int,
+                               adj: np.ndarray):
+    """Physical sparse gossip: degree-many ``jax.lax.ppermute`` steps of
+    the packed int16 buffer on the pod axis (one device per node), fused
+    dequant-and-accumulate receiver side.  Wire bytes per node per round
+    = steps x |packed payload| = exactly what the accountant charges."""
+    perms, srcs = _perm_lowering(adj)
+
+    def round_fn(students, protos, counts, sizes):
+        payload = {"protos": protos, "student": students}
+        buf, seg_ids, meta = Q.pack_tree_nodes(payload)
+        buf = _constrain_buf(mesh, buf, "pod")
+        codes, scales = Q.quantize_packed_buffer(buf, seg_ids, meta[2],
+                                                 bits, use_kernels=False)
+        w_self_v, w_neigh = gossip_matrix_dyn(adj, sizes)
+        prow, pnrows, pshape = _proto_recipe(payload, meta)
+        ccls, pdim = pshape[1], pshape[2]
+        ids = jnp.asarray(seg_ids)
+
+        @partial(shard_map, mesh=mesh,
+                 in_specs=(P("pod", None, None), P("pod", None, None),
+                           P("pod", None), P("pod", None),
+                           P("pod"), P("pod", None)),
+                 out_specs=(P("pod", None, None), P("pod", None, None),
+                            P("pod", None)),
+                 check_rep=False)
+        def exchange(own_buf, codes, scales, counts, w_self, w_row):
+            me = jax.lax.axis_index("pod")
+            # neighbor collectives: one ppermute of the packed int16
+            # buffer (+ its scales and counts) per permutation step
+            recv = []
+            for step, src in zip(perms, srcs):
+                rc = jax.lax.ppermute(codes, "pod", step)
+                rs = jax.lax.ppermute(scales, "pod", step)
+                rcnt = jax.lax.ppermute(counts, "pod", step)
+                valid, w_p = _step_weight(src, me, w_row)
+                recv.append((rc, rs, rcnt, valid, w_p))
+
+            # fused dequant-and-accumulate on the packed codes: the
+            # neighbors' int16 buffers fold straight into the mix
+            codes_stack = jnp.concatenate([r[0] for r in recv], axis=0)
+            delta_stack = jnp.stack([r[1][0, ids] for r in recv])
+            w_stack = jnp.stack([r[4] for r in recv])          # [S]
+            mixed = Q.mix_packed(own_buf, codes_stack, delta_stack,
+                                 w_self, w_stack[None, :])
+
+            # Eq. 4 per neighborhood, accumulated across steps (own
+            # prototypes enter quantized, like every receiver's view)
+            own_delta = scales[0, ids]
+            own_pdeq = (codes[0, prow:prow + pnrows].astype(jnp.float32)
+                        * own_delta[prow:prow + pnrows, None])
+            own_pdeq = own_pdeq.reshape(-1)[:ccls * pdim].reshape(ccls,
+                                                                  pdim)
+            num = counts[0][:, None] * own_pdeq
+            den = counts[0]
+            for s, (rc, _rs, rcnt, valid, _w) in enumerate(recv):
+                pr = (rc[0, prow:prow + pnrows].astype(jnp.float32)
+                      * delta_stack[s, prow:prow + pnrows, None])
+                pr = pr.reshape(-1)[:ccls * pdim].reshape(ccls, pdim)
+                num = num + valid * rcnt[0][:, None] * pr
+                den = den + valid * rcnt[0]
+            glob = num / jnp.maximum(den, 1.0)[:, None]
+            mask = (den > 0).astype(jnp.float32)
+            return mixed, glob[None], mask[None]
+
+        mixed, global_protos, proto_mask = exchange(
+            buf, codes, scales, counts, w_self_v, w_neigh)
+        new_students = jax.tree_util.tree_map(
+            lambda new, old: new.astype(old.dtype),
+            Q.unpack_tree_nodes(mixed, meta)["student"], students)
+        new_students = _constrain_over_pod(mesh, new_students,
+                                           student_specs, "pod")
+        return new_students, global_protos, proto_mask
+
+    return round_fn
+
+
+def _make_profe_round_gather(mesh, student_specs, bits: int, adj):
+    """PR-2 reference exchange: per-leaf all-gather of shape-preserving
+    int16 codes over the pod axis + masked ``mix_node_trees``.  The
+    semantics oracle the packed/ppermute paths are asserted against."""
     include = None if adj is None else include_matrix(adj)
 
     def round_fn(students, protos, counts, sizes):
@@ -143,27 +413,89 @@ def make_profe_round(mesh, student_specs, bits: int = 16,
     return round_fn
 
 
+# ---------------------------------------------------------------------------
+# FedAvg baseline
+# ---------------------------------------------------------------------------
+
 def make_fedavg_round(mesh, model_specs,
-                      adjacency: Optional[np.ndarray] = None):
-    """Baseline exchange: full model, fp32, no quantization.
+                      adjacency: Optional[np.ndarray] = None,
+                      exchange: str = "auto"):
+    """Baseline exchange: full model, fp32, no quantization — the same
+    packed-buffer / ppermute / gather machinery as ProFe so the dry-run
+    byte diff between the two programs is apples-to-apples.
 
     ``adjacency=None``: global size-weighted mean, every node identical.
-    With a 0/1 ``[N, N]`` adjacency: the same neighborhood-masked
-    weighted-einsum mix as ProFe (sans quantization), node-distinct
-    output sharded P("pod", ...).
+    With a 0/1 ``[N, N]`` adjacency: the neighborhood-weighted mix,
+    node-distinct output sharded P("pod", ...).
     """
     adj = None if adjacency is None else np.asarray(adjacency)
+    mode = _resolve_exchange(exchange, adj, mesh)
 
-    def round_fn(models, sizes):
-        gathered = _replicate_over_pod(mesh, models, model_specs)
+    if mode == "gather":
+        def round_fn(models, sizes):
+            gathered = _replicate_over_pod(mesh, models, model_specs)
+            if adj is None:
+                w = sizes / jnp.sum(sizes)
+                means = weighted_node_mean(w, gathered)
+                return jax.tree_util.tree_map(
+                    lambda m, x: jnp.stack([m] * x.shape[0]).astype(x.dtype),
+                    means, gathered)
+            w_self, w_neigh = gossip_matrix_dyn(adj, sizes)
+            mixed = mix_node_trees(w_self, w_neigh, models, gathered)
+            return _constrain_over_pod(mesh, mixed, model_specs, "pod")
+        return round_fn
+
+    if mode == "ppermute":
+        perms, srcs = _perm_lowering(adj)
+
+        def round_fn(models, sizes):
+            buf, seg_ids, meta = Q.pack_tree_nodes(models)
+            buf = _constrain_buf(mesh, buf, "pod")
+            w_self_v, w_neigh = gossip_matrix_dyn(adj, sizes)
+
+            @partial(shard_map, mesh=mesh,
+                     in_specs=(P("pod", None, None), P("pod"),
+                               P("pod", None)),
+                     out_specs=P("pod", None, None), check_rep=False)
+            def exchange_fp32(own_buf, w_self, w_row):
+                me = jax.lax.axis_index("pod")
+                recv, ws = [], []
+                for step, src in zip(perms, srcs):
+                    recv.append(jax.lax.ppermute(own_buf, "pod", step))
+                    _valid, w_p = _step_weight(src, me, w_row)
+                    ws.append(w_p)
+                stack = jnp.concatenate(recv, axis=0)          # [S, R, C]
+                deltas = jnp.ones(stack.shape[:2], jnp.float32)
+                return Q.mix_packed(own_buf, stack, deltas, w_self,
+                                    jnp.stack(ws)[None, :])
+
+            mixed = exchange_fp32(buf, w_self_v, w_neigh)
+            out = jax.tree_util.tree_map(
+                lambda new, old: new.astype(old.dtype),
+                Q.unpack_tree_nodes(mixed, meta), models)
+            return _constrain_over_pod(mesh, out, model_specs, "pod")
+        return round_fn
+
+    def round_fn(models, sizes):                               # packed
+        n_nodes = None
+        for leaf in jax.tree_util.tree_leaves(models):
+            n_nodes = leaf.shape[0]
+            break
+        buf, seg_ids, meta = Q.pack_tree_nodes(models)
+        buf = _constrain_buf(mesh, buf, "pod")
+        gathered = _constrain_buf(mesh, buf, None)   # ONE fp32 all-gather
+        deltas = jnp.ones(gathered.shape[:2], jnp.float32)
         if adj is None:
             w = sizes / jnp.sum(sizes)
-            means = weighted_node_mean(w, gathered)
-            return jax.tree_util.tree_map(
-                lambda m, x: jnp.stack([m] * x.shape[0]).astype(x.dtype),
-                means, gathered)
-        w_self, w_neigh = gossip_matrix_dyn(adj, sizes)
-        mixed = mix_node_trees(w_self, w_neigh, models, gathered)
-        return _constrain_over_pod(mesh, mixed, model_specs, "pod")
-
+            w_self_v = jnp.zeros((n_nodes,), jnp.float32)
+            w_rows = jnp.broadcast_to(w[None, :], (n_nodes, n_nodes))
+        else:
+            w_self_v, w_rows = gossip_matrix_dyn(adj, sizes)
+        mixed = Q.mix_packed(buf, gathered, deltas, w_self_v, w_rows,
+                             use_kernels=False)
+        mixed = _constrain_buf(mesh, mixed, "pod")
+        out = jax.tree_util.tree_map(
+            lambda new, old: new.astype(old.dtype),
+            Q.unpack_tree_nodes(mixed, meta), models)
+        return _constrain_over_pod(mesh, out, model_specs, "pod")
     return round_fn

@@ -73,18 +73,28 @@ def dequantize_leaf(codes, delta):
 
 
 def quantize_dequantize_per_node(tree, bits: int, *,
-                                 use_kernels: Optional[bool] = None):
+                                 use_kernels: Optional[bool] = None,
+                                 packed: bool = True):
     """Receiver-side reconstruction of a stacked pytree: every float
     leaf [N, ...] goes through per-node codes and back to fp32.
     Non-float leaves pass through untouched.
 
-    On TPU (``use_kernels`` defaults to the backend check) this routes
-    through the packed-tree Pallas path — all leaves flattened into one
-    buffer with per-(leaf, node) segment scales, a handful of kernel
-    launches total and bit-identical to the jnp math below.
+    By default this consumes the *packed node wire codec*
+    (``kernels/quantize/ops.pack_tree_nodes``): the same single
+    ``[N, R, 512]`` buffer + per-(leaf, node) segment scales the mesh
+    path physically exchanges, so the simulator, the dry-run, and the
+    byte accounting all describe one wire format.  Pallas kernels on TPU
+    (``use_kernels`` defaults to the backend check), jnp elsewhere —
+    bit-identical to the per-leaf math (``packed=False``), asserted in
+    tests.
     """
     if use_kernels is None:
         use_kernels = jax.default_backend() == "tpu"
+    if packed and any(_is_float(x) for x in jax.tree_util.tree_leaves(tree)):
+        from repro.kernels.quantize.ops import (
+            quantize_dequantize_tree_packed_nodes)
+        return quantize_dequantize_tree_packed_nodes(
+            tree, bits, use_kernels=use_kernels)
     if use_kernels:
         from repro.kernels.quantize.ops import quantize_dequantize_tree_packed
         return quantize_dequantize_tree_packed(tree, bits, node_axis=True)

@@ -144,6 +144,61 @@ def erdos_renyi(num_nodes: int, p: float, seed: int = 0) -> np.ndarray:
     return a
 
 
+def is_regular(adj: np.ndarray) -> bool:
+    """Every node has the same degree (ring, full, random-k, ...)."""
+    deg = np.asarray(adj, bool).sum(axis=1)
+    return bool(deg.size == 0 or (deg == deg[0]).all())
+
+
+def _max_bipartite_matching(edges: np.ndarray, n: int) -> List[Tuple[int, int]]:
+    """Maximum matching of the directed edge set ``{(i, j): edges[i, j]}``
+    viewed as a bipartite graph senders -> receivers (simple augmenting
+    paths — N is the federation size, tens to a few hundred)."""
+    match_of_dst = [-1] * n            # receiver -> sender
+
+    def augment(u: int, seen: List[bool]) -> bool:
+        for v in np.nonzero(edges[u])[0]:
+            v = int(v)
+            if seen[v]:
+                continue
+            seen[v] = True
+            if match_of_dst[v] < 0 or augment(match_of_dst[v], seen):
+                match_of_dst[v] = u
+                return True
+        return False
+
+    for u in range(n):
+        augment(u, [False] * n)
+    return [(s, d) for d, s in enumerate(match_of_dst) if s >= 0]
+
+
+def permutation_rounds(adj: np.ndarray) -> List[List[Tuple[int, int]]]:
+    """Decompose a 0/1 adjacency's *directed* edge set into a sequence of
+    (partial) permutations — the ``jax.lax.ppermute`` lowering of one
+    gossip round.
+
+    Each step is a list of ``(src, dst)`` pairs with distinct sources and
+    distinct destinations; the union over steps is exactly the directed
+    edge set (every undirected edge contributes both directions).  For a
+    k-regular graph every step is a *full* permutation and there are
+    exactly k steps (a k-regular bipartite graph decomposes into k
+    perfect matchings), so a ring lowers to its two shifts; irregular
+    graphs yield partial steps (>= max-degree of them).
+    """
+    edges = np.asarray(adj, bool).copy()
+    np.fill_diagonal(edges, False)
+    n = edges.shape[0]
+    steps: List[List[Tuple[int, int]]] = []
+    while edges.any():
+        matching = _max_bipartite_matching(edges, n)
+        if not matching:            # cannot happen for a nonempty edge set
+            raise RuntimeError("empty matching on nonempty edge set")
+        steps.append(matching)
+        for s, d in matching:
+            edges[s, d] = False
+    return steps
+
+
 def _static_adjacency(num_nodes: int, spec: str, seed: int) -> np.ndarray:
     if spec in STATIC_TOPOLOGIES:
         return adjacency(num_nodes, spec)
@@ -212,6 +267,16 @@ class TopologySchedule:
         """[R] int64: directed edges (== payload copies on the wire)
         per round of each phase."""
         return self.stack.sum(axis=(1, 2)).astype(np.int64)
+
+    def is_regular_at(self, round_idx: int) -> bool:
+        return is_regular(self.adjacency_at(round_idx))
+
+    def permutation_rounds_at(self, round_idx: int
+                              ) -> List[List[Tuple[int, int]]]:
+        """The round's adjacency lowered to ``jax.lax.ppermute`` steps
+        (see :func:`permutation_rounds`) — what the mesh path's physical
+        sparse exchange executes on the pod axis."""
+        return permutation_rounds(self.adjacency_at(round_idx))
 
     # -- lowering to the round program's traced operands -------------------
     def lower(self, sizes) -> Tuple["jnp.ndarray", "jnp.ndarray",

@@ -28,6 +28,7 @@ from repro.kernels.quantize.quantize import (dequantize_pallas,
                                              dequantize_rows_pallas,
                                              fused_quantize_dequantize_pallas,
                                              fused_quantize_pallas,
+                                             mix_packed_pallas,
                                              quantize_dequantize_rows_pallas,
                                              quantize_rows_pallas,
                                              rowabs_pallas)
@@ -241,3 +242,214 @@ def quantize_dequantize_tree_packed(tree, bits: int = 16, *,
     out = quantize_dequantize_rows_pallas(buf, row_delta, bits=bits,
                                           interpret=_interpret())
     return unpack_tree(out, meta)
+
+
+# ---------------------------------------------------------------------------
+# packed NODE wire format: one [N, R, _COLS] buffer per federation round
+# ---------------------------------------------------------------------------
+# The physical wire payload of the sparse-gossip exchange: every float
+# leaf of a stacked [N, ...] pytree is flattened into node-major rows so
+# slice [i] is node i's whole serialized payload — ONE contiguous int16
+# buffer travels per round (one collective launch) instead of one tensor
+# per leaf, with per-(leaf, node) segment scales [N, T] riding alongside.
+# Bit-identical to quantizing each leaf's node slice alone
+# (``round_ops.quantize_leaf_per_node``), asserted in tests.
+
+def _wire_int_dtype(bits: int):
+    return {8: jnp.int8, 16: jnp.int16, 32: jnp.int32}[bits]
+
+
+def pack_tree_nodes(tree):
+    """Flatten every float leaf ``[N, ...]`` into one ``[N, R, _COLS]``
+    fp32 buffer (node axis leading, so it shards/permutes over the pod
+    axis untouched).
+
+    Returns ``(buf, seg_ids [R] int32, meta)``; rows of one leaf never
+    mix with another's, ``seg_ids[r]`` is the leaf segment of row ``r``
+    (identical for every node — the layout is node-uniform).  Alignment
+    rows pad R to a multiple of 8 and are tagged with the last segment
+    (zeros cannot raise its absmax; their codes are discarded at unpack).
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    n_nodes = None
+    parts: List[jnp.ndarray] = []
+    seg_parts: List[np.ndarray] = []
+    recipe = []
+    seg = 0
+    row = 0
+    for leaf in leaves:
+        is_float = hasattr(leaf, "dtype") and \
+            jnp.issubdtype(leaf.dtype, jnp.floating)
+        if not is_float:
+            recipe.append(("raw", leaf))
+            continue
+        if leaf.ndim < 1:
+            raise ValueError("packed node format needs [N, ...] leaves")
+        n = leaf.shape[0]
+        if n_nodes is None:
+            n_nodes = n
+        elif n != n_nodes:
+            raise ValueError(f"inconsistent node axis: {n} vs {n_nodes}")
+        per = 1
+        for s in leaf.shape[1:]:
+            per *= s
+        flat = leaf.reshape(n, per).astype(jnp.float32)
+        pad = (-per) % _COLS
+        if pad:
+            flat = jnp.pad(flat, ((0, 0), (0, pad)))
+        rows = flat.reshape(n, -1, _COLS)                 # [N, r_leaf, C]
+        r_leaf = rows.shape[1]
+        seg_parts.append(np.full((r_leaf,), seg, np.int32))
+        recipe.append(("packed", leaf.shape, leaf.dtype, row, r_leaf, seg))
+        parts.append(rows)
+        seg += 1
+        row += r_leaf
+    if not parts:
+        raise ValueError("packed node format needs at least one float leaf")
+    buf = jnp.concatenate(parts, axis=1)                  # [N, R, C]
+    seg_ids = np.concatenate(seg_parts)
+    rpad = (-buf.shape[1]) % 8
+    if rpad:
+        buf = jnp.pad(buf, ((0, 0), (0, rpad), (0, 0)))
+        seg_ids = np.concatenate([seg_ids,
+                                  np.full((rpad,), seg - 1, np.int32)])
+    return buf, seg_ids, (treedef, tuple(recipe), seg, n_nodes)
+
+
+def unpack_tree_nodes(buf, meta):
+    """Inverse of :func:`pack_tree_nodes` (float leaves come back fp32)."""
+    treedef, recipe, _seg, _n = meta
+    leaves = []
+    for item in recipe:
+        if item[0] == "raw":
+            leaves.append(item[1])
+            continue
+        _, shape, _dtype, row, nrows, _s = item
+        n = shape[0]
+        per = 1
+        for s in shape[1:]:
+            per *= s
+        rows = buf[:, row:row + nrows, :]
+        leaves.append(rows.reshape(n, -1)[:, :per].reshape(shape))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def _node_row_deltas(buf, seg_ids, n_seg: int, bits: int,
+                     use_kernels: bool):
+    """Per-(node, leaf) Δ: one row-absmax sweep + a tiny per-node
+    segment-max.  Returns (scales [N, T] fp32, row_delta [N, R] fp32)."""
+    qmax = (1 << (bits - 1)) - 1
+    n, r, _c = buf.shape
+    if use_kernels:
+        row_amax = rowabs_pallas(buf.reshape(n * r, _c),
+                                 interpret=_interpret()).reshape(n, r)
+    else:
+        row_amax = jnp.max(jnp.abs(buf), axis=2)                  # [N, R]
+    ids = jnp.asarray(seg_ids)
+    seg_amax = jax.vmap(lambda ra: jax.ops.segment_max(
+        ra, ids, num_segments=n_seg, indices_are_sorted=True))(row_amax)
+    seg_amax = jnp.maximum(seg_amax, 0.0)
+    deltas = jnp.maximum(seg_amax / qmax, jnp.finfo(jnp.float32).tiny)
+    return deltas, deltas[:, seg_ids]                             # [N,T],[N,R]
+
+
+def quantize_packed_buffer(buf, seg_ids, n_seg: int, bits: int = 16, *,
+                           use_kernels: Optional[bool] = None):
+    """Quantize an already-packed ``[N, R, C]`` buffer.  Returns
+    ``(codes [N, R, C] wire-intN, scales [N, T] fp32)``."""
+    if use_kernels is None:
+        use_kernels = jax.default_backend() == "tpu"
+    n, r, c = buf.shape
+    deltas, row_delta = _node_row_deltas(buf, seg_ids, n_seg, bits,
+                                         use_kernels)
+    if use_kernels:
+        codes = quantize_rows_pallas(buf.reshape(n * r, c),
+                                     row_delta.reshape(n * r, 1), bits=bits,
+                                     interpret=_interpret()).reshape(n, r, c)
+    else:
+        qm = (1 << (bits - 1)) - 1
+        codes = jnp.floor(buf / row_delta[:, :, None] + 0.5)
+        codes = jnp.clip(codes, -qm - 1, qm)
+    return codes.astype(_wire_int_dtype(bits)), deltas
+
+
+def quantize_tree_packed_nodes(tree, bits: int = 16, *,
+                               use_kernels: Optional[bool] = None
+                               ) -> Dict[str, Any]:
+    """The wire payload of one federation round: quantize a stacked
+    ``[N, ...]`` pytree into ``{"codes": [N, R, C] intN, "scales":
+    [N, T] fp32, "seg_ids", "meta", "bits"}`` — per-(leaf, node) scale
+    segments, codes narrowed to the wire dtype (int16 for 16-bit)."""
+    buf, seg_ids, meta = pack_tree_nodes(tree)
+    codes, deltas = quantize_packed_buffer(buf, seg_ids, meta[2], bits,
+                                           use_kernels=use_kernels)
+    return {"codes": codes, "scales": deltas, "seg_ids": seg_ids,
+            "meta": meta, "bits": bits}
+
+
+def dequantize_tree_packed_nodes(payload):
+    """Receiver-side reconstruction from the packed node payload."""
+    row_delta = payload["scales"][:, payload["seg_ids"]]
+    deq = payload["codes"].astype(jnp.float32) * row_delta[:, :, None]
+    return unpack_tree_nodes(deq, payload["meta"])
+
+
+def quantize_dequantize_tree_packed_nodes(tree, bits: int = 16, *,
+                                          use_kernels: Optional[bool] = None):
+    """Round-trip through the packed node wire format — what every
+    receiver reconstructs.  Bit-identical to the per-leaf
+    ``quantize_leaf_per_node``/``dequantize_leaf`` path."""
+    return dequantize_tree_packed_nodes(
+        quantize_tree_packed_nodes(tree, bits, use_kernels=use_kernels))
+
+
+def packed_wire_rows(tree, *, node_axis: bool = True) -> Tuple[int, int]:
+    """Static layout of the packed node buffer: ``(R_padded, T)`` — rows
+    per node (8-aligned) and scale-segment count.  Works on arrays or
+    ``ShapeDtypeStruct``s (accounting never touches device data).
+    ``node_axis=False`` treats leaves as per-copy skeletons without the
+    leading ``[N]`` dim (the comm accountant's payload templates)."""
+    rows = 0
+    nseg = 0
+    skip = 1 if node_axis else 0
+    for leaf in jax.tree_util.tree_leaves(tree):
+        if not (hasattr(leaf, "dtype")
+                and jnp.issubdtype(leaf.dtype, jnp.floating)):
+            continue
+        per = 1
+        for s in leaf.shape[skip:]:
+            per *= s
+        rows += -(-per // _COLS)
+        nseg += 1
+    return rows + ((-rows) % 8), nseg
+
+
+def packed_wire_bytes_per_node(tree, bits: Optional[int] = 16, *,
+                               node_axis: bool = True) -> int:
+    """Physical bytes one node's packed payload occupies on the wire:
+    the intN (fp32 when ``bits`` is None) row buffer incl. 512-lane
+    padding, plus one fp32 scale per leaf segment when quantized.  This
+    is the number the dry-run's HLO collective-bytes breakdown measures
+    per exchanged copy."""
+    rows, nseg = packed_wire_rows(tree, node_axis=node_axis)
+    width = (bits // 8) if bits else 4
+    return rows * _COLS * width + (nseg * 4 if bits else 0)
+
+
+def mix_packed(own, codes, row_delta, w_self, w_rows, *,
+               use_kernels: Optional[bool] = None) -> jnp.ndarray:
+    """Receiver-side gossip mix applied directly on packed codes:
+    ``out[m] = w_self[m]·own[m] + Σ_j w_rows[m, j]·codes[j]·Δ[j]``.
+
+    One fused Pallas launch on TPU (interpret elsewhere when forced);
+    the jnp flavor is the GSPMD-partitionable fallback the multi-axis
+    mesh path and the CPU simulator use."""
+    if use_kernels is None:
+        use_kernels = jax.default_backend() == "tpu"
+    if use_kernels:
+        return mix_packed_pallas(own, codes, row_delta, w_self, w_rows,
+                                 interpret=_interpret())
+    deq = codes.astype(jnp.float32) * row_delta[:, :, None]
+    mixed = jnp.einsum("mn,nrc->mrc", w_rows.astype(jnp.float32), deq)
+    return mixed + w_self.astype(jnp.float32)[:, None, None] * \
+        own.astype(jnp.float32)

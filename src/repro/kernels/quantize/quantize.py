@@ -243,6 +243,58 @@ def quantize_dequantize_rows_pallas(x2d, row_delta, *, bits: int = 16,
                       interpret=interpret)
 
 
+def _mix_packed_kernel(n_nodes: int, own_ref, codes_ref, delta_ref,
+                       wself_ref, wrows_ref, out_ref):
+    # out[m] = w_self[m]*own[m] + sum_j wrows[m, j] * codes[j] * delta[j]
+    # — the receiver side of the packed wire exchange in ONE launch: the
+    # int codes are dequantized and folded into the gossip mix without
+    # ever materializing the fp32 neighbor payloads in HBM.
+    acc = wself_ref[...][:, 0][:, None, None] * own_ref[...]
+    for j in range(n_nodes):            # n_nodes is static and small
+        deq = codes_ref[j].astype(jnp.float32) * delta_ref[j][:, None]
+        acc = acc + wrows_ref[...][:, j][:, None, None] * deq[None, :, :]
+    out_ref[...] = acc
+
+
+def mix_packed_pallas(own, codes, row_delta, w_self, w_rows, *,
+                      interpret: bool = False) -> jnp.ndarray:
+    """Fused dequantize-and-accumulate over packed wire buffers.
+
+    own:       [M, R, C] fp32 — receiver's local (unquantized) buffer
+    codes:     [N, R, C] int  — gathered/permuted neighbor wire codes
+    row_delta: [N, R]    fp32 — per-row de-quantization scales
+    w_self:    [M]       fp32 — own-copy mixing weight
+    w_rows:    [M, N]    fp32 — neighbor mixing weights (zero = not mine)
+    -> [M, R, C] fp32 mixed buffer.
+    """
+    m, r, c = own.shape
+    n = codes.shape[0]
+    br, bc = min(BLOCK_R, r), min(BLOCK_C, c)
+    # fp32 "codes" (the FedAvg baseline permutes raw model buffers with
+    # unit deltas) must NOT round-trip through int — only narrow wire
+    # ints are upcast to the TPU-native word size
+    if jnp.issubdtype(codes.dtype, jnp.floating):
+        codes = codes.astype(jnp.float32)
+    else:
+        codes = codes.astype(jnp.int32)
+    return pl.pallas_call(
+        functools.partial(_mix_packed_kernel, n),
+        grid=(pl.cdiv(r, br), pl.cdiv(c, bc)),
+        in_specs=[
+            pl.BlockSpec((m, br, bc), lambda i, j: (0, i, j)),
+            pl.BlockSpec((n, br, bc), lambda i, j: (0, i, j)),
+            pl.BlockSpec((n, br), lambda i, j: (0, i)),
+            pl.BlockSpec((m, 1), lambda i, j: (0, 0)),
+            pl.BlockSpec((m, n), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((m, br, bc), lambda i, j: (0, i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, r, c), jnp.float32),
+        interpret=interpret,
+    )(own.astype(jnp.float32), codes,
+      row_delta.astype(jnp.float32), w_self.astype(jnp.float32).reshape(m, 1),
+      w_rows.astype(jnp.float32))
+
+
 def _dequantize_rows_kernel(codes_ref, delta_ref, out_ref):
     out_ref[...] = codes_ref[...].astype(jnp.float32) * delta_ref[...]
 

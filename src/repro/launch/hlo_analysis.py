@@ -201,11 +201,11 @@ def analyze_hlo(text: str) -> Cost:
                     cost.flops += child_cost.flops
                     for k, v in child_cost.coll.items():
                         cost.coll[k] = cost.coll.get(k, 0.0) + v
-                cost.bytes += _nbytes(symtab[iname]) + _operand_bytes(s, symtab)
+                cost.bytes += _nbytes(symtab[iname]) + _operand_bytes(s, symtab, op)
             else:
                 base = op.replace("-start", "")
                 if base in _COLLECTIVES and not op.endswith("-done"):
-                    ob = _operand_bytes(s, symtab)
+                    ob = _operand_bytes(s, symtab, op)
                     rb = _nbytes(symtab[iname])
                     if base == "all-gather":
                         nb = rb
@@ -222,15 +222,23 @@ def analyze_hlo(text: str) -> Cost:
                     pass  # no HBM traffic attributed
                 else:
                     # top-level elementwise / copy / dynamic-slice etc.
-                    cost.bytes += _nbytes(symtab[iname]) + _operand_bytes(s, symtab)
+                    cost.bytes += _nbytes(symtab[iname]) + _operand_bytes(s, symtab, op)
         memo[name] = cost
         return cost
 
     return comp_cost(entry) if entry else Cost()
 
 
-def _operand_bytes(line: str, symtab) -> int:
-    inside = line.split("(", 2)[-1].split(")")[0] if "(" in line else ""
+def _operand_bytes(line: str, symtab, op: Optional[str] = None) -> int:
+    """Bytes of the instruction's operands.  Anchored on ``op(`` when the
+    op name is known — result tuple shapes and ``metadata={op_name=
+    "jit(...)"}`` attributes both contain parens, so position-based
+    splitting misparses the operand list."""
+    if op is not None:
+        idx = line.find(f" {op}(")
+        inside = line[idx + len(op) + 2:].split(")")[0] if idx >= 0 else ""
+    else:
+        inside = line.split("(", 2)[-1].split(")")[0] if "(" in line else ""
     total = 0
     for opname in re.findall(r"%([\w.\-]+)", inside):
         if opname in symtab:

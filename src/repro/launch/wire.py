@@ -1,0 +1,215 @@
+"""Physical-vs-logical wire bytes per topology, from compiled HLO.
+
+The logical cost of a gossip round is what
+:class:`repro.core.comm.ScheduleCommAccountant` charges: ``out_degree x
+bytes-per-copy``.  The *physical* cost is whatever collectives XLA
+actually schedules on the pod axis.  This module compiles the mesh
+federation round on a **federation mesh** (one device per node, inner
+axes of size 1, so every collective byte is pod-axis wire) and reads the
+bytes back out of the HLO — the measurement ``launch/dryrun.py
+--topology`` asserts against the accountant, and the numbers
+``benchmarks/table2_comm.py`` / ``examples/topology_sweep.py`` print
+next to the analytic ones.
+
+No jax device state is touched at import time (callers set
+``--xla_force_host_platform_device_count`` before first jax use when
+they need more nodes than hardware).
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Dict, Optional
+
+import numpy as np
+
+from repro.core import topology as T
+
+
+def ensure_host_device_flag(n_nodes: int,
+                            env: Optional[Dict[str, str]] = None
+                            ) -> Dict[str, str]:
+    """Append ``--xla_force_host_platform_device_count=N`` to XLA_FLAGS
+    (in ``env``, default ``os.environ``) unless a device count is
+    already pinned — the single owner of this bootstrap (conftest,
+    benchmarks, and examples all call it).  Must run before the first
+    jax use; an externally pinned smaller count is respected, and
+    :func:`fed_mesh` then raises a clear error instead of looping."""
+    e = os.environ if env is None else env
+    if "xla_force_host_platform_device_count" not in e.get("XLA_FLAGS", ""):
+        e["XLA_FLAGS"] = (
+            e.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={n_nodes}").strip()
+    return e
+
+
+def fed_mesh(n_nodes: int):
+    """(N, 1, 1) ("pod", "data", "model") mesh over the first N devices:
+    one device per federation node, so HLO collective bytes == pod wire
+    bytes."""
+    import jax
+    from jax.sharding import Mesh
+    devs = jax.devices()
+    if len(devs) < n_nodes:
+        raise RuntimeError(
+            f"need {n_nodes} devices for a {n_nodes}-node federation mesh, "
+            f"have {len(devs)} — set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={n_nodes} "
+            f"before the first jax call")
+    return Mesh(np.array(devs[:n_nodes]).reshape(n_nodes, 1, 1),
+                ("pod", "data", "model"))
+
+
+def _student_setup(arch: str):
+    import jax
+    from repro.config import get_config
+    from repro.models import derive_student, init_params
+    from repro.sharding import param_specs
+
+    cfg = get_config(arch)
+    if hasattr(cfg, "smoke") and cfg.family not in ("cnn", "resnet"):
+        cfg = cfg.smoke()
+    student_cfg = derive_student(cfg)
+    struct = jax.eval_shape(
+        lambda: init_params(student_cfg, jax.random.PRNGKey(0)))
+    # prototype-class convention must match the simulator's
+    # (federation._n_proto_classes): label classes for cnn/resnet,
+    # domain-label classes for LM archs
+    ncls = cfg.num_classes if cfg.family in ("cnn", "resnet") \
+        else cfg.n_proto_classes
+    return cfg, student_cfg, struct, ncls
+
+
+def measure_exchange_bytes(arch: str, n_nodes: int, topology: str = "ring",
+                           bits: int = 16,
+                           exchanges=("gather", "packed", "ppermute"),
+                           seed: int = 0) -> Dict[str, Any]:
+    """Lower + compile the ProFe gossip round per exchange mode on a
+    federation mesh and report per-node physical bytes from the HLO next
+    to the accountant's logical/packed predictions.
+
+    Physical bytes are per-device == per-node on this mesh (collective-
+    permute counts its operand once per step; all-gather counts its
+    gathered output).  ``exchanges`` entries that don't apply to the
+    graph (ppermute on irregular graphs stays valid — partial steps — but
+    multi-device requirements may fail) report their error string.
+    """
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.core.comm import ScheduleCommAccountant
+    from repro.core.mesh_federation import make_profe_round
+    from repro.launch.hlo_analysis import analyze_hlo
+    from repro.sharding import param_specs, to_named
+
+    sched = T.make_schedule(n_nodes, topology, rounds=1, seed=seed)
+    adj = sched.adjacency_at(0)
+    mesh = fed_mesh(n_nodes)
+    cfg, student_cfg, struct, C = _student_setup(arch)
+    specs = param_specs(student_cfg, struct, mesh)
+    Pdim = student_cfg.proto_dim
+
+    def stack(s):
+        return jax.ShapeDtypeStruct((n_nodes,) + tuple(s.shape), s.dtype)
+    students = jax.tree_util.tree_map(stack, struct)
+    protos = jax.ShapeDtypeStruct((n_nodes, C, Pdim), jnp.float32)
+    counts = jax.ShapeDtypeStruct((n_nodes, C), jnp.float32)
+    sizes = jax.ShapeDtypeStruct((n_nodes,), jnp.float32)
+
+    # the accountant's per-copy payload skeleton (one node's payload)
+    payload = {
+        "model": jax.tree_util.tree_map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), struct),
+        "protos": jax.ShapeDtypeStruct((C, Pdim), np.dtype(np.float32)),
+        "counts": jax.ShapeDtypeStruct((C,), np.dtype(np.float32)),
+    }
+    acct = ScheduleCommAccountant(sched)
+    logical = acct.predicted_node_bytes(payload, 0, bits, wire="dense")
+    packed = acct.predicted_node_bytes(payload, 0, bits, wire="packed")
+
+    out: Dict[str, Any] = {
+        "arch": arch, "topology": topology, "n_nodes": n_nodes,
+        "bits": bits,
+        "degree": [int(d) for d in sched.out_degrees()[0]],
+        "logical_bytes_per_node": int(logical.max()),
+        "packed_pred_bytes_per_node": int(packed.max()),
+        "exchanges": {},
+    }
+    node_specs = jax.tree_util.tree_map(
+        lambda s: P("pod", *s), specs, is_leaf=lambda x: isinstance(x, P))
+    # the "full-gather" pseudo-mode is the full-graph all-gather
+    # reference (packed exchange, adjacency=None) the sparse exchange
+    # is measured against
+    combos = [(ex, adj, ex) for ex in exchanges] + \
+        [("full-gather", None, "packed")]
+    for name, adjacency, mode in combos:
+        try:
+            fn = make_profe_round(mesh, specs, bits=bits,
+                                  adjacency=adjacency, exchange=mode)
+            with mesh:
+                jitted = jax.jit(
+                    fn,
+                    in_shardings=(to_named(node_specs, mesh),
+                                  NamedSharding(mesh, P("pod", None, None)),
+                                  NamedSharding(mesh, P("pod", None)),
+                                  NamedSharding(mesh, P(None))))
+                hlo = jitted.lower(students, protos, counts,
+                                   sizes).compile().as_text()
+            an = analyze_hlo(hlo)
+            entry = {
+                "collective_bytes_per_node": float(an.coll_total),
+                "by_kind": {k: float(v) for k, v in an.coll.items() if v},
+                "counts": {k: float(v) for k, v in an.coll_counts.items()
+                           if v},
+            }
+        except (ValueError, RuntimeError) as e:
+            entry = {"error": f"{type(e).__name__}: {e}"}
+        if name == "full-gather":
+            out["full_gather_bytes_per_node"] = \
+                entry.get("collective_bytes_per_node")
+        else:
+            out["exchanges"][name] = entry
+    return out
+
+
+def check_topology_bytes(report: Dict[str, Any], *, exchange: str,
+                         rel_tol: float = 0.10,
+                         gather_frac: Optional[float] = None
+                         ) -> Dict[str, Any]:
+    """Assert physical ≈ predicted wire bytes for one exchange mode.
+
+    * physical collective bytes within ``rel_tol`` of the accountant's
+      packed-codec prediction (``predicted_node_bytes(..., "packed")``),
+    * when ``gather_frac`` is given (e.g. 0.5 for the ring-vs-full
+      acceptance bound), physical < gather_frac x the full-graph
+      all-gather exchange.
+
+    Returns a verdict dict (also embedded into the report).
+    """
+    ex = report["exchanges"][exchange]
+    if "error" in ex:
+        raise AssertionError(f"{exchange} did not compile: {ex['error']}")
+    phys = ex["collective_bytes_per_node"]
+    pred = report["packed_pred_bytes_per_node"]
+    rel = abs(phys - pred) / max(pred, 1)
+    verdict = {"exchange": exchange, "physical": phys, "predicted": pred,
+               "rel_err": rel, "rel_tol": rel_tol}
+    if rel > rel_tol:
+        raise AssertionError(
+            f"{exchange} physical bytes {phys:.0f} deviate "
+            f"{rel:.1%} (> {rel_tol:.0%}) from the accountant's "
+            f"prediction {pred}")
+    if gather_frac is not None:
+        full = report.get("full_gather_bytes_per_node")
+        verdict["full_gather"] = full
+        verdict["gather_frac"] = gather_frac
+        if not full:
+            raise AssertionError(
+                "full-graph gather reference did not compile — the "
+                f"{gather_frac:.2f}x sparse-vs-dense bound cannot be "
+                "checked")
+        if phys >= gather_frac * full:
+            raise AssertionError(
+                f"{exchange} physical bytes {phys:.0f} not < "
+                f"{gather_frac:.2f}x the full-graph gather {full:.0f}")
+    report.setdefault("checks", []).append(verdict)
+    return verdict

@@ -1,0 +1,20 @@
+"""Test-session setup.
+
+* Forces 8 virtual host devices BEFORE the first jax import so the
+  mesh-marked tests (ppermute neighbor collectives need one pod-axis
+  device per federation node) run inside the tier-1 CPU suite.
+  Single-device programs are unaffected — they run on device 0.
+* Registers the ``mesh`` marker: tests that need a multi-device pod
+  axis.  They self-skip cleanly when the backend exposes fewer devices
+  than they need (e.g. when XLA_FLAGS was overridden externally).
+"""
+from repro.launch.wire import ensure_host_device_flag
+
+ensure_host_device_flag(8)
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "mesh: needs a multi-device pod axis (skipped when the backend "
+        "exposes fewer devices than the test's federation size)")

@@ -172,6 +172,260 @@ def test_per_node_quantization_matches_per_tensor():
 
 
 # ---------------------------------------------------------------------------
+# packed node wire codec (the physical exchange payload)
+# ---------------------------------------------------------------------------
+
+def _payload_tree(n=3):
+    return {
+        "student": {
+            "w": jnp.asarray(RNG.standard_normal((n, 17, 9)) * 5,
+                             jnp.float32),
+            "b": jnp.asarray(RNG.standard_normal((n, 11)), jnp.float32),
+            "deep": [jnp.asarray(RNG.standard_normal((n, 40, 30)),
+                                 jnp.float32)],
+            "step": jnp.ones((n,), jnp.int32),
+        },
+        "protos": jnp.asarray(RNG.standard_normal((n, 6, 8)), jnp.float32),
+    }
+
+
+@pytest.mark.parametrize("use_kernels", [False, True],
+                         ids=["jnp", "pallas-interpret"])
+def test_packed_wire_codec_bit_identical_per_leaf(use_kernels):
+    """The [N, R, 512] single-buffer wire format round-trips
+    bit-identically to quantizing each leaf's node slice alone
+    (``quantize_leaf_per_node``/``dequantize_leaf``) — codes, scales,
+    and reconstruction, in CPU interpreter mode for the Pallas flavor."""
+    from repro.kernels.quantize import ops as q_ops
+    tree = _payload_tree()
+    payload = q_ops.quantize_tree_packed_nodes(tree, 16,
+                                               use_kernels=use_kernels)
+    assert payload["codes"].dtype == jnp.int16          # the wire dtype
+    back = q_ops.dequantize_tree_packed_nodes(payload)
+
+    seg_of = {}                                          # leaf row-span
+    flat, _ = jax.tree_util.tree_flatten(tree)
+    packed_items = [it for it in payload["meta"][1] if it[0] == "packed"]
+    float_leaves = [x for x in flat
+                    if jnp.issubdtype(x.dtype, jnp.floating)]
+    assert len(packed_items) == len(float_leaves)
+    for leaf, item in zip(float_leaves, packed_items):
+        _, shape, _dt, row, nrows, seg = item
+        codes_ref, delta_ref = R.quantize_leaf_per_node(leaf, 16)
+        # scales: one per (leaf, node), exactly the per-leaf deltas
+        np.testing.assert_array_equal(
+            np.asarray(payload["scales"][:, seg]), np.asarray(delta_ref))
+        # codes: the leaf's rows of the buffer hold the per-leaf codes
+        n = shape[0]
+        per = int(np.prod(shape[1:]))
+        rows = payload["codes"][:, row:row + nrows, :]
+        got_codes = rows.reshape(n, -1)[:, :per].reshape(shape)
+        np.testing.assert_array_equal(np.asarray(got_codes),
+                                      np.asarray(codes_ref.astype(jnp.int16)))
+    # reconstruction == per-leaf dequantize, bit for bit
+    want = jax.tree_util.tree_map(
+        lambda x: R.dequantize_leaf(*R.quantize_leaf_per_node(x, 16))
+        if jnp.issubdtype(x.dtype, jnp.floating) else x, tree)
+    for g, w in zip(jax.tree_util.tree_leaves(back),
+                    jax.tree_util.tree_leaves(want)):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+def test_quantize_dequantize_per_node_packed_routing():
+    """The simulator's receiver-side reconstruction consumes the packed
+    codec by default and stays bit-identical to the per-leaf path."""
+    tree = _payload_tree()
+    got = R.quantize_dequantize_per_node(tree, 16, use_kernels=False)
+    want = R.quantize_dequantize_per_node(tree, 16, use_kernels=False,
+                                          packed=False)
+    for g, w in zip(jax.tree_util.tree_leaves(got),
+                    jax.tree_util.tree_leaves(want)):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+def test_mix_packed_kernel_matches_mix_node_trees():
+    """Fused dequant-and-accumulate on packed codes (Pallas, interpret
+    mode on CPU) == qdq + ``mix_node_trees`` reference."""
+    from repro.kernels.quantize import ops as q_ops
+    n = 4
+    tree = {"w": jnp.asarray(RNG.standard_normal((n, 23, 12)), jnp.float32),
+            "b": jnp.asarray(RNG.standard_normal((n, 5)), jnp.float32)}
+    sizes = [10.0, 20.0, 30.0, 40.0]
+    adj = T.adjacency(n, "ring")
+    w_self, w_neigh = R.gossip_matrix(adj, sizes)
+    buf, seg_ids, meta = q_ops.pack_tree_nodes(tree)
+    codes, scales = q_ops.quantize_packed_buffer(buf, seg_ids, meta[2], 16,
+                                                 use_kernels=False)
+    row_delta = scales[:, seg_ids]
+    for uk in (False, True):
+        mixed = q_ops.mix_packed(buf, codes, row_delta, w_self, w_neigh,
+                                 use_kernels=uk)
+        got = q_ops.unpack_tree_nodes(mixed, meta)
+        recv = R.quantize_dequantize_per_node(tree, 16, use_kernels=False)
+        want = R.mix_node_trees(w_self, w_neigh, tree, recv)
+        for k in tree:
+            np.testing.assert_allclose(np.asarray(got[k]),
+                                       np.asarray(want[k]),
+                                       rtol=1e-5, atol=1e-6)
+    # fp32 "codes" (the FedAvg baseline permutes raw model buffers with
+    # unit deltas): the kernel must NOT round-trip them through int
+    ones = jnp.ones(buf.shape[:2], jnp.float32)
+    raw_jnp = q_ops.mix_packed(buf, buf, ones, w_self, w_neigh,
+                               use_kernels=False)
+    raw_pal = q_ops.mix_packed(buf, buf, ones, w_self, w_neigh,
+                               use_kernels=True)
+    np.testing.assert_allclose(np.asarray(raw_pal), np.asarray(raw_jnp),
+                               rtol=1e-6, atol=1e-7)
+
+
+def test_packed_copy_bytes_matches_kernel_layout():
+    """comm's analytic packed-codec bytes == the kernels' buffer layout
+    (+ the raw fp32 counts side channel)."""
+    from repro.core.comm import packed_copy_bytes
+    from repro.kernels.quantize import ops as q_ops
+    tree = _payload_tree(1)
+    payload = {
+        "model": jax.tree_util.tree_map(lambda x: x[0], tree["student"]),
+        "protos": tree["protos"][0],
+        "counts": jnp.ones((6,), jnp.float32),
+    }
+    want = q_ops.packed_wire_bytes_per_node(
+        {"protos": tree["protos"], "student": tree["student"]},
+        16) + 6 * 4
+    # the int32 "step" leaf rides raw in both accountings
+    want += 1 * 4
+    assert packed_copy_bytes(payload, 16) == want
+
+
+# ---------------------------------------------------------------------------
+# mesh exchange equivalence: ppermute ring == masked all-gather
+# ---------------------------------------------------------------------------
+
+def _mesh_round_fixtures(n):
+    from jax.sharding import PartitionSpec as P
+    from repro.launch.wire import fed_mesh
+    mesh = fed_mesh(n)
+    students = {
+        "w": jnp.asarray(RNG.standard_normal((n, 33, 20)), jnp.float32),
+        "b": jnp.asarray(RNG.standard_normal((n, 7)), jnp.float32)}
+    specs = {"w": P(None, None), "b": P(None,)}
+    C, Pd = 5, 16
+    protos = jnp.asarray(RNG.standard_normal((n, C, Pd)), jnp.float32)
+    counts = jnp.asarray(RNG.integers(0, 4, (n, C)), jnp.float32)
+    sizes = jnp.asarray(RNG.integers(50, 200, (n,)), jnp.float32)
+    return mesh, students, specs, protos, counts, sizes
+
+
+@pytest.mark.mesh
+@pytest.mark.parametrize("topo", ["ring", "random-k2"])
+def test_ppermute_round_matches_masked_gather(topo):
+    """Physical sparse gossip == the masked all-gather reference:
+    students exact-mix (same quantized codes, different summation order
+    only), prototypes Eq. 4, on a one-device-per-node federation mesh."""
+    n = 8
+    if jax.device_count() < n:
+        pytest.skip(f"needs {n} devices, have {jax.device_count()}")
+    from repro.core.mesh_federation import make_profe_round
+    mesh, students, specs, protos, counts, sizes = _mesh_round_fixtures(n)
+    adj = T.make_schedule(n, topo, seed=0).adjacency_at(0)
+
+    outs = {}
+    for ex in ("gather", "ppermute"):
+        fn = make_profe_round(mesh, specs, bits=16, adjacency=adj,
+                              exchange=ex)
+        with mesh:
+            outs[ex] = jax.jit(fn)(students, protos, counts, sizes)
+    s_ref, g_ref, m_ref = outs["gather"]
+    s, g, m = outs["ppermute"]
+    for k in s_ref:
+        np.testing.assert_allclose(np.asarray(s[k]), np.asarray(s_ref[k]),
+                                   rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(g_ref),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(m), np.asarray(m_ref))
+    # sparse gossip keeps nodes distinct
+    assert float(jnp.max(jnp.abs(s["w"][1] - s["w"][4]))) > 0
+
+
+@pytest.mark.mesh
+def test_ppermute_ring_moves_degree_not_n_bytes():
+    """The compiled ring round's pod-axis bytes are EXACTLY the
+    accountant's packed-codec prediction (degree x payload) and well
+    under the full-graph all-gather exchange."""
+    n = 8
+    if jax.device_count() < n:
+        pytest.skip(f"needs {n} devices, have {jax.device_count()}")
+    from repro.core.comm import ScheduleCommAccountant
+    from repro.core.mesh_federation import make_profe_round
+    from repro.launch.hlo_analysis import analyze_hlo
+    mesh, students, specs, protos, counts, sizes = _mesh_round_fixtures(n)
+    sched = T.make_schedule(n, "ring", seed=0)
+    adj = sched.adjacency_at(0)
+
+    def lower_coll(adjacency, exchange):
+        fn = make_profe_round(mesh, specs, bits=16, adjacency=adjacency,
+                              exchange=exchange)
+        with mesh:
+            hlo = jax.jit(fn).lower(students, protos, counts,
+                                    sizes).compile().as_text()
+        return analyze_hlo(hlo)
+
+    ring = lower_coll(adj, "ppermute")
+    full_bytes = lower_coll(None, "packed").coll_total
+    payload = {
+        "model": jax.tree_util.tree_map(lambda x: x[0], students),
+        "protos": protos[0], "counts": counts[0]}
+    pred = ScheduleCommAccountant(sched).predicted_node_bytes(
+        payload, 0, 16, wire="packed")
+    # the payload permutes are EXACTLY degree x packed payload (the
+    # remaining collectives are the tiny [N] sizes gather)
+    assert ring.coll.get("collective-permute") == pred.max(), \
+        (ring.coll, pred)
+    assert ring.coll_total < 0.5 * full_bytes
+
+
+@pytest.mark.parametrize("adjacency", [None, "ring"])
+def test_packed_gather_round_matches_per_leaf_gather(adjacency):
+    """exchange='packed' (single-buffer all-gather + fused mix) ==
+    exchange='gather' (per-leaf reference) on a 1-device mesh."""
+    from jax.sharding import PartitionSpec as P
+    from repro.core.mesh_federation import make_fedavg_round, make_profe_round
+    from repro.launch.wire import fed_mesh
+    n = 4
+    # node-stacked state on a 1x1x1 mesh: GSPMD shards trivially
+    mesh = fed_mesh(1)
+    specs = {"w": P(None, None), "b": P(None,)}
+    students = {
+        "w": jnp.asarray(RNG.standard_normal((n, 33, 20)), jnp.float32),
+        "b": jnp.asarray(RNG.standard_normal((n, 7)), jnp.float32)}
+    protos = jnp.asarray(RNG.standard_normal((n, 5, 16)), jnp.float32)
+    counts = jnp.asarray(RNG.integers(0, 4, (n, 5)), jnp.float32)
+    sizes = jnp.asarray([1.0, 2.0, 3.0, 4.0])
+    adj = None if adjacency is None else T.adjacency(n, adjacency)
+
+    outs = {}
+    for ex in ("gather", "packed"):
+        fn = make_profe_round(mesh, specs, bits=16, adjacency=adj,
+                              exchange=ex)
+        with mesh:
+            outs[ex] = jax.jit(fn)(students, protos, counts, sizes)
+    for got, want in zip(jax.tree_util.tree_leaves(outs["packed"]),
+                         jax.tree_util.tree_leaves(outs["gather"])):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=2e-4)
+
+    fa = {}
+    for ex in ("gather", "packed"):
+        fn = make_fedavg_round(mesh, specs, adjacency=adj, exchange=ex)
+        with mesh:
+            fa[ex] = jax.jit(fn)(students, sizes)
+    for got, want in zip(jax.tree_util.tree_leaves(fa["packed"]),
+                         jax.tree_util.tree_leaves(fa["gather"])):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
 # hoisted prototype accumulator: traces once, not once per round × node
 # ---------------------------------------------------------------------------
 
