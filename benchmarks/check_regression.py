@@ -37,10 +37,17 @@ from round_step import measure
 
 
 def check_wire(baseline_path: str, threshold: float) -> bool:
-    """Wire-exchange gate.  Returns True on failure."""
+    """Wire-exchange gate, per committed wire spec (bits row).  Returns
+    True on failure.  For every bits entry in the baseline: the jitted
+    packed-codec round-trip must stay within ``threshold``x, and the
+    per-node collective bytes of every exchange mode must match EXACTLY
+    — the codec, the byte encoding, and the permutation lowering are all
+    deterministic, so any drift is a wire-format change that needs a
+    deliberate baseline refresh."""
     with open(baseline_path) as f:
         base = json.load(f)
     cfg = base["config"]
+    bits_list = list(base["per_bits"].keys())
     with tempfile.NamedTemporaryFile(suffix=".json", delete=False) as tf:
         out = tf.name
     script = os.path.join(os.path.dirname(os.path.abspath(__file__)),
@@ -49,7 +56,8 @@ def check_wire(baseline_path: str, threshold: float) -> bool:
         r = subprocess.run(
             [sys.executable, script, "--wire",
              "--wire-nodes", str(cfg["nodes"]),
-             "--wire-topology", cfg["topology"], "--out", out],
+             "--wire-topology", cfg["topology"],
+             "--wire-bits", *bits_list, "--out", out],
             capture_output=True, text=True)
         if r.returncode != 0:
             print(f"wire bench failed to run:\n{r.stdout}\n{r.stderr}")
@@ -61,27 +69,35 @@ def check_wire(baseline_path: str, threshold: float) -> bool:
             os.unlink(out)
 
     failed = False
-    b_ms = base["codec"]["packed_ms"]
-    f_ms = fresh["codec"]["packed_ms"]
-    ratio = f_ms / b_ms
-    verdict = "OK" if ratio <= threshold else "REGRESSION"
-    failed |= verdict == "REGRESSION"
-    print(f"wire codec: packed qdq {f_ms:7.2f} ms vs committed "
-          f"{b_ms:7.2f} ms  ({ratio:.2f}x)  {verdict}")
-    for ex, rep in base["exchange"]["exchanges"].items():
-        if "error" in rep:
-            # visible, so an error'd baseline mode can't hide forever —
-            # regenerate the baseline to bring it under the gate
-            print(f"wire bytes [{ex}]: UNCHECKED (baseline recorded "
-                  f"{rep['error']!r} — refresh BENCH_wire_exchange.json)")
+    for bits, brow in base["per_bits"].items():
+        frow = fresh["per_bits"].get(bits, {})
+        b_ms = brow["codec"]["packed_ms"]
+        f_ms = frow.get("codec", {}).get("packed_ms")
+        if f_ms is None:
+            print(f"[bits={bits}] missing from fresh run  REGRESSION")
+            failed = True
             continue
-        fb = rep["collective_bytes_per_node"]
-        ff = fresh["exchange"]["exchanges"].get(ex, {}).get(
-            "collective_bytes_per_node")
-        ok = ff == fb
-        failed |= not ok
-        print(f"wire bytes [{ex}]: {ff} vs committed {fb}  "
-              f"{'OK' if ok else 'WIRE-FORMAT DRIFT'}")
+        ratio = f_ms / b_ms
+        verdict = "OK" if ratio <= threshold else "REGRESSION"
+        failed |= verdict == "REGRESSION"
+        print(f"[bits={bits}] wire codec: packed qdq {f_ms:7.2f} ms vs "
+              f"committed {b_ms:7.2f} ms  ({ratio:.2f}x)  {verdict}")
+        for ex, rep in brow["exchange"]["exchanges"].items():
+            if "error" in rep:
+                # visible, so an error'd baseline mode can't hide
+                # forever — regenerate the baseline to bring it under
+                # the gate
+                print(f"[bits={bits}] wire bytes [{ex}]: UNCHECKED "
+                      f"(baseline recorded {rep['error']!r} — refresh "
+                      f"BENCH_wire_exchange.json)")
+                continue
+            fb = rep["collective_bytes_per_node"]
+            ff = frow["exchange"]["exchanges"].get(ex, {}).get(
+                "collective_bytes_per_node")
+            ok = ff == fb
+            failed |= not ok
+            print(f"[bits={bits}] wire bytes [{ex}]: {ff} vs committed "
+                  f"{fb}  {'OK' if ok else 'WIRE-FORMAT DRIFT'}")
     return failed
 
 

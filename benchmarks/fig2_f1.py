@@ -20,13 +20,21 @@ import os
 from repro.config import FederationConfig, TrainConfig, get_config
 from repro.core.federation import run_federation
 from repro.data import make_image_dataset, partition, train_test_split
+from repro.wirespec import WireSpec
 
 ALGOS = ["fedavg", "fedproto", "fml", "fedgpd", "profe"]
 
 
+def _bits_fed_kwargs(bits: str):
+    """CLI wire spec -> FederationConfig quantization fields."""
+    spec = WireSpec.parse(bits)
+    return {"quantize_bits": spec.student_bits,
+            "proto_quantize_bits": spec.proto_bits}
+
+
 def run(dataset: str, split: str, *, nodes: int, rounds: int, epochs: int,
         n_samples: int, algos=ALGOS, seed: int = 0, verbose=False,
-        topology: str = "full"):
+        topology: str = "full", bits=("16",)):
     cfg = get_config(dataset)
     data = make_image_dataset(seed, n_samples, cfg.input_hw, cfg.num_classes)
     train_d, test_d = train_test_split(data, 0.1, seed)  # paper: 10% global test
@@ -35,19 +43,34 @@ def run(dataset: str, split: str, *, nodes: int, rounds: int, epochs: int,
     train = TrainConfig(batch_size=64, learning_rate=1e-3, optimizer="adamw",
                         remat=False)
     out = {}
+    # the bits column: profe re-runs per wire spec (only profe quantizes
+    # its wire), quantifying the F1 cost of int8/int4/mixed next to the
+    # byte savings — the scenario the paper's Table II cannot show
+    jobs = []
     for algo in algos:
+        if algo == "profe":
+            jobs += [(f"profe@{b}" if len(bits) > 1 or b != "16" else
+                      "profe", algo, b) for b in bits]
+        else:
+            jobs.append((algo, algo, "16"))
+    for name, algo, b in jobs:
         fed = FederationConfig(num_nodes=nodes, rounds=rounds,
                                local_epochs=epochs, algorithm=algo,
-                               split=split, seed=seed, topology=topology)
+                               split=split, seed=seed, topology=topology,
+                               **_bits_fed_kwargs(b))
         res = run_federation(cfg, fed, train, node_data, test_d,
                              verbose=verbose, eval_all_nodes=True)
-        out[algo] = {
+        out[name] = {
             "f1_per_round": res.f1_per_round,           # mean over nodes
             "f1_std_per_round": res.extras.get("f1_std_per_round", []),
             "f1_per_round_nodes": res.extras.get("f1_per_round_nodes", []),
             "avg_sent_gb": res.extras["avg_sent_gb"],
             "elapsed_s": res.elapsed_s,
         }
+        if algo == "profe":
+            out[name]["bits"] = WireSpec.parse(b).describe()
+            out[name]["wire_bytes_packed_per_copy"] = \
+                res.extras.get("wire_bytes_packed_per_copy")
     return out
 
 
@@ -62,6 +85,10 @@ def main():
     ap.add_argument("--topology", default="full",
                     help="gossip graph spec — sparse graphs make the "
                          "per-node spread non-zero")
+    ap.add_argument("--bits", nargs="+", default=["16"],
+                    help="wire specs for the profe bits column, e.g. "
+                         "--bits 16 8 4 4/16 (mixed = int4 student + "
+                         "int16 prototypes)")
     ap.add_argument("--out", default="reports/fig2_f1.json")
     args = ap.parse_args()
 
@@ -74,7 +101,7 @@ def main():
             print(f"== {key} (topology={args.topology}) ==", flush=True)
             results[key] = run(ds, split, nodes=nodes, rounds=rounds,
                                epochs=epochs, n_samples=n, algos=args.algos,
-                               topology=args.topology)
+                               topology=args.topology, bits=args.bits)
             for algo, r in results[key].items():
                 curve = " ".join(
                     f"{x:.3f}±{s:.3f}"

@@ -46,6 +46,7 @@ from repro.core.quantization import quantize_dequantize_tree
 from repro.data import batches, make_image_dataset, partition
 from repro.models import derive_student, forward
 from repro.optim import make_optimizer
+from repro.wirespec import WireSpec, resolve_bits
 
 
 def _block(tree):
@@ -122,11 +123,13 @@ def legacy_round(step, states, node_data, cfg, student_cfg, fed, train,
     recv = [[] for _ in range(n_nodes)]
     recv_sz = [[] for _ in range(n_nodes)]
     for i in range(n_nodes):
-        rx = quantize_dequantize_tree(states[i].student, bits)
+        rx = quantize_dequantize_tree(states[i].student,
+                                      resolve_bits(bits, "student"))
         for j in T.neighbors(adj, i):
             recv[j].append(rx)
             recv_sz[j].append(sizes[i])
-    all_p = jnp.stack([quantize_dequantize_tree(p, bits) for p in protos])
+    all_p = jnp.stack([quantize_dequantize_tree(p, resolve_bits(bits, "protos"))
+                       for p in protos])
     all_c = jnp.stack(counts)
     for i in range(n_nodes):
         neigh = T.neighbors(adj, i) + [i]
@@ -223,16 +226,18 @@ def _median_ms(fn, *args, rounds: int = 20):
 
 
 def measure_wire(n_nodes: int = 8, topology: str = "ring", *,
-                 arch: str = "mnist-cnn", bits: int = 16,
+                 arch: str = "mnist-cnn", bits="16",
                  rounds: int = 20):
     """Packed vs per-leaf codec (jitted qdq round-trip) and gather vs
     ppermute exchange (HLO collective bytes + wall ms) for one gossip
-    round of a stacked student + prototypes payload."""
+    round of a stacked student + prototypes payload, at one wire spec
+    (``bits``: ``"16"`` | ``"8"`` | ``"4"`` | ``"<student>/<protos>"``)."""
     from repro.core.mesh_federation import make_profe_round
     from repro.launch import wire as W
     from repro.models import init_params
     from repro.sharding import param_specs
 
+    spec = WireSpec.parse(bits)
     # single owner of the arch -> (student, proto-classes) derivation,
     # so the timed payload matches the payload whose bytes are lowered
     _cfg, student_cfg, _struct, ncls = W._student_setup(arch)
@@ -245,15 +250,16 @@ def measure_wire(n_nodes: int = 8, topology: str = "ring", *,
     payload = {"protos": protos, "student": students}
 
     qdq_leaf = jax.jit(lambda t: R.quantize_dequantize_per_node(
-        t, bits, packed=False))
-    qdq_packed = jax.jit(lambda t: R.quantize_dequantize_per_node(t, bits))
+        t, spec=spec, packed=False))
+    qdq_packed = jax.jit(lambda t: R.quantize_dequantize_per_node(
+        t, spec=spec))
     codec = {
         "per_leaf_ms": _median_ms(qdq_leaf, payload, rounds=rounds),
         "packed_ms": _median_ms(qdq_packed, payload, rounds=rounds),
     }
 
     # exchange: bytes from compiled HLO, wall ms on the federation mesh
-    report = W.measure_exchange_bytes(arch, n_nodes, topology, bits=bits)
+    report = W.measure_exchange_bytes(arch, n_nodes, topology, bits=spec)
     mesh = W.fed_mesh(n_nodes)
     shapes = jax.eval_shape(lambda: init_params(student_cfg,
                                                 jax.random.PRNGKey(0)))
@@ -264,7 +270,7 @@ def measure_wire(n_nodes: int = 8, topology: str = "ring", *,
     for ex, rep in report["exchanges"].items():
         if "error" in rep:
             continue
-        fn = make_profe_round(mesh, specs, bits=bits, adjacency=adj,
+        fn = make_profe_round(mesh, specs, spec=spec, adjacency=adj,
                               exchange=ex)
         with mesh:
             jitted = jax.jit(fn)
@@ -274,35 +280,49 @@ def measure_wire(n_nodes: int = 8, topology: str = "ring", *,
 
 
 def run_wire(args):
-    res = measure_wire(args.wire_nodes, args.wire_topology,
-                       rounds=args.rounds)
-    ex = res["exchange"]["exchanges"]
+    per_bits = {}
     out = {
         "benchmark": "wire exchange: packed single-buffer codec vs "
                      "per-leaf, gather vs ppermute neighbor collectives "
                      f"({args.wire_topology}, N={args.wire_nodes}, "
-                     "mnist-cnn student+protos payload)",
+                     "mnist-cnn student+protos payload), per wire spec",
         "backend": jax.default_backend(),
         "config": {"nodes": args.wire_nodes,
                    "topology": args.wire_topology,
-                   "timed_rounds": args.rounds, "bits": 16},
-        **res,
+                   "timed_rounds": args.rounds,
+                   "bits": list(args.wire_bits)},
+        "per_bits": per_bits,
     }
-    print(f"codec qdq: per-leaf {res['codec']['per_leaf_ms']:7.2f} ms   "
-          f"packed {res['codec']['packed_ms']:7.2f} ms")
-    for name, rep in ex.items():
-        if "error" in rep:
-            print(f"  {name:9s} {rep['error']}")
-            continue
-        print(f"  {name:9s} {rep['collective_bytes_per_node']/1e3:9.1f} "
-              f"KB/node   {rep.get('round_ms', float('nan')):7.2f} ms/round")
-    if "ppermute" in ex and "error" not in ex["ppermute"]:
-        full = res["exchange"].get("full_gather_bytes_per_node") or 0
-        if full:
-            frac = ex["ppermute"]["collective_bytes_per_node"] / full
-            out["ppermute_vs_full_gather"] = round(frac, 4)
-            print(f"  ppermute wire = {frac:.2%} of the full-graph "
-                  f"all-gather exchange")
+    for b in args.wire_bits:
+        res = measure_wire(args.wire_nodes, args.wire_topology, bits=b,
+                           rounds=args.rounds)
+        per_bits[b] = res
+        ex = res["exchange"]["exchanges"]
+        print(f"== bits={b} ==")
+        print(f"codec qdq: per-leaf {res['codec']['per_leaf_ms']:7.2f} ms   "
+              f"packed {res['codec']['packed_ms']:7.2f} ms")
+        for name, rep in ex.items():
+            if "error" in rep:
+                print(f"  {name:9s} {rep['error']}")
+                continue
+            print(f"  {name:9s} {rep['collective_bytes_per_node']/1e3:9.1f} "
+                  f"KB/node   "
+                  f"{rep.get('round_ms', float('nan')):7.2f} ms/round")
+        if "ppermute" in ex and "error" not in ex["ppermute"]:
+            full = res["exchange"].get("full_gather_bytes_per_node") or 0
+            if full:
+                frac = ex["ppermute"]["collective_bytes_per_node"] / full
+                res["ppermute_vs_full_gather"] = round(frac, 4)
+                print(f"  ppermute wire = {frac:.2%} of the full-graph "
+                      f"all-gather exchange")
+    base = per_bits.get("16", {}).get("exchange", {}).get(
+        "exchanges", {}).get("ppermute", {}).get("collective_bytes_per_node")
+    if base:
+        for b, res in per_bits.items():
+            p = res["exchange"]["exchanges"].get("ppermute", {})
+            if "collective_bytes_per_node" in p:
+                res["ppermute_vs_int16"] = round(
+                    p["collective_bytes_per_node"] / base, 4)
     with open(args.out, "w") as f:
         json.dump(out, f, indent=2)
     print(f"wrote {args.out}")
@@ -331,6 +351,10 @@ def main():
                          "step (writes BENCH_wire_exchange.json)")
     ap.add_argument("--wire-nodes", type=int, default=8)
     ap.add_argument("--wire-topology", default="ring")
+    ap.add_argument("--wire-bits", nargs="+",
+                    default=["16", "8", "4", "4/16"],
+                    help="wire specs to sweep: 16 | 8 | 4 (uniform) or "
+                         "<student>/<protos> (mixed)")
     args = ap.parse_args()
 
     if args.wire:

@@ -57,11 +57,40 @@ def measure(dataset: str, *, nodes: int, rounds: int,
     return rows
 
 
-def physical_wire(dataset: str, nodes: int, topology: str):
+def physical_wire(dataset: str, nodes: int, topology: str, bits="16"):
     """Compile the mesh ProFe round per exchange mode on an (N, 1, 1)
     federation mesh; per-node HLO collective bytes vs the accountant."""
     from repro.launch.wire import measure_exchange_bytes
-    return measure_exchange_bytes(dataset, nodes, topology, bits=16)
+    return measure_exchange_bytes(dataset, nodes, topology, bits=bits)
+
+
+def logical_wire(dataset: str, nodes: int, topology: str, bits="16"):
+    """Accountant-only per-bits wire bytes (no compilation): logical
+    (Table II) and packed-codec predictions for one gossip round."""
+    import jax
+    import numpy as np
+    from repro.core import topology as T
+    from repro.core.comm import ScheduleCommAccountant
+    from repro.launch.wire import _student_setup
+    from repro.wirespec import WireSpec
+    spec = WireSpec.parse(bits)
+    sched = T.make_schedule(nodes, topology, rounds=1, seed=0)
+    cfg, student_cfg, struct, C = _student_setup(dataset)
+    payload = {
+        "model": jax.tree_util.tree_map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), struct),
+        "protos": jax.ShapeDtypeStruct((C, student_cfg.proto_dim),
+                                       np.dtype(np.float32)),
+        "counts": jax.ShapeDtypeStruct((C,), np.dtype(np.float32)),
+    }
+    acct = ScheduleCommAccountant(sched)
+    return {
+        "bits": spec.describe(),
+        "logical_bytes_per_node": int(acct.predicted_node_bytes(
+            payload, 0, spec, wire="dense").max()),
+        "packed_pred_bytes_per_node": int(acct.predicted_node_bytes(
+            payload, 0, spec, wire="packed").max()),
+    }
 
 
 def main():
@@ -73,10 +102,15 @@ def main():
     ap.add_argument("--physical", action="store_true",
                     help="also compile the mesh round and print physical "
                          "HLO collective bytes per exchange mode")
+    ap.add_argument("--bits", default="16",
+                    help="comma list of wire specs for the per-bits wire "
+                         "column, e.g. 16,8,4 or 16,4/16 (the first is "
+                         "the headline row)")
     ap.add_argument("--out", default="reports/table2_comm.json")
     args = ap.parse_args()
 
     nodes = 20 if args.full else 4
+    bits_list = [b.strip() for b in args.bits.split(",") if b.strip()]
     if args.physical:
         # one host device per federation node, BEFORE first jax use
         from repro.launch.wire import ensure_host_device_flag
@@ -95,21 +129,28 @@ def main():
         for algo, r in rows.items():
             print(f"  {algo:9s} {r['sent_gb']:10.4f} {r['received_gb']:10.4f} "
                   f"{r['pct_vs_fedavg']:+11.1f}%")
-        if args.physical:
-            wire = physical_wire(ds, nodes, args.topology)
-            rows["wire"] = wire
-            print(f"  profe wire, per round per node "
+        # per-bits wire column: the paper's quantization knob swept
+        # end-to-end — accountant always, compiled HLO with --physical
+        rows["wire_bits"] = {}
+        for b in bits_list:
+            if args.physical:
+                wire = physical_wire(ds, nodes, args.topology, bits=b)
+            else:
+                wire = logical_wire(ds, nodes, args.topology, bits=b)
+            rows["wire_bits"][b] = wire
+            print(f"  profe wire @ bits={b}, per round per node "
                   f"(topology={args.topology}):")
             print(f"    logical (accountant)  "
                   f"{wire['logical_bytes_per_node']/1e6:9.3f} MB   "
                   f"packed codec {wire['packed_pred_bytes_per_node']/1e6:9.3f} MB")
-            for ex, rep in wire["exchanges"].items():
+            for ex, rep in wire.get("exchanges", {}).items():
                 if "error" in rep:
                     print(f"    physical [{ex:8s}]  {rep['error']}")
                     continue
                 print(f"    physical [{ex:8s}]  "
                       f"{rep['collective_bytes_per_node']/1e6:9.3f} MB "
                       f"({', '.join(f'{k}:{int(v)}' for k, v in rep['counts'].items())} launches)")
+        rows["wire"] = rows["wire_bits"][bits_list[0]]   # headline row
     os.makedirs(os.path.dirname(args.out), exist_ok=True)
     with open(args.out, "w") as f:
         json.dump(results, f, indent=2)

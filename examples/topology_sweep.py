@@ -36,6 +36,10 @@ def main():
     ap.add_argument("--topologies", nargs="+",
                     default=["full", "ring", "dynamic:ring,star",
                              "random-k2"])
+    ap.add_argument("--bits", nargs="+", default=["16"],
+                    help="wire specs to sweep per topology (16 | 8 | 4 "
+                         "| <student>/<protos>, e.g. 4/16): quantifies "
+                         "the F1 cost of the comm-reduction knob")
     ap.add_argument("--no-physical", action="store_true",
                     help="skip the per-topology mesh-round compilation")
     args = ap.parse_args()
@@ -48,34 +52,41 @@ def main():
     train = TrainConfig(batch_size=32, learning_rate=1e-3,
                         optimizer="adamw", remat=False)
 
+    from repro.wirespec import WireSpec
     for topo in args.topologies:
         sched = T.make_schedule(args.nodes, topo, rounds=args.rounds, seed=0)
         edges = sched.directed_edge_counts()
         print(f"== {topo}: {sched.num_phases} phase(s), "
               f"{edges.tolist()} directed edges/round ==")
-        fed = FederationConfig(num_nodes=args.nodes, rounds=args.rounds,
-                               local_epochs=1, algorithm="profe",
-                               topology=topo)
-        res = run_federation(cfg, fed, train, node_data, test_d,
-                             verbose=True)
-        print(f"[{topo}] final F1 {res.f1_per_round[-1]:.3f} | "
-              f"{res.extras['avg_sent_gb'] * 1e3:.1f} MB sent/node "
-              f"(logical) | {res.elapsed_s:.0f}s")
-        if not args.no_physical and sched.num_phases == 1:
-            from repro.launch.wire import measure_exchange_bytes
-            try:
-                wire = measure_exchange_bytes("cifar10-resnet18",
-                                              args.nodes, topo)
-            except RuntimeError as e:
-                print(f"[{topo}] physical bytes skipped: {e}\n")
-                continue
-            print(f"[{topo}] wire per round/node: "
-                  f"logical {wire['logical_bytes_per_node']/1e6:.2f} MB | "
-                  + " | ".join(
-                      f"physical {ex} "
-                      f"{rep['collective_bytes_per_node']/1e6:.2f} MB"
-                      for ex, rep in wire["exchanges"].items()
-                      if "error" not in rep))
+        for bits in args.bits:
+            spec = WireSpec.parse(bits)
+            tag = f"{topo} @ {spec.describe()}"
+            fed = FederationConfig(num_nodes=args.nodes, rounds=args.rounds,
+                                   local_epochs=1, algorithm="profe",
+                                   topology=topo,
+                                   quantize_bits=spec.student_bits,
+                                   proto_quantize_bits=spec.proto_bits)
+            res = run_federation(cfg, fed, train, node_data, test_d,
+                                 verbose=True)
+            print(f"[{tag}] final F1 {res.f1_per_round[-1]:.3f} | "
+                  f"{res.extras['avg_sent_gb'] * 1e3:.1f} MB sent/node "
+                  f"(logical) | {res.elapsed_s:.0f}s")
+            if not args.no_physical and sched.num_phases == 1:
+                from repro.launch.wire import measure_exchange_bytes
+                try:
+                    wire = measure_exchange_bytes("cifar10-resnet18",
+                                                  args.nodes, topo,
+                                                  bits=spec)
+                except RuntimeError as e:
+                    print(f"[{tag}] physical bytes skipped: {e}\n")
+                    continue
+                print(f"[{tag}] wire per round/node: "
+                      f"logical {wire['logical_bytes_per_node']/1e6:.2f} MB"
+                      f" | " + " | ".join(
+                          f"physical {ex} "
+                          f"{rep['collective_bytes_per_node']/1e6:.2f} MB"
+                          for ex, rep in wire["exchanges"].items()
+                          if "error" not in rep))
         print()
 
 

@@ -181,6 +181,11 @@ class FederationConfig:
     beta_s: float = 1.0             # prototype-MSE weight (student)
     beta_t: float = 1.0             # prototype-MSE weight (teacher)
     quantize_bits: int = 16
+    # wire width of the prototypes when it differs from the student
+    # (None follows quantize_bits) — e.g. the mixed-precision wire
+    # (int4 student + int16 prototypes) is quantize_bits=4,
+    # proto_quantize_bits=16; both feed one repro.wirespec.WireSpec
+    proto_quantize_bits: Optional[int] = None
     # data split
     split: str = "iid"              # "iid"|"noniid60"|"noniid40"|"noniid20"|"dirichlet"
     dirichlet_alpha: float = 0.5

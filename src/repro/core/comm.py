@@ -18,19 +18,27 @@ FedAvg/FedProto/FML/FedGPD/ProFe comparison from either.
 from __future__ import annotations
 
 from collections import defaultdict
-from typing import Dict, Optional
+from typing import Dict, Optional, Union
 
 import numpy as np
 
 from repro.core.quantization import tree_wire_bytes
+from repro.wirespec import WireSpec, canonical_group
 
-def packed_copy_bytes(payload_tree, bits: Optional[int] = None) -> int:
+Bits = Union[int, WireSpec, None]
+
+
+def packed_copy_bytes(payload_tree, bits: Bits = None) -> int:
     """Physical bytes of ONE serialized copy under the packed node wire
-    codec: quantized float leaves ride the single 512-lane intN row
-    buffer of ``kernels/quantize/ops.pack_tree_nodes`` (whose layout
-    math this delegates to — one source of truth for lane width and row
-    alignment) with one fp32 scale per leaf; the ``counts`` vector (and
-    any non-float leaf) rides raw fp32/int.
+    codec: quantized float leaves ride the single 512-lane encoded byte
+    buffer of ``kernels/quantize/ops.pack_tree_nodes``/``encode_wire``
+    (whose layout math this delegates to — one source of truth for lane
+    width, row alignment, and per-width encoding) with one fp32 scale
+    per leaf; the ``counts`` vector (and any non-float leaf) rides raw
+    fp32/int.  ``bits`` may be a :class:`WireSpec` — each top-level leaf
+    group is counted at its own width, and leaves are ordered by wire
+    group name exactly as the mesh payload ``{"protos", "student"}``
+    packs them, so the alignment rows land on the same (last) segment.
 
     This is the per-copy number the dry-run's HLO collective-bytes
     breakdown measures; ``tree_wire_bytes`` is its logical (Table II)
@@ -40,7 +48,8 @@ def packed_copy_bytes(payload_tree, bits: Optional[int] = None) -> int:
     import jax.numpy as jnp
     from repro.kernels.quantize.ops import packed_wire_bytes_per_node
 
-    packed_leaves = []
+    spec = bits if isinstance(bits, WireSpec) else None
+    groups = []                                   # (wire-group, leaf, bits)
     raw = 0
     items = payload_tree.items() if isinstance(payload_tree, dict) \
         else [(None, payload_tree)]
@@ -53,9 +62,16 @@ def packed_copy_bytes(payload_tree, bits: Optional[int] = None) -> int:
                 raw += int(np.prod(leaf.shape, dtype=np.int64)) * \
                     np.dtype(leaf.dtype).itemsize
             else:
-                packed_leaves.append(leaf)
-    return packed_wire_bytes_per_node(packed_leaves, bits,
-                                      node_axis=False) + raw
+                g = canonical_group(key)
+                groups.append((g, leaf,
+                               spec.bits_for(g) if spec else bits))
+    # the wire payload dict flattens its keys sorted — mirror that order
+    groups.sort(key=lambda t: t[0])
+    packed_leaves = [leaf for _g, leaf, _b in groups]
+    leaf_bits = [b for _g, _leaf, b in groups] if spec else None
+    return packed_wire_bytes_per_node(
+        packed_leaves, bits if spec is None else spec.max_bits,
+        node_axis=False, leaf_bits=leaf_bits) + raw
 
 
 class CommMeter:
@@ -68,7 +84,7 @@ class CommMeter:
 
     def record_broadcast(self, sender: int, receivers, payload_tree,
                          kind: str, round_idx: int,
-                         bits: Optional[int] = None) -> int:
+                         bits: Bits = None) -> int:
         """Sender ships ``payload_tree`` to each receiver. Returns bytes/copy."""
         nbytes = tree_wire_bytes(payload_tree, bits)
         for r in receivers:
@@ -113,7 +129,7 @@ class ScheduleCommAccountant(CommMeter):
         self._in = schedule.in_degrees()        # [R, N] int64
 
     def record_round(self, payload_tree, kind: str, round_idx: int,
-                     bits: Optional[int] = None) -> int:
+                     bits: Bits = None) -> int:
         """Every node broadcasts ``payload_tree`` to that round's
         neighbors.  Returns bytes per copy."""
         nbytes = tree_wire_bytes(payload_tree, bits)
@@ -129,7 +145,7 @@ class ScheduleCommAccountant(CommMeter):
         return nbytes
 
     def predicted_node_bytes(self, payload_tree, round_idx: int,
-                             bits: Optional[int] = None,
+                             bits: Bits = None,
                              wire: str = "dense") -> np.ndarray:
         """Per-node bytes *sent* in one round without mutating the
         counters: ``out_degree x bytes-per-copy``.  ``wire="dense"`` is

@@ -66,6 +66,7 @@ from repro.data import batches
 from repro.data.loader import batch_index_lists
 from repro.models import derive_student, forward, init_params
 from repro.optim import make_optimizer
+from repro.wirespec import WireSpec
 
 
 @dataclass
@@ -112,17 +113,21 @@ def _eval_params(cfg: ModelConfig, params, test_data, batch_size: int = 256):
 def _algo_wiring(algo: str, teacher_cfg: ModelConfig,
                  student_cfg: ModelConfig, fed: FederationConfig,
                  train: TrainConfig, opt_s, opt_t, *, jit: bool):
-    """Returns (step, wire_model, share_protos, bits, model_cfgs).
+    """Returns (step, wire_model, share_protos, wire, model_cfgs).
 
     wire_cfg: which model travels; share_protos: prototypes on the wire;
-    bits: wire precision for float tensors (None = fp32).
+    wire: the :class:`repro.wirespec.WireSpec` of the payload (None =
+    fp32 wire) — per-group widths from ``fed.quantize_bits`` /
+    ``fed.proto_quantize_bits``.
     """
     remat = train.remat
     if algo == "profe":
         step = make_profe_step(teacher_cfg, student_cfg, fed, opt_s, opt_t,
                                grad_clip=train.grad_clip, remat=remat, jit=jit)
-        return step, "student", True, fed.quantize_bits, \
-            (teacher_cfg, student_cfg)
+        wire = WireSpec(student_bits=fed.quantize_bits,
+                        proto_bits=fed.proto_quantize_bits) \
+            if fed.quantize_bits else None
+        return step, "student", True, wire, (teacher_cfg, student_cfg)
     if algo == "fedavg":
         step = B.make_fedavg_step(teacher_cfg, opt_s,
                                   grad_clip=train.grad_clip, remat=remat,
@@ -269,7 +274,7 @@ def _scan(body, init, xs, length: int, *, unroll_cap: Optional[int] = None):
 
 def _make_round_fn(step: Callable, proto_cfg: ModelConfig, ncls: int, *,
                    share_protos: bool, wire_model: Optional[str],
-                   bits: Optional[int]):
+                   bits: Optional[int] | WireSpec):
     """One full federation round as a single compiled program over
     stacked node state: scan(vmap(step)) → scanned Eq. 3 einsum →
     round_ops gossip/aggregate.  ``teacher_on`` is a static arg (two
@@ -329,18 +334,19 @@ def _make_round_fn(step: Callable, proto_cfg: ModelConfig, ncls: int, *,
         #    and prototypes ride ONE [N, R, 512] buffer with per-(leaf,
         #    node) segment scales, exactly what the mesh path's sparse
         #    exchange physically moves (bit-identical to per-leaf codes).
-        if wire_model is not None and bits and share_protos:
+        spec = WireSpec.from_bits(bits) if bits else None
+        if wire_model is not None and spec and share_protos:
             recv = R.quantize_dequantize_per_node(
-                {"protos": protos, "student": state.student}, bits)
+                {"protos": protos, "student": state.student}, spec=spec)
             recv_student, protos_rx = recv["student"], recv["protos"]
         else:
-            recv_student = (R.quantize_dequantize_per_node(state.student,
-                                                           bits)
-                            if (wire_model is not None and bits)
-                            else state.student)
+            recv_student = (R.quantize_dequantize_per_node(
+                state.student, spec.bits_for("student"))
+                if (wire_model is not None and spec)
+                else state.student)
             protos_rx = (R.dequantize_leaf(
-                *R.quantize_leaf_per_node(protos, bits))
-                if (share_protos and bits) else
+                *R.quantize_leaf_per_node(protos, spec.bits_for("protos")))
+                if (share_protos and spec) else
                 (protos if share_protos else None))
         if wire_model is not None:
             state = state._replace(student=R.mix_node_trees(
@@ -579,7 +585,8 @@ def run_federation_loop(teacher_cfg: ModelConfig, fed: FederationConfig,
             meter.record_broadcast(i, neigh, payload, kind=algo, round_idx=rnd,
                                    bits=bits)
             if wire_model is not None:
-                model_rx = quantize_dequantize_tree(states[i].student, bits) \
+                model_rx = quantize_dequantize_tree(
+                    states[i].student, bits.bits_for("student")) \
                     if bits else states[i].student
                 for j in neigh:
                     recv_models[j].append(model_rx)
@@ -587,8 +594,8 @@ def run_federation_loop(teacher_cfg: ModelConfig, fed: FederationConfig,
 
         # 4) aggregation
         if share_protos:
-            protos_rx = [quantize_dequantize_tree(p, bits) if bits else p
-                         for p in protos]
+            protos_rx = [quantize_dequantize_tree(p, bits.bits_for("protos"))
+                         if bits else p for p in protos]
             all_p = jnp.stack(protos_rx)
             all_c = jnp.stack(counts)
             for i in range(n_nodes):

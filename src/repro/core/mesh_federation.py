@@ -11,10 +11,16 @@ shared stacked-node-state core in :mod:`repro.core.round_ops`; the wire
 codec is the packed node format of :mod:`repro.kernels.quantize.ops`.
 
 **Wire content.**  The whole quantized payload of one node — student
-leaves *and* prototypes — is ONE contiguous ``[N, R, 512]`` int16 buffer
-plus per-(leaf, node) segment scales ``[N, T]`` (``pack_tree_nodes`` /
-``quantize_packed_buffer``).  The exchange therefore costs one
-collective launch per round, not one per leaf, and the receiver applies
+leaves *and* prototypes — is ONE contiguous byte buffer: the packed
+``[N, R, 512]`` code buffer (``pack_tree_nodes`` /
+``quantize_packed_buffer``) serialized by ``encode_wire`` to ``[N, B]``
+int8, where ``B`` is exactly the bytes of the
+:class:`repro.wirespec.WireSpec` in force — int16/int8 rows bitcast,
+int4 rows nibble-packed two codes per byte, mixed precision (e.g. int4
+student + int16 prototypes) segment by segment — plus per-(leaf, node)
+segment scales ``[N, T]``.  The exchange therefore costs one collective
+launch per round, not one per leaf, its payload shrinks with the spec
+(int4 == 0.25x the int16 bytes), and the receiver decodes and applies
 ``w_self`` / ``w_neigh`` *directly on packed codes* (fused
 dequant-and-accumulate, ``mix_packed`` — a single Pallas launch on TPU).
 
@@ -29,8 +35,8 @@ dequant-and-accumulate, ``mix_packed`` — a single Pallas launch on TPU).
   ``comm.ScheduleCommAccountant`` charges (asserted by
   ``launch/dryrun.py --topology``).  Requires one device per node on the
   pod axis (federation meshes; multi-axis pods keep the gather exchange).
-* ``"packed"`` — one all-gather of the single int16 buffer over the pod
-  axis, then the masked weighted mix on the gathered codes.  The
+* ``"packed"`` — one all-gather of the single encoded byte buffer over
+  the pod axis, then the masked weighted mix on the decoded codes.  The
   gather-subset fallback for irregular graphs and the full-graph / legacy
   protocol path (where O(N) physical bytes *are* the logical cost).
 * ``"gather"`` — the PR-2 reference: per-leaf all-gather of shape-
@@ -69,6 +75,7 @@ from repro.core.round_ops import (dequantize_leaf, gossip_matrix_dyn,
                                   neighborhood_prototype_aggregate,
                                   quantize_leaf_per_node, weighted_node_mean)
 from repro.kernels.quantize import ops as Q
+from repro.wirespec import WireSpec, resolve_spec
 
 EXCHANGES = ("auto", "gather", "packed", "ppermute")
 
@@ -143,7 +150,7 @@ def _proto_recipe(payload, meta, key: str = "protos"):
     by its key path in the payload tree (recipe order == float-leaf
     flatten order, so sort-order assumptions never slice student rows
     as prototypes)."""
-    _treedef, recipe, _seg, _n = meta
+    recipe = meta[1]
     target = None
     idx = 0
     for path, leaf in jax.tree_util.tree_flatten_with_path(payload)[0]:
@@ -191,7 +198,8 @@ def _step_weight(src, me, w_row):
 
 def make_profe_round(mesh, student_specs, bits: int = 16,
                      adjacency: Optional[np.ndarray] = None,
-                     exchange: str = "auto"):
+                     exchange: str = "auto",
+                     spec: Optional[WireSpec] = None):
     """Returns round_fn(students, protos, counts, sizes) for stacked
     node state; students leaves [N, ...] sharded P("pod", *student_spec).
 
@@ -208,34 +216,58 @@ def make_profe_round(mesh, student_specs, bits: int = 16,
 
     ``exchange`` picks the wire mechanism (see module docstring); all
     modes are numerically equivalent — only the physical bytes differ.
+    ``spec`` (a :class:`repro.wirespec.WireSpec`) sets the wire format —
+    per-group widths incl. int8/int4 and mixed precision; ``bits`` is
+    the uniform shorthand it defaults from.
     """
+    wire = spec if spec is not None else WireSpec.from_bits(bits)
     adj = None if adjacency is None else np.asarray(adjacency)
     mode = _resolve_exchange(exchange, adj, mesh)
     if mode == "gather":
-        return _make_profe_round_gather(mesh, student_specs, bits, adj)
+        return _make_profe_round_gather(mesh, student_specs, wire, adj)
     if mode == "ppermute":
-        return _make_profe_round_ppermute(mesh, student_specs, bits, adj)
-    return _make_profe_round_packed(mesh, student_specs, bits, adj)
+        return _make_profe_round_ppermute(mesh, student_specs, wire, adj)
+    return _make_profe_round_packed(mesh, student_specs, wire, adj)
 
 
-def _make_profe_round_packed(mesh, student_specs, bits: int, adj):
-    """Packed single-buffer exchange: quantize+pack -> ONE all-gather of
-    the [N, R, 512] int16 buffer over the pod axis -> fused weighted mix
-    on the gathered codes -> unpack."""
+def _make_profe_round_packed(mesh, student_specs, wire: WireSpec, adj):
+    """Packed single-buffer exchange: quantize+pack+encode -> ONE
+    all-gather of the [N, B] spec-byte wire buffer over the pod axis ->
+    decode -> fused weighted mix on the codes -> unpack."""
     include = None if adj is None else include_matrix(adj)
 
     def round_fn(students, protos, counts, sizes):
         n = counts.shape[0]
         payload = {"protos": protos, "student": students}
-        buf, seg_ids, meta = Q.pack_tree_nodes(payload)
+        buf, seg_ids, meta = Q.pack_tree_nodes(payload, wire)
+        seg_bits = meta[4]
         buf = _constrain_buf(mesh, buf, "pod")
         # jnp codec flavor: GSPMD partitions it over the mesh (the
         # Pallas kernels run per-device under shard_map, see ppermute)
         codes, scales = Q.quantize_packed_buffer(buf, seg_ids, meta[2],
-                                                 bits, use_kernels=False)
+                                                 seg_bits=seg_bits,
+                                                 use_kernels=False)
 
-        # the exchange: ONE all-gather of int16 codes over the pod axis
-        codes = _constrain_buf(mesh, codes, None)
+        # the exchange: ONE all-gather of the encoded [N, B] byte
+        # buffer over the pod axis — B is exactly the spec bytes
+        # (int16 rows bitcast, int4 rows nibble-packed).  The encode
+        # runs per device under shard_map: its bitcast/nibble ops have
+        # no GSPMD propagation rule, and left unconstrained XLA gathers
+        # the *container*-width codes instead of the spec bytes.
+        if _inner_size(mesh) == 1:
+            enc = shard_map(
+                lambda c: Q.encode_wire(c, seg_ids, seg_bits=seg_bits),
+                mesh=mesh, in_specs=(P("pod", None, None),),
+                out_specs=P("pod", None), check_rep=False)
+            wire_buf = _constrain_buf(mesh, enc(codes), None)
+            codes = Q.decode_wire(wire_buf, seg_ids, seg_bits=seg_bits)
+            codes = jax.lax.with_sharding_constraint(
+                codes, NamedSharding(mesh, P(None, None, None)))
+        else:
+            # multi-axis pods keep the PR-3 container-width gather (the
+            # rows stay sharded over the inner axes; per-pod wire bytes
+            # are not asserted on this fallback path)
+            codes = _constrain_buf(mesh, codes, None)
         scales = _constrain_buf(mesh, scales, None)
         counts_r = jax.lax.with_sharding_constraint(
             counts, NamedSharding(mesh, P(None, None)))
@@ -278,24 +310,30 @@ def _make_profe_round_packed(mesh, student_specs, bits: int, adj):
     return round_fn
 
 
-def _make_profe_round_ppermute(mesh, student_specs, bits: int,
+def _make_profe_round_ppermute(mesh, student_specs, wire: WireSpec,
                                adj: np.ndarray):
     """Physical sparse gossip: degree-many ``jax.lax.ppermute`` steps of
-    the packed int16 buffer on the pod axis (one device per node), fused
-    dequant-and-accumulate receiver side.  Wire bytes per node per round
-    = steps x |packed payload| = exactly what the accountant charges."""
+    the encoded wire byte buffer on the pod axis (one device per node),
+    fused dequant-and-accumulate receiver side.  Wire bytes per node per
+    round = steps x |spec-encoded payload| = exactly what the accountant
+    charges — int4 rows physically move a quarter of the int16 bytes."""
     perms, srcs = _perm_lowering(adj)
 
     def round_fn(students, protos, counts, sizes):
         payload = {"protos": protos, "student": students}
-        buf, seg_ids, meta = Q.pack_tree_nodes(payload)
+        buf, seg_ids, meta = Q.pack_tree_nodes(payload, wire)
+        seg_bits = meta[4]
         buf = _constrain_buf(mesh, buf, "pod")
         codes, scales = Q.quantize_packed_buffer(buf, seg_ids, meta[2],
-                                                 bits, use_kernels=False)
+                                                 seg_bits=seg_bits,
+                                                 use_kernels=False)
         w_self_v, w_neigh = gossip_matrix_dyn(adj, sizes)
         prow, pnrows, pshape = _proto_recipe(payload, meta)
         ccls, pdim = pshape[1], pshape[2]
         ids = jnp.asarray(seg_ids)
+
+        def decode(w):
+            return Q.decode_wire(w, seg_ids, seg_bits=seg_bits)
 
         @partial(shard_map, mesh=mesh,
                  in_specs=(P("pod", None, None), P("pod", None, None),
@@ -306,11 +344,18 @@ def _make_profe_round_ppermute(mesh, student_specs, bits: int,
                  check_rep=False)
         def exchange(own_buf, codes, scales, counts, w_self, w_row):
             me = jax.lax.axis_index("pod")
-            # neighbor collectives: one ppermute of the packed int16
-            # buffer (+ its scales and counts) per permutation step
+            # serialize to the wire byte layout per device (inside the
+            # shard_map: the encode's bitcast/nibble ops have no GSPMD
+            # rule, and outside it XLA would replicate the codes —
+            # gathering container bytes instead of spec bytes); the
+            # decode of a permuted buffer is the receiver's exact view
+            # of the codes, so the own copy skips the round-trip.
+            wire_bytes = Q.encode_wire(codes, seg_ids, seg_bits=seg_bits)
+            # neighbor collectives: one ppermute of the encoded wire
+            # byte buffer (+ its scales and counts) per permutation step
             recv = []
             for step, src in zip(perms, srcs):
-                rc = jax.lax.ppermute(codes, "pod", step)
+                rc = decode(jax.lax.ppermute(wire_bytes, "pod", step))
                 rs = jax.lax.ppermute(scales, "pod", step)
                 rcnt = jax.lax.ppermute(counts, "pod", step)
                 valid, w_p = _step_weight(src, me, w_row)
@@ -355,16 +400,19 @@ def _make_profe_round_ppermute(mesh, student_specs, bits: int,
     return round_fn
 
 
-def _make_profe_round_gather(mesh, student_specs, bits: int, adj):
+def _make_profe_round_gather(mesh, student_specs, wire: WireSpec, adj):
     """PR-2 reference exchange: per-leaf all-gather of shape-preserving
-    int16 codes over the pod axis + masked ``mix_node_trees``.  The
-    semantics oracle the packed/ppermute paths are asserted against."""
+    intN codes over the pod axis + masked ``mix_node_trees``.  The
+    semantics oracle the packed/ppermute paths are asserted against;
+    each leaf group quantizes at its spec width."""
     include = None if adj is None else include_matrix(adj)
+    s_bits = wire.bits_for("student")
+    p_bits = wire.bits_for("protos")
 
     def round_fn(students, protos, counts, sizes):
         # 1. quantize per node (vmapped math, stays in-pod)
         q = jax.tree_util.tree_map(
-            lambda x: quantize_leaf_per_node(x, bits), students,
+            lambda x: quantize_leaf_per_node(x, s_bits), students,
             is_leaf=lambda x: hasattr(x, "shape"))
         codes = jax.tree_util.tree_map(lambda t: t[0], q,
                                        is_leaf=lambda t: isinstance(t, tuple))
@@ -376,7 +424,7 @@ def _make_profe_round_gather(mesh, student_specs, bits: int, adj):
         scales = jax.tree_util.tree_map(
             lambda d: jax.lax.with_sharding_constraint(
                 d, NamedSharding(mesh, P(None))), scales)
-        pq, pd = quantize_leaf_per_node(protos, bits)
+        pq, pd = quantize_leaf_per_node(protos, p_bits)
         pq = jax.lax.with_sharding_constraint(
             pq, NamedSharding(mesh, P(None, None, None)))
         counts_r = jax.lax.with_sharding_constraint(

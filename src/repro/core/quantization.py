@@ -15,22 +15,31 @@ from typing import Any, Dict, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.wirespec import WireSpec
+
 
 def _qmax(bits: int) -> int:
-    return (1 << (bits - 1)) - 1        # 32767 for 16-bit
+    return (1 << (bits - 1)) - 1        # 32767 for 16-bit, 7 for 4-bit
 
 
-_INT_DTYPES = {8: jnp.int8, 16: jnp.int16, 32: jnp.int32}
+# narrowest container holding the codes; int4 codes ride int8 in memory
+# (the packed wire codec nibble-packs them to true half-bytes on the wire)
+_INT_DTYPES = {4: jnp.int8, 8: jnp.int8, 16: jnp.int16, 32: jnp.int32}
 
 
-def quantize_array(x, bits: int = 16) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """-> (codes intN, scale fp32 scalar). Non-float arrays pass through."""
+def quantize_array(x, bits: int = 16, *, rng=None
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """-> (codes intN, scale fp32 scalar). Non-float arrays pass through.
+    ``rng`` switches to stochastic rounding (``floor(x/Δ + U[0,1))`` —
+    unbiased codes instead of nearest)."""
     if not jnp.issubdtype(x.dtype, jnp.floating):
         return x, jnp.float32(1.0)
     qm = _qmax(bits)
     amax = jnp.max(jnp.abs(x.astype(jnp.float32)))
     delta = jnp.maximum(amax / qm, jnp.finfo(jnp.float32).tiny)
-    codes = jnp.floor(x.astype(jnp.float32) / delta + 0.5)
+    offset = 0.5 if rng is None else \
+        jax.random.uniform(rng, x.shape, jnp.float32)
+    codes = jnp.floor(x.astype(jnp.float32) / delta + offset)
     codes = jnp.clip(codes, -qm - 1, qm).astype(_INT_DTYPES[bits])
     return codes, delta
 
@@ -73,15 +82,23 @@ def quantize_dequantize_tree(tree, bits: int = 16):
 # ---------------------------------------------------------------------------
 
 def array_wire_bytes(x, bits: int | None = None) -> int:
-    """Serialized size of one array; ``bits`` overrides float width."""
+    """Serialized size of one array; ``bits`` overrides float width
+    (int4 counts a true half-byte per value, rounded up)."""
     if jnp.issubdtype(x.dtype, jnp.floating) and bits is not None:
-        return x.size * bits // 8
+        return -(-x.size * bits // 8)
     return x.size * x.dtype.itemsize
 
 
-def tree_wire_bytes(tree, bits: int | None = None) -> int:
+def tree_wire_bytes(tree, bits: int | None | WireSpec = None) -> int:
     """Bytes on the wire for a payload tree (+4 per quantized tensor for
-    the fp32 scale when ``bits`` is set)."""
+    the fp32 scale when ``bits`` is set).  A :class:`WireSpec` resolves
+    each leaf's width from its top-level payload key (``"model"`` /
+    ``"protos"`` / ...), so mixed-precision payloads account each group
+    at its own width."""
+    if isinstance(bits, WireSpec):
+        items = tree.items() if isinstance(tree, dict) else [(None, tree)]
+        return sum(tree_wire_bytes(sub, bits.bits_for(key))
+                   for key, sub in items)
     total = 0
     for leaf in jax.tree_util.tree_leaves(tree):
         if not hasattr(leaf, "dtype"):

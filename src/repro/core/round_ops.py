@@ -32,7 +32,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.quantization import _qmax
+from repro.core.quantization import _INT_DTYPES, _qmax
+from repro.wirespec import WireSpec
 
 
 def _is_array(x) -> bool:
@@ -49,7 +50,10 @@ def _is_float(x) -> bool:
 
 def quantize_leaf_per_node(x, bits: int):
     """x: [N, ...] fp — quantize each node's slice independently.
-    Returns (codes int16 [N, ...], scales fp32 [N]).
+    Returns (codes intN [N, ...], scales fp32 [N]); the code container
+    is the narrowest int dtype that holds ``bits`` (int8 for 4/8-bit,
+    int16 for 16-bit), so the gather exchange's wire dtype follows the
+    spec width.
 
     Shape-preserving (no reshape): flattening a sharded tensor would
     force GSPMD to replicate it, which would silently inflate the wire
@@ -62,7 +66,7 @@ def quantize_leaf_per_node(x, bits: int):
     delta = jnp.maximum(amax / qm, jnp.finfo(jnp.float32).tiny)   # [N]
     bshape = (x.shape[0],) + (1,) * (x.ndim - 1)
     codes = jnp.floor(x32 / delta.reshape(bshape) + 0.5)
-    codes = jnp.clip(codes, -qm - 1, qm).astype(jnp.int16)
+    codes = jnp.clip(codes, -qm - 1, qm).astype(_INT_DTYPES[bits])
     return codes, delta
 
 
@@ -72,9 +76,10 @@ def dequantize_leaf(codes, delta):
     return codes.astype(jnp.float32) * delta.reshape(bshape)
 
 
-def quantize_dequantize_per_node(tree, bits: int, *,
+def quantize_dequantize_per_node(tree, bits: int = 16, *,
+                                 spec: Optional[WireSpec] = None,
                                  use_kernels: Optional[bool] = None,
-                                 packed: bool = True):
+                                 packed: bool = True, rng=None):
     """Receiver-side reconstruction of a stacked pytree: every float
     leaf [N, ...] goes through per-node codes and back to fp32.
     Non-float leaves pass through untouched.
@@ -83,18 +88,34 @@ def quantize_dequantize_per_node(tree, bits: int, *,
     (``kernels/quantize/ops.pack_tree_nodes``): the same single
     ``[N, R, 512]`` buffer + per-(leaf, node) segment scales the mesh
     path physically exchanges, so the simulator, the dry-run, and the
-    byte accounting all describe one wire format.  Pallas kernels on TPU
-    (``use_kernels`` defaults to the backend check), jnp elsewhere —
-    bit-identical to the per-leaf math (``packed=False``), asserted in
-    tests.
+    byte accounting all describe one wire format.  A :class:`WireSpec`
+    quantizes each top-level leaf group at its own width (the
+    mixed-precision wire); a bare ``bits`` int is the uniform special
+    case.  Pallas kernels on TPU (``use_kernels`` defaults to the
+    backend check), jnp elsewhere — bit-identical to the per-leaf math
+    (``packed=False``), asserted in tests.
     """
     if use_kernels is None:
         use_kernels = jax.default_backend() == "tpu"
+    if spec is not None and spec.uniform_bits is not None:
+        bits = spec.uniform_bits
     if packed and any(_is_float(x) for x in jax.tree_util.tree_leaves(tree)):
         from repro.kernels.quantize.ops import (
             quantize_dequantize_tree_packed_nodes)
         return quantize_dequantize_tree_packed_nodes(
-            tree, bits, use_kernels=use_kernels)
+            tree, bits, spec=spec, use_kernels=use_kernels, rng=rng)
+    if spec is not None and spec.uniform_bits is None:
+        # per-leaf reference of the mixed wire: group width from the
+        # leaf's top-level payload key — one source of truth with the
+        # packed codec's layout (ops._leaf_group)
+        from repro.kernels.quantize.ops import _leaf_group
+
+        def rt_path(path, x):
+            if not _is_float(x):
+                return x
+            b = spec.bits_for(_leaf_group(path))
+            return dequantize_leaf(*quantize_leaf_per_node(x, b))
+        return jax.tree_util.tree_map_with_path(rt_path, tree)
     if use_kernels:
         from repro.kernels.quantize.ops import quantize_dequantize_tree_packed
         return quantize_dequantize_tree_packed(tree, bits, node_axis=True)

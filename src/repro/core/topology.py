@@ -231,10 +231,19 @@ class TopologySchedule:
         # different edge-direction conventions (gossip rows vs delivery
         # columns), which only coincide on undirected graphs.  Directed
         # push-sum gossip is a named follow-up; admitting an asymmetric
-        # stack today would silently desynchronize them.
-        if not (s == s.transpose(0, 2, 1)).all():
-            raise ValueError("adjacency must be symmetric (directed gossip "
-                             "is not supported yet)")
+        # stack today would silently desynchronize them.  Name the first
+        # offending phase (and one offending edge) so a bad time-varying
+        # schedule is debuggable without bisecting the stack by hand.
+        asym = (s != s.transpose(0, 2, 1)).any(axis=(1, 2))
+        if asym.any():
+            p = int(np.nonzero(asym)[0][0])
+            # name an edge that is PRESENT without its reverse (not the
+            # missing direction): s & ~s.T is exactly the one-way edges
+            i, j = (int(x[0]) for x in np.nonzero(s[p] & ~s[p].T)[:2])
+            raise ValueError(
+                f"adjacency must be symmetric (directed gossip is not "
+                f"supported yet): round/phase {p} has edge ({i}, {j}) "
+                f"without its reverse")
         object.__setattr__(self, "stack", s)
 
     @property

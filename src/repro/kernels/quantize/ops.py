@@ -18,7 +18,7 @@ Pads arbitrary tensors to (8,128)-aligned 2-D, runs the Pallas kernels
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict, List, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -30,8 +30,10 @@ from repro.kernels.quantize.quantize import (dequantize_pallas,
                                              fused_quantize_pallas,
                                              mix_packed_pallas,
                                              quantize_dequantize_rows_pallas,
+                                             quantize_rows_mixed_pallas,
                                              quantize_rows_pallas,
                                              rowabs_pallas)
+from repro.wirespec import WireSpec, canonical_group
 
 _COLS = 512
 
@@ -249,17 +251,35 @@ def quantize_dequantize_tree_packed(tree, bits: int = 16, *,
 # ---------------------------------------------------------------------------
 # The physical wire payload of the sparse-gossip exchange: every float
 # leaf of a stacked [N, ...] pytree is flattened into node-major rows so
-# slice [i] is node i's whole serialized payload — ONE contiguous int16
+# slice [i] is node i's whole serialized payload — ONE contiguous wire
 # buffer travels per round (one collective launch) instead of one tensor
 # per leaf, with per-(leaf, node) segment scales [N, T] riding alongside.
-# Bit-identical to quantizing each leaf's node slice alone
-# (``round_ops.quantize_leaf_per_node``), asserted in tests.
+# The wire format is parametric in a ``repro.wirespec.WireSpec``: codes
+# are serialized by :func:`encode_wire` into a single ``[N, B]`` int8
+# byte buffer — int16/int8 segments bitcast, int4 segments nibble-packed
+# two codes per byte — so an int4 payload physically moves a quarter of
+# the int16 bytes and mixed precision (int4 student + int16 prototypes)
+# still rides one collective.  Bit-identical to quantizing each leaf's
+# node slice alone (``round_ops.quantize_leaf_per_node``), asserted in
+# tests; at uniform int16 the encoded bytes are byte-identical to the
+# legacy int16 code buffer.
 
 def _wire_int_dtype(bits: int):
-    return {8: jnp.int8, 16: jnp.int16, 32: jnp.int32}[bits]
+    """Narrowest in-memory container for intN codes (int4 rides int8)."""
+    return {4: jnp.int8, 8: jnp.int8, 16: jnp.int16, 32: jnp.int32}[bits]
 
 
-def pack_tree_nodes(tree):
+def _leaf_group(path) -> str:
+    """Top-level payload key of a leaf path — the WireSpec group."""
+    if not path:
+        return "student"
+    key = getattr(path[0], "key", None)
+    if key is None:
+        key = getattr(path[0], "name", None)
+    return canonical_group(str(key) if key is not None else "")
+
+
+def pack_tree_nodes(tree, spec: Optional[WireSpec] = None):
     """Flatten every float leaf ``[N, ...]`` into one ``[N, R, _COLS]``
     fp32 buffer (node axis leading, so it shards/permutes over the pod
     axis untouched).
@@ -269,15 +289,21 @@ def pack_tree_nodes(tree):
     (identical for every node — the layout is node-uniform).  Alignment
     rows pad R to a multiple of 8 and are tagged with the last segment
     (zeros cannot raise its absmax; their codes are discarded at unpack).
+
+    ``meta`` is ``(treedef, recipe, n_seg, n_nodes, seg_bits)`` where
+    ``seg_bits`` is the per-segment wire width ``[n_seg]`` resolved from
+    ``spec`` by each leaf's top-level payload key (None when no spec —
+    the caller picks a uniform width at quantize time).
     """
-    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
     n_nodes = None
     parts: List[jnp.ndarray] = []
     seg_parts: List[np.ndarray] = []
+    seg_bits: List[int] = []
     recipe = []
     seg = 0
     row = 0
-    for leaf in leaves:
+    for path, leaf in flat:
         is_float = hasattr(leaf, "dtype") and \
             jnp.issubdtype(leaf.dtype, jnp.floating)
         if not is_float:
@@ -293,13 +319,15 @@ def pack_tree_nodes(tree):
         per = 1
         for s in leaf.shape[1:]:
             per *= s
-        flat = leaf.reshape(n, per).astype(jnp.float32)
+        flat_leaf = leaf.reshape(n, per).astype(jnp.float32)
         pad = (-per) % _COLS
         if pad:
-            flat = jnp.pad(flat, ((0, 0), (0, pad)))
-        rows = flat.reshape(n, -1, _COLS)                 # [N, r_leaf, C]
+            flat_leaf = jnp.pad(flat_leaf, ((0, 0), (0, pad)))
+        rows = flat_leaf.reshape(n, -1, _COLS)            # [N, r_leaf, C]
         r_leaf = rows.shape[1]
         seg_parts.append(np.full((r_leaf,), seg, np.int32))
+        if spec is not None:
+            seg_bits.append(spec.bits_for(_leaf_group(path)))
         recipe.append(("packed", leaf.shape, leaf.dtype, row, r_leaf, seg))
         parts.append(rows)
         seg += 1
@@ -313,12 +341,13 @@ def pack_tree_nodes(tree):
         buf = jnp.pad(buf, ((0, 0), (0, rpad), (0, 0)))
         seg_ids = np.concatenate([seg_ids,
                                   np.full((rpad,), seg - 1, np.int32)])
-    return buf, seg_ids, (treedef, tuple(recipe), seg, n_nodes)
+    bits_arr = np.asarray(seg_bits, np.int32) if spec is not None else None
+    return buf, seg_ids, (treedef, tuple(recipe), seg, n_nodes, bits_arr)
 
 
 def unpack_tree_nodes(buf, meta):
     """Inverse of :func:`pack_tree_nodes` (float leaves come back fp32)."""
-    treedef, recipe, _seg, _n = meta
+    treedef, recipe = meta[0], meta[1]
     leaves = []
     for item in recipe:
         if item[0] == "raw":
@@ -334,11 +363,23 @@ def unpack_tree_nodes(buf, meta):
     return jax.tree_util.tree_unflatten(treedef, leaves)
 
 
+def _seg_qmax(n_seg: int, bits: int, seg_bits: Optional[np.ndarray]
+              ) -> np.ndarray:
+    """Static per-segment qmax [T]: mixed widths from ``seg_bits``,
+    else the uniform ``bits``."""
+    if seg_bits is None:
+        return np.full((n_seg,), (1 << (bits - 1)) - 1, np.float32)
+    return ((1 << (np.asarray(seg_bits, np.int64) - 1)) - 1
+            ).astype(np.float32)
+
+
 def _node_row_deltas(buf, seg_ids, n_seg: int, bits: int,
-                     use_kernels: bool):
+                     use_kernels: bool,
+                     seg_bits: Optional[np.ndarray] = None):
     """Per-(node, leaf) Δ: one row-absmax sweep + a tiny per-node
-    segment-max.  Returns (scales [N, T] fp32, row_delta [N, R] fp32)."""
-    qmax = (1 << (bits - 1)) - 1
+    segment-max.  Returns (scales [N, T] fp32, row_delta [N, R] fp32).
+    ``seg_bits`` makes Δ per-segment-width (mixed-precision specs)."""
+    qmax = _seg_qmax(n_seg, bits, seg_bits)                       # [T]
     n, r, _c = buf.shape
     if use_kernels:
         row_amax = rowabs_pallas(buf.reshape(n * r, _c),
@@ -349,42 +390,180 @@ def _node_row_deltas(buf, seg_ids, n_seg: int, bits: int,
     seg_amax = jax.vmap(lambda ra: jax.ops.segment_max(
         ra, ids, num_segments=n_seg, indices_are_sorted=True))(row_amax)
     seg_amax = jnp.maximum(seg_amax, 0.0)
-    deltas = jnp.maximum(seg_amax / qmax, jnp.finfo(jnp.float32).tiny)
+    deltas = jnp.maximum(seg_amax / qmax[None, :],
+                         jnp.finfo(jnp.float32).tiny)
     return deltas, deltas[:, seg_ids]                             # [N,T],[N,R]
 
 
 def quantize_packed_buffer(buf, seg_ids, n_seg: int, bits: int = 16, *,
-                           use_kernels: Optional[bool] = None):
+                           seg_bits: Optional[np.ndarray] = None,
+                           use_kernels: Optional[bool] = None,
+                           rng=None):
     """Quantize an already-packed ``[N, R, C]`` buffer.  Returns
-    ``(codes [N, R, C] wire-intN, scales [N, T] fp32)``."""
+    ``(codes [N, R, C] wire-intN, scales [N, T] fp32)``.
+
+    ``seg_bits`` (``[n_seg]`` static ints) quantizes each segment at its
+    own width in the same sweep — the codes land in the narrowest
+    container that holds the widest segment; :func:`encode_wire`
+    serializes them to their true per-segment wire bytes.  ``rng``
+    enables stochastic rounding (``floor(x/Δ + U[0,1))``, unbiased;
+    jnp path only).
+    """
     if use_kernels is None:
         use_kernels = jax.default_backend() == "tpu"
     n, r, c = buf.shape
     deltas, row_delta = _node_row_deltas(buf, seg_ids, n_seg, bits,
-                                         use_kernels)
-    if use_kernels:
-        codes = quantize_rows_pallas(buf.reshape(n * r, c),
-                                     row_delta.reshape(n * r, 1), bits=bits,
-                                     interpret=_interpret()).reshape(n, r, c)
+                                         use_kernels, seg_bits)
+    row_qmax = _seg_qmax(n_seg, bits, seg_bits)[seg_ids]          # [R]
+    max_bits = int(np.max(seg_bits)) if seg_bits is not None else bits
+    if use_kernels and rng is None:
+        if seg_bits is None or len(set(seg_bits.tolist())) == 1:
+            codes = quantize_rows_pallas(
+                buf.reshape(n * r, c), row_delta.reshape(n * r, 1),
+                bits=int(seg_bits[0]) if seg_bits is not None else bits,
+                interpret=_interpret()).reshape(n, r, c)
+        else:
+            qm_col = jnp.asarray(np.tile(row_qmax, n)[:, None])
+            codes = quantize_rows_mixed_pallas(
+                buf.reshape(n * r, c), row_delta.reshape(n * r, 1),
+                qm_col, interpret=_interpret()).reshape(n, r, c)
     else:
-        qm = (1 << (bits - 1)) - 1
-        codes = jnp.floor(buf / row_delta[:, :, None] + 0.5)
+        offset = 0.5 if rng is None else \
+            jax.random.uniform(rng, buf.shape, jnp.float32)
+        codes = jnp.floor(buf / row_delta[:, :, None] + offset)
+        qm = jnp.asarray(row_qmax)[None, :, None]
         codes = jnp.clip(codes, -qm - 1, qm)
-    return codes.astype(_wire_int_dtype(bits)), deltas
+    return codes.astype(_wire_int_dtype(max_bits)), deltas
+
+
+# -- the serialized wire byte buffer ----------------------------------------
+
+def _row_bits(seg_ids, bits, seg_bits) -> np.ndarray:
+    sb = np.asarray(seg_bits, np.int64) if seg_bits is not None else None
+    return (sb[seg_ids] if sb is not None
+            else np.full((len(seg_ids),), bits, np.int64))
+
+
+def nibble_pack(codes):
+    """int4 codes [..., C] (C even, values in [-8, 7]) -> int8
+    [..., C // 2]: even columns in the low nibble, odd in the high."""
+    if codes.shape[-1] % 2:
+        raise ValueError(f"nibble packing needs an even trailing dim, "
+                         f"got {codes.shape}")
+    c = codes.astype(jnp.int8)
+    lo = jnp.bitwise_and(c[..., 0::2], jnp.int8(0xF))
+    hi = jnp.left_shift(c[..., 1::2], 4)
+    return jnp.bitwise_or(lo, hi)
+
+
+def nibble_unpack(packed):
+    """Inverse of :func:`nibble_pack`: int8 [..., B] -> sign-extended
+    int8 codes [..., 2 * B]."""
+    lo = jnp.right_shift(jnp.left_shift(packed, 4), 4)   # arithmetic: sign
+    hi = jnp.right_shift(packed, 4)
+    return jnp.stack([lo, hi], axis=-1).reshape(
+        packed.shape[:-1] + (2 * packed.shape[-1],))
+
+
+def _bits_row_groups(seg_ids, bits, seg_bits):
+    """Static row grouping by wire width: [(width, row-index array)],
+    ascending width, covering every row exactly once."""
+    rb = _row_bits(seg_ids, bits, seg_bits)
+    return [(int(b), np.nonzero(rb == b)[0])
+            for b in sorted(set(rb.tolist()))]
+
+
+def _encode_rows(codes_b, b: int):
+    """[N, Rb, C] intN codes at width ``b`` -> [N, Rb * C * b / 8] int8."""
+    n = codes_b.shape[0]
+    if b == 4:
+        return nibble_pack(codes_b.astype(jnp.int8)).reshape(n, -1)
+    if b == 8:
+        return codes_b.astype(jnp.int8).reshape(n, -1)
+    wide = codes_b.astype(_wire_int_dtype(b))
+    return jax.lax.bitcast_convert_type(wide, jnp.int8).reshape(n, -1)
+
+
+def _decode_rows(wire_b, b: int, n_rows: int):
+    """Inverse of :func:`_encode_rows` -> [N, n_rows, C] int32."""
+    n = wire_b.shape[0]
+    if b == 4:
+        return nibble_unpack(wire_b.reshape(n, n_rows, _COLS // 2)
+                             ).astype(jnp.int32)
+    if b == 8:
+        return wire_b.reshape(n, n_rows, _COLS).astype(jnp.int32)
+    width = b // 8
+    chunks = wire_b.reshape(n, n_rows, _COLS, width)
+    return jax.lax.bitcast_convert_type(
+        chunks, _wire_int_dtype(b)).astype(jnp.int32)
+
+
+def encode_wire(codes, seg_ids, bits: int = 16, *,
+                seg_bits: Optional[np.ndarray] = None):
+    """Serialize packed codes ``[N, R, C]`` into the physical wire byte
+    buffer ``[N, B]`` int8 — ONE contiguous array whose size is exactly
+    the spec bytes (``B = Σ_rows C·bits_row/8``): int16/int32 rows are
+    bitcast, int8 rows pass through, int4 rows nibble-pack two codes per
+    byte.  At uniform int16 the bytes are identical to the legacy int16
+    code buffer (pure bitcast).  The layout is static (derived from
+    ``seg_ids``/``seg_bits``), so :func:`decode_wire` inverts it without
+    any side-channel."""
+    groups = _bits_row_groups(seg_ids, bits, seg_bits)
+    if len(groups) == 1:
+        return _encode_rows(codes, groups[0][0])
+    return jnp.concatenate(
+        [_encode_rows(jnp.take(codes, rows, axis=1), b)
+         for b, rows in groups], axis=1)
+
+
+def decode_wire(wire, seg_ids, bits: int = 16, *,
+                seg_bits: Optional[np.ndarray] = None):
+    """Inverse of :func:`encode_wire`: ``[N, B]`` int8 -> codes
+    ``[N, R, C]`` int32 in original row order."""
+    groups = _bits_row_groups(seg_ids, bits, seg_bits)
+    if len(groups) == 1:
+        return _decode_rows(wire, groups[0][0], len(seg_ids))
+    parts, col = [], 0
+    for b, rows in groups:
+        nbytes = len(rows) * _COLS * b // 8
+        parts.append(_decode_rows(wire[:, col:col + nbytes], b, len(rows)))
+        col += nbytes
+    perm = np.concatenate([rows for _, rows in groups])
+    return jnp.take(jnp.concatenate(parts, axis=1), np.argsort(perm),
+                    axis=1)
+
+
+def wire_buffer_bytes(seg_ids, bits: int = 16, *,
+                      seg_bits: Optional[np.ndarray] = None) -> int:
+    """Static byte size B of one node's encoded wire buffer."""
+    return int(np.sum(_row_bits(seg_ids, bits, seg_bits)) * _COLS // 8)
 
 
 def quantize_tree_packed_nodes(tree, bits: int = 16, *,
-                               use_kernels: Optional[bool] = None
-                               ) -> Dict[str, Any]:
+                               spec: Optional[WireSpec] = None,
+                               use_kernels: Optional[bool] = None,
+                               rng=None) -> Dict[str, Any]:
     """The wire payload of one federation round: quantize a stacked
     ``[N, ...]`` pytree into ``{"codes": [N, R, C] intN, "scales":
-    [N, T] fp32, "seg_ids", "meta", "bits"}`` — per-(leaf, node) scale
-    segments, codes narrowed to the wire dtype (int16 for 16-bit)."""
-    buf, seg_ids, meta = pack_tree_nodes(tree)
+    [N, T] fp32, "seg_ids", "seg_bits", "meta", "bits"}`` — per-(leaf,
+    node) scale segments, codes narrowed to the wire container dtype
+    (int16 for uniform 16-bit).  With ``spec`` each leaf group is
+    quantized at its own width (``seg_bits`` records it per segment);
+    :func:`encode_wire` turns the codes into the physical byte buffer.
+    A spec with ``stochastic_rounding`` set requires an explicit ``rng``
+    (the noise source is the caller's to seed — silently falling back
+    to deterministic rounding would fake the unbiasedness)."""
+    if spec is not None and spec.stochastic_rounding and rng is None:
+        raise ValueError("WireSpec.stochastic_rounding is set but no rng "
+                         "was passed — stochastic rounding needs an "
+                         "explicit PRNG key")
+    buf, seg_ids, meta = pack_tree_nodes(tree, spec)
+    seg_bits = meta[4]
     codes, deltas = quantize_packed_buffer(buf, seg_ids, meta[2], bits,
-                                           use_kernels=use_kernels)
+                                           seg_bits=seg_bits,
+                                           use_kernels=use_kernels, rng=rng)
     return {"codes": codes, "scales": deltas, "seg_ids": seg_ids,
-            "meta": meta, "bits": bits}
+            "seg_bits": seg_bits, "meta": meta, "bits": bits}
 
 
 def dequantize_tree_packed_nodes(payload):
@@ -395,12 +574,17 @@ def dequantize_tree_packed_nodes(payload):
 
 
 def quantize_dequantize_tree_packed_nodes(tree, bits: int = 16, *,
-                                          use_kernels: Optional[bool] = None):
+                                          spec: Optional[WireSpec] = None,
+                                          use_kernels: Optional[bool] = None,
+                                          rng=None):
     """Round-trip through the packed node wire format — what every
     receiver reconstructs.  Bit-identical to the per-leaf
-    ``quantize_leaf_per_node``/``dequantize_leaf`` path."""
+    ``quantize_leaf_per_node``/``dequantize_leaf`` path (the
+    encode/decode byte serialization is lossless, so it is elided
+    here)."""
     return dequantize_tree_packed_nodes(
-        quantize_tree_packed_nodes(tree, bits, use_kernels=use_kernels))
+        quantize_tree_packed_nodes(tree, bits, spec=spec,
+                                   use_kernels=use_kernels, rng=rng))
 
 
 def packed_wire_rows(tree, *, node_axis: bool = True) -> Tuple[int, int]:
@@ -425,15 +609,44 @@ def packed_wire_rows(tree, *, node_axis: bool = True) -> Tuple[int, int]:
 
 
 def packed_wire_bytes_per_node(tree, bits: Optional[int] = 16, *,
-                               node_axis: bool = True) -> int:
+                               node_axis: bool = True,
+                               leaf_bits: Optional[Sequence[int]] = None
+                               ) -> int:
     """Physical bytes one node's packed payload occupies on the wire:
-    the intN (fp32 when ``bits`` is None) row buffer incl. 512-lane
-    padding, plus one fp32 scale per leaf segment when quantized.  This
-    is the number the dry-run's HLO collective-bytes breakdown measures
-    per exchanged copy."""
-    rows, nseg = packed_wire_rows(tree, node_axis=node_axis)
-    width = (bits // 8) if bits else 4
-    return rows * _COLS * width + (nseg * 4 if bits else 0)
+    the encoded byte buffer (fp32 rows when ``bits`` is None) incl.
+    512-lane padding, plus one fp32 scale per leaf segment when
+    quantized.  ``leaf_bits`` gives each float leaf its own width
+    (parallel to the float leaves of ``tree``, in flatten order) —
+    alignment rows carry the LAST leaf's width, mirroring
+    :func:`pack_tree_nodes`' tagging.  This is the number the dry-run's
+    HLO collective-bytes breakdown measures per exchanged copy."""
+    if bits is None or leaf_bits is None:
+        rows, nseg = packed_wire_rows(tree, node_axis=node_axis)
+        if bits is None:                                  # fp32 (fedavg)
+            return rows * _COLS * 4
+        return rows * _COLS * bits // 8 + nseg * 4        # sub-byte exact
+    skip = 1 if node_axis else 0
+    total_bits = 0
+    rows = 0
+    nseg = 0
+    last_b = None
+    floats = [leaf for leaf in jax.tree_util.tree_leaves(tree)
+              if hasattr(leaf, "dtype")
+              and jnp.issubdtype(leaf.dtype, jnp.floating)]
+    if len(floats) != len(leaf_bits):
+        raise ValueError(f"leaf_bits has {len(leaf_bits)} entries for "
+                         f"{len(floats)} float leaves")
+    for leaf, b in zip(floats, leaf_bits):
+        per = 1
+        for s in leaf.shape[skip:]:
+            per *= s
+        r = -(-per // _COLS)
+        rows += r
+        total_bits += r * _COLS * b
+        nseg += 1
+        last_b = b
+    total_bits += ((-rows) % 8) * _COLS * last_b      # alignment rows
+    return total_bits // 8 + nseg * 4
 
 
 def mix_packed(own, codes, row_delta, w_self, w_rows, *,

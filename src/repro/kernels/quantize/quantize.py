@@ -243,6 +243,38 @@ def quantize_dequantize_rows_pallas(x2d, row_delta, *, bits: int = 16,
                       interpret=interpret)
 
 
+def _quantize_rows_mixed_kernel(x_ref, delta_ref, qmax_ref, out_ref):
+    # per-row clip bounds: mixed-precision packed buffers carry rows of
+    # different wire widths through ONE launch (a WireSpec with, e.g.,
+    # int4 student rows and int16 prototype rows)
+    delta = delta_ref[...]                                  # [br, 1]
+    qmax = qmax_ref[...]                                    # [br, 1]
+    codes = jnp.floor(x_ref[...].astype(jnp.float32) / delta + 0.5)
+    out_ref[...] = jnp.clip(codes, -qmax - 1, qmax).astype(jnp.int32)
+
+
+def quantize_rows_mixed_pallas(x2d, row_delta, row_qmax, *,
+                               interpret: bool = False) -> jnp.ndarray:
+    """x2d: [R, C], row_delta/row_qmax: [R, 1] -> int32 codes; each row
+    scaled by its own Δ *and* clipped to its own width's qmax — the
+    single-launch quantize sweep of a mixed-precision WireSpec."""
+    r, c = x2d.shape
+    br, bc = min(BLOCK_R, r), min(BLOCK_C, c)
+    return pl.pallas_call(
+        _quantize_rows_mixed_kernel,
+        grid=(pl.cdiv(r, br), pl.cdiv(c, bc)),
+        in_specs=[
+            pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+            pl.BlockSpec((br, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((br, 1), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((r, c), jnp.int32),
+        interpret=interpret,
+    )(x2d.astype(jnp.float32), row_delta.astype(jnp.float32),
+      row_qmax.astype(jnp.float32))
+
+
 def _mix_packed_kernel(n_nodes: int, own_ref, codes_ref, delta_ref,
                        wself_ref, wrows_ref, out_ref):
     # out[m] = w_self[m]*own[m] + sum_j wrows[m, j] * codes[j] * delta[j]

@@ -282,12 +282,24 @@ def lower_federate(cfg, student_cfg, mesh, n_pods: int) -> Dict[str, Any]:
 
 
 def topology_report(arch: str, topology: str, pods: int,
-                    bits: int = 16) -> Dict[str, Any]:
+                    bits="16") -> Dict[str, Any]:
     """The --topology axis: physical wire bytes per exchange mode on an
-    (N, 1, 1) federation mesh, asserted against the accountant."""
+    (N, 1, 1) federation mesh, asserted against the accountant.
+
+    ``bits`` is a wire-spec string (``"16"``/``"8"``/``"4"`` uniform,
+    ``"4/16"`` = int4 student + int16 prototypes).  For sub-int16 specs
+    the int16 round is compiled too and the physical code-buffer bytes
+    must shrink by the spec's exact ratio (int4 ring ≤ 0.25x the int16
+    ring buffer bytes).
+    """
     from repro.core import topology as T
-    from repro.launch.wire import check_topology_bytes, measure_exchange_bytes
-    report = measure_exchange_bytes(arch, pods, topology, bits=bits)
+    from repro.launch.wire import (check_bits_reduction,
+                                   check_topology_bytes,
+                                   measure_exchange_bytes)
+    from repro.wirespec import WireSpec, resolve_spec
+    spec = WireSpec.parse(bits) if isinstance(bits, str) \
+        else resolve_spec(bits)
+    report = measure_exchange_bytes(arch, pods, topology, bits=spec)
     adj = T.make_schedule(pods, topology, rounds=1, seed=0).adjacency_at(0)
     deg = int(adj.sum(axis=1).max())
     # The degree x payload prediction only holds for regular graphs,
@@ -304,6 +316,19 @@ def topology_report(arch: str, topology: str, pods: int,
         frac = 0.5 if 2 * deg <= pods else None
         check_topology_bytes(report, exchange="ppermute", rel_tol=0.10,
                              gather_frac=frac)
+        if spec != WireSpec.from_bits(16):
+            # the headline knob: the same graph at int16, and the
+            # physical buffer bytes must scale by exactly spec/int16
+            # (only the ppermute mode is consumed — skip the other
+            # reference compiles)
+            report16 = measure_exchange_bytes(arch, pods, topology, bits=16,
+                                              exchanges=("ppermute",))
+            report["int16_reference"] = {
+                "packed_pred_bytes_per_node":
+                    report16["packed_pred_bytes_per_node"],
+                "exchanges": report16["exchanges"],
+            }
+            check_bits_reduction(report, report16, exchange="ppermute")
     return report
 
 
@@ -326,7 +351,10 @@ def main():
                          "physical == logical wire bytes")
     ap.add_argument("--pods", type=int, default=8,
                     help="federation nodes for --topology mode")
-    ap.add_argument("--bits", type=int, default=16)
+    ap.add_argument("--bits", default="16",
+                    help="wire spec for --topology mode: 16 | 8 | 4 "
+                         "(uniform) or <student>/<protos> (mixed, e.g. "
+                         "4/16 = int4 student + int16 prototypes)")
     args = ap.parse_args()
 
     if args.topology is not None:

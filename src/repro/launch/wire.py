@@ -23,6 +23,7 @@ from typing import Any, Dict, Optional
 import numpy as np
 
 from repro.core import topology as T
+from repro.wirespec import WireSpec, resolve_spec
 
 
 def ensure_host_device_flag(n_nodes: int,
@@ -80,12 +81,16 @@ def _student_setup(arch: str):
 
 
 def measure_exchange_bytes(arch: str, n_nodes: int, topology: str = "ring",
-                           bits: int = 16,
+                           bits=16,
                            exchanges=("gather", "packed", "ppermute"),
                            seed: int = 0) -> Dict[str, Any]:
     """Lower + compile the ProFe gossip round per exchange mode on a
     federation mesh and report per-node physical bytes from the HLO next
     to the accountant's logical/packed predictions.
+
+    ``bits`` is an int, a :class:`repro.wirespec.WireSpec`, or a spec
+    string (``"16"``/``"8"``/``"4"``/``"4/16"``) — the whole pipeline
+    (codec, exchange, accounting) runs at that wire format.
 
     Physical bytes are per-device == per-node on this mesh (collective-
     permute counts its operand once per step; all-gather counts its
@@ -101,6 +106,8 @@ def measure_exchange_bytes(arch: str, n_nodes: int, topology: str = "ring",
     from repro.launch.hlo_analysis import analyze_hlo
     from repro.sharding import param_specs, to_named
 
+    spec = WireSpec.parse(bits) if isinstance(bits, str) \
+        else resolve_spec(bits)
     sched = T.make_schedule(n_nodes, topology, rounds=1, seed=seed)
     adj = sched.adjacency_at(0)
     mesh = fed_mesh(n_nodes)
@@ -122,16 +129,30 @@ def measure_exchange_bytes(arch: str, n_nodes: int, topology: str = "ring",
         "protos": jax.ShapeDtypeStruct((C, Pdim), np.dtype(np.float32)),
         "counts": jax.ShapeDtypeStruct((C,), np.dtype(np.float32)),
     }
+    # buffer vs sidecar split of one packed copy: the fp32 scales +
+    # counts bytes are wire-width-invariant, so per-bits comparisons
+    # (int4 vs int16) are made on the code buffer alone
+    from repro.core.comm import packed_copy_bytes
+    from repro.kernels.quantize.ops import packed_wire_rows
+    rows16, _nseg = packed_wire_rows(
+        {"model": payload["model"], "protos": payload["protos"]},
+        node_axis=False)
+    copy_spec = int(packed_copy_bytes(payload, spec))
+    copy16 = int(packed_copy_bytes(payload, 16))
+    sidecar = copy16 - rows16 * 512 * 2
     acct = ScheduleCommAccountant(sched)
-    logical = acct.predicted_node_bytes(payload, 0, bits, wire="dense")
-    packed = acct.predicted_node_bytes(payload, 0, bits, wire="packed")
+    logical = acct.predicted_node_bytes(payload, 0, spec, wire="dense")
+    packed = acct.predicted_node_bytes(payload, 0, spec, wire="packed")
 
     out: Dict[str, Any] = {
         "arch": arch, "topology": topology, "n_nodes": n_nodes,
-        "bits": bits,
+        "bits": spec.describe(),
         "degree": [int(d) for d in sched.out_degrees()[0]],
         "logical_bytes_per_node": int(logical.max()),
         "packed_pred_bytes_per_node": int(packed.max()),
+        "packed_copy_bytes": copy_spec,
+        "packed_copy_bytes_int16": copy16,
+        "packed_sidecar_bytes_per_copy": sidecar,
         "exchanges": {},
     }
     node_specs = jax.tree_util.tree_map(
@@ -143,7 +164,7 @@ def measure_exchange_bytes(arch: str, n_nodes: int, topology: str = "ring",
         [("full-gather", None, "packed")]
     for name, adjacency, mode in combos:
         try:
-            fn = make_profe_round(mesh, specs, bits=bits,
+            fn = make_profe_round(mesh, specs, spec=spec,
                                   adjacency=adjacency, exchange=mode)
             with mesh:
                 jitted = jax.jit(
@@ -211,5 +232,45 @@ def check_topology_bytes(report: Dict[str, Any], *, exchange: str,
             raise AssertionError(
                 f"{exchange} physical bytes {phys:.0f} not < "
                 f"{gather_frac:.2f}x the full-graph gather {full:.0f}")
+    report.setdefault("checks", []).append(verdict)
+    return verdict
+
+
+def check_bits_reduction(report: Dict[str, Any], report16: Dict[str, Any],
+                         *, exchange: str = "ppermute") -> Dict[str, Any]:
+    """Assert the sub-int16 wire physically shrinks the exchange by the
+    spec's exact byte ratio.
+
+    Compares the *code-buffer* bytes (physical per-copy minus the
+    width-invariant sidecar of fp32 scales + counts) of ``report``
+    against the int16 reference ``report16`` for one exchange mode: an
+    int4 payload must move ≤ 0.25x the int16 buffer bytes, int8 ≤ 0.5x,
+    a mixed spec its analytic fraction.  Both reports must come from
+    :func:`measure_exchange_bytes` on the same (arch, topology, N).
+    """
+    for rep, name in ((report, "spec"), (report16, "int16")):
+        ex = rep["exchanges"].get(exchange, {})
+        if "error" in ex or "collective_bytes_per_node" not in ex:
+            raise AssertionError(
+                f"{exchange} ({name}) did not compile: "
+                f"{ex.get('error', 'missing')}")
+    deg = max(report["degree"])
+    side = report["packed_sidecar_bytes_per_copy"]
+    buf_spec = report["exchanges"][exchange][
+        "collective_bytes_per_node"] / deg - side
+    buf16 = report16["exchanges"][exchange][
+        "collective_bytes_per_node"] / max(report16["degree"]) - side
+    expected = (report["packed_copy_bytes"] - side) / \
+        max(report["packed_copy_bytes_int16"] - side, 1)
+    ratio = buf_spec / max(buf16, 1)
+    verdict = {"check": "bits_reduction", "exchange": exchange,
+               "bits": report["bits"], "buffer_bytes": buf_spec,
+               "buffer_bytes_int16": buf16, "ratio_vs_int16": ratio,
+               "expected_frac": expected}
+    if ratio > expected * 1.0001 + 1e-9:
+        raise AssertionError(
+            f"{exchange} at {report['bits']} moves {buf_spec:.0f} buffer "
+            f"bytes = {ratio:.4f}x the int16 exchange ({buf16:.0f}); the "
+            f"spec's byte ratio is {expected:.4f}x")
     report.setdefault("checks", []).append(verdict)
     return verdict

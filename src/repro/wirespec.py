@@ -1,0 +1,144 @@
+"""WireSpec — the single source of truth for the gossip wire format.
+
+ProFe's third pillar (paper Sec. III-D) quantizes everything that
+travels — the student and the prototypes — and the wire width is the
+headline communication knob: int8 halves and int4 quarters the packed
+ring bytes of the int16 default (Sattler et al.'s communication-
+efficient federated distillation pushes the same payloads below a byte
+per value).  Every layer that serializes, exchanges, or accounts wire
+bytes consumes one :class:`WireSpec` instead of a loose ``bits`` int:
+
+* ``kernels/quantize/ops.py`` — packed ``[N, R, 512]`` code buffers are
+  encoded to a single contiguous ``[N, B]`` int8 *wire byte buffer*
+  (int16/int8 rows bitcast, int4 rows nibble-packed two codes per
+  byte), mixed precision segment by segment;
+* ``core/round_ops.py`` / ``core/quantization.py`` — the CPU simulator
+  quantizes per leaf group with the same per-group bits, bit-identical
+  to the mesh codec;
+* ``core/mesh_federation.py`` — all exchange modes ship spec-shaped
+  buffers, so the ppermute payload physically shrinks to spec bytes;
+* ``core/comm.py`` — logical (Table II) and packed-codec byte
+  accounting are parametric in the spec and stay asserted byte-exact
+  against the compiled HLO (``launch/dryrun.py --bits``).
+
+Leaf *groups* are the top-level keys of the wire payload dict
+(``"student"`` — aliased from the accountants' ``"model"`` — and
+``"protos"``); ``overrides`` pin any group to an explicit width, which
+is how the mixed-precision scenario (int4 student + int16 prototypes)
+is expressed.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+WIRE_BITS = (4, 8, 16, 32)
+
+# payload-template spelling -> wire-payload spelling: the comm
+# accountants call the student leaves "model"
+_GROUP_ALIASES = {"model": "student", "": "student"}
+
+
+def canonical_group(group: Optional[str]) -> str:
+    g = group if group is not None else ""
+    return _GROUP_ALIASES.get(g, g)
+
+
+@dataclass(frozen=True)
+class WireSpec:
+    """Frozen description of the wire format of one gossip payload.
+
+    ``student_bits`` is the default width for every leaf group;
+    ``proto_bits`` overrides the ``"protos"`` group (``None`` follows
+    the student); ``overrides`` pins arbitrary groups by name.
+    ``stochastic_rounding`` replaces the deterministic ``+0.5`` rounding
+    with ``+U[0, 1)`` noise (unbiased codes; needs an explicit PRNG key
+    at quantize time, and the Pallas fast path falls back to jnp).
+    """
+
+    student_bits: int = 16
+    proto_bits: Optional[int] = None
+    overrides: Tuple[Tuple[str, int], ...] = ()
+    stochastic_rounding: bool = False
+
+    def __post_init__(self):
+        for b in (self.student_bits, self.proto_bits) + tuple(
+                b for _, b in self.overrides):
+            if b is not None and b not in WIRE_BITS:
+                raise ValueError(
+                    f"wire bits must be one of {WIRE_BITS}, got {b}")
+        object.__setattr__(self, "overrides", tuple(
+            (canonical_group(k), int(b)) for k, b in self.overrides))
+
+    # -- group resolution ---------------------------------------------------
+    def bits_for(self, group: Optional[str]) -> int:
+        """Wire width of one leaf group (top-level payload key)."""
+        g = canonical_group(group)
+        for k, b in self.overrides:
+            if k == g:
+                return b
+        if g == "protos" and self.proto_bits is not None:
+            return self.proto_bits
+        return self.student_bits
+
+    @property
+    def uniform_bits(self) -> Optional[int]:
+        """The single width when every group shares it, else None."""
+        widths = {self.student_bits}
+        if self.proto_bits is not None:
+            widths.add(self.proto_bits)
+        widths.update(b for _, b in self.overrides)
+        return self.student_bits if len(widths) == 1 else None
+
+    @property
+    def max_bits(self) -> int:
+        widths = [self.student_bits]
+        if self.proto_bits is not None:
+            widths.append(self.proto_bits)
+        widths.extend(b for _, b in self.overrides)
+        return max(widths)
+
+    def describe(self) -> str:
+        u = self.uniform_bits
+        if u is not None:
+            return f"int{u}"
+        parts = [f"student=int{self.student_bits}"]
+        if self.proto_bits is not None:
+            parts.append(f"protos=int{self.proto_bits}")
+        parts += [f"{k}=int{b}" for k, b in self.overrides]
+        return ",".join(parts)
+
+    # -- construction -------------------------------------------------------
+    @classmethod
+    def from_bits(cls, bits) -> "WireSpec":
+        """Coerce an int (uniform width) or an existing spec."""
+        if isinstance(bits, cls):
+            return bits
+        return cls(student_bits=int(bits))
+
+    @classmethod
+    def parse(cls, spec: str) -> "WireSpec":
+        """Parse a CLI spec: ``"16"`` | ``"8"`` | ``"4"`` (uniform) or
+        ``"<student>/<protos>"`` (mixed, e.g. ``"4/16"`` = int4 student
+        + int16 prototypes)."""
+        s = str(spec).strip()
+        if "/" in s:
+            student, proto = s.split("/", 1)
+            return cls(student_bits=int(student), proto_bits=int(proto))
+        return cls(student_bits=int(s))
+
+
+def resolve_spec(bits_or_spec) -> Optional[WireSpec]:
+    """None passes through (fp32 wire); ints become uniform specs."""
+    if bits_or_spec is None or isinstance(bits_or_spec, WireSpec):
+        return bits_or_spec
+    return WireSpec.from_bits(bits_or_spec)
+
+
+def resolve_bits(bits_or_spec, group: str = "student") -> Optional[int]:
+    """Scalar width for one group out of an int | WireSpec | None."""
+    if bits_or_spec is None:
+        return None
+    if isinstance(bits_or_spec, WireSpec):
+        return bits_or_spec.bits_for(group)
+    return int(bits_or_spec)

@@ -158,14 +158,24 @@ def test_accountant_byte_identical_to_seed_meter(spec, bits):
     assert acc.summary() == ref.summary()
 
 
-def test_asymmetric_stack_rejected():
+def test_asymmetric_stack_rejected_names_offending_round():
     """Directed gossip is a follow-up: until then the engines'
     edge-direction conventions only agree on undirected graphs, so an
-    asymmetric stack must be an error, not a silent divergence."""
+    asymmetric stack must be an error naming the offending phase/round
+    (debuggable without bisecting a time-varying stack by hand)."""
     a = np.zeros((4, 4), bool)
     a[0, 1] = True                              # edge with no reverse
-    with pytest.raises(ValueError):
+    with pytest.raises(ValueError, match=r"round/phase 0.*\(0, 1\)"):
         T.from_stack(a)
+    # the PRESENT direction is named, not the missing reverse
+    b = np.zeros((4, 4), bool)
+    b[2, 0] = True
+    with pytest.raises(ValueError, match=r"\(2, 0\)"):
+        T.from_stack(b)
+    # in a time-varying stack, the FIRST bad phase is named
+    ring = T.adjacency(4, "ring")
+    with pytest.raises(ValueError, match="round/phase 2"):
+        T.from_stack(np.stack([ring, ring, a]))
 
 
 # ---------------------------------------------------------------------------

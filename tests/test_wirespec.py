@@ -1,0 +1,304 @@
+"""The bits-parametric wire codec: WireSpec resolution, int4 nibble
+pack/unpack, byte-exact encode/decode per width, bits=16 byte-identity
+with the legacy int16 code buffer, mixed-precision round-trips, spec-
+parametric accounting, and the spec-shaped mesh exchange."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import round_ops as R
+from repro.core import topology as T
+from repro.core.comm import ScheduleCommAccountant, packed_copy_bytes
+from repro.kernels.quantize import ops as q_ops
+from repro.wirespec import WireSpec, resolve_bits, resolve_spec
+
+RNG = np.random.default_rng(77)
+
+MIXED = WireSpec(student_bits=4, proto_bits=16)
+
+
+def _payload(n=3):
+    return {
+        "protos": jnp.asarray(RNG.standard_normal((n, 6, 8)), jnp.float32),
+        "student": {
+            "w": jnp.asarray(RNG.standard_normal((n, 17, 9)) * 5,
+                             jnp.float32),
+            "b": jnp.asarray(RNG.standard_normal((n, 11)), jnp.float32),
+            "step": jnp.ones((n,), jnp.int32),
+        },
+    }
+
+
+# ---------------------------------------------------------------------------
+# WireSpec resolution
+# ---------------------------------------------------------------------------
+
+def test_wirespec_groups_and_parsing():
+    s = WireSpec.parse("4/16")
+    assert s.bits_for("student") == 4
+    assert s.bits_for("model") == 4          # accountant alias
+    assert s.bits_for("protos") == 16
+    assert s.uniform_bits is None and s.max_bits == 16
+    assert s.describe() == "student=int4,protos=int16"
+    u = WireSpec.parse("8")
+    assert u.uniform_bits == 8 and u.describe() == "int8"
+    assert resolve_spec(16) == WireSpec.from_bits(16)
+    assert resolve_spec(None) is None
+    assert resolve_bits(MIXED, "protos") == 16
+    ov = WireSpec(overrides=(("model", 8),))
+    assert ov.bits_for("student") == 8       # override keys canonicalize
+    with pytest.raises(ValueError):
+        WireSpec(student_bits=12)
+
+
+# ---------------------------------------------------------------------------
+# int4 nibble pack/unpack
+# ---------------------------------------------------------------------------
+
+def test_nibble_roundtrip_saturation_bounds():
+    """All 16 int4 code points — incl. -8 and +7 saturation — survive
+    the two-codes-per-byte packing with sign intact."""
+    codes = jnp.asarray(np.arange(-8, 8, dtype=np.int8)[None, :])
+    back = q_ops.nibble_unpack(q_ops.nibble_pack(codes))
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(codes))
+    assert q_ops.nibble_pack(codes).shape == (1, 8)
+    with pytest.raises(ValueError):
+        q_ops.nibble_pack(jnp.zeros((1, 7), jnp.int8))   # odd trailing dim
+
+
+@pytest.mark.parametrize("n_elems", [1, 511, 512, 513, 1023])
+def test_int4_tree_roundtrip_odd_segment_lengths(n_elems):
+    """Odd-length leaves ride padded rows; the packed int4 round-trip
+    must equal the per-leaf 4-bit reference bit for bit, and codes must
+    saturate at ±7 (clip, with -8 reachable only by rounding)."""
+    tree = {"student": jnp.asarray(
+        RNG.standard_normal((2, n_elems)) * 9, jnp.float32)}
+    payload = q_ops.quantize_tree_packed_nodes(
+        tree, spec=WireSpec.from_bits(4), use_kernels=False)
+    codes = np.asarray(payload["codes"])
+    assert payload["codes"].dtype == jnp.int8        # int4 container
+    assert codes.max() <= 7 and codes.min() >= -8
+    got = q_ops.dequantize_tree_packed_nodes(payload)["student"]
+    want = R.dequantize_leaf(*R.quantize_leaf_per_node(tree["student"], 4))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # and the wire bytes round-trip exactly
+    wire = q_ops.encode_wire(payload["codes"], payload["seg_ids"],
+                             seg_bits=payload["seg_bits"])
+    back = q_ops.decode_wire(wire, payload["seg_ids"],
+                             seg_bits=payload["seg_bits"])
+    np.testing.assert_array_equal(np.asarray(back), codes.astype(np.int32))
+
+
+# ---------------------------------------------------------------------------
+# encode_wire: byte identity at 16, exact spec bytes everywhere
+# ---------------------------------------------------------------------------
+
+def test_bits16_wire_byte_identical_to_legacy_int16_buffer():
+    """The encoded [N, B] byte buffer at uniform int16 must be byte-for-
+    byte the legacy int16 code buffer (pure bitcast — the refactor moves
+    zero bytes)."""
+    payload = q_ops.quantize_tree_packed_nodes(
+        _payload(), 16, spec=WireSpec.from_bits(16), use_kernels=False)
+    assert payload["codes"].dtype == jnp.int16
+    wire = q_ops.encode_wire(payload["codes"], payload["seg_ids"],
+                             seg_bits=payload["seg_bits"])
+    assert wire.dtype == jnp.int8
+    assert np.asarray(wire).tobytes() == \
+        np.asarray(payload["codes"]).tobytes()
+    back = q_ops.decode_wire(wire, payload["seg_ids"],
+                             seg_bits=payload["seg_bits"])
+    np.testing.assert_array_equal(np.asarray(back),
+                                  np.asarray(payload["codes"], np.int32))
+
+
+@pytest.mark.parametrize("spec", [WireSpec.from_bits(16),
+                                  WireSpec.from_bits(8),
+                                  WireSpec.from_bits(4), MIXED],
+                         ids=lambda s: s.describe())
+def test_encode_wire_moves_exact_spec_bytes(spec):
+    """B == Σ_rows 512·bits_row/8, and the decode inverts the encode for
+    every width — including the mixed student/proto split."""
+    tree = _payload()
+    payload = q_ops.quantize_tree_packed_nodes(tree, spec=spec,
+                                               use_kernels=False)
+    wire = q_ops.encode_wire(payload["codes"], payload["seg_ids"],
+                             seg_bits=payload["seg_bits"])
+    want_b = q_ops.wire_buffer_bytes(payload["seg_ids"],
+                                     seg_bits=payload["seg_bits"])
+    assert wire.shape == (3, want_b)
+    back = q_ops.decode_wire(wire, payload["seg_ids"],
+                             seg_bits=payload["seg_bits"])
+    np.testing.assert_array_equal(np.asarray(back),
+                                  np.asarray(payload["codes"], np.int32))
+    # byte ratio vs int16 is exactly the spec's (buffer only)
+    b16 = len(payload["seg_ids"]) * 1024
+    if spec.uniform_bits:
+        assert want_b * 16 == b16 * spec.uniform_bits
+
+
+@pytest.mark.parametrize("use_kernels", [False, True],
+                         ids=["jnp", "pallas-interpret"])
+def test_mixed_spec_roundtrip_matches_per_leaf(use_kernels):
+    """int4 student + int16 prototypes through the packed codec ==
+    quantizing each group per leaf at its own width, bit for bit —
+    in both codec flavors (the Pallas flavor exercises the mixed-qmax
+    row kernel)."""
+    tree = _payload()
+    got = R.quantize_dequantize_per_node(tree, spec=MIXED,
+                                         use_kernels=use_kernels)
+    want = R.quantize_dequantize_per_node(tree, spec=MIXED,
+                                          use_kernels=False, packed=False)
+    for g, w in zip(jax.tree_util.tree_leaves(got),
+                    jax.tree_util.tree_leaves(want)):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+def test_stochastic_rounding_perturbs_but_stays_unbiased():
+    x = {"student": jnp.full((2, 2048), 0.37, jnp.float32)
+         * jnp.linspace(0.5, 1.0, 2048)}
+    det = q_ops.quantize_tree_packed_nodes(
+        x, spec=WireSpec.from_bits(8), use_kernels=False)
+    sr_spec = WireSpec(student_bits=8, stochastic_rounding=True)
+    with pytest.raises(ValueError, match="rng"):
+        # the flag must never silently degrade to deterministic rounding
+        q_ops.quantize_tree_packed_nodes(x, spec=sr_spec, use_kernels=False)
+    sr = q_ops.quantize_tree_packed_nodes(
+        x, spec=sr_spec, use_kernels=False, rng=jax.random.PRNGKey(3))
+    diff = np.asarray(sr["codes"], np.int32) - np.asarray(det["codes"],
+                                                          np.int32)
+    assert np.abs(diff).max() == 1 and np.abs(diff).sum() > 0
+    deq = np.asarray(q_ops.dequantize_tree_packed_nodes(sr)["student"])
+    assert abs(float(np.mean(deq - np.asarray(x["student"])))) < 1e-4
+
+
+# ---------------------------------------------------------------------------
+# spec-parametric accounting
+# ---------------------------------------------------------------------------
+
+def _acct_payload():
+    tree = _payload(1)
+    return {
+        "model": jax.tree_util.tree_map(lambda x: x[0], tree["student"]),
+        "protos": tree["protos"][0],
+        "counts": jnp.ones((6,), jnp.float32),
+    }, tree
+
+
+@pytest.mark.parametrize("spec", [WireSpec.from_bits(16),
+                                  WireSpec.from_bits(8),
+                                  WireSpec.from_bits(4), MIXED],
+                         ids=lambda s: s.describe())
+def test_packed_copy_bytes_matches_encoded_buffer(spec):
+    """The accountant's per-copy packed bytes == encoded wire buffer +
+    fp32 scales + raw sidecars, for every spec — the same equality the
+    dry-run asserts against compiled HLO."""
+    payload, tree = _acct_payload()
+    p = q_ops.quantize_tree_packed_nodes(tree, spec=spec,
+                                         use_kernels=False)
+    wire_b = q_ops.wire_buffer_bytes(p["seg_ids"], seg_bits=p["seg_bits"])
+    want = wire_b + p["meta"][2] * 4 + 6 * 4 + 1 * 4   # scales+counts+step
+    assert packed_copy_bytes(payload, spec) == want
+
+
+def test_accountant_spec_equals_uniform_int():
+    """A uniform WireSpec must account byte-identically to the legacy
+    int path, dense and packed."""
+    payload, _ = _acct_payload()
+    sched = T.make_schedule(6, "ring")
+    acct = ScheduleCommAccountant(sched)
+    for wire in ("dense", "packed"):
+        np.testing.assert_array_equal(
+            acct.predicted_node_bytes(payload, 0, 16, wire=wire),
+            acct.predicted_node_bytes(payload, 0, WireSpec.from_bits(16),
+                                      wire=wire))
+    # int4 quarters the dense float bytes (scales/counts invariant)
+    d16 = acct.predicted_node_bytes(payload, 0, 16, wire="dense").max()
+    d4 = acct.predicted_node_bytes(payload, 0, 4, wire="dense").max()
+    assert d4 < d16
+
+
+# ---------------------------------------------------------------------------
+# spec-shaped mesh exchange (one-device mesh: fast, no mesh marker)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("spec", [WireSpec.from_bits(8), MIXED],
+                         ids=lambda s: s.describe())
+def test_mesh_round_bits_packed_matches_gather(spec):
+    """exchange='packed' at sub-int16 / mixed specs == the per-leaf
+    gather oracle quantizing each group at its spec width."""
+    from jax.sharding import PartitionSpec as P
+    from repro.core.mesh_federation import make_profe_round
+    from repro.launch.wire import fed_mesh
+    n = 4
+    mesh = fed_mesh(1)
+    specs = {"w": P(None, None), "b": P(None,)}
+    students = {
+        "w": jnp.asarray(RNG.standard_normal((n, 33, 20)), jnp.float32),
+        "b": jnp.asarray(RNG.standard_normal((n, 7)), jnp.float32)}
+    protos = jnp.asarray(RNG.standard_normal((n, 5, 16)), jnp.float32)
+    counts = jnp.asarray(RNG.integers(0, 4, (n, 5)), jnp.float32)
+    sizes = jnp.asarray([1.0, 2.0, 3.0, 4.0])
+    adj = T.adjacency(n, "ring")
+    outs = {}
+    for ex in ("gather", "packed"):
+        fn = make_profe_round(mesh, specs, adjacency=adj, exchange=ex,
+                              spec=spec)
+        with mesh:
+            outs[ex] = jax.jit(fn)(students, protos, counts, sizes)
+    for got, want in zip(jax.tree_util.tree_leaves(outs["packed"]),
+                         jax.tree_util.tree_leaves(outs["gather"])):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=2e-4)
+
+
+@pytest.mark.mesh
+def test_ppermute_int4_ring_quarters_int16_wire():
+    """The compiled int4 ring ppermute moves EXACTLY the accountant's
+    int4 prediction, and its code-buffer bytes are exactly 0.25x the
+    int16 ring's (scales/counts sidecar excluded) — the acceptance bound
+    of the bits-parametric wire."""
+    n = 8
+    if jax.device_count() < n:
+        pytest.skip(f"needs {n} devices, have {jax.device_count()}")
+    from jax.sharding import PartitionSpec as P
+    from repro.core.mesh_federation import make_profe_round
+    from repro.launch.hlo_analysis import analyze_hlo
+    from repro.launch.wire import fed_mesh
+    mesh = fed_mesh(n)
+    specs = {"w": P(None, None), "b": P(None,)}
+    students = {
+        "w": jnp.asarray(RNG.standard_normal((n, 33, 20)), jnp.float32),
+        "b": jnp.asarray(RNG.standard_normal((n, 7)), jnp.float32)}
+    protos = jnp.asarray(RNG.standard_normal((n, 5, 16)), jnp.float32)
+    counts = jnp.asarray(RNG.integers(0, 4, (n, 5)), jnp.float32)
+    sizes = jnp.asarray(RNG.integers(50, 200, (n,)), jnp.float32)
+    sched = T.make_schedule(n, "ring", seed=0)
+    adj = sched.adjacency_at(0)
+    payload = {"model": jax.tree_util.tree_map(lambda x: x[0], students),
+               "protos": protos[0], "counts": counts[0]}
+    acct = ScheduleCommAccountant(sched)
+
+    permute_bytes = {}
+    for bits in (16, 4):
+        spec = WireSpec.from_bits(bits)
+        fn = make_profe_round(mesh, specs, adjacency=adj,
+                              exchange="ppermute", spec=spec)
+        with mesh:
+            hlo = jax.jit(fn).lower(students, protos, counts,
+                                    sizes).compile().as_text()
+        an = analyze_hlo(hlo)
+        pred = acct.predicted_node_bytes(payload, 0, spec,
+                                         wire="packed").max()
+        assert an.coll.get("collective-permute") == pred, (bits, an.coll)
+        permute_bytes[bits] = an.coll["collective-permute"]
+    deg = 2
+    sidecar = deg * (packed_copy_bytes(payload, 16)
+                     - q_ops.packed_wire_rows(
+                         {"model": payload["model"],
+                          "protos": payload["protos"]},
+                         node_axis=False)[0] * 512 * 2)
+    buf4 = permute_bytes[4] - sidecar
+    buf16 = permute_bytes[16] - sidecar
+    assert buf4 * 4 == buf16, (buf4, buf16)
+    assert permute_bytes[4] <= 0.25 * permute_bytes[16] + sidecar
