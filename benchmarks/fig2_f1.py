@@ -6,6 +6,12 @@ and the JSON carries the per-node curves + std, so sparse-topology
 divergence (ring/random-k keep nodes distinct) is visible instead of
 being hidden behind node 0.
 
+Every row also carries that spec's wire bytes (logical per copy,
+physical packed per copy, and degree-weighted GB per node for the whole
+run), so the bytes-vs-F1 tradeoff is ONE plot-ready artifact; ``--bits
+... --ef`` adds the stateful error-feedback twin of each sub-int16 spec
+(same bytes, recovered F1 — see ``reports/fig2_f1_bits_ef.json``).
+
 Full paper scale (20 nodes, 3 datasets, 5 splits, 10-80 rounds) is hours
 of CPU; the default here is the scaled-down protocol (4 nodes, MNIST-like
 synthetic, 3 rounds, 3 splits) that preserves the qualitative ordering.
@@ -29,7 +35,13 @@ def _bits_fed_kwargs(bits: str):
     """CLI wire spec -> FederationConfig quantization fields."""
     spec = WireSpec.parse(bits)
     return {"quantize_bits": spec.student_bits,
-            "proto_quantize_bits": spec.proto_bits}
+            "proto_quantize_bits": spec.proto_bits,
+            "error_feedback": spec.error_feedback}
+
+
+def _sub_int16(bits: str) -> bool:
+    spec = WireSpec.parse(bits)
+    return spec.student_bits < 16 or (spec.proto_bits or 16) < 16
 
 
 def run(dataset: str, split: str, *, nodes: int, rounds: int, epochs: int,
@@ -60,17 +72,22 @@ def run(dataset: str, split: str, *, nodes: int, rounds: int, epochs: int,
                                **_bits_fed_kwargs(b))
         res = run_federation(cfg, fed, train, node_data, test_d,
                              verbose=verbose, eval_all_nodes=True)
+        # one plot-ready row: F1 curve AND the wire bytes of that exact
+        # spec (logical + physical packed, per copy and per run) — the
+        # bytes-vs-F1 tradeoff no longer needs a second script
         out[name] = {
             "f1_per_round": res.f1_per_round,           # mean over nodes
             "f1_std_per_round": res.extras.get("f1_std_per_round", []),
             "f1_per_round_nodes": res.extras.get("f1_per_round_nodes", []),
             "avg_sent_gb": res.extras["avg_sent_gb"],
+            "wire_bytes_per_copy": res.extras.get("wire_bytes_per_copy"),
+            "wire_bytes_packed_per_copy":
+                res.extras.get("wire_bytes_packed_per_copy"),
+            "avg_sent_packed_gb": res.extras.get("avg_sent_packed_gb"),
             "elapsed_s": res.elapsed_s,
         }
         if algo == "profe":
             out[name]["bits"] = WireSpec.parse(b).describe()
-            out[name]["wire_bytes_packed_per_copy"] = \
-                res.extras.get("wire_bytes_packed_per_copy")
     return out
 
 
@@ -88,10 +105,21 @@ def main():
     ap.add_argument("--bits", nargs="+", default=["16"],
                     help="wire specs for the profe bits column, e.g. "
                          "--bits 16 8 4 4/16 (mixed = int4 student + "
-                         "int16 prototypes)")
+                         "int16 prototypes); a +ef suffix enables the "
+                         "stateful error-feedback codec")
+    ap.add_argument("--ef", action="store_true",
+                    help="add an error-feedback twin row (spec+ef, zero "
+                         "extra wire bytes) for every sub-int16 spec — "
+                         "the F1-recovery axis in one artifact")
     ap.add_argument("--out", default="reports/fig2_f1.json")
     args = ap.parse_args()
 
+    bits = list(args.bits)
+    if args.ef:
+        bits += [b + "+ef" for b in args.bits
+                 if _sub_int16(b) and not b.endswith("+ef")
+                 and b + "+ef" not in bits]
+    args.bits = bits
     nodes, rounds, epochs, n = (20, 10, 1, 20000) if args.full \
         else (4, 3, 1, 2400)
     results = {}

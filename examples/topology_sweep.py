@@ -38,7 +38,8 @@ def main():
                              "random-k2"])
     ap.add_argument("--bits", nargs="+", default=["16"],
                     help="wire specs to sweep per topology (16 | 8 | 4 "
-                         "| <student>/<protos>, e.g. 4/16): quantifies "
+                         "| <student>/<protos>, e.g. 4/16; +ef suffix "
+                         "= stateful error-feedback codec): quantifies "
                          "the F1 cost of the comm-reduction knob")
     ap.add_argument("--no-physical", action="store_true",
                     help="skip the per-topology mesh-round compilation")
@@ -65,7 +66,8 @@ def main():
                                    local_epochs=1, algorithm="profe",
                                    topology=topo,
                                    quantize_bits=spec.student_bits,
-                                   proto_quantize_bits=spec.proto_bits)
+                                   proto_quantize_bits=spec.proto_bits,
+                                   error_feedback=spec.error_feedback)
             res = run_federation(cfg, fed, train, node_data, test_d,
                                  verbose=True)
             print(f"[{tag}] final F1 {res.f1_per_round[-1]:.3f} | "

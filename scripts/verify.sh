@@ -1,0 +1,17 @@
+#!/usr/bin/env bash
+# The full verification gate, in one command (see README / ROADMAP):
+#
+#   1. tier-1 pytest (conftest forces 8 virtual host devices so the
+#      mesh-marked ppermute tests run inside the CPU suite)
+#   2. the tier-1-adjacent perf/wire gate: re-measures the jitted round
+#      against BENCH_round_step.json and the wire exchange against
+#      BENCH_wire_exchange.json (codec ms within threshold, per-node
+#      collective bytes EXACT per wire spec)
+#
+#   scripts/verify.sh [extra pytest args...]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+python -m pytest -x -q "$@"
+python benchmarks/check_regression.py

@@ -186,6 +186,14 @@ class FederationConfig:
     # (int4 student + int16 prototypes) is quantize_bits=4,
     # proto_quantize_bits=16; both feed one repro.wirespec.WireSpec
     proto_quantize_bits: Optional[int] = None
+    # stateful wire codec: each node carries the quantization residual
+    # of its last payload and replays it into the next round (error
+    # feedback à la CEFD) — recovers most of the sub-byte wire's F1
+    # cost at ZERO extra wire bytes.  error_feedback_decay scales the
+    # carried residual before it re-enters the payload (1.0 = full EF).
+    # Both route through _algo_wiring into the WireSpec.
+    error_feedback: bool = False
+    error_feedback_decay: float = 1.0
     # data split
     split: str = "iid"              # "iid"|"noniid60"|"noniid40"|"noniid20"|"dirichlet"
     dirichlet_alpha: float = 0.5

@@ -125,7 +125,9 @@ def _algo_wiring(algo: str, teacher_cfg: ModelConfig,
         step = make_profe_step(teacher_cfg, student_cfg, fed, opt_s, opt_t,
                                grad_clip=train.grad_clip, remat=remat, jit=jit)
         wire = WireSpec(student_bits=fed.quantize_bits,
-                        proto_bits=fed.proto_quantize_bits) \
+                        proto_bits=fed.proto_quantize_bits,
+                        error_feedback=fed.error_feedback,
+                        ef_decay=fed.error_feedback_decay) \
             if fed.quantize_bits else None
         return step, "student", True, wire, (teacher_cfg, student_cfg)
     if algo == "fedavg":
@@ -173,13 +175,16 @@ def _init_states(algo: str, model_cfgs, fed: FederationConfig, opt_s, opt_t,
 
 
 def _payload_template(wire_model, share_protos, stacked: NodeState,
-                      ncls: int, proto_dim: int):
+                      ncls: int, proto_dim: int, *, node_axis: bool = True):
     """Shape/dtype skeleton of one node's wire payload — the comm meter
-    reads only sizes and dtypes, so metering never touches device data."""
+    reads only sizes and dtypes, so metering never touches device data.
+    ``node_axis=False`` reads a per-node state (reference loop) instead
+    of a stacked ``[N, ...]`` one."""
     payload: Dict[str, Any] = {}
     if wire_model is not None:
+        skip = 1 if node_axis else 0
         payload["model"] = jax.tree_util.tree_map(
-            lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype),
+            lambda x: jax.ShapeDtypeStruct(x.shape[skip:], x.dtype),
             stacked.student)
     if share_protos:
         payload["protos"] = jax.ShapeDtypeStruct((ncls, proto_dim),
@@ -187,6 +192,17 @@ def _payload_template(wire_model, share_protos, stacked: NodeState,
         payload["counts"] = jax.ShapeDtypeStruct((ncls,),
                                                  np.dtype(np.float32))
     return payload
+
+
+def _packed_sent_gb(sched, rounds: int, packed_per_copy: int,
+                    n_nodes: int) -> float:
+    """Average per-node GB the packed mesh exchange moves over a run:
+    directed copies per round (from the schedule) x the per-copy packed
+    bytes — the physical twin of ``avg_sent_gb``."""
+    edges = sched.directed_edge_counts()
+    copies = sum(int(edges[sched.phase_index(rnd)])
+                 for rnd in range(rounds))
+    return float(copies * packed_per_copy / max(n_nodes, 1) / 1e9)
 
 
 # ---------------------------------------------------------------------------
@@ -334,10 +350,18 @@ def _make_round_fn(step: Callable, proto_cfg: ModelConfig, ncls: int, *,
         #    and prototypes ride ONE [N, R, 512] buffer with per-(leaf,
         #    node) segment scales, exactly what the mesh path's sparse
         #    exchange physically moves (bit-identical to per-leaf codes).
+        #    With error feedback the codec is stateful: the per-node
+        #    residual (state.wire_state, part of the donated carry) is
+        #    replayed into the payload and updated in the same pass.
         spec = WireSpec.from_bits(bits) if bits else None
         if wire_model is not None and spec and share_protos:
-            recv = R.quantize_dequantize_per_node(
-                {"protos": protos, "student": state.student}, spec=spec)
+            payload = {"protos": protos, "student": state.student}
+            if spec.error_feedback:
+                recv, new_ws = R.quantize_dequantize_per_node(
+                    payload, spec=spec, state=state.wire_state)
+                state = state._replace(wire_state=new_ws)
+            else:
+                recv = R.quantize_dequantize_per_node(payload, spec=spec)
             recv_student, protos_rx = recv["student"], recv["protos"]
         else:
             recv_student = (R.quantize_dequantize_per_node(
@@ -431,6 +455,14 @@ def run_federation(teacher_cfg: ModelConfig, fed: FederationConfig,
     eval_cfg = model_cfgs[1] if algo in ("profe", "fml") else model_cfgs[0]
     proto_cfg = eval_cfg
     needs_teacher = algo in ("profe", "fml")
+    if isinstance(bits, WireSpec) and bits.error_feedback:
+        # stateful codec: zero residual per node, shaped like the wire
+        # payload — carried inside the stacked NodeState from here on
+        from repro.core.wire_state import init_codec_state
+        stacked = stacked._replace(wire_state=init_codec_state({
+            "protos": jnp.zeros((n_nodes, ncls, proto_cfg.proto_dim),
+                                jnp.float32),
+            "student": stacked.student}))
 
     # the lowered schedule: [R, N]/[R, N, N] stacks indexed per round and
     # fed to the jitted round as traced operands (R == 1 for static)
@@ -449,6 +481,13 @@ def run_federation(teacher_cfg: ModelConfig, fed: FederationConfig,
     result.extras["wire_bytes_per_copy"] = tree_wire_bytes(payload, bits)
     result.extras["wire_bytes_packed_per_copy"] = \
         packed_copy_bytes(payload, bits)
+    # per-node GB actually moved by the packed mesh exchange over the
+    # whole run (degree-weighted, per round) — the physical twin of
+    # avg_sent_gb, so one result row carries the full bytes-vs-F1
+    # tradeoff without a second accounting script
+    result.extras["avg_sent_packed_gb"] = _packed_sent_gb(
+        sched, fed.rounds, result.extras["wire_bytes_packed_per_copy"],
+        n_nodes)
     round_times: List[float] = []
     result.extras["round_times_s"] = round_times
     t0 = time.time()
@@ -541,7 +580,39 @@ def run_federation_loop(teacher_cfg: ModelConfig, fed: FederationConfig,
     states = _init_states(algo, model_cfgs, fed, opt_s, opt_t, ncls)
     eval_cfg = model_cfgs[1] if algo in ("profe", "fml") else model_cfgs[0]
     proto_cfg = eval_cfg
+    # stateful wire codec: per-node residual dicts, the reference
+    # semantics of the stacked engine's carried CodecState
+    ef = isinstance(bits, WireSpec) and bits.error_feedback \
+        and wire_model is not None and share_protos
+    ef_qdq = None
+    if ef:
+        from repro.core.wire_state import (ef_quantize_dequantize_tree,
+                                           init_codec_state)
+        for i in range(n_nodes):
+            states[i] = states[i]._replace(wire_state=init_codec_state({
+                "protos": jnp.zeros((ncls, proto_cfg.proto_dim),
+                                    jnp.float32),
+                "student": states[i].student}))
+        # jitted like the stacked round program, so both engines see the
+        # same compiled residual arithmetic (XLA contracts the
+        # mul-subtract of the residual update into an FMA; an eager
+        # reference would drift by an ulp and the drift compounds)
+        ef_qdq = jax.jit(
+            lambda t, s: ef_quantize_dequantize_tree(t, bits, s))
     result = FederationResult(comm=meter, algorithm=algo)
+    # same wire-byte extras as the stacked engine, so a run that fell
+    # back to the reference loop still fills the one-row fig2 artifact
+    from repro.core.comm import packed_copy_bytes
+    from repro.core.quantization import tree_wire_bytes
+    payload_t = _payload_template(wire_model, share_protos, states[0],
+                                  ncls, proto_cfg.proto_dim,
+                                  node_axis=False)
+    result.extras["wire_bytes_per_copy"] = tree_wire_bytes(payload_t, bits)
+    result.extras["wire_bytes_packed_per_copy"] = \
+        packed_copy_bytes(payload_t, bits)
+    result.extras["avg_sent_packed_gb"] = _packed_sent_gb(
+        sched, fed.rounds, result.extras["wire_bytes_packed_per_copy"],
+        n_nodes)
     round_times: List[float] = []
     result.extras["round_times_s"] = round_times
     t0 = time.time()
@@ -571,7 +642,19 @@ def run_federation_loop(teacher_cfg: ModelConfig, fed: FederationConfig,
                 protos.append(pr)
                 counts.append(ct)
 
-        # 3) gossip: metering + (de-quantized) receive buffers
+        # 3) gossip: metering + (de-quantized) receive buffers.  With
+        #    error feedback every node's payload goes through the
+        #    stateful codec exactly once per round (residual replayed +
+        #    updated, isolated nodes included — matching the stacked
+        #    engine, which quantizes all nodes unconditionally).
+        ef_recv: List[Any] = []
+        if ef:
+            for i in range(n_nodes):
+                recv_i, new_ws = ef_qdq(
+                    {"protos": protos[i], "student": states[i].student},
+                    states[i].wire_state)
+                states[i] = states[i]._replace(wire_state=new_ws)
+                ef_recv.append(recv_i)
         recv_models: List[List[Any]] = [[] for _ in range(n_nodes)]
         recv_sizes: List[List[float]] = [[] for _ in range(n_nodes)]
         for i in range(n_nodes):
@@ -585,17 +668,21 @@ def run_federation_loop(teacher_cfg: ModelConfig, fed: FederationConfig,
             meter.record_broadcast(i, neigh, payload, kind=algo, round_idx=rnd,
                                    bits=bits)
             if wire_model is not None:
-                model_rx = quantize_dequantize_tree(
-                    states[i].student, bits.bits_for("student")) \
-                    if bits else states[i].student
+                if ef:
+                    model_rx = ef_recv[i]["student"]
+                else:
+                    model_rx = quantize_dequantize_tree(
+                        states[i].student, bits.bits_for("student")) \
+                        if bits else states[i].student
                 for j in neigh:
                     recv_models[j].append(model_rx)
                     recv_sizes[j].append(sizes[i])
 
         # 4) aggregation
         if share_protos:
-            protos_rx = [quantize_dequantize_tree(p, bits.bits_for("protos"))
-                         if bits else p for p in protos]
+            protos_rx = [r["protos"] for r in ef_recv] if ef else \
+                [quantize_dequantize_tree(p, bits.bits_for("protos"))
+                 if bits else p for p in protos]
             all_p = jnp.stack(protos_rx)
             all_c = jnp.stack(counts)
             for i in range(n_nodes):

@@ -74,6 +74,7 @@ from repro.core.round_ops import (dequantize_leaf, gossip_matrix_dyn,
                                   include_matrix, mix_node_trees,
                                   neighborhood_prototype_aggregate,
                                   quantize_leaf_per_node, weighted_node_mean)
+from repro.core.wire_state import CodecState, ef_state_specs
 from repro.kernels.quantize import ops as Q
 from repro.wirespec import WireSpec, resolve_spec
 
@@ -219,6 +220,15 @@ def make_profe_round(mesh, student_specs, bits: int = 16,
     ``spec`` (a :class:`repro.wirespec.WireSpec`) sets the wire format —
     per-group widths incl. int8/int4 and mixed precision; ``bits`` is
     the uniform shorthand it defaults from.
+
+    A spec with ``error_feedback`` makes the codec stateful: the round
+    becomes ``round_fn(students, protos, counts, sizes, codec_state)``
+    and additionally returns the updated
+    :class:`repro.core.wire_state.CodecState` — the node-sharded
+    residual tree (leaves ``P("pod", ...)``) is replayed into the
+    payload before quantization and never crosses pods, so every
+    exchange mode moves byte-identical collectives to the stateless
+    spec (asserted by ``launch/dryrun.py --ef``).
     """
     wire = spec if spec is not None else WireSpec.from_bits(bits)
     adj = None if adjacency is None else np.asarray(adjacency)
@@ -230,13 +240,58 @@ def make_profe_round(mesh, student_specs, bits: int = 16,
     return _make_profe_round_packed(mesh, student_specs, wire, adj)
 
 
+def _quantize_with_state(mesh, wire: WireSpec, buf, seg_ids, meta,
+                         ef_state: Optional[CodecState]):
+    """The (optionally stateful) quantize step of the mesh codec:
+    ``(codes, scales, new_state_or_None)``.  The residual packs into the
+    identical buffer layout, stays node-sharded (``P("pod", ...)``), and
+    updates in the same fused pass — it never feeds a collective, so
+    the exchange bytes match the stateless codec exactly."""
+    if ef_state is None:
+        codes, scales = Q.quantize_packed_buffer(buf, seg_ids, meta[2],
+                                                 seg_bits=meta[4],
+                                                 use_kernels=False)
+        return codes, scales, None
+    res_buf, _ids, res_meta = Q.pack_tree_nodes(ef_state.residual)
+    res_buf = _constrain_buf(mesh, res_buf, "pod")
+    codes, scales, new_res = Q.quantize_packed_buffer(
+        buf, seg_ids, meta[2], seg_bits=meta[4], use_kernels=False,
+        residual=res_buf, ef_decay=wire.ef_decay)
+    new_res = _constrain_buf(mesh, new_res, "pod")
+    return codes, scales, CodecState(Q.unpack_tree_nodes(new_res, res_meta))
+
+
+def _constrain_ef_state(mesh, state: CodecState, student_specs):
+    return CodecState(residual=_constrain_over_pod(
+        mesh, state.residual, ef_state_specs(student_specs).residual,
+        "pod"))
+
+
+def _wrap_ef(core, mesh, student_specs, wire: WireSpec):
+    """Arity of the round follows the spec: stateless specs keep the
+    4-arg ``round_fn``; error-feedback specs take and return the
+    :class:`CodecState` (its leaves pinned node-sharded so the residual
+    can never leak into a collective)."""
+    if wire.error_feedback:
+        def round_fn(students, protos, counts, sizes, codec_state):
+            s, g, m, new_state = core(students, protos, counts, sizes,
+                                      codec_state)
+            return s, g, m, _constrain_ef_state(mesh, new_state,
+                                                student_specs)
+        return round_fn
+
+    def round_fn(students, protos, counts, sizes):
+        return core(students, protos, counts, sizes, None)[:3]
+    return round_fn
+
+
 def _make_profe_round_packed(mesh, student_specs, wire: WireSpec, adj):
     """Packed single-buffer exchange: quantize+pack+encode -> ONE
     all-gather of the [N, B] spec-byte wire buffer over the pod axis ->
     decode -> fused weighted mix on the codes -> unpack."""
     include = None if adj is None else include_matrix(adj)
 
-    def round_fn(students, protos, counts, sizes):
+    def _round(students, protos, counts, sizes, ef_state):
         n = counts.shape[0]
         payload = {"protos": protos, "student": students}
         buf, seg_ids, meta = Q.pack_tree_nodes(payload, wire)
@@ -244,9 +299,8 @@ def _make_profe_round_packed(mesh, student_specs, wire: WireSpec, adj):
         buf = _constrain_buf(mesh, buf, "pod")
         # jnp codec flavor: GSPMD partitions it over the mesh (the
         # Pallas kernels run per-device under shard_map, see ppermute)
-        codes, scales = Q.quantize_packed_buffer(buf, seg_ids, meta[2],
-                                                 seg_bits=seg_bits,
-                                                 use_kernels=False)
+        codes, scales, new_state = _quantize_with_state(
+            mesh, wire, buf, seg_ids, meta, ef_state)
 
         # the exchange: ONE all-gather of the encoded [N, B] byte
         # buffer over the pod axis — B is exactly the spec bytes
@@ -298,16 +352,16 @@ def _make_profe_round_packed(mesh, student_specs, wire: WireSpec, adj):
         if adj is None:
             global_protos, proto_mask = aggregate_prototypes(protos_rx,
                                                              counts_r)
-            return new_students, global_protos, proto_mask
+            return new_students, global_protos, proto_mask, new_state
         global_protos, proto_mask = neighborhood_prototype_aggregate(
             include, protos_rx, counts_r)
         global_protos = jax.lax.with_sharding_constraint(
             global_protos, NamedSharding(mesh, P("pod", None, None)))
         proto_mask = jax.lax.with_sharding_constraint(
             proto_mask, NamedSharding(mesh, P("pod", None)))
-        return new_students, global_protos, proto_mask
+        return new_students, global_protos, proto_mask, new_state
 
-    return round_fn
+    return _wrap_ef(_round, mesh, student_specs, wire)
 
 
 def _make_profe_round_ppermute(mesh, student_specs, wire: WireSpec,
@@ -319,14 +373,16 @@ def _make_profe_round_ppermute(mesh, student_specs, wire: WireSpec,
     charges — int4 rows physically move a quarter of the int16 bytes."""
     perms, srcs = _perm_lowering(adj)
 
-    def round_fn(students, protos, counts, sizes):
+    def _round(students, protos, counts, sizes, ef_state):
         payload = {"protos": protos, "student": students}
         buf, seg_ids, meta = Q.pack_tree_nodes(payload, wire)
         seg_bits = meta[4]
         buf = _constrain_buf(mesh, buf, "pod")
-        codes, scales = Q.quantize_packed_buffer(buf, seg_ids, meta[2],
-                                                 seg_bits=seg_bits,
-                                                 use_kernels=False)
+        # the stateful quantize runs BEFORE the permutes — the residual
+        # is a node-local operand, so the exchange below still moves
+        # exactly degree x spec bytes
+        codes, scales, new_state = _quantize_with_state(
+            mesh, wire, buf, seg_ids, meta, ef_state)
         w_self_v, w_neigh = gossip_matrix_dyn(adj, sizes)
         prow, pnrows, pshape = _proto_recipe(payload, meta)
         ccls, pdim = pshape[1], pshape[2]
@@ -395,9 +451,9 @@ def _make_profe_round_ppermute(mesh, student_specs, wire: WireSpec,
             Q.unpack_tree_nodes(mixed, meta)["student"], students)
         new_students = _constrain_over_pod(mesh, new_students,
                                            student_specs, "pod")
-        return new_students, global_protos, proto_mask
+        return new_students, global_protos, proto_mask, new_state
 
-    return round_fn
+    return _wrap_ef(_round, mesh, student_specs, wire)
 
 
 def _make_profe_round_gather(mesh, student_specs, wire: WireSpec, adj):
@@ -409,22 +465,43 @@ def _make_profe_round_gather(mesh, student_specs, wire: WireSpec, adj):
     s_bits = wire.bits_for("student")
     p_bits = wire.bits_for("protos")
 
-    def round_fn(students, protos, counts, sizes):
+    def _round(students, protos, counts, sizes, ef_state):
+        # 0. stateful codec: replay the carried residual into the
+        #    payload (all node-local math, pre-exchange)
+        if ef_state is not None:
+            decay = jnp.float32(wire.ef_decay)
+            eff_students = jax.tree_util.tree_map(
+                lambda x, r: x.astype(jnp.float32) + decay * r,
+                students, ef_state.residual["student"])
+            eff_protos = protos.astype(jnp.float32) + \
+                decay * ef_state.residual["protos"]
+        else:
+            eff_students, eff_protos = students, protos
+
         # 1. quantize per node (vmapped math, stays in-pod)
         q = jax.tree_util.tree_map(
-            lambda x: quantize_leaf_per_node(x, s_bits), students,
+            lambda x: quantize_leaf_per_node(x, s_bits), eff_students,
             is_leaf=lambda x: hasattr(x, "shape"))
         codes = jax.tree_util.tree_map(lambda t: t[0], q,
                                        is_leaf=lambda t: isinstance(t, tuple))
         scales = jax.tree_util.tree_map(lambda t: t[1], q,
                                         is_leaf=lambda t: isinstance(t, tuple))
+        pq, pd = quantize_leaf_per_node(eff_protos, p_bits)
+        if ef_state is not None:
+            # fresh quantization error, from the pre-exchange view
+            new_state = CodecState(residual={
+                "protos": eff_protos - dequantize_leaf(pq, pd),
+                "student": jax.tree_util.tree_map(
+                    lambda e, c, d: e - dequantize_leaf(c, d),
+                    eff_students, codes, scales)})
+        else:
+            new_state = None
 
         # 2. the exchange: all-gather int16 codes over the pod axis
         codes = _replicate_over_pod(mesh, codes, student_specs)
         scales = jax.tree_util.tree_map(
             lambda d: jax.lax.with_sharding_constraint(
                 d, NamedSharding(mesh, P(None))), scales)
-        pq, pd = quantize_leaf_per_node(protos, p_bits)
         pq = jax.lax.with_sharding_constraint(
             pq, NamedSharding(mesh, P(None, None, None)))
         counts_r = jax.lax.with_sharding_constraint(
@@ -442,7 +519,7 @@ def _make_profe_round_gather(mesh, student_specs, wire: WireSpec, adj):
                 means, codes)
             global_protos, proto_mask = aggregate_prototypes(protos_rx,
                                                              counts_r)
-            return new_students, global_protos, proto_mask
+            return new_students, global_protos, proto_mask, new_state
 
         # masked gossip: per-node weighted einsum over the gathered
         # codes; non-neighbor columns are zero, own copy unquantized
@@ -456,9 +533,9 @@ def _make_profe_round_gather(mesh, student_specs, wire: WireSpec, adj):
             global_protos, NamedSharding(mesh, P("pod", None, None)))
         proto_mask = jax.lax.with_sharding_constraint(
             proto_mask, NamedSharding(mesh, P("pod", None)))
-        return new_students, global_protos, proto_mask
+        return new_students, global_protos, proto_mask, new_state
 
-    return round_fn
+    return _wrap_ef(_round, mesh, student_specs, wire)
 
 
 # ---------------------------------------------------------------------------

@@ -35,6 +35,12 @@ class NodeState(NamedTuple):
     global_protos: jnp.ndarray   # [C, P]
     proto_mask: jnp.ndarray      # [C]
     round_idx: jnp.ndarray       # scalar int32
+    # stateful wire codec (None unless the WireSpec enables error
+    # feedback): a core.wire_state.CodecState whose residual tree
+    # mirrors the node's wire payload {"protos", "student"}.  Riding
+    # inside NodeState means the stacked engine carries it through the
+    # donated round program and checkpoints capture it for exact resume.
+    wire_state: Any = None
 
 
 def proto_labels(cfg: ModelConfig, batch) -> jnp.ndarray:

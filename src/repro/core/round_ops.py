@@ -79,7 +79,8 @@ def dequantize_leaf(codes, delta):
 def quantize_dequantize_per_node(tree, bits: int = 16, *,
                                  spec: Optional[WireSpec] = None,
                                  use_kernels: Optional[bool] = None,
-                                 packed: bool = True, rng=None):
+                                 packed: bool = True, rng=None,
+                                 state=None):
     """Receiver-side reconstruction of a stacked pytree: every float
     leaf [N, ...] goes through per-node codes and back to fp32.
     Non-float leaves pass through untouched.
@@ -94,14 +95,40 @@ def quantize_dequantize_per_node(tree, bits: int = 16, *,
     case.  Pallas kernels on TPU (``use_kernels`` defaults to the
     backend check), jnp elsewhere — bit-identical to the per-leaf math
     (``packed=False``), asserted in tests.
+
+    ``state`` (a :class:`repro.core.wire_state.CodecState`, required
+    when ``spec.error_feedback`` is set) switches to the stateful
+    codec: the carried residual is added to the payload before
+    quantization and the call returns ``(reconstruction, new_state)``
+    — wire format unchanged, zero extra bytes.
     """
     if use_kernels is None:
         use_kernels = jax.default_backend() == "tpu"
+    if spec is not None and spec.error_feedback and state is None:
+        raise ValueError("WireSpec.error_feedback is set but no CodecState "
+                         "was passed — the stateful codec needs the "
+                         "carried per-node residual")
+    if spec is not None and spec.stochastic_rounding and not packed:
+        raise ValueError("the per-leaf reference path does not implement "
+                         "stochastic rounding — use the packed codec "
+                         "(silently rounding deterministically would "
+                         "fake the unbiasedness)")
     if spec is not None and spec.uniform_bits is not None:
         bits = spec.uniform_bits
+    if state is not None and not packed:
+        from repro.core.wire_state import ef_quantize_dequantize_tree
+        return ef_quantize_dequantize_tree(
+            tree, spec if spec is not None else WireSpec.from_bits(bits),
+            state, node_axis=True)
     if packed and any(_is_float(x) for x in jax.tree_util.tree_leaves(tree)):
+        from repro.core.wire_state import CodecState
         from repro.kernels.quantize.ops import (
             quantize_dequantize_tree_packed_nodes)
+        if state is not None:
+            recv, new_res = quantize_dequantize_tree_packed_nodes(
+                tree, bits, spec=spec, use_kernels=use_kernels, rng=rng,
+                residual=state.residual)
+            return recv, CodecState(new_res)
         return quantize_dequantize_tree_packed_nodes(
             tree, bits, spec=spec, use_kernels=use_kernels, rng=rng)
     if spec is not None and spec.uniform_bits is None:

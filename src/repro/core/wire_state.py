@@ -1,0 +1,148 @@
+"""Stateful wire codec: per-node error-feedback residual state.
+
+Sub-byte wire widths discard a large quantization residual every round
+— the int4 wire measurably costs F1 (``fig2_f1.py --bits``).  Error
+feedback (Sattler et al., communication-efficient federated
+distillation; Seide et al.'s 1-bit SGD trick) fixes this *without any
+extra wire bytes*: each node keeps the quantization error it made last
+round and adds it back into the payload before quantizing the next one,
+
+    eff_t   = x_t + decay * e_t
+    wire_t  = Q(eff_t)                       (the only thing that travels)
+    e_{t+1} = eff_t - deq(wire_t)            (stays on the node)
+
+so the error is re-played into later rounds instead of being lost.
+
+:class:`CodecState` is the carried state — one fp32 residual per float
+leaf of the wire payload, mirroring the payload tree (non-float leaves
+hold no residual).  It is a plain pytree (NamedTuple), so it:
+
+* rides inside :class:`repro.core.profe.NodeState` (``wire_state``
+  field) through the stacked jitted round as part of the donated carry,
+* checkpoints through ``checkpoint/ckpt.py`` like any other state leaf
+  (resumed runs reproduce uninterrupted runs exactly, asserted in
+  tests),
+* shards over the pod axis on federation meshes (every leaf keeps the
+  leading ``[N, ...]`` node dim).
+
+The packed-buffer fast path lives in ``kernels/quantize/ops.py``
+(``quantize_packed_buffer(..., residual=...)`` — fused residual-add →
+mixed-width quantize → residual-update, one Pallas launch); this module
+holds the state container plus the per-leaf *reference* implementation
+the packed path is asserted bit-identical to.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.wirespec import WireSpec
+
+
+class CodecState(NamedTuple):
+    """Per-node error-feedback state of the stateful wire codec.
+
+    ``residual`` mirrors the wire payload tree: an fp32 array of the
+    leaf's shape at every float leaf, ``None`` (no pytree leaf) at
+    non-float leaves.  Residuals never travel — the wire format of a
+    spec with ``error_feedback`` is byte-identical to the stateless
+    spec (asserted by ``launch/dryrun.py --ef``).
+    """
+
+    residual: Any
+
+
+def _is_float(x) -> bool:
+    return hasattr(x, "dtype") and jnp.issubdtype(x.dtype, jnp.floating)
+
+
+def init_codec_state(payload_tree) -> CodecState:
+    """Zero residual state shaped like ``payload_tree``'s float leaves.
+
+    Works on arrays or ``ShapeDtypeStruct``s (struct trees give struct
+    states for ``jax.eval_shape``/dry-run lowering).
+    """
+    def zero(x):
+        if not _is_float(x):
+            return None
+        if isinstance(x, jax.ShapeDtypeStruct):
+            return jax.ShapeDtypeStruct(x.shape, jnp.float32)
+        return jnp.zeros(x.shape, jnp.float32)
+    return CodecState(residual=jax.tree_util.tree_map(zero, payload_tree))
+
+
+def ef_state_specs(student_specs) -> CodecState:
+    """Sharding specs of the residual state for the mesh wire payload
+    ``{"protos", "student"}``: node-sharded exactly like the payload it
+    mirrors (prototypes ``P(None, None)`` per node, student leaves the
+    caller's param specs).  Consumed by ``core/mesh_federation.py`` and
+    the ``launch/wire.py`` byte gate."""
+    from jax.sharding import PartitionSpec as P
+    return CodecState(residual={"protos": P(None, None),
+                                "student": student_specs})
+
+
+def residual_leaves(tree, state: CodecState):
+    """The payload's float leaves paired with their residuals, in
+    flatten order: ``(paths, leaves, residuals)``.  The residual tree
+    flattens to exactly the payload's float leaves (``None`` nodes hold
+    no leaves), so a positional walk is the alignment — no joint
+    tree_map, which would trip over non-float payload leaves.
+    """
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    floats = [(p, x) for p, x in flat if _is_float(x)]
+    res = jax.tree_util.tree_leaves(state.residual)
+    if len(res) != len(floats):
+        raise ValueError(
+            f"CodecState holds {len(res)} residual leaves for a payload "
+            f"with {len(floats)} float leaves — the state was initialized "
+            f"for a different payload structure")
+    for (p, x), r in zip(floats, res):
+        if tuple(r.shape) != tuple(x.shape):
+            raise ValueError(f"residual shape {r.shape} != payload leaf "
+                             f"shape {x.shape} at {p}")
+    return floats, res
+
+
+def ef_quantize_dequantize_tree(tree, spec: WireSpec, state: CodecState, *,
+                                node_axis: bool = False
+                                ) -> Tuple[Any, CodecState]:
+    """Per-leaf reference of the stateful codec: the receiver-side view
+    of ``tree`` under error feedback, plus the updated state.
+
+    ``node_axis=True`` treats each float leaf as stacked ``[N, ...]``
+    with one scale per node slice (the stacked-engine / packed-codec
+    convention, ``round_ops.quantize_leaf_per_node``); ``node_axis=
+    False`` scales whole leaves (the per-node reference-loop
+    convention, ``quantization.quantize_array``).  Bit-identical to the
+    packed-buffer fast path for the same convention (asserted in
+    tests).
+    """
+    from repro.core.quantization import quantize_array
+    from repro.core.round_ops import dequantize_leaf, quantize_leaf_per_node
+    from repro.kernels.quantize.ops import _leaf_group
+
+    residual_leaves(tree, state)                 # alignment/shape checks
+    res_iter = iter(jax.tree_util.tree_leaves(state.residual))
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    new_res = []
+    for path, leaf in flat:
+        if not _is_float(leaf):
+            out.append(leaf)
+            continue
+        bits = spec.bits_for(_leaf_group(path))
+        eff = leaf.astype(jnp.float32) + \
+            jnp.float32(spec.ef_decay) * next(res_iter)
+        if node_axis:
+            deq = dequantize_leaf(*quantize_leaf_per_node(eff, bits))
+        else:
+            codes, delta = quantize_array(eff, bits)
+            deq = codes.astype(jnp.float32) * delta
+        out.append(deq)
+        new_res.append(eff - deq)
+    recv = jax.tree_util.tree_unflatten(treedef, out)
+    res_def = jax.tree_util.tree_structure(state.residual)
+    return recv, CodecState(jax.tree_util.tree_unflatten(res_def, new_res))

@@ -14,6 +14,12 @@ Pads arbitrary tensors to (8,128)-aligned 2-D, runs the Pallas kernels
   quantize) instead of hundreds.  ``node_axis=True`` treats each slice
   along a leaf's leading ``[N, ...]`` axis as its own segment — the
   stacked-node-state wire format of ``core/round_ops.py``.
+
+The packed node codec is optionally *stateful* (error feedback,
+``core/wire_state.py``): pass ``residual=`` to quantize the effective
+payload ``x + decay·e`` and get the fresh quantization error back — a
+single fused Pallas pass (residual-add → mixed-width quantize →
+residual-update), zero extra wire bytes.
 """
 from __future__ import annotations
 
@@ -30,9 +36,11 @@ from repro.kernels.quantize.quantize import (dequantize_pallas,
                                              fused_quantize_pallas,
                                              mix_packed_pallas,
                                              quantize_dequantize_rows_pallas,
+                                             quantize_rows_ef_pallas,
                                              quantize_rows_mixed_pallas,
                                              quantize_rows_pallas,
-                                             rowabs_pallas)
+                                             rowabs_pallas,
+                                             rowabs_sum_pallas)
 from repro.wirespec import WireSpec, canonical_group
 
 _COLS = 512
@@ -375,17 +383,29 @@ def _seg_qmax(n_seg: int, bits: int, seg_bits: Optional[np.ndarray]
 
 def _node_row_deltas(buf, seg_ids, n_seg: int, bits: int,
                      use_kernels: bool,
-                     seg_bits: Optional[np.ndarray] = None):
+                     seg_bits: Optional[np.ndarray] = None,
+                     residual=None, ef_decay: float = 1.0):
     """Per-(node, leaf) Δ: one row-absmax sweep + a tiny per-node
     segment-max.  Returns (scales [N, T] fp32, row_delta [N, R] fp32).
-    ``seg_bits`` makes Δ per-segment-width (mixed-precision specs)."""
+    ``seg_bits`` makes Δ per-segment-width (mixed-precision specs);
+    ``residual`` scales Δ from the *effective* payload
+    ``buf + ef_decay·residual`` (the error-feedback codec) — on the
+    kernel path the residual-add is fused into the absmax sweep, so the
+    effective fp32 buffer never lands in HBM."""
     qmax = _seg_qmax(n_seg, bits, seg_bits)                       # [T]
     n, r, _c = buf.shape
     if use_kernels:
-        row_amax = rowabs_pallas(buf.reshape(n * r, _c),
-                                 interpret=_interpret()).reshape(n, r)
+        if residual is None:
+            row_amax = rowabs_pallas(buf.reshape(n * r, _c),
+                                     interpret=_interpret()).reshape(n, r)
+        else:
+            row_amax = rowabs_sum_pallas(
+                buf.reshape(n * r, _c), residual.reshape(n * r, _c),
+                decay=ef_decay, interpret=_interpret()).reshape(n, r)
     else:
-        row_amax = jnp.max(jnp.abs(buf), axis=2)                  # [N, R]
+        eff = buf if residual is None else \
+            buf + jnp.float32(ef_decay) * residual
+        row_amax = jnp.max(jnp.abs(eff), axis=2)                  # [N, R]
     ids = jnp.asarray(seg_ids)
     seg_amax = jax.vmap(lambda ra: jax.ops.segment_max(
         ra, ids, num_segments=n_seg, indices_are_sorted=True))(row_amax)
@@ -398,7 +418,7 @@ def _node_row_deltas(buf, seg_ids, n_seg: int, bits: int,
 def quantize_packed_buffer(buf, seg_ids, n_seg: int, bits: int = 16, *,
                            seg_bits: Optional[np.ndarray] = None,
                            use_kernels: Optional[bool] = None,
-                           rng=None):
+                           rng=None, residual=None, ef_decay: float = 1.0):
     """Quantize an already-packed ``[N, R, C]`` buffer.  Returns
     ``(codes [N, R, C] wire-intN, scales [N, T] fp32)``.
 
@@ -408,15 +428,36 @@ def quantize_packed_buffer(buf, seg_ids, n_seg: int, bits: int = 16, *,
     serializes them to their true per-segment wire bytes.  ``rng``
     enables stochastic rounding (``floor(x/Δ + U[0,1))``, unbiased;
     jnp path only).
+
+    ``residual`` (``[N, R, C]`` fp32) switches to the *stateful* codec:
+    the effective payload ``buf + ef_decay·residual`` is quantized
+    instead, and the fresh quantization error comes back as a third
+    return value — ``(codes, scales, new_residual)``.  On the kernel
+    path this is ONE fused launch (residual-add → mixed-width quantize
+    → residual-update, :func:`quantize_rows_ef_pallas`); the effective
+    fp32 buffer is never materialized.  Residuals never reach the wire:
+    the codes/scales are byte-identical in format to the stateless
+    path.
     """
     if use_kernels is None:
         use_kernels = jax.default_backend() == "tpu"
     n, r, c = buf.shape
     deltas, row_delta = _node_row_deltas(buf, seg_ids, n_seg, bits,
-                                         use_kernels, seg_bits)
+                                         use_kernels, seg_bits,
+                                         residual=residual,
+                                         ef_decay=ef_decay)
     row_qmax = _seg_qmax(n_seg, bits, seg_bits)[seg_ids]          # [R]
     max_bits = int(np.max(seg_bits)) if seg_bits is not None else bits
+    wire_dtype = _wire_int_dtype(max_bits)
     if use_kernels and rng is None:
+        if residual is not None:
+            qm_col = jnp.asarray(np.tile(row_qmax, n)[:, None])
+            codes2d, newres2d = quantize_rows_ef_pallas(
+                buf.reshape(n * r, c), residual.reshape(n * r, c),
+                row_delta.reshape(n * r, 1), qm_col, decay=ef_decay,
+                interpret=_interpret())
+            return (codes2d.reshape(n, r, c).astype(wire_dtype), deltas,
+                    newres2d.reshape(n, r, c))
         if seg_bits is None or len(set(seg_bits.tolist())) == 1:
             codes = quantize_rows_pallas(
                 buf.reshape(n * r, c), row_delta.reshape(n * r, 1),
@@ -428,12 +469,17 @@ def quantize_packed_buffer(buf, seg_ids, n_seg: int, bits: int = 16, *,
                 buf.reshape(n * r, c), row_delta.reshape(n * r, 1),
                 qm_col, interpret=_interpret()).reshape(n, r, c)
     else:
+        eff = buf if residual is None else \
+            buf + jnp.float32(ef_decay) * residual
         offset = 0.5 if rng is None else \
             jax.random.uniform(rng, buf.shape, jnp.float32)
-        codes = jnp.floor(buf / row_delta[:, :, None] + offset)
+        codes = jnp.floor(eff / row_delta[:, :, None] + offset)
         qm = jnp.asarray(row_qmax)[None, :, None]
         codes = jnp.clip(codes, -qm - 1, qm)
-    return codes.astype(_wire_int_dtype(max_bits)), deltas
+        if residual is not None:
+            new_res = eff - codes * row_delta[:, :, None]
+            return codes.astype(wire_dtype), deltas, new_res
+    return codes.astype(wire_dtype), deltas
 
 
 # -- the serialized wire byte buffer ----------------------------------------
@@ -542,7 +588,7 @@ def wire_buffer_bytes(seg_ids, bits: int = 16, *,
 def quantize_tree_packed_nodes(tree, bits: int = 16, *,
                                spec: Optional[WireSpec] = None,
                                use_kernels: Optional[bool] = None,
-                               rng=None) -> Dict[str, Any]:
+                               rng=None, residual=None) -> Dict[str, Any]:
     """The wire payload of one federation round: quantize a stacked
     ``[N, ...]`` pytree into ``{"codes": [N, R, C] intN, "scales":
     [N, T] fp32, "seg_ids", "seg_bits", "meta", "bits"}`` — per-(leaf,
@@ -552,13 +598,40 @@ def quantize_tree_packed_nodes(tree, bits: int = 16, *,
     :func:`encode_wire` turns the codes into the physical byte buffer.
     A spec with ``stochastic_rounding`` set requires an explicit ``rng``
     (the noise source is the caller's to seed — silently falling back
-    to deterministic rounding would fake the unbiasedness)."""
+    to deterministic rounding would fake the unbiasedness).
+
+    ``residual`` (required when ``spec.error_feedback`` is set — the
+    stateful codec must not silently drop its state) is a pytree of
+    fp32 residuals for exactly the float leaves of ``tree`` (see
+    ``core/wire_state.py``); it is packed into the identical buffer
+    layout, added to the payload before quantization, and the payload
+    gains an ``"ef_residual"`` entry holding the *updated* residual
+    tree.  That entry never rides the wire — codes, scales, and the
+    encoded byte buffer are format-identical to the stateless path."""
     if spec is not None and spec.stochastic_rounding and rng is None:
         raise ValueError("WireSpec.stochastic_rounding is set but no rng "
                          "was passed — stochastic rounding needs an "
                          "explicit PRNG key")
+    if spec is not None and spec.error_feedback and residual is None:
+        raise ValueError("WireSpec.error_feedback is set but no residual "
+                         "was passed — the stateful codec needs the "
+                         "carried per-node residual tree (CodecState)")
     buf, seg_ids, meta = pack_tree_nodes(tree, spec)
     seg_bits = meta[4]
+    if residual is not None:
+        res_buf, _res_ids, res_meta = pack_tree_nodes(residual)
+        if res_buf.shape != buf.shape:
+            raise ValueError(
+                f"residual buffer {res_buf.shape} does not match the "
+                f"payload buffer {buf.shape} — the residual tree must "
+                f"mirror the payload's float leaves")
+        codes, deltas, new_res = quantize_packed_buffer(
+            buf, seg_ids, meta[2], bits, seg_bits=seg_bits,
+            use_kernels=use_kernels, rng=rng, residual=res_buf,
+            ef_decay=spec.ef_decay if spec is not None else 1.0)
+        return {"codes": codes, "scales": deltas, "seg_ids": seg_ids,
+                "seg_bits": seg_bits, "meta": meta, "bits": bits,
+                "ef_residual": unpack_tree_nodes(new_res, res_meta)}
     codes, deltas = quantize_packed_buffer(buf, seg_ids, meta[2], bits,
                                            seg_bits=seg_bits,
                                            use_kernels=use_kernels, rng=rng)
@@ -576,15 +649,20 @@ def dequantize_tree_packed_nodes(payload):
 def quantize_dequantize_tree_packed_nodes(tree, bits: int = 16, *,
                                           spec: Optional[WireSpec] = None,
                                           use_kernels: Optional[bool] = None,
-                                          rng=None):
+                                          rng=None, residual=None):
     """Round-trip through the packed node wire format — what every
     receiver reconstructs.  Bit-identical to the per-leaf
     ``quantize_leaf_per_node``/``dequantize_leaf`` path (the
     encode/decode byte serialization is lossless, so it is elided
-    here)."""
-    return dequantize_tree_packed_nodes(
-        quantize_tree_packed_nodes(tree, bits, spec=spec,
-                                   use_kernels=use_kernels, rng=rng))
+    here).  With ``residual`` (the stateful error-feedback codec)
+    returns ``(reconstruction, new_residual_tree)`` instead."""
+    payload = quantize_tree_packed_nodes(tree, bits, spec=spec,
+                                         use_kernels=use_kernels, rng=rng,
+                                         residual=residual)
+    recv = dequantize_tree_packed_nodes(payload)
+    if residual is not None:
+        return recv, payload["ef_residual"]
+    return recv
 
 
 def packed_wire_rows(tree, *, node_axis: bool = True) -> Tuple[int, int]:

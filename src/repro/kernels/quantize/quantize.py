@@ -199,6 +199,89 @@ def rowabs_pallas(x2d, *, interpret: bool = False) -> jnp.ndarray:
     )(x2d.astype(jnp.float32))
 
 
+def _rowabs_sum_kernel(decay: float, dims, x_ref, res_ref, out_ref):
+    # per-row max|x + decay*res| without materializing the sum in HBM —
+    # the Δ pass of the stateful (error-feedback) codec
+    r, c, br, bc = dims
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    s = x_ref[...].astype(jnp.float32) + \
+        decay * res_ref[...].astype(jnp.float32)
+    rows = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) + i * br
+    cols = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1) + j * bc
+    a = jnp.where((rows < r) & (cols < c), jnp.abs(s), 0.0)
+    bm = jnp.max(a, axis=1, keepdims=True)
+
+    @pl.when(j == 0)
+    def _():
+        out_ref[...] = bm
+
+    @pl.when(j > 0)
+    def _():
+        out_ref[...] = jnp.maximum(out_ref[...], bm)
+
+
+def rowabs_sum_pallas(x2d, res2d, *, decay: float = 1.0,
+                      interpret: bool = False) -> jnp.ndarray:
+    """x2d, res2d: [R, C] -> per-row max|x + decay*res| [R, 1] — the
+    absmax sweep of the error-feedback codec, residual-add fused into
+    the reduction (the effective payload never lands in HBM)."""
+    r, c = x2d.shape
+    br, bc = min(BLOCK_R, r), min(BLOCK_C, c)
+    return pl.pallas_call(
+        functools.partial(_rowabs_sum_kernel, decay, (r, c, br, bc)),
+        grid=(pl.cdiv(r, br), pl.cdiv(c, bc)),
+        in_specs=[pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+                  pl.BlockSpec((br, bc), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((br, 1), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, 1), jnp.float32),
+        interpret=interpret,
+    )(x2d.astype(jnp.float32), res2d.astype(jnp.float32))
+
+
+def _quantize_rows_ef_kernel(decay: float, x_ref, res_ref, delta_ref,
+                             qmax_ref, codes_ref, newres_ref):
+    # the stateful-codec sweep in ONE launch: residual-add → mixed-width
+    # quantize (per-row Δ and qmax, like the mixed kernel) →
+    # residual-update.  The effective fp32 payload x + decay*res exists
+    # only as a block temporary — no materialized intermediate tree.
+    delta = delta_ref[...]                                  # [br, 1]
+    qmax = qmax_ref[...]                                    # [br, 1]
+    eff = x_ref[...].astype(jnp.float32) + \
+        decay * res_ref[...].astype(jnp.float32)
+    codes = jnp.floor(eff / delta + 0.5)
+    codes = jnp.clip(codes, -qmax - 1, qmax)
+    codes_ref[...] = codes.astype(jnp.int32)
+    newres_ref[...] = eff - codes * delta
+
+
+def quantize_rows_ef_pallas(x2d, res2d, row_delta, row_qmax, *,
+                            decay: float = 1.0, interpret: bool = False):
+    """x2d, res2d: [R, C]; row_delta/row_qmax: [R, 1] -> (int32 codes
+    [R, C], new residual fp32 [R, C]).  One launch: each row's effective
+    payload (x + decay·res) is quantized at its own Δ *and* width, and
+    the fresh quantization error is written back as the next round's
+    residual — the error-feedback state update costs no extra sweep."""
+    r, c = x2d.shape
+    br, bc = min(BLOCK_R, r), min(BLOCK_C, c)
+    return pl.pallas_call(
+        functools.partial(_quantize_rows_ef_kernel, decay),
+        grid=(pl.cdiv(r, br), pl.cdiv(c, bc)),
+        in_specs=[
+            pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+            pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+            pl.BlockSpec((br, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((br, 1), lambda i, j: (i, 0)),
+        ],
+        out_specs=[pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+                   pl.BlockSpec((br, bc), lambda i, j: (i, j))],
+        out_shape=[jax.ShapeDtypeStruct((r, c), jnp.int32),
+                   jax.ShapeDtypeStruct((r, c), jnp.float32)],
+        interpret=interpret,
+    )(x2d.astype(jnp.float32), res2d.astype(jnp.float32),
+      row_delta.astype(jnp.float32), row_qmax.astype(jnp.float32))
+
+
 def _quantize_rows_kernel(qmax: float, dequant: bool, x_ref, delta_ref,
                           out_ref):
     delta = delta_ref[...]                                  # [br, 1]

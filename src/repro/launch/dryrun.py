@@ -282,23 +282,31 @@ def lower_federate(cfg, student_cfg, mesh, n_pods: int) -> Dict[str, Any]:
 
 
 def topology_report(arch: str, topology: str, pods: int,
-                    bits="16") -> Dict[str, Any]:
+                    bits="16", ef: bool = False) -> Dict[str, Any]:
     """The --topology axis: physical wire bytes per exchange mode on an
     (N, 1, 1) federation mesh, asserted against the accountant.
 
     ``bits`` is a wire-spec string (``"16"``/``"8"``/``"4"`` uniform,
-    ``"4/16"`` = int4 student + int16 prototypes).  For sub-int16 specs
-    the int16 round is compiled too and the physical code-buffer bytes
-    must shrink by the spec's exact ratio (int4 ring ≤ 0.25x the int16
-    ring buffer bytes).
+    ``"4/16"`` = int4 student + int16 prototypes; a ``+ef`` suffix or
+    ``ef=True`` enables the stateful error-feedback codec).  For
+    sub-int16 specs the int16 round is compiled too and the physical
+    code-buffer bytes must shrink by the spec's exact ratio (int4 ring
+    ≤ 0.25x the int16 ring buffer bytes).  With error feedback the
+    stateless twin is ALSO compiled and the exchange bytes must match
+    it exactly — the residual state costs zero wire bytes.
     """
+    import dataclasses
+
     from repro.core import topology as T
     from repro.launch.wire import (check_bits_reduction,
+                                   check_ef_zero_overhead,
                                    check_topology_bytes,
                                    measure_exchange_bytes)
     from repro.wirespec import WireSpec, resolve_spec
     spec = WireSpec.parse(bits) if isinstance(bits, str) \
         else resolve_spec(bits)
+    if ef and not spec.error_feedback:
+        spec = dataclasses.replace(spec, error_feedback=True)
     report = measure_exchange_bytes(arch, pods, topology, bits=spec)
     adj = T.make_schedule(pods, topology, rounds=1, seed=0).adjacency_at(0)
     deg = int(adj.sum(axis=1).max())
@@ -307,6 +315,21 @@ def topology_report(arch: str, topology: str, pods: int,
     # irregular graph can need more (partial) steps than its max degree
     # and SPMD charges every step to every device, so asserting there
     # would fail a correct program.
+    if spec.error_feedback:
+        # error feedback must be wire-free on EVERY graph: the compiled
+        # stateless twin moves byte-identical collectives.  The packed
+        # gather compiles for any topology; ppermute is checked too when
+        # the graph is regular (the mode the ring acceptance relies on).
+        exs = ("packed", "ppermute") if T.is_regular(adj) else ("packed",)
+        report_sl = measure_exchange_bytes(arch, pods, topology,
+                                           bits=spec.stateless(),
+                                           exchanges=exs)
+        report["stateless_reference"] = {
+            "bits": report_sl["bits"],
+            "exchanges": report_sl["exchanges"],
+        }
+        for ex in exs:
+            check_ef_zero_overhead(report, report_sl, exchange=ex)
     if T.is_regular(adj):
         # a regular graph MUST lower to ppermute and pass the byte
         # assertion — a compile failure would otherwise make the gate
@@ -316,7 +339,7 @@ def topology_report(arch: str, topology: str, pods: int,
         frac = 0.5 if 2 * deg <= pods else None
         check_topology_bytes(report, exchange="ppermute", rel_tol=0.10,
                              gather_frac=frac)
-        if spec != WireSpec.from_bits(16):
+        if spec.stateless() != WireSpec.from_bits(16):
             # the headline knob: the same graph at int16, and the
             # physical buffer bytes must scale by exactly spec/int16
             # (only the ppermute mode is consumed — skip the other
@@ -354,13 +377,20 @@ def main():
     ap.add_argument("--bits", default="16",
                     help="wire spec for --topology mode: 16 | 8 | 4 "
                          "(uniform) or <student>/<protos> (mixed, e.g. "
-                         "4/16 = int4 student + int16 prototypes)")
+                         "4/16 = int4 student + int16 prototypes); "
+                         "append +ef (or pass --ef) for the stateful "
+                         "error-feedback codec")
+    ap.add_argument("--ef", action="store_true",
+                    help="error-feedback wire codec for --topology mode: "
+                         "compiles the stateful round AND its stateless "
+                         "twin, asserting byte-identical collectives "
+                         "(EF must cost zero wire bytes)")
     args = ap.parse_args()
 
     if args.topology is not None:
         try:
             report = topology_report(args.arch, args.topology, args.pods,
-                                     bits=args.bits)
+                                     bits=args.bits, ef=args.ef)
             report["status"] = "ok"
         except Exception as e:
             report = {"arch": args.arch, "topology": args.topology,

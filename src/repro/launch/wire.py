@@ -121,6 +121,15 @@ def measure_exchange_bytes(arch: str, n_nodes: int, topology: str = "ring",
     protos = jax.ShapeDtypeStruct((n_nodes, C, Pdim), jnp.float32)
     counts = jax.ShapeDtypeStruct((n_nodes, C), jnp.float32)
     sizes = jax.ShapeDtypeStruct((n_nodes,), jnp.float32)
+    ef_struct = None
+    ef_shardings = None
+    if spec.error_feedback:
+        # the stateful codec threads a node-sharded residual through the
+        # round — an extra (traced, P("pod", ...)) operand that must not
+        # add a single collective byte (asserted by the --ef dry-run)
+        from repro.core.wire_state import ef_state_specs, init_codec_state
+        ef_struct = init_codec_state({"protos": protos,
+                                      "student": students})
 
     # the accountant's per-copy payload skeleton (one node's payload)
     payload = {
@@ -157,6 +166,10 @@ def measure_exchange_bytes(arch: str, n_nodes: int, topology: str = "ring",
     }
     node_specs = jax.tree_util.tree_map(
         lambda s: P("pod", *s), specs, is_leaf=lambda x: isinstance(x, P))
+    if spec.error_feedback:
+        ef_shardings = to_named(jax.tree_util.tree_map(
+            lambda s: P("pod", *s), ef_state_specs(specs),
+            is_leaf=lambda x: isinstance(x, P)), mesh)
     # the "full-gather" pseudo-mode is the full-graph all-gather
     # reference (packed exchange, adjacency=None) the sparse exchange
     # is measured against
@@ -166,15 +179,17 @@ def measure_exchange_bytes(arch: str, n_nodes: int, topology: str = "ring",
         try:
             fn = make_profe_round(mesh, specs, spec=spec,
                                   adjacency=adjacency, exchange=mode)
+            in_sh = (to_named(node_specs, mesh),
+                     NamedSharding(mesh, P("pod", None, None)),
+                     NamedSharding(mesh, P("pod", None)),
+                     NamedSharding(mesh, P(None)))
+            args = (students, protos, counts, sizes)
+            if spec.error_feedback:
+                in_sh += (ef_shardings,)
+                args += (ef_struct,)
             with mesh:
-                jitted = jax.jit(
-                    fn,
-                    in_shardings=(to_named(node_specs, mesh),
-                                  NamedSharding(mesh, P("pod", None, None)),
-                                  NamedSharding(mesh, P("pod", None)),
-                                  NamedSharding(mesh, P(None))))
-                hlo = jitted.lower(students, protos, counts,
-                                   sizes).compile().as_text()
+                jitted = jax.jit(fn, in_shardings=in_sh)
+                hlo = jitted.lower(*args).compile().as_text()
             an = analyze_hlo(hlo)
             entry = {
                 "collective_bytes_per_node": float(an.coll_total),
@@ -273,4 +288,33 @@ def check_bits_reduction(report: Dict[str, Any], report16: Dict[str, Any],
             f"bytes = {ratio:.4f}x the int16 exchange ({buf16:.0f}); the "
             f"spec's byte ratio is {expected:.4f}x")
     report.setdefault("checks", []).append(verdict)
+    return verdict
+
+
+def check_ef_zero_overhead(report_ef: Dict[str, Any],
+                           report_stateless: Dict[str, Any], *,
+                           exchange: str = "ppermute") -> Dict[str, Any]:
+    """Assert the stateful (error-feedback) wire costs ZERO extra bytes:
+    the compiled exchange of the ``+ef`` spec must move EXACTLY the
+    stateless spec's collective bytes — the residual is node-local
+    state, never a collective operand.  Both reports must come from
+    :func:`measure_exchange_bytes` on the same (arch, topology, N)."""
+    for rep, name in ((report_ef, "ef"), (report_stateless, "stateless")):
+        ex = rep["exchanges"].get(exchange, {})
+        if "error" in ex or "collective_bytes_per_node" not in ex:
+            raise AssertionError(
+                f"{exchange} ({name}) did not compile: "
+                f"{ex.get('error', 'missing')}")
+    b_ef = report_ef["exchanges"][exchange]["collective_bytes_per_node"]
+    b_sl = report_stateless["exchanges"][exchange][
+        "collective_bytes_per_node"]
+    verdict = {"check": "ef_zero_overhead", "exchange": exchange,
+               "bits": report_ef["bits"], "bytes_ef": b_ef,
+               "bytes_stateless": b_sl}
+    if b_ef != b_sl:
+        raise AssertionError(
+            f"{exchange} with error feedback moves {b_ef:.0f} bytes/node "
+            f"vs {b_sl:.0f} stateless — EF must be wire-free; the "
+            f"residual leaked into a collective")
+    report_ef.setdefault("checks", []).append(verdict)
     return verdict

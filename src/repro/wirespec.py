@@ -54,12 +54,24 @@ class WireSpec:
     ``stochastic_rounding`` replaces the deterministic ``+0.5`` rounding
     with ``+U[0, 1)`` noise (unbiased codes; needs an explicit PRNG key
     at quantize time, and the Pallas fast path falls back to jnp).
+
+    ``error_feedback`` makes the codec *stateful*: each node carries a
+    per-leaf residual tree (:class:`repro.core.wire_state.CodecState`)
+    that is added to the payload before quantization and updated with
+    the fresh quantization error after encoding — the residual never
+    leaves the node, so the wire format (and every byte accountant) is
+    identical to the stateless spec.  ``ef_decay`` scales the carried
+    residual before it re-enters the payload (1.0 = full error
+    feedback); quantize calls must thread an explicit ``CodecState``
+    (silently dropping the residual would fake the F1 recovery).
     """
 
     student_bits: int = 16
     proto_bits: Optional[int] = None
     overrides: Tuple[Tuple[str, int], ...] = ()
     stochastic_rounding: bool = False
+    error_feedback: bool = False
+    ef_decay: float = 1.0
 
     def __post_init__(self):
         for b in (self.student_bits, self.proto_bits) + tuple(
@@ -67,6 +79,9 @@ class WireSpec:
             if b is not None and b not in WIRE_BITS:
                 raise ValueError(
                     f"wire bits must be one of {WIRE_BITS}, got {b}")
+        if not 0.0 <= self.ef_decay <= 1.0:
+            raise ValueError(f"ef_decay must be in [0, 1], "
+                             f"got {self.ef_decay}")
         object.__setattr__(self, "overrides", tuple(
             (canonical_group(k), int(b)) for k, b in self.overrides))
 
@@ -101,12 +116,20 @@ class WireSpec:
     def describe(self) -> str:
         u = self.uniform_bits
         if u is not None:
-            return f"int{u}"
-        parts = [f"student=int{self.student_bits}"]
-        if self.proto_bits is not None:
-            parts.append(f"protos=int{self.proto_bits}")
-        parts += [f"{k}=int{b}" for k, b in self.overrides]
-        return ",".join(parts)
+            base = f"int{u}"
+        else:
+            parts = [f"student=int{self.student_bits}"]
+            if self.proto_bits is not None:
+                parts.append(f"protos=int{self.proto_bits}")
+            parts += [f"{k}=int{b}" for k, b in self.overrides]
+            base = ",".join(parts)
+        return base + "+ef" if self.error_feedback else base
+
+    def stateless(self) -> "WireSpec":
+        """The same wire format without the error-feedback state — what
+        the zero-wire-overhead assertions compare against."""
+        import dataclasses
+        return dataclasses.replace(self, error_feedback=False, ef_decay=1.0)
 
     # -- construction -------------------------------------------------------
     @classmethod
@@ -120,12 +143,17 @@ class WireSpec:
     def parse(cls, spec: str) -> "WireSpec":
         """Parse a CLI spec: ``"16"`` | ``"8"`` | ``"4"`` (uniform) or
         ``"<student>/<protos>"`` (mixed, e.g. ``"4/16"`` = int4 student
-        + int16 prototypes)."""
+        + int16 prototypes); a ``"+ef"`` suffix (``"4+ef"``,
+        ``"4/16+ef"``) enables the stateful error-feedback codec."""
         s = str(spec).strip()
+        ef = s.endswith("+ef")
+        if ef:
+            s = s[:-3]
         if "/" in s:
             student, proto = s.split("/", 1)
-            return cls(student_bits=int(student), proto_bits=int(proto))
-        return cls(student_bits=int(s))
+            return cls(student_bits=int(student), proto_bits=int(proto),
+                       error_feedback=ef)
+        return cls(student_bits=int(s), error_feedback=ef)
 
 
 def resolve_spec(bits_or_spec) -> Optional[WireSpec]:
