@@ -48,6 +48,12 @@ def check_wire(baseline_path: str, threshold: float) -> bool:
         base = json.load(f)
     cfg = base["config"]
     bits_list = list(base["per_bits"].keys())
+    # pod-shaped baselines ("RxC" rows: multi-axis mesh, row-sharded
+    # permute) ride the same file under "per_pods"; a pre-pods baseline
+    # has only the flat "per_bits" view
+    base_pods = base.get("per_pods", {cfg.get("nodes", 8): base["per_bits"]})
+    pods_args = [str(p) for p in cfg["pods"]] if "pods" in cfg \
+        else [str(cfg["nodes"])]
     with tempfile.NamedTemporaryFile(suffix=".json", delete=False) as tf:
         out = tf.name
     script = os.path.join(os.path.dirname(os.path.abspath(__file__)),
@@ -57,7 +63,8 @@ def check_wire(baseline_path: str, threshold: float) -> bool:
             [sys.executable, script, "--wire",
              "--wire-nodes", str(cfg["nodes"]),
              "--wire-topology", cfg["topology"],
-             "--wire-bits", *bits_list, "--out", out],
+             "--wire-bits", *bits_list,
+             "--pods", *pods_args, "--out", out],
             capture_output=True, text=True)
         if r.returncode != 0:
             print(f"wire bench failed to run:\n{r.stdout}\n{r.stderr}")
@@ -67,37 +74,42 @@ def check_wire(baseline_path: str, threshold: float) -> bool:
     finally:
         if os.path.exists(out):
             os.unlink(out)
+    fresh_pods = fresh.get("per_pods",
+                           {cfg.get("nodes", 8): fresh["per_bits"]})
 
     failed = False
-    for bits, brow in base["per_bits"].items():
-        frow = fresh["per_bits"].get(bits, {})
-        b_ms = brow["codec"]["packed_ms"]
-        f_ms = frow.get("codec", {}).get("packed_ms")
-        if f_ms is None:
-            print(f"[bits={bits}] missing from fresh run  REGRESSION")
-            failed = True
-            continue
-        ratio = f_ms / b_ms
-        verdict = "OK" if ratio <= threshold else "REGRESSION"
-        failed |= verdict == "REGRESSION"
-        print(f"[bits={bits}] wire codec: packed qdq {f_ms:7.2f} ms vs "
-              f"committed {b_ms:7.2f} ms  ({ratio:.2f}x)  {verdict}")
-        for ex, rep in brow["exchange"]["exchanges"].items():
-            if "error" in rep:
-                # visible, so an error'd baseline mode can't hide
-                # forever — regenerate the baseline to bring it under
-                # the gate
-                print(f"[bits={bits}] wire bytes [{ex}]: UNCHECKED "
-                      f"(baseline recorded {rep['error']!r} — refresh "
-                      f"BENCH_wire_exchange.json)")
+    for pods, base_bits in base_pods.items():
+        fresh_bits = fresh_pods.get(str(pods), {})
+        for bits, brow in base_bits.items():
+            tag = f"[pods={pods} bits={bits}]"
+            frow = fresh_bits.get(bits, {})
+            b_ms = brow["codec"]["packed_ms"]
+            f_ms = frow.get("codec", {}).get("packed_ms")
+            if f_ms is None:
+                print(f"{tag} missing from fresh run  REGRESSION")
+                failed = True
                 continue
-            fb = rep["collective_bytes_per_node"]
-            ff = frow["exchange"]["exchanges"].get(ex, {}).get(
-                "collective_bytes_per_node")
-            ok = ff == fb
-            failed |= not ok
-            print(f"[bits={bits}] wire bytes [{ex}]: {ff} vs committed "
-                  f"{fb}  {'OK' if ok else 'WIRE-FORMAT DRIFT'}")
+            ratio = f_ms / b_ms
+            verdict = "OK" if ratio <= threshold else "REGRESSION"
+            failed |= verdict == "REGRESSION"
+            print(f"{tag} wire codec: packed qdq {f_ms:7.2f} ms vs "
+                  f"committed {b_ms:7.2f} ms  ({ratio:.2f}x)  {verdict}")
+            for ex, rep in brow["exchange"]["exchanges"].items():
+                if "error" in rep:
+                    # visible, so an error'd baseline mode can't hide
+                    # forever — regenerate the baseline to bring it under
+                    # the gate
+                    print(f"{tag} wire bytes [{ex}]: UNCHECKED "
+                          f"(baseline recorded {rep['error']!r} — refresh "
+                          f"BENCH_wire_exchange.json)")
+                    continue
+                fb = rep["collective_bytes_per_node"]
+                ff = frow["exchange"]["exchanges"].get(ex, {}).get(
+                    "collective_bytes_per_node")
+                ok = ff == fb
+                failed |= not ok
+                print(f"{tag} wire bytes [{ex}]: {ff} vs committed "
+                      f"{fb}  {'OK' if ok else 'WIRE-FORMAT DRIFT'}")
     return failed
 
 

@@ -225,13 +225,37 @@ def _median_ms(fn, *args, rounds: int = 20):
     return round(statistics.median(ts), 3)
 
 
+def _paired_ms(fn_a, fn_b, *args, rounds: int = 20):
+    """Interleaved A/B timing: one loop alternates the two jitted fns so
+    container-load drift hits both samples of every pair equally — the
+    honest way to compare two codecs whose compiled math is this close.
+    Returns (median_a_ms, median_b_ms)."""
+    _block(fn_a(*args))                                 # compile/warmup
+    _block(fn_b(*args))
+    ta, tb = [], []
+    for _ in range(rounds):
+        t0 = time.perf_counter()
+        _block(fn_a(*args))
+        ta.append((time.perf_counter() - t0) * 1e3)
+        t0 = time.perf_counter()
+        _block(fn_b(*args))
+        tb.append((time.perf_counter() - t0) * 1e3)
+    return (round(statistics.median(ta), 3),
+            round(statistics.median(tb), 3))
+
+
 def measure_wire(n_nodes: int = 8, topology: str = "ring", *,
                  arch: str = "mnist-cnn", bits="16",
-                 rounds: int = 20):
+                 rounds: int = 20, inner: int = 1):
     """Packed vs per-leaf codec (jitted qdq round-trip) and gather vs
     ppermute exchange (HLO collective bytes + wall ms) for one gossip
     round of a stacked student + prototypes payload, at one wire spec
-    (``bits``: ``"16"`` | ``"8"`` | ``"4"`` | ``"<student>/<protos>"``)."""
+    (``bits``: ``"16"`` | ``"8"`` | ``"4"`` | ``"<student>/<protos>"``).
+
+    ``inner > 1`` shapes each federation node as ``inner`` data-axis
+    devices (the ``--pods RxC`` rows): the ppermute exchange lowers the
+    row-sharded permute and the recorded bytes are the POD-axis
+    per-node attribution from the HLO device groups."""
     from repro.core.mesh_federation import make_profe_round
     from repro.launch import wire as W
     from repro.models import init_params
@@ -265,16 +289,14 @@ def measure_wire(n_nodes: int = 8, topology: str = "ring", *,
             t, spec=spec, packed=False))
         qdq_packed = jax.jit(lambda t: R.quantize_dequantize_per_node(
             t, spec=spec))
-    codec = {
-        "per_leaf_ms": _median_ms(qdq_leaf, payload, *ef_args,
-                                  rounds=rounds),
-        "packed_ms": _median_ms(qdq_packed, payload, *ef_args,
-                                rounds=rounds),
-    }
+    leaf_ms, packed_ms = _paired_ms(qdq_leaf, qdq_packed, payload,
+                                    *ef_args, rounds=rounds)
+    codec = {"per_leaf_ms": leaf_ms, "packed_ms": packed_ms}
 
     # exchange: bytes from compiled HLO, wall ms on the federation mesh
-    report = W.measure_exchange_bytes(arch, n_nodes, topology, bits=spec)
-    mesh = W.fed_mesh(n_nodes)
+    report = W.measure_exchange_bytes(arch, n_nodes, topology, bits=spec,
+                                      inner=inner)
+    mesh = W.fed_mesh(n_nodes, (inner, 1))
     shapes = jax.eval_shape(lambda: init_params(student_cfg,
                                                 jax.random.PRNGKey(0)))
     specs = param_specs(student_cfg, shapes, mesh)
@@ -294,23 +316,11 @@ def measure_wire(n_nodes: int = 8, topology: str = "ring", *,
     return {"codec": codec, "exchange": report}
 
 
-def run_wire(args):
+def _wire_bits_sweep(n_nodes, topology, wire_bits, rounds, inner):
     per_bits = {}
-    out = {
-        "benchmark": "wire exchange: packed single-buffer codec vs "
-                     "per-leaf, gather vs ppermute neighbor collectives "
-                     f"({args.wire_topology}, N={args.wire_nodes}, "
-                     "mnist-cnn student+protos payload), per wire spec",
-        "backend": jax.default_backend(),
-        "config": {"nodes": args.wire_nodes,
-                   "topology": args.wire_topology,
-                   "timed_rounds": args.rounds,
-                   "bits": list(args.wire_bits)},
-        "per_bits": per_bits,
-    }
-    for b in args.wire_bits:
-        res = measure_wire(args.wire_nodes, args.wire_topology, bits=b,
-                           rounds=args.rounds)
+    for b in wire_bits:
+        res = measure_wire(n_nodes, topology, bits=b, rounds=rounds,
+                           inner=inner)
         per_bits[b] = res
         ex = res["exchange"]["exchanges"]
         print(f"== bits={b} ==")
@@ -338,6 +348,32 @@ def run_wire(args):
             if "collective_bytes_per_node" in p:
                 res["ppermute_vs_int16"] = round(
                     p["collective_bytes_per_node"] / base, 4)
+    return per_bits
+
+
+def run_wire(args):
+    from repro.launch.wire import parse_pods
+    shapes = [parse_pods(p) for p in args.pods]
+    out = {
+        "benchmark": "wire exchange: packed single-buffer codec vs "
+                     "per-leaf, gather vs ppermute neighbor collectives "
+                     f"({args.wire_topology}, pods={list(args.pods)}, "
+                     "mnist-cnn student+protos payload), per wire spec",
+        "backend": jax.default_backend(),
+        "config": {"nodes": shapes[0][0],
+                   "topology": args.wire_topology,
+                   "timed_rounds": args.rounds,
+                   "bits": list(args.wire_bits),
+                   "pods": list(args.pods)},
+        "per_pods": {},
+    }
+    for pods_str, (n, inner) in zip(args.pods, shapes):
+        print(f"==== pods={pods_str} ({n} nodes x {inner} devices) ====")
+        out["per_pods"][pods_str] = _wire_bits_sweep(
+            n, args.wire_topology, args.wire_bits, args.rounds, inner)
+    # the first pod shape keeps the legacy top-level key so existing
+    # readers (tables, plots) see the single-axis rows unchanged
+    out["per_bits"] = out["per_pods"][args.pods[0]]
     with open(args.out, "w") as f:
         json.dump(out, f, indent=2)
     print(f"wrote {args.out}")
@@ -370,13 +406,23 @@ def main():
                     default=["16", "8", "4", "4/16"],
                     help="wire specs to sweep: 16 | 8 | 4 (uniform) or "
                          "<student>/<protos> (mixed)")
+    ap.add_argument("--pods", nargs="+", default=None,
+                    help="pod shapes to sweep in --wire mode: 'R' or "
+                         "'RxC' (R nodes x C inner devices; C > 1 rows "
+                         "record the row-sharded permute's pod-axis "
+                         "bytes).  Default: --wire-nodes as a single "
+                         "(R, 1) shape")
     args = ap.parse_args()
 
     if args.wire:
+        from repro.launch.wire import parse_pods
+        if args.pods is None:
+            args.pods = [str(args.wire_nodes)]
+        need = max(n * c for n, c in map(parse_pods, args.pods))
         if args.out == "BENCH_round_step.json":
             args.out = "BENCH_wire_exchange.json"
-        if jax.device_count() < args.wire_nodes:
-            _reexec_with_devices(args.wire_nodes)
+        if jax.device_count() < need:
+            _reexec_with_devices(need)
         args.rounds = max(args.rounds, 10)
         run_wire(args)
         return

@@ -28,7 +28,8 @@ from repro.wirespec import WireSpec, canonical_group
 Bits = Union[int, WireSpec, None]
 
 
-def packed_copy_bytes(payload_tree, bits: Bits = None) -> int:
+def packed_copy_bytes(payload_tree, bits: Bits = None, *,
+                      inner: int = 1) -> int:
     """Physical bytes of ONE serialized copy under the packed node wire
     codec: quantized float leaves ride the single 512-lane encoded byte
     buffer of ``kernels/quantize/ops.pack_tree_nodes``/``encode_wire``
@@ -43,6 +44,14 @@ def packed_copy_bytes(payload_tree, bits: Bits = None) -> int:
     This is the per-copy number the dry-run's HLO collective-bytes
     breakdown measures; ``tree_wire_bytes`` is its logical (Table II)
     counterpart — they differ only by lane/sublane padding.
+
+    ``inner`` is the product of the mesh's inner (non-pod) axis sizes.
+    The row-sharded permute exchange splits every per-copy tensor across
+    the ``inner`` devices of a node, which pads the fp32 scale vector
+    and each raw sidecar leaf up to a multiple of ``inner`` elements (the
+    code buffer's 8-aligned rows split without padding — the mesh factory
+    enforces per-width divisibility before picking that path).  ``inner=1``
+    is byte-identical to the single-axis accounting.
     """
     import jax
     import jax.numpy as jnp
@@ -59,8 +68,9 @@ def packed_copy_bytes(payload_tree, bits: Bits = None) -> int:
                 continue
             if key == "counts" or not jnp.issubdtype(leaf.dtype,
                                                      jnp.floating):
-                raw += int(np.prod(leaf.shape, dtype=np.int64)) * \
-                    np.dtype(leaf.dtype).itemsize
+                per = int(np.prod(leaf.shape, dtype=np.int64))
+                per += (-per) % inner
+                raw += per * np.dtype(leaf.dtype).itemsize
             else:
                 g = canonical_group(key)
                 groups.append((g, leaf,
@@ -69,9 +79,10 @@ def packed_copy_bytes(payload_tree, bits: Bits = None) -> int:
     groups.sort(key=lambda t: t[0])
     packed_leaves = [leaf for _g, leaf, _b in groups]
     leaf_bits = [b for _g, _leaf, b in groups] if spec else None
+    pad_scales = ((-len(groups)) % inner) * 4 if bits is not None else 0
     return packed_wire_bytes_per_node(
         packed_leaves, bits if spec is None else spec.max_bits,
-        node_axis=False, leaf_bits=leaf_bits) + raw
+        node_axis=False, leaf_bits=leaf_bits) + raw + pad_scales
 
 
 class CommMeter:
@@ -146,16 +157,20 @@ class ScheduleCommAccountant(CommMeter):
 
     def predicted_node_bytes(self, payload_tree, round_idx: int,
                              bits: Bits = None,
-                             wire: str = "dense") -> np.ndarray:
+                             wire: str = "dense", *,
+                             inner: int = 1) -> np.ndarray:
         """Per-node bytes *sent* in one round without mutating the
         counters: ``out_degree x bytes-per-copy``.  ``wire="dense"`` is
         the logical Table II payload (``tree_wire_bytes``);
         ``wire="packed"`` is the physical packed-codec payload
         (:func:`packed_copy_bytes`) — what ``launch/dryrun.py
         --topology`` asserts the compiled HLO's collective bytes match.
+        ``inner`` (packed wire only) is the node's inner-device count for
+        the row-sharded multi-axis exchange — see
+        :func:`packed_copy_bytes`.
         """
         if wire == "packed":
-            nbytes = packed_copy_bytes(payload_tree, bits)
+            nbytes = packed_copy_bytes(payload_tree, bits, inner=inner)
         elif wire == "dense":
             nbytes = tree_wire_bytes(payload_tree, bits)
         else:

@@ -288,6 +288,121 @@ def _scan(body, init, xs, length: int, *, unroll_cap: Optional[int] = None):
     return jax.lax.scan(body, init, xs, unroll=length if full else 1)
 
 
+def _make_round_parts(step: Callable, proto_cfg: ModelConfig, ncls: int, *,
+                      share_protos: bool, wire_model: Optional[str],
+                      bits: Optional[int] | WireSpec):
+    """The three phases of one stacked round, as plain traceable
+    functions:
+
+    * ``train_phase`` — local epochs (scan over the batch axis, vmap
+      over nodes) + Eq. 3 prototype accumulation → ``(state, protos,
+      counts)``,
+    * ``share_phase`` — the wire codec round-trip of this state's
+      payload (what every receiver reconstructs; updates the
+      error-feedback ``CodecState`` in place) → ``(state, recv_student,
+      protos_rx)``,
+    * ``mix_phase`` — gossip weights on the received views + Eq. 4
+      aggregation → ``state``.
+
+    The sequential engine jits their composition as ONE program
+    (:func:`_make_round_fn`); the pipelined engine
+    (``run_federation(overlap=...)``) jits each phase separately so the
+    driver can re-order dispatch.  Phases unused by an algorithm pass
+    ``()`` placeholders (no pytree leaves), so both drivers share one
+    code path for every algorithm."""
+    spec = WireSpec.from_bits(bits) if bits else None
+
+    def train_phase(state: NodeState, xb, valid, pxb, pvalid,
+                    teacher_on: bool, all_valid: bool = False):
+        # 1) local training: scan over the batch axis, vmap over nodes.
+        # ``all_valid`` (static) skips the per-step mask merge when every
+        # node runs the same number of batches (the common, iid case).
+        def body(carry, inp):
+            batch, v = inp
+            new, _ = jax.vmap(lambda s, b: step(s, b, teacher_on))(carry,
+                                                                   batch)
+            return (new if all_valid else _masked_select(v, new, carry)), ()
+
+        state, _ = _scan(body, state, (xb, valid), valid.shape[0])
+        state = state._replace(round_idx=state.round_idx + 1)
+        if not share_protos:
+            return state, (), ()
+
+        # 2) Eq. 3 prototype accumulation: scanned einsum, no
+        #    per-call re-jitting (post-training student forward)
+        proto_dim = proto_cfg.proto_dim
+        n_nodes = valid.shape[1]
+        sums0 = jnp.zeros((n_nodes, ncls, proto_dim), jnp.float32)
+        counts0 = jnp.zeros((n_nodes, ncls), jnp.float32)
+
+        def pbody(carry, inp):
+            sums, counts = carry
+            batch, v = inp
+            out = jax.vmap(
+                lambda p, b: forward(proto_cfg, p, b, remat=False))(
+                    state.student, batch)
+            labels = proto_labels(proto_cfg, batch)        # [N, B]
+            onehot = jax.nn.one_hot(labels, ncls, dtype=jnp.float32)
+            f1 = out.f1.astype(jnp.float32)                # [N, B, P]
+            sums = sums + jnp.einsum("nbc,nbp->ncp", onehot,
+                                     f1) * v[:, None, None]
+            counts = counts + jnp.sum(onehot, axis=1) * v[:, None]
+            return (sums, counts), ()
+
+        (sums, counts), _ = _scan(pbody, (sums0, counts0), (pxb, pvalid),
+                                  pvalid.shape[0])
+        protos = sums / jnp.maximum(counts, 1.0)[..., None]
+        return state, protos, counts
+
+    def share_phase(state: NodeState, protos):
+        # 3a) the wire: receiver-side reconstruction.  A node's own
+        #    model copy never crosses it (mixes unquantized);
+        #    prototypes (own included) mix from the receiver-side view,
+        #    exactly like the reference loop.  The view is
+        #    reconstructed through the packed node wire codec — student
+        #    and prototypes ride ONE [N, R, 512] buffer with per-(leaf,
+        #    node) segment scales, exactly what the mesh path's sparse
+        #    exchange physically moves (bit-identical to per-leaf
+        #    codes).  With error feedback the codec is stateful: the
+        #    per-node residual (state.wire_state, part of the donated
+        #    carry) is replayed into the payload and updated in the
+        #    same pass — its ``seq`` counter advances once per share,
+        #    pinning which payload the carried residual corrects when
+        #    the pipelined driver mixes stale-by-one.
+        if wire_model is not None and spec and share_protos:
+            payload = {"protos": protos, "student": state.student}
+            if spec.error_feedback:
+                recv, new_ws = R.quantize_dequantize_per_node(
+                    payload, spec=spec, state=state.wire_state)
+                state = state._replace(wire_state=new_ws)
+            else:
+                recv = R.quantize_dequantize_per_node(payload, spec=spec)
+            return state, recv["student"], recv["protos"]
+        recv_student = (R.quantize_dequantize_per_node(
+            state.student, spec.bits_for("student"))
+            if (wire_model is not None and spec)
+            else (state.student if wire_model is not None else ()))
+        protos_rx = (R.dequantize_leaf(
+            *R.quantize_leaf_per_node(protos, spec.bits_for("protos")))
+            if (share_protos and spec) else
+            (protos if share_protos else ()))
+        return state, recv_student, protos_rx
+
+    def mix_phase(state: NodeState, recv_student, protos_rx, counts,
+                  w_self, w_neigh, include) -> NodeState:
+        # 3b) gossip + aggregation (shared round_ops core)
+        if wire_model is not None:
+            state = state._replace(student=R.mix_node_trees(
+                w_self, w_neigh, state.student, recv_student))
+        if share_protos:
+            gp, mask = R.neighborhood_prototype_aggregate(include, protos_rx,
+                                                          counts)
+            state = state._replace(global_protos=gp, proto_mask=mask)
+        return state
+
+    return train_phase, share_phase, mix_phase
+
+
 def _make_round_fn(step: Callable, proto_cfg: ModelConfig, ncls: int, *,
                    share_protos: bool, wire_model: Optional[str],
                    bits: Optional[int] | WireSpec):
@@ -300,90 +415,40 @@ def _make_round_fn(step: Callable, proto_cfg: ModelConfig, ncls: int, *,
     include [N, N])`` are *traced operands* — the driver passes the
     current round's slice of the lowered ``TopologySchedule`` stacks, so
     a round-varying topology never rebuilds or retraces the program."""
+    train_phase, share_phase, mix_phase = _make_round_parts(
+        step, proto_cfg, ncls, share_protos=share_protos,
+        wire_model=wire_model, bits=bits)
 
     def round_fn(state: NodeState, xb, valid, pxb, pvalid,
                  w_self, w_neigh, include,
                  teacher_on: bool, all_valid: bool = False) -> NodeState:
-        # 1) local training: scan over the batch axis, vmap over nodes.
-        # ``all_valid`` (static) skips the per-step mask merge when every
-        # node runs the same number of batches (the common, iid case).
-        def body(carry, inp):
-            batch, v = inp
-            new, _ = jax.vmap(lambda s, b: step(s, b, teacher_on))(carry,
-                                                                   batch)
-            return (new if all_valid else _masked_select(v, new, carry)), ()
-
-        state, _ = _scan(body, state, (xb, valid), valid.shape[0])
-        state = state._replace(round_idx=state.round_idx + 1)
-
-        if share_protos:
-            # 2) Eq. 3 prototype accumulation: scanned einsum, no
-            #    per-call re-jitting (post-training student forward)
-            proto_dim = proto_cfg.proto_dim
-            n_nodes = valid.shape[1]
-            sums0 = jnp.zeros((n_nodes, ncls, proto_dim), jnp.float32)
-            counts0 = jnp.zeros((n_nodes, ncls), jnp.float32)
-
-            def pbody(carry, inp):
-                sums, counts = carry
-                batch, v = inp
-                out = jax.vmap(
-                    lambda p, b: forward(proto_cfg, p, b, remat=False))(
-                        state.student, batch)
-                labels = proto_labels(proto_cfg, batch)        # [N, B]
-                onehot = jax.nn.one_hot(labels, ncls, dtype=jnp.float32)
-                f1 = out.f1.astype(jnp.float32)                # [N, B, P]
-                sums = sums + jnp.einsum("nbc,nbp->ncp", onehot,
-                                         f1) * v[:, None, None]
-                counts = counts + jnp.sum(onehot, axis=1) * v[:, None]
-                return (sums, counts), ()
-
-            (sums, counts), _ = _scan(pbody, (sums0, counts0), (pxb, pvalid),
-                                      pvalid.shape[0])
-            protos = sums / jnp.maximum(counts, 1.0)[..., None]
-
-        # 3) gossip + aggregation (shared round_ops core).  A node's own
-        #    model copy never crossed the wire, so it mixes unquantized;
-        #    prototypes (own included) mix from the receiver-side view,
-        #    exactly like the reference loop.  The receiver-side view is
-        #    reconstructed through the packed node wire codec — student
-        #    and prototypes ride ONE [N, R, 512] buffer with per-(leaf,
-        #    node) segment scales, exactly what the mesh path's sparse
-        #    exchange physically moves (bit-identical to per-leaf codes).
-        #    With error feedback the codec is stateful: the per-node
-        #    residual (state.wire_state, part of the donated carry) is
-        #    replayed into the payload and updated in the same pass.
-        spec = WireSpec.from_bits(bits) if bits else None
-        if wire_model is not None and spec and share_protos:
-            payload = {"protos": protos, "student": state.student}
-            if spec.error_feedback:
-                recv, new_ws = R.quantize_dequantize_per_node(
-                    payload, spec=spec, state=state.wire_state)
-                state = state._replace(wire_state=new_ws)
-            else:
-                recv = R.quantize_dequantize_per_node(payload, spec=spec)
-            recv_student, protos_rx = recv["student"], recv["protos"]
-        else:
-            recv_student = (R.quantize_dequantize_per_node(
-                state.student, spec.bits_for("student"))
-                if (wire_model is not None and spec)
-                else state.student)
-            protos_rx = (R.dequantize_leaf(
-                *R.quantize_leaf_per_node(protos, spec.bits_for("protos")))
-                if (share_protos and spec) else
-                (protos if share_protos else None))
-        if wire_model is not None:
-            state = state._replace(student=R.mix_node_trees(
-                w_self, w_neigh, state.student, recv_student))
-        if share_protos:
-            gp, mask = R.neighborhood_prototype_aggregate(include, protos_rx,
-                                                          counts)
-            state = state._replace(global_protos=gp, proto_mask=mask)
-        return state
+        state, protos, counts = train_phase(state, xb, valid, pxb, pvalid,
+                                            teacher_on, all_valid)
+        state, recv_student, protos_rx = share_phase(state, protos)
+        return mix_phase(state, recv_student, protos_rx, counts,
+                         w_self, w_neigh, include)
 
     donate = (0,) if jax.default_backend() != "cpu" else ()
     return jax.jit(round_fn, static_argnames=("teacher_on", "all_valid"),
                    donate_argnums=donate)
+
+
+def _make_phase_fns(step: Callable, proto_cfg: ModelConfig, ncls: int, *,
+                    share_protos: bool, wire_model: Optional[str],
+                    bits: Optional[int] | WireSpec):
+    """The pipelined engine's three jitted programs — the same traced
+    phase bodies as the sequential :func:`_make_round_fn`, so splitting
+    the round changes jit boundaries (and therefore dispatch order),
+    never the math."""
+    train_phase, share_phase, mix_phase = _make_round_parts(
+        step, proto_cfg, ncls, share_protos=share_protos,
+        wire_model=wire_model, bits=bits)
+    donate = (0,) if jax.default_backend() != "cpu" else ()
+    return (jax.jit(train_phase,
+                    static_argnames=("teacher_on", "all_valid"),
+                    donate_argnums=donate),
+            jax.jit(share_phase, donate_argnums=donate),
+            jax.jit(mix_phase, donate_argnums=donate))
 
 
 # ---------------------------------------------------------------------------
@@ -409,17 +474,46 @@ def _eval_nodes(eval_cfg, students_of, n_nodes: int, test_data,
     return float(np.mean(f1s)), float(np.mean(accs))
 
 
+OVERLAPS = (None, "none", "rounds")
+
+
 def run_federation(teacher_cfg: ModelConfig, fed: FederationConfig,
                    train: TrainConfig, node_data: List[Dict[str, np.ndarray]],
                    test_data: Dict[str, np.ndarray],
                    *, verbose: bool = False,
-                   eval_all_nodes: bool = False) -> FederationResult:
+                   eval_all_nodes: bool = False,
+                   overlap: Optional[str] = None) -> FederationResult:
     """Run one algorithm end-to-end; fed.algorithm selects it.
 
     Uses the vectorized stacked-node-state round engine; falls back to
     :func:`run_federation_loop` when node datasets are too ragged to
-    stack (some node smaller than one batch).
+    stack (some node smaller than one batch; ``overlap`` is ignored
+    there — the reference loop is always sequential).
+
+    ``overlap`` selects the round pipeline:
+
+    * ``None`` (default) — the sequential engine: one jitted program
+      per round (train → share → mix), host staging and evaluation
+      strictly between rounds.
+    * ``"none"`` — the pipelined driver without staleness: the round
+      splits into three jitted phase programs (same traced bodies, so
+      results are bit-identical to the sequential engine, asserted in
+      tests) and the host stages round ``t+1``'s batches while round
+      ``t``'s device programs are in flight (JAX async dispatch).
+    * ``"rounds"`` — stale-by-one mixing: round ``t`` mixes the payload
+      *shared at round ``t-1``* (``state_t^+ = mix(state_t^-,
+      payload_{t-1})``; round 0 trains and shares but skips the mix),
+      so round ``t``'s share runs concurrently with round ``t+1``'s
+      local epochs — the round's critical path moves from ``train +
+      gossip`` toward ``max(train, gossip)``.  With error feedback the
+      ``CodecState.seq`` counter pins the pairing: the residual carried
+      into share ``t`` is the one produced by share ``t-1`` (asserted
+      across carried rounds in tests).  A run of R rounds applies R-1
+      mixes; the final round's payload is shared but never consumed.
     """
+    if overlap not in OVERLAPS:
+        raise ValueError(f"overlap must be one of {OVERLAPS}, "
+                         f"got {overlap!r}")
     algo = fed.algorithm
     student_cfg = derive_student(teacher_cfg)
     n_nodes = fed.num_nodes
@@ -462,7 +556,7 @@ def run_federation(teacher_cfg: ModelConfig, fed: FederationConfig,
         stacked = stacked._replace(wire_state=init_codec_state({
             "protos": jnp.zeros((n_nodes, ncls, proto_cfg.proto_dim),
                                 jnp.float32),
-            "student": stacked.student}))
+            "student": stacked.student}, n_nodes=n_nodes))
 
     # the lowered schedule: [R, N]/[R, N, N] stacks indexed per round and
     # fed to the jitted round as traced operands (R == 1 for static)
@@ -493,6 +587,75 @@ def run_federation(teacher_cfg: ModelConfig, fed: FederationConfig,
     t0 = time.time()
 
     empty = ({}, jnp.zeros((0, n_nodes), jnp.float32))
+    if overlap is not None:
+        train_jit, share_jit, mix_jit = _make_phase_fns(
+            step, proto_cfg, ncls, share_protos=share_protos,
+            wire_model=wire_model, bits=bits)
+        staged_next = probe
+        proto_next = _stack_round_batches(
+            node_data, train.batch_size, [fed.seed] * n_nodes, 1) \
+            if share_protos else empty
+        recv_prev = None
+        for rnd in range(fed.rounds):
+            t_r = time.time()
+            t_on = teacher_active(fed.alpha_s, fed.alpha_limit, rnd) \
+                if algo == "profe" else needs_teacher
+            xb, valid = staged_next
+            pxb, pvalid = proto_next
+            p = sched.phase_index(rnd)
+            stacked, protos, counts = train_jit(
+                stacked, xb, valid, pxb, pvalid, teacher_on=t_on,
+                all_valid=bool(np.all(np.asarray(valid) == 1.0)))
+            if overlap == "rounds":
+                # stale-by-one: mix the payload shared LAST round into
+                # this round's trained state, then share this round's
+                # payload — its consumption waits until round t+1, so
+                # the device runs it concurrently with whatever the
+                # host (and the next round's training) does meanwhile
+                if recv_prev is not None:
+                    stacked = mix_jit(stacked, *recv_prev, w_self_st[p],
+                                      w_neigh_st[p], include_st[p])
+                stacked, recv_student, protos_rx = share_jit(stacked,
+                                                             protos)
+                recv_prev = (recv_student, protos_rx, counts)
+            else:
+                stacked, recv_student, protos_rx = share_jit(stacked,
+                                                             protos)
+                stacked = mix_jit(stacked, recv_student, protos_rx,
+                                  counts, w_self_st[p], w_neigh_st[p],
+                                  include_st[p])
+            # round t's phase programs are dispatched, not finished
+            # (JAX async dispatch): stage round t+1's batches on the
+            # host while the device runs them — the pipeline's
+            # host/device overlap, and the measured critical-path win
+            if rnd + 1 < fed.rounds:
+                staged_next = _stack_round_batches(
+                    node_data, train.batch_size,
+                    [fed.seed + (rnd + 1) * 997 + i
+                     for i in range(n_nodes)], fed.local_epochs)
+                assert staged_next is not None  # raggedness is static
+                proto_next = _stack_round_batches(
+                    node_data, train.batch_size,
+                    [fed.seed + rnd + 1] * n_nodes, 1) \
+                    if share_protos else empty
+            meter.record_round(payload, kind=algo, round_idx=rnd,
+                               bits=bits)
+            f1, acc = _eval_nodes(eval_cfg,
+                                  lambda i: _node_slice(stacked.student, i),
+                                  n_nodes, test_data, eval_all_nodes,
+                                  result.extras)
+            result.f1_per_round.append(f1)
+            result.acc_per_round.append(acc)
+            round_times.append(time.time() - t_r)
+            if verbose:
+                print(f"[{algo}/overlap={overlap}] round "
+                      f"{rnd + 1}/{fed.rounds} f1={f1:.4f} acc={acc:.4f} "
+                      f"sent={meter.avg_sent_gb():.4f}GB")
+        result.elapsed_s = time.time() - t0
+        result.extras["avg_sent_gb"] = meter.avg_sent_gb()
+        result.extras["avg_received_gb"] = meter.avg_received_gb()
+        return result
+
     for rnd in range(fed.rounds):
         t_r = time.time()
         t_on = teacher_active(fed.alpha_s, fed.alpha_limit, rnd) \

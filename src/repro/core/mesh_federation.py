@@ -33,8 +33,13 @@ dequant-and-accumulate, ``mix_packed`` — a single Pallas launch on TPU).
   collective-permutes of the packed buffer — so the physical wire bytes
   finally match the logical topology that
   ``comm.ScheduleCommAccountant`` charges (asserted by
-  ``launch/dryrun.py --topology``).  Requires one device per node on the
-  pod axis (federation meshes; multi-axis pods keep the gather exchange).
+  ``launch/dryrun.py --topology``).  Needs one device per node on the
+  pod axis; **multi-axis pods take the row-sharded permute**: each of
+  the M inner devices permutes only its row block of the encoded
+  buffer (rows re-ordered by ``sharding.row_shard_order`` so every
+  shard's byte count is static and identical), sidecars split/re-widen
+  over the inner axes, so per-node pod bytes stay spec-exact —
+  ``comm.packed_copy_bytes(..., inner=M)`` per copy.
 * ``"packed"`` — one all-gather of the single encoded byte buffer over
   the pod axis, then the masked weighted mix on the decoded codes.  The
   gather-subset fallback for irregular graphs and the full-graph / legacy
@@ -43,7 +48,26 @@ dequant-and-accumulate, ``mix_packed`` — a single Pallas launch on TPU).
   preserving int16 codes + masked ``mix_node_trees``.  Kept as the
   semantics oracle the packed paths are asserted equivalent to.
 * ``"auto"`` (default) — ``ppermute`` when the graph is regular and the
-  pod axis has one device per node, else ``packed``.
+  pod axis has one device per node, else ``packed``.  On multi-axis
+  pods ``auto`` additionally requires the buffer's width groups to
+  split over the inner devices (``row_shard_order``); when they don't,
+  it silently takes the packed gather, whereas an explicit
+  ``exchange="ppermute"`` raises at trace time.
+
+**Overlap** (``overlap=True`` on :func:`make_profe_round`): the permute
+exchange is double-buffered — step ``s+1``'s collectives are issued
+before step ``s``'s fused dequant-accumulate consumes its payload, and
+the mix folds step by step (``mix_packed_accumulate``) instead of
+concatenating a ``[S, R, 512]`` stack.  Issue order only: the same
+payloads meet the same mix weights, and the collectives are
+byte-identical.  Round-level overlap (running round ``t``'s gossip
+concurrently with round ``t+1``'s local epochs, stale-by-one mixing)
+lives in the engine — ``core/federation.py run_federation(overlap=
+"rounds")``: round ``t`` mixes the payload quantized at round ``t-1``,
+round 0 skips the mix, and with error feedback the
+``CodecState.seq`` counter pins which payload a carried residual
+corrects (the residual entering quantize ``t`` is the one produced by
+quantize ``t-1``, asserted in tests).
 
 **Topologies.**  Pass ``adjacency`` (a 0/1 ``[N, N]`` phase of a
 :class:`repro.core.topology.TopologySchedule`) for ring/star/random-k
@@ -74,8 +98,9 @@ from repro.core.round_ops import (dequantize_leaf, gossip_matrix_dyn,
                                   include_matrix, mix_node_trees,
                                   neighborhood_prototype_aggregate,
                                   quantize_leaf_per_node, weighted_node_mean)
-from repro.core.wire_state import CodecState, ef_state_specs
+from repro.core.wire_state import CodecState, ef_state_specs, next_seq
 from repro.kernels.quantize import ops as Q
+from repro.sharding import row_shard_order
 from repro.wirespec import WireSpec, resolve_spec
 
 EXCHANGES = ("auto", "gather", "packed", "ppermute")
@@ -127,15 +152,15 @@ def _resolve_exchange(exchange: str, adj, mesh) -> str:
             raise ValueError(
                 f"exchange='ppermute' needs one pod-axis device per node "
                 f"(pod={_pod_size(mesh)}, N={adj.shape[0]})")
-        if _inner_size(mesh) != 1:
-            raise ValueError("exchange='ppermute' runs on federation "
-                             "meshes (inner axes of size 1); multi-axis "
-                             "pods use the packed gather exchange")
+        # inner axes of size > 1 take the row-sharded permute: each
+        # inner device permutes only its row block of the encoded
+        # buffer (the factory validates the static row split and raises
+        # there when a width group doesn't divide the inner size)
         return exchange
     if exchange != "auto":
         return exchange
     if (adj is not None and _pod_size(mesh) == adj.shape[0]
-            and _inner_size(mesh) == 1 and T.is_regular(adj)):
+            and T.is_regular(adj)):
         return "ppermute"
     return "packed"
 
@@ -200,7 +225,8 @@ def _step_weight(src, me, w_row):
 def make_profe_round(mesh, student_specs, bits: int = 16,
                      adjacency: Optional[np.ndarray] = None,
                      exchange: str = "auto",
-                     spec: Optional[WireSpec] = None):
+                     spec: Optional[WireSpec] = None,
+                     overlap: bool = False):
     """Returns round_fn(students, protos, counts, sizes) for stacked
     node state; students leaves [N, ...] sharded P("pod", *student_spec).
 
@@ -229,6 +255,16 @@ def make_profe_round(mesh, student_specs, bits: int = 16,
     payload before quantization and never crosses pods, so every
     exchange mode moves byte-identical collectives to the stateless
     spec (asserted by ``launch/dryrun.py --ef``).
+
+    ``overlap=True`` pipelines the permute exchange: the mix is
+    restructured into per-step ``mix_packed_accumulate`` folds and the
+    ppermute for step ``s+1`` is issued BEFORE step ``s``'s
+    dequant-accumulate consumes its data, so the latency-hiding
+    scheduler can run the collective and the mix concurrently (double
+    buffering — at most two in-flight step payloads).  The gather and
+    packed exchanges have a single collective and ignore the knob.
+    Overlap changes only issue order, never which payload reaches which
+    mix weight, and moves byte-identical collectives.
     """
     wire = spec if spec is not None else WireSpec.from_bits(bits)
     adj = None if adjacency is None else np.asarray(adjacency)
@@ -236,7 +272,12 @@ def make_profe_round(mesh, student_specs, bits: int = 16,
     if mode == "gather":
         return _make_profe_round_gather(mesh, student_specs, wire, adj)
     if mode == "ppermute":
-        return _make_profe_round_ppermute(mesh, student_specs, wire, adj)
+        if _inner_size(mesh) == 1:
+            return _make_profe_round_ppermute(mesh, student_specs, wire,
+                                              adj, overlap=overlap)
+        return _make_profe_round_ppermute_sharded(
+            mesh, student_specs, wire, adj,
+            strict=(exchange == "ppermute"), overlap=overlap)
     return _make_profe_round_packed(mesh, student_specs, wire, adj)
 
 
@@ -258,13 +299,14 @@ def _quantize_with_state(mesh, wire: WireSpec, buf, seg_ids, meta,
         buf, seg_ids, meta[2], seg_bits=meta[4], use_kernels=False,
         residual=res_buf, ef_decay=wire.ef_decay)
     new_res = _constrain_buf(mesh, new_res, "pod")
-    return codes, scales, CodecState(Q.unpack_tree_nodes(new_res, res_meta))
+    return codes, scales, CodecState(Q.unpack_tree_nodes(new_res, res_meta),
+                                     seq=next_seq(ef_state.seq))
 
 
 def _constrain_ef_state(mesh, state: CodecState, student_specs):
     return CodecState(residual=_constrain_over_pod(
         mesh, state.residual, ef_state_specs(student_specs).residual,
-        "pod"))
+        "pod"), seq=state.seq)
 
 
 def _wrap_ef(core, mesh, student_specs, wire: WireSpec):
@@ -289,6 +331,14 @@ def _make_profe_round_packed(mesh, student_specs, wire: WireSpec, adj):
     """Packed single-buffer exchange: quantize+pack+encode -> ONE
     all-gather of the [N, B] spec-byte wire buffer over the pod axis ->
     decode -> fused weighted mix on the codes -> unpack."""
+    return _wrap_ef(_packed_round_core(mesh, student_specs, wire, adj),
+                    mesh, student_specs, wire)
+
+
+def _packed_round_core(mesh, student_specs, wire: WireSpec, adj):
+    """The unwrapped 5-arg packed round — also the trace-time fallback
+    of the row-sharded permute when the buffer's width groups don't
+    split over the inner axes."""
     include = None if adj is None else include_matrix(adj)
 
     def _round(students, protos, counts, sizes, ef_state):
@@ -361,11 +411,11 @@ def _make_profe_round_packed(mesh, student_specs, wire: WireSpec, adj):
             proto_mask, NamedSharding(mesh, P("pod", None)))
         return new_students, global_protos, proto_mask, new_state
 
-    return _wrap_ef(_round, mesh, student_specs, wire)
+    return _round
 
 
 def _make_profe_round_ppermute(mesh, student_specs, wire: WireSpec,
-                               adj: np.ndarray):
+                               adj: np.ndarray, overlap: bool = False):
     """Physical sparse gossip: degree-many ``jax.lax.ppermute`` steps of
     the encoded wire byte buffer on the pod axis (one device per node),
     fused dequant-and-accumulate receiver side.  Wire bytes per node per
@@ -407,6 +457,48 @@ def _make_profe_round_ppermute(mesh, student_specs, wire: WireSpec,
             # decode of a permuted buffer is the receiver's exact view
             # of the codes, so the own copy skips the round-trip.
             wire_bytes = Q.encode_wire(codes, seg_ids, seg_bits=seg_bits)
+            own_delta = scales[0, ids]
+            own_pdeq = (codes[0, prow:prow + pnrows].astype(jnp.float32)
+                        * own_delta[prow:prow + pnrows, None])
+            own_pdeq = own_pdeq.reshape(-1)[:ccls * pdim].reshape(ccls,
+                                                                  pdim)
+            num = counts[0][:, None] * own_pdeq
+            den = counts[0]
+
+            if overlap:
+                # pipelined exchange: double buffer — step s+1's three
+                # ppermutes are issued BEFORE step s's fused
+                # dequant-accumulate consumes its payload, so the
+                # latency-hiding scheduler can run collective s+1 and
+                # mix s concurrently.  The mix folds step by step
+                # (mix_packed_init / mix_packed_accumulate), never
+                # materializing the [S, R, 512] step stack.
+                acc = Q.mix_packed_init(own_buf, w_self)
+                inflight = (jax.lax.ppermute(wire_bytes, "pod", perms[0]),
+                            jax.lax.ppermute(scales, "pod", perms[0]),
+                            jax.lax.ppermute(counts, "pod", perms[0]))
+                for s, src in enumerate(srcs):
+                    rw, rs, rcnt = inflight
+                    if s + 1 < len(perms):
+                        inflight = (
+                            jax.lax.ppermute(wire_bytes, "pod",
+                                             perms[s + 1]),
+                            jax.lax.ppermute(scales, "pod", perms[s + 1]),
+                            jax.lax.ppermute(counts, "pod", perms[s + 1]))
+                    rc = decode(rw)
+                    rd = rs[0, ids]
+                    valid, w_p = _step_weight(src, me, w_row)
+                    acc = Q.mix_packed_accumulate(acc, rc, rd[None],
+                                                  w_p[None, None])
+                    pr = (rc[0, prow:prow + pnrows].astype(jnp.float32)
+                          * rd[prow:prow + pnrows, None])
+                    pr = pr.reshape(-1)[:ccls * pdim].reshape(ccls, pdim)
+                    num = num + valid * rcnt[0][:, None] * pr
+                    den = den + valid * rcnt[0]
+                glob = num / jnp.maximum(den, 1.0)[:, None]
+                mask = (den > 0).astype(jnp.float32)
+                return acc, glob[None], mask[None]
+
             # neighbor collectives: one ppermute of the encoded wire
             # byte buffer (+ its scales and counts) per permutation step
             recv = []
@@ -427,13 +519,6 @@ def _make_profe_round_ppermute(mesh, student_specs, wire: WireSpec,
 
             # Eq. 4 per neighborhood, accumulated across steps (own
             # prototypes enter quantized, like every receiver's view)
-            own_delta = scales[0, ids]
-            own_pdeq = (codes[0, prow:prow + pnrows].astype(jnp.float32)
-                        * own_delta[prow:prow + pnrows, None])
-            own_pdeq = own_pdeq.reshape(-1)[:ccls * pdim].reshape(ccls,
-                                                                  pdim)
-            num = counts[0][:, None] * own_pdeq
-            den = counts[0]
             for s, (rc, _rs, rcnt, valid, _w) in enumerate(recv):
                 pr = (rc[0, prow:prow + pnrows].astype(jnp.float32)
                       * delta_stack[s, prow:prow + pnrows, None])
@@ -446,6 +531,165 @@ def _make_profe_round_ppermute(mesh, student_specs, wire: WireSpec,
 
         mixed, global_protos, proto_mask = exchange(
             buf, codes, scales, counts, w_self_v, w_neigh)
+        new_students = jax.tree_util.tree_map(
+            lambda new, old: new.astype(old.dtype),
+            Q.unpack_tree_nodes(mixed, meta)["student"], students)
+        new_students = _constrain_over_pod(mesh, new_students,
+                                           student_specs, "pod")
+        return new_students, global_protos, proto_mask, new_state
+
+    return _wrap_ef(_round, mesh, student_specs, wire)
+
+
+def _make_profe_round_ppermute_sharded(mesh, student_specs, wire: WireSpec,
+                                       adj: np.ndarray, *, strict: bool,
+                                       overlap: bool = False):
+    """Row-sharded sparse gossip for multi-axis pods: each of the M inner
+    devices of a pod permutes only ITS row block of the encoded wire
+    buffer, so a ``(N, d, m)`` mesh moves spec-exact bytes per node —
+    ``B + 4·T' + 4·C'`` per copy (``packed_copy_bytes(..., inner=M)``) —
+    instead of falling back to the container-width gather.
+
+    ``shard_map`` traces one program for every shard, so each device's
+    encoded byte count must be a static constant: the buffer rows are
+    re-ordered by :func:`repro.sharding.row_shard_order` so every shard
+    holds the identical per-width row profile (the k-th equal slice of
+    every width group).  When a width group's row count does not divide
+    M the split is impossible — ``strict`` (explicit
+    ``exchange='ppermute'``) raises at trace time, ``auto`` falls back
+    to the packed gather round.
+
+    Scale/count sidecars shard over the inner axes too (padded to a
+    multiple of M) and are re-widened receiver-side with an intra-pod
+    ``all_gather`` over the inner axes — traffic on the data/model axes,
+    never on ``pod``, so the per-node pod bytes the dry-run asserts stay
+    spec-exact.  Prototype rows scatter from whichever shard holds them
+    and combine with an intra-pod ``psum``."""
+    perms, srcs = _perm_lowering(adj)
+    M = _inner_size(mesh)
+    inner = _inner_axes(mesh)
+    inner_sizes = [int(dict(mesh.shape)[a]) for a in inner]
+    fallback = _packed_round_core(mesh, student_specs, wire, adj)
+
+    def _round(students, protos, counts, sizes, ef_state):
+        payload = {"protos": protos, "student": students}
+        buf, seg_ids, meta = Q.pack_tree_nodes(payload, wire)
+        seg_bits = meta[4]
+        ids_np = np.asarray(seg_ids)
+        layout = row_shard_order(np.asarray(seg_bits)[ids_np], M)
+        if layout is None:
+            if strict:
+                raise ValueError(
+                    f"exchange='ppermute' on a {M}-wide inner mesh needs "
+                    f"every wire width group's row count divisible by {M} "
+                    f"— this payload's groups don't split; use "
+                    f"exchange='auto' (falls back to the packed gather) "
+                    f"or a single-axis pod mesh")
+            return fallback(students, protos, counts, sizes, ef_state)
+        order, inv_order, local_bits = layout
+        rloc = len(order) // M
+        loc_seq = np.arange(rloc)
+        ids_g = ids_np[order]                  # true segment per row, shard order
+        buf = _constrain_buf(mesh, buf, "pod")
+        codes, scales, new_state = _quantize_with_state(
+            mesh, wire, buf, seg_ids, meta, ef_state)
+        w_self_v, w_neigh = gossip_matrix_dyn(adj, sizes)
+        prow, pnrows, pshape = _proto_recipe(payload, meta)
+        ccls, pdim = pshape[1], pshape[2]
+
+        # rows into shard order; sidecars padded to a multiple of M so
+        # they split over the inner axes with the buffer
+        buf_p = _constrain_buf(mesh, jnp.take(buf, jnp.asarray(order),
+                                              axis=1), "pod")
+        codes_p = _constrain_buf(mesh, jnp.take(codes, jnp.asarray(order),
+                                                axis=1), "pod")
+        nt = scales.shape[1]
+        scales_p = jnp.pad(scales, ((0, 0), (0, (-nt) % M)))
+        counts_p = jnp.pad(counts, ((0, 0), (0, (-ccls) % M)))
+        side_sharding = NamedSharding(mesh, P("pod", inner))
+        scales_p = jax.lax.with_sharding_constraint(scales_p, side_sharding)
+        counts_p = jax.lax.with_sharding_constraint(counts_p, side_sharding)
+
+        @partial(shard_map, mesh=mesh,
+                 in_specs=(P("pod", inner, None), P("pod", inner, None),
+                           P("pod", inner), P("pod", inner),
+                           P("pod"), P("pod", None)),
+                 out_specs=(P("pod", inner, None), P("pod", None, None),
+                            P("pod", None)),
+                 check_rep=False)
+        def exchange(own_buf, codes_l, scales_l, counts_l, w_self, w_row):
+            me = jax.lax.axis_index("pod")
+            k = jnp.int32(0)                   # flattened inner index
+            for a, sz in zip(inner, inner_sizes):
+                k = k * sz + jax.lax.axis_index(a)
+            # this shard's true segment ids / global row positions —
+            # dynamic values over a static, shard-identical width profile
+            loc_ids = jax.lax.dynamic_slice(jnp.asarray(ids_g),
+                                            (k * rloc,), (rloc,))
+            gpos = jax.lax.dynamic_slice(jnp.asarray(order),
+                                         (k * rloc,), (rloc,))
+            # encode THIS row block against its synthetic one-row-per-
+            # segment profile: every shard's bytes are the same static
+            # B/M, and summed over the pod they are exactly the spec B
+            wire_bytes = Q.encode_wire(codes_l, loc_seq,
+                                       seg_bits=local_bits)
+
+            def widen(x):
+                # sidecar shards back to full width — intra-pod traffic
+                # on the inner axes only, never on "pod"
+                return jax.lax.all_gather(x, inner, axis=1, tiled=True)
+
+            def proto_part(cl, rd):
+                # scatter this shard's prototype rows to their global
+                # slots (alignment/student rows hit the dump slot), then
+                # combine shards with an intra-pod psum
+                deq = cl[0].astype(jnp.float32) * rd[:, None]
+                ppos = gpos - prow
+                pvalid = (ppos >= 0) & (ppos < pnrows)
+                idx = jnp.where(pvalid, ppos, pnrows)
+                scat = jnp.zeros((pnrows + 1, deq.shape[1]), jnp.float32)
+                scat = scat.at[idx].add(
+                    jnp.where(pvalid[:, None], deq, 0.0))
+                full = jax.lax.psum(scat, inner)[:pnrows]
+                return full.reshape(-1)[:ccls * pdim].reshape(ccls, pdim)
+
+            own_rd = widen(scales_l)[0, loc_ids]
+            cnt_own = widen(counts_l)[0, :ccls]
+            num = cnt_own[:, None] * proto_part(codes_l, own_rd)
+            den = cnt_own
+            acc = Q.mix_packed_init(own_buf, w_self)
+
+            def issue(step):
+                return (jax.lax.ppermute(wire_bytes, "pod", step),
+                        jax.lax.ppermute(scales_l, "pod", step),
+                        jax.lax.ppermute(counts_l, "pod", step))
+
+            inflight = issue(perms[0]) if overlap else None
+            for s, (step, src) in enumerate(zip(perms, srcs)):
+                if overlap:
+                    rw, rs_l, rcnt_l = inflight
+                    if s + 1 < len(perms):
+                        inflight = issue(perms[s + 1])
+                else:
+                    rw, rs_l, rcnt_l = issue(step)
+                rc = Q.decode_wire(rw, loc_seq, seg_bits=local_bits)
+                rd = widen(rs_l)[0, loc_ids]
+                rcnt = widen(rcnt_l)[0, :ccls]
+                valid, w_p = _step_weight(src, me, w_row)
+                acc = Q.mix_packed_accumulate(acc, rc, rd[None],
+                                              w_p[None, None])
+                pr = proto_part(rc, rd)
+                num = num + valid * rcnt[:, None] * pr
+                den = den + valid * rcnt
+            glob = num / jnp.maximum(den, 1.0)[:, None]
+            mask = (den > 0).astype(jnp.float32)
+            return acc, glob[None], mask[None]
+
+        mixed_p, global_protos, proto_mask = exchange(
+            buf_p, codes_p, scales_p, counts_p, w_self_v, w_neigh)
+        mixed = _constrain_buf(mesh, jnp.take(mixed_p,
+                                              jnp.asarray(inv_order),
+                                              axis=1), "pod")
         new_students = jax.tree_util.tree_map(
             lambda new, old: new.astype(old.dtype),
             Q.unpack_tree_nodes(mixed, meta)["student"], students)
@@ -493,7 +737,8 @@ def _make_profe_round_gather(mesh, student_specs, wire: WireSpec, adj):
                 "protos": eff_protos - dequantize_leaf(pq, pd),
                 "student": jax.tree_util.tree_map(
                     lambda e, c, d: e - dequantize_leaf(c, d),
-                    eff_students, codes, scales)})
+                    eff_students, codes, scales)},
+                seq=next_seq(ef_state.seq))
         else:
             new_state = None
 

@@ -121,14 +121,14 @@ def quantize_dequantize_per_node(tree, bits: int = 16, *,
             tree, spec if spec is not None else WireSpec.from_bits(bits),
             state, node_axis=True)
     if packed and any(_is_float(x) for x in jax.tree_util.tree_leaves(tree)):
-        from repro.core.wire_state import CodecState
+        from repro.core.wire_state import CodecState, next_seq
         from repro.kernels.quantize.ops import (
             quantize_dequantize_tree_packed_nodes)
         if state is not None:
             recv, new_res = quantize_dequantize_tree_packed_nodes(
                 tree, bits, spec=spec, use_kernels=use_kernels, rng=rng,
                 residual=state.residual)
-            return recv, CodecState(new_res)
+            return recv, CodecState(new_res, seq=next_seq(state.seq))
         return quantize_dequantize_tree_packed_nodes(
             tree, bits, spec=spec, use_kernels=use_kernels, rng=rng)
     if spec is not None and spec.uniform_bits is None:

@@ -33,7 +33,7 @@ the packed path is asserted bit-identical to.
 """
 from __future__ import annotations
 
-from typing import Any, NamedTuple, Tuple
+from typing import Any, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -49,20 +49,54 @@ class CodecState(NamedTuple):
     non-float leaves.  Residuals never travel — the wire format of a
     spec with ``error_feedback`` is byte-identical to the stateless
     spec (asserted by ``launch/dryrun.py --ef``).
+
+    ``seq`` is the sender's payload sequence number: an int32 scalar
+    counting how many payloads this state has quantized.  After
+    quantizing payload ``t`` (0-based) the state holds ``seq == t + 1``
+    and its residual is the error OF payload ``t`` — i.e. the residual
+    corrects the payload with sequence number ``seq - 1``.  The
+    overlapped (stale-by-one) round pipeline relies on this pinning:
+    round ``t+1`` mixes the payload quantized at round ``t``, and the
+    sequence number is what asserts that the residual carried into
+    quantize ``t+1`` is the one produced BY quantize ``t``, not a
+    reordered or double-applied copy (tested across 5 carried rounds).
+    The counter is per SENDER: the stacked engine carries an ``[N]``
+    int32 vector (one entry per node, so the nodes axis vmaps like
+    every other carried leaf — ``init_codec_state(..., n_nodes=N)``);
+    the per-node reference loop and the mesh exchange hold one scalar
+    per state.  All nodes quantize in lockstep, so the entries only
+    ever advance together — the vector form exists for the vmap, the
+    scalar form for the replicated mesh sharding (``ef_state_specs``
+    pins it ``P()``).
     """
 
     residual: Any
+    seq: Any = None
 
 
 def _is_float(x) -> bool:
     return hasattr(x, "dtype") and jnp.issubdtype(x.dtype, jnp.floating)
 
 
-def init_codec_state(payload_tree) -> CodecState:
+def next_seq(seq):
+    """Advance a sequence counter by one quantize.  ``None`` (a state
+    built without a counter, e.g. hand-rolled in tests) stays ``None`` —
+    the EF math never depends on ``seq``; it only *witnesses* payload
+    order for the overlapped pipeline."""
+    return None if seq is None else seq + jnp.int32(1)
+
+
+def init_codec_state(payload_tree, n_nodes: Optional[int] = None
+                     ) -> CodecState:
     """Zero residual state shaped like ``payload_tree``'s float leaves.
 
     Works on arrays or ``ShapeDtypeStruct``s (struct trees give struct
     states for ``jax.eval_shape``/dry-run lowering).
+
+    ``n_nodes`` makes the sequence counter a per-sender ``[n_nodes]``
+    vector (the stacked engine's convention — the nodes axis of the
+    carried state must vmap, and a rank-0 counter can't); the default
+    scalar form is the per-node-state / mesh convention.
     """
     def zero(x):
         if not _is_float(x):
@@ -70,7 +104,13 @@ def init_codec_state(payload_tree) -> CodecState:
         if isinstance(x, jax.ShapeDtypeStruct):
             return jax.ShapeDtypeStruct(x.shape, jnp.float32)
         return jnp.zeros(x.shape, jnp.float32)
-    return CodecState(residual=jax.tree_util.tree_map(zero, payload_tree))
+    structs = any(isinstance(x, jax.ShapeDtypeStruct)
+                  for x in jax.tree_util.tree_leaves(payload_tree))
+    seq_shape = () if n_nodes is None else (n_nodes,)
+    seq = jax.ShapeDtypeStruct(seq_shape, jnp.int32) if structs \
+        else jnp.zeros(seq_shape, jnp.int32)
+    return CodecState(residual=jax.tree_util.tree_map(zero, payload_tree),
+                      seq=seq)
 
 
 def ef_state_specs(student_specs) -> CodecState:
@@ -81,7 +121,8 @@ def ef_state_specs(student_specs) -> CodecState:
     the ``launch/wire.py`` byte gate."""
     from jax.sharding import PartitionSpec as P
     return CodecState(residual={"protos": P(None, None),
-                                "student": student_specs})
+                                "student": student_specs},
+                      seq=P())
 
 
 def residual_leaves(tree, state: CodecState):
@@ -145,4 +186,5 @@ def ef_quantize_dequantize_tree(tree, spec: WireSpec, state: CodecState, *,
         new_res.append(eff - deq)
     recv = jax.tree_util.tree_unflatten(treedef, out)
     res_def = jax.tree_util.tree_structure(state.residual)
-    return recv, CodecState(jax.tree_util.tree_unflatten(res_def, new_res))
+    return recv, CodecState(jax.tree_util.tree_unflatten(res_def, new_res),
+                            seq=next_seq(state.seq))

@@ -646,16 +646,104 @@ def dequantize_tree_packed_nodes(payload):
     return unpack_tree_nodes(deq, payload["meta"])
 
 
+def _qdq_tree_leaf_local(tree, bits: int, *,
+                         spec: Optional[WireSpec] = None, residual=None):
+    """Leaf-local round-trip of the packed node codec: each float leaf
+    is quantized against its own per-(leaf, node) scale segment exactly
+    as the buffer path does — same absmax, qmax, tiny-guard, rounding,
+    and clip — without materializing the ``[N, R, C]`` buffer.  The
+    byte serialization AND the buffer layout are both lossless
+    rearrangements, so the receiver view needs neither; skipping the
+    pack + unpack copies roughly halves the round-trip on hosts without
+    the Pallas kernels.
+
+    The int code container is elided too: the clipped codes are
+    integers in ``[-qm-1, qm]``, all exactly representable in fp32, so
+    ``delta * codes`` straight off the fp32 rounding is bit-identical
+    to ``dequantize_leaf(quantize_leaf_per_node(...))`` while skipping
+    the fp32 -> intN -> fp32 element-wise converts on every leaf."""
+    decay = jnp.float32(spec.ef_decay if spec is not None else 1.0)
+    res_leaves = jax.tree_util.tree_leaves(residual) \
+        if residual is not None else None
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    floats = sum(1 for _p, x in flat
+                 if hasattr(x, "dtype")
+                 and jnp.issubdtype(x.dtype, jnp.floating))
+    if res_leaves is not None and len(res_leaves) != floats:
+        raise ValueError(
+            f"residual tree holds {len(res_leaves)} leaves for a payload "
+            f"with {floats} float leaves — the residual tree must mirror "
+            f"the payload's float leaves")
+    res_iter = iter(res_leaves) if res_leaves is not None else None
+    out, new_res = [], []
+    for path, leaf in flat:
+        if not (hasattr(leaf, "dtype")
+                and jnp.issubdtype(leaf.dtype, jnp.floating)):
+            out.append(leaf)
+            continue
+        b = spec.bits_for(_leaf_group(path)) if spec is not None else bits
+        eff = leaf.astype(jnp.float32)
+        if res_iter is not None:
+            eff = eff + decay * next(res_iter)
+        # fake-quant: same amax/delta/round/clip as quantize_leaf_per_node
+        # + dequantize_leaf, minus the int container round-trip
+        qm = (1 << (b - 1)) - 1
+        reduce_axes = tuple(range(1, eff.ndim))
+        amax = jnp.max(jnp.abs(eff), axis=reduce_axes)
+        delta = jnp.maximum(amax / qm, jnp.finfo(jnp.float32).tiny)
+        bshape = (eff.shape[0],) + (1,) * (eff.ndim - 1)
+        d = delta.reshape(bshape)
+        codes = jnp.clip(jnp.floor(eff / d + 0.5), -qm - 1, qm)
+        deq = codes * d
+        out.append(deq)
+        if res_iter is not None:
+            new_res.append(eff - deq)
+    recv = jax.tree_util.tree_unflatten(treedef, out)
+    if residual is not None:
+        res_def = jax.tree_util.tree_structure(residual)
+        return recv, jax.tree_util.tree_unflatten(res_def, new_res)
+    return recv
+
+
 def quantize_dequantize_tree_packed_nodes(tree, bits: int = 16, *,
                                           spec: Optional[WireSpec] = None,
                                           use_kernels: Optional[bool] = None,
-                                          rng=None, residual=None):
+                                          rng=None, residual=None,
+                                          elide_layout: Optional[bool] = None):
     """Round-trip through the packed node wire format — what every
     receiver reconstructs.  Bit-identical to the per-leaf
     ``quantize_leaf_per_node``/``dequantize_leaf`` path (the
     encode/decode byte serialization is lossless, so it is elided
     here).  With ``residual`` (the stateful error-feedback codec)
-    returns ``(reconstruction, new_residual_tree)`` instead."""
+    returns ``(reconstruction, new_residual_tree)`` instead.
+
+    ``elide_layout`` (default: on whenever the Pallas kernels are off
+    and rounding is deterministic) skips the buffer *layout* too: the
+    pack → quantize → unpack pipeline spends most of its time copying
+    the payload into and out of the ``[N, R, C]`` buffer, and the
+    layout is as lossless as the serialization, so the receiver view is
+    computed leaf-locally instead (bit-identity asserted in tests).
+    The kernel path keeps the buffer — that IS the fused launch's
+    operand — as does stochastic rounding (the packed sweep owns the
+    noise shape)."""
+    if use_kernels is None:
+        use_kernels = jax.default_backend() == "tpu"
+    if elide_layout is None:
+        elide_layout = not use_kernels and rng is None
+    if elide_layout:
+        # mirror the packed path's contract errors before diverging
+        if spec is not None and spec.stochastic_rounding and rng is None:
+            raise ValueError("WireSpec.stochastic_rounding is set but no "
+                             "rng was passed — stochastic rounding needs "
+                             "an explicit PRNG key")
+        if spec is not None and spec.error_feedback and residual is None:
+            raise ValueError("WireSpec.error_feedback is set but no "
+                             "residual was passed — the stateful codec "
+                             "needs the carried per-node residual tree "
+                             "(CodecState)")
+        if rng is None:
+            return _qdq_tree_leaf_local(tree, bits, spec=spec,
+                                        residual=residual)
     payload = quantize_tree_packed_nodes(tree, bits, spec=spec,
                                          use_kernels=use_kernels, rng=rng,
                                          residual=residual)
@@ -744,3 +832,35 @@ def mix_packed(own, codes, row_delta, w_self, w_rows, *,
     mixed = jnp.einsum("mn,nrc->mrc", w_rows.astype(jnp.float32), deq)
     return mixed + w_self.astype(jnp.float32)[:, None, None] * \
         own.astype(jnp.float32)
+
+
+def mix_packed_init(own, w_self) -> jnp.ndarray:
+    """Open a step-wise :func:`mix_packed`: the self term
+    ``w_self[m]·own[m]`` the per-step accumulates build on.  With the
+    neighbor terms folded in by :func:`mix_packed_accumulate` one
+    permutation step at a time, the pipelined exchange never
+    materializes the ``[S, R, 512]`` step stack — the accumulator is
+    one buffer, and step ``s``'s dequant-accumulate is off the critical
+    path of issuing step ``s+1``'s permute."""
+    return w_self.astype(jnp.float32)[:, None, None] * \
+        own.astype(jnp.float32)
+
+
+def mix_packed_accumulate(acc, codes, row_delta, w_rows, *,
+                          use_kernels: Optional[bool] = None) -> jnp.ndarray:
+    """Fold one exchange step into a running mix:
+    ``acc[m] += Σ_j w_rows[m, j]·codes[j]·Δ[j]``.
+
+    The step-wise twin of :func:`mix_packed` (same per-term math: each
+    code dequantizes as ``code·Δ`` before the weighted add).  On TPU it
+    reuses the fused dequant-accumulate kernel with the accumulator in
+    the ``own`` slot at weight one."""
+    if use_kernels is None:
+        use_kernels = jax.default_backend() == "tpu"
+    if use_kernels:
+        return mix_packed_pallas(
+            acc, codes, row_delta,
+            jnp.ones((acc.shape[0],), jnp.float32), w_rows,
+            interpret=_interpret())
+    deq = codes.astype(jnp.float32) * row_delta[:, :, None]
+    return acc + jnp.einsum("mn,nrc->mrc", w_rows.astype(jnp.float32), deq)

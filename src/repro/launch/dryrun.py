@@ -29,6 +29,13 @@ single-buffer gather / ppermute neighbor collectives) on an
 match ``ScheduleCommAccountant``'s per-round prediction (within 10%)
 and, for sparse regular graphs, stay under 0.5x the full-graph
 all-gather exchange — the logical topology IS the physical wire.
+
+``--pods RxC`` (e.g. ``8x2``) builds a multi-axis pod mesh — R nodes of
+C devices each — where ppermute lowers the ROW-SHARDED permute: each
+device moves only its row shard of the packed wire buffer, so pod-axis
+bytes stay spec-exact instead of widening to the container.  The gate
+then also asserts pod-axis collective-permute bytes/node ==
+``predicted_node_bytes(..., "packed", inner=C)`` EXACTLY.
 """
 import argparse
 import json
@@ -281,10 +288,17 @@ def lower_federate(cfg, student_cfg, mesh, n_pods: int) -> Dict[str, Any]:
     return out
 
 
-def topology_report(arch: str, topology: str, pods: int,
+def topology_report(arch: str, topology: str, pods,
                     bits="16", ef: bool = False) -> Dict[str, Any]:
-    """The --topology axis: physical wire bytes per exchange mode on an
-    (N, 1, 1) federation mesh, asserted against the accountant.
+    """The --topology axis: physical wire bytes per exchange mode on a
+    federation mesh, asserted against the accountant.
+
+    ``pods`` is an int or an ``"R"``/``"RxC"`` string: R federation
+    nodes, C inner (data-axis) devices per node.  At C > 1 the ppermute
+    exchange lowers the row-sharded permute (each device moves its own
+    row shard of the packed wire buffer) and the gate tightens: the
+    pod-axis collective-permute bytes per node must equal the
+    accountant's ``packed`` prediction (``inner=C``) EXACTLY.
 
     ``bits`` is a wire-spec string (``"16"``/``"8"``/``"4"`` uniform,
     ``"4/16"`` = int4 student + int16 prototypes; a ``+ef`` suffix or
@@ -301,13 +315,15 @@ def topology_report(arch: str, topology: str, pods: int,
     from repro.launch.wire import (check_bits_reduction,
                                    check_ef_zero_overhead,
                                    check_topology_bytes,
-                                   measure_exchange_bytes)
+                                   measure_exchange_bytes, parse_pods)
     from repro.wirespec import WireSpec, resolve_spec
+    pods, inner = parse_pods(pods)
     spec = WireSpec.parse(bits) if isinstance(bits, str) \
         else resolve_spec(bits)
     if ef and not spec.error_feedback:
         spec = dataclasses.replace(spec, error_feedback=True)
-    report = measure_exchange_bytes(arch, pods, topology, bits=spec)
+    report = measure_exchange_bytes(arch, pods, topology, bits=spec,
+                                    inner=inner)
     adj = T.make_schedule(pods, topology, rounds=1, seed=0).adjacency_at(0)
     deg = int(adj.sum(axis=1).max())
     # The degree x payload prediction only holds for regular graphs,
@@ -323,7 +339,7 @@ def topology_report(arch: str, topology: str, pods: int,
         exs = ("packed", "ppermute") if T.is_regular(adj) else ("packed",)
         report_sl = measure_exchange_bytes(arch, pods, topology,
                                            bits=spec.stateless(),
-                                           exchanges=exs)
+                                           exchanges=exs, inner=inner)
         report["stateless_reference"] = {
             "bits": report_sl["bits"],
             "exchanges": report_sl["exchanges"],
@@ -338,14 +354,15 @@ def topology_report(arch: str, topology: str, pods: int,
         # the degree implies (ring at N=8: 2/8 = 0.25x, bound 0.5x)
         frac = 0.5 if 2 * deg <= pods else None
         check_topology_bytes(report, exchange="ppermute", rel_tol=0.10,
-                             gather_frac=frac)
+                             gather_frac=frac, exact=inner > 1)
         if spec.stateless() != WireSpec.from_bits(16):
             # the headline knob: the same graph at int16, and the
             # physical buffer bytes must scale by exactly spec/int16
             # (only the ppermute mode is consumed — skip the other
             # reference compiles)
             report16 = measure_exchange_bytes(arch, pods, topology, bits=16,
-                                              exchanges=("ppermute",))
+                                              exchanges=("ppermute",),
+                                              inner=inner)
             report["int16_reference"] = {
                 "packed_pred_bytes_per_node":
                     report16["packed_pred_bytes_per_node"],
@@ -372,8 +389,12 @@ def main():
                     help="gossip graph spec: compile the federation round "
                          "per exchange mode on an (N,1,1) mesh and assert "
                          "physical == logical wire bytes")
-    ap.add_argument("--pods", type=int, default=8,
-                    help="federation nodes for --topology mode")
+    ap.add_argument("--pods", default="8",
+                    help="federation nodes for --topology mode: 'R' or "
+                         "'RxC' (R nodes x C inner devices per node; "
+                         "C > 1 compiles the row-sharded permute on a "
+                         "multi-axis pod mesh and the byte gate becomes "
+                         "exact on the pod-axis permute)")
     ap.add_argument("--bits", default="16",
                     help="wire spec for --topology mode: 16 | 8 | 4 "
                          "(uniform) or <student>/<protos> (mixed, e.g. "

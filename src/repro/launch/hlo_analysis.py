@@ -14,12 +14,35 @@ and produces per-device:
 
 All shapes in the partitioned module are per-device shard shapes, so
 results divide by per-chip peaks directly.
+
+Per-axis attribution
+--------------------
+Pass ``mesh_shape=(("pod", 8), ("data", 2), ("model", 1))`` (the mesh
+axis order; partition ids linearize the device array row-major, which is
+how ``fed_mesh`` builds it) and every collective is additionally
+classified by WHICH mesh axes its participants span:
+
+* ``collective-permute``: each ``source_target_pairs`` entry is a
+  directed copy of the per-device operand; the pair's axis is where the
+  source and target coordinates differ.
+* gather/reduce collectives: ``replica_groups`` (explicit ``{{0,1},..}``
+  or iota ``[G,S]<=[dims]T(perm)`` form) members are unraveled to mesh
+  coordinates; the group's axes are the coordinates that vary inside it.
+
+``Cost.axis_coll[axis][kind]`` then holds SYSTEM-TOTAL bytes for that
+axis (per-device convention bytes x participating devices) — a permute
+that crosses only inner axes lands under ``"data"``, never inflating the
+``pod`` wire budget, so multi-axis runs can gate per-node pod bytes
+exactly instead of double-counting cross-axis collectives.  Collectives
+whose participants vary on several axes land under a compound key like
+``"data+pod"``.  Without ``mesh_shape`` the analyzer behaves exactly as
+before (``axis_coll`` stays empty).
 """
 from __future__ import annotations
 
 import re
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 _DTYPE_BYTES = {
     "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
@@ -37,6 +60,10 @@ _COMP_HDR_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->")
 _TRIP_RE = re.compile(r'"known_trip_count":\{"n":"?(\d+)"?\}')
 _CALL_RE = re.compile(r"(?:body|calls|to_apply|condition)=%?([\w.\-]+)")
 _BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_PAIRS_RE = re.compile(r"source_target_pairs=\{((?:\{\d+,\d+\},?)+)\}")
+_GROUPS_RE = re.compile(r"replica_groups=\{((?:\{[\d,]*\},?)*)\}")
+_IOTA_GROUPS_RE = re.compile(
+    r"replica_groups=\[([\d,]+)\]<=\[([\d,]+)\](?:T\(([\d,]+)\))?")
 
 
 def _shape_list(text: str) -> List[Tuple[str, List[int]]]:
@@ -66,6 +93,9 @@ class Cost:
     bytes: float = 0.0
     coll: Dict[str, float] = field(default_factory=dict)
     coll_counts: Dict[str, float] = field(default_factory=dict)
+    # axis -> kind -> SYSTEM-TOTAL bytes (only filled when analyze_hlo
+    # was given a mesh_shape); axis may be a compound "data+pod" key
+    axis_coll: Dict[str, Dict[str, float]] = field(default_factory=dict)
 
     def add(self, other: "Cost", mult: float = 1.0):
         self.flops += other.flops * mult
@@ -74,10 +104,80 @@ class Cost:
             self.coll[k] = self.coll.get(k, 0.0) + v * mult
         for k, v in other.coll_counts.items():
             self.coll_counts[k] = self.coll_counts.get(k, 0.0) + v * mult
+        for ax, kinds in other.axis_coll.items():
+            dst = self.axis_coll.setdefault(ax, {})
+            for k, v in kinds.items():
+                dst[k] = dst.get(k, 0.0) + v * mult
 
     @property
     def coll_total(self) -> float:
         return sum(self.coll.values())
+
+    def axis_total(self, axis: str) -> float:
+        """System-total collective bytes whose participants span ``axis``
+        (compound "a+b" keys containing the axis are included, so a
+        collective crossing pod AND an inner axis still counts against
+        the pod budget instead of silently escaping it)."""
+        total = 0.0
+        for key, kinds in self.axis_coll.items():
+            if axis in key.split("+"):
+                total += sum(kinds.values())
+        return total
+
+
+def _iota_groups(dims_txt: str, src_txt: str,
+                 perm_txt: Optional[str]) -> List[List[int]]:
+    """Expand XLA's iota replica-group form ``[G,S]<=[d0,d1]T(p)``."""
+    import numpy as np
+    dims = [int(d) for d in dims_txt.split(",") if d]
+    src = [int(d) for d in src_txt.split(",") if d]
+    ids = np.arange(int(np.prod(src))).reshape(src)
+    if perm_txt:
+        ids = ids.transpose([int(p) for p in perm_txt.split(",") if p])
+    return ids.reshape(dims).tolist()
+
+
+def _collective_participants(line: str, n_devices: int
+                             ) -> Tuple[str, List[List[int]], int]:
+    """(structure, groups, n_participants) for one collective line.
+
+    structure is "pairs" (collective-permute source/target copies, each
+    inner list is ``[src, dst]``) or "groups" (replica groups).  An
+    absent / empty replica_groups attribute means one group of every
+    device.
+    """
+    mp = _PAIRS_RE.search(line)
+    if mp:
+        pairs = [[int(a), int(b)]
+                 for a, b in re.findall(r"\{(\d+),(\d+)\}", mp.group(1))]
+        return "pairs", pairs, len(pairs)
+    mi = _IOTA_GROUPS_RE.search(line)
+    if mi:
+        groups = _iota_groups(*mi.groups())
+        return "groups", groups, sum(len(g) for g in groups)
+    mg = _GROUPS_RE.search(line)
+    if mg and mg.group(1):
+        groups = [[int(x) for x in g.split(",") if x]
+                  for g in re.findall(r"\{([\d,]*)\}", mg.group(1))]
+        groups = [g for g in groups if g]
+        if groups:
+            return "groups", groups, sum(len(g) for g in groups)
+    return "groups", [list(range(n_devices))], n_devices
+
+
+def _axis_key(members: Sequence[int], axes: Sequence[Tuple[str, int]]) -> str:
+    """Mesh axes on which ``members`` (linear partition ids) differ."""
+    sizes = [s for _, s in axes]
+    coords = []
+    for dev in members:
+        c, rem = [], dev
+        for s in reversed(sizes):
+            c.append(rem % s)
+            rem //= s
+        coords.append(tuple(reversed(c)))
+    varying = sorted({axes[i][0] for i in range(len(axes))
+                      for a, b in zip(coords, coords[1:]) if a[i] != b[i]})
+    return "+".join(varying) if varying else "self"
 
 
 def _split_computations(text: str) -> Tuple[Dict[str, List[str]], str]:
@@ -148,7 +248,14 @@ def _conv_flops(line: str, symtab) -> float:
     return 0.0
 
 
-def analyze_hlo(text: str) -> Cost:
+def analyze_hlo(text: str,
+                mesh_shape: Optional[Sequence[Tuple[str, int]]] = None
+                ) -> Cost:
+    n_devices = 1
+    if mesh_shape is not None:
+        mesh_shape = tuple(mesh_shape)
+        for _, s in mesh_shape:
+            n_devices *= s
     comps, entry = _split_computations(text)
     if not entry:
         # fall back: biggest computation
@@ -201,6 +308,10 @@ def analyze_hlo(text: str) -> Cost:
                     cost.flops += child_cost.flops
                     for k, v in child_cost.coll.items():
                         cost.coll[k] = cost.coll.get(k, 0.0) + v
+                    for ax, kinds in child_cost.axis_coll.items():
+                        dst = cost.axis_coll.setdefault(ax, {})
+                        for k, v in kinds.items():
+                            dst[k] = dst.get(k, 0.0) + v
                 cost.bytes += _nbytes(symtab[iname]) + _operand_bytes(s, symtab, op)
             else:
                 base = op.replace("-start", "")
@@ -216,6 +327,20 @@ def analyze_hlo(text: str) -> Cost:
                     cost.coll[base] = cost.coll.get(base, 0.0) + nb
                     cost.coll_counts[base] = cost.coll_counts.get(base, 0.0) + 1
                     cost.bytes += ob + rb
+                    if mesh_shape is not None:
+                        kind, parts, _ = _collective_participants(s, n_devices)
+                        if kind == "pairs":
+                            # each source->target copy moves the operand
+                            for pair in parts:
+                                key = _axis_key(pair, mesh_shape)
+                                dst = cost.axis_coll.setdefault(key, {})
+                                dst[base] = dst.get(base, 0.0) + ob
+                        else:
+                            # convention bytes are per participating device
+                            for group in parts:
+                                key = _axis_key(group, mesh_shape)
+                                dst = cost.axis_coll.setdefault(key, {})
+                                dst[base] = dst.get(base, 0.0) + nb * len(group)
                 elif op in ("parameter", "constant", "iota", "tuple",
                             "get-tuple-element", "bitcast", "reshape",
                             "broadcast", "after-all", "partition-id"):

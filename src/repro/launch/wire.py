@@ -43,20 +43,41 @@ def ensure_host_device_flag(n_nodes: int,
     return e
 
 
-def fed_mesh(n_nodes: int):
-    """(N, 1, 1) ("pod", "data", "model") mesh over the first N devices:
-    one device per federation node, so HLO collective bytes == pod wire
-    bytes."""
+def parse_pods(pods) -> "tuple[int, int]":
+    """``"8"`` → ``(8, 1)``, ``"8x2"`` → ``(8, 2)``: R federation nodes
+    (pod axis) × C inner devices per node (data axis).  Ints pass
+    through as ``(pods, 1)``."""
+    if isinstance(pods, int):
+        return pods, 1
+    parts = str(pods).lower().split("x")
+    if len(parts) not in (1, 2) or not all(p.isdigit() for p in parts):
+        raise ValueError(f"--pods must be 'R' or 'RxC', got {pods!r}")
+    r = int(parts[0])
+    c = int(parts[1]) if len(parts) == 2 else 1
+    if r < 1 or c < 1:
+        raise ValueError(f"--pods sizes must be >= 1, got {pods!r}")
+    return r, c
+
+
+def fed_mesh(n_nodes: int, inner: "tuple[int, int]" = (1, 1)):
+    """(N, d, m) ("pod", "data", "model") mesh over the first N*d*m
+    devices.  The default (d, m) = (1, 1) is one device per federation
+    node, so HLO collective bytes == pod wire bytes; multi-axis pods
+    (``inner=(C, 1)`` from ``--pods RxC``) give each node C inner
+    devices and the row-sharded permute keeps pod-axis bytes spec-exact
+    (read back per axis via ``analyze_hlo(..., mesh_shape=...)``)."""
     import jax
     from jax.sharding import Mesh
+    d, m = inner
+    need = n_nodes * d * m
     devs = jax.devices()
-    if len(devs) < n_nodes:
+    if len(devs) < need:
         raise RuntimeError(
-            f"need {n_nodes} devices for a {n_nodes}-node federation mesh, "
+            f"need {need} devices for a {n_nodes}x{d}x{m} federation mesh, "
             f"have {len(devs)} — set "
-            f"XLA_FLAGS=--xla_force_host_platform_device_count={n_nodes} "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={need} "
             f"before the first jax call")
-    return Mesh(np.array(devs[:n_nodes]).reshape(n_nodes, 1, 1),
+    return Mesh(np.array(devs[:need]).reshape(n_nodes, d, m),
                 ("pod", "data", "model"))
 
 
@@ -83,7 +104,7 @@ def _student_setup(arch: str):
 def measure_exchange_bytes(arch: str, n_nodes: int, topology: str = "ring",
                            bits=16,
                            exchanges=("gather", "packed", "ppermute"),
-                           seed: int = 0) -> Dict[str, Any]:
+                           seed: int = 0, inner: int = 1) -> Dict[str, Any]:
     """Lower + compile the ProFe gossip round per exchange mode on a
     federation mesh and report per-node physical bytes from the HLO next
     to the accountant's logical/packed predictions.
@@ -92,11 +113,17 @@ def measure_exchange_bytes(arch: str, n_nodes: int, topology: str = "ring",
     string (``"16"``/``"8"``/``"4"``/``"4/16"``) — the whole pipeline
     (codec, exchange, accounting) runs at that wire format.
 
-    Physical bytes are per-device == per-node on this mesh (collective-
-    permute counts its operand once per step; all-gather counts its
-    gathered output).  ``exchanges`` entries that don't apply to the
-    graph (ppermute on irregular graphs stays valid — partial steps — but
-    multi-device requirements may fail) report their error string.
+    At ``inner == 1`` physical bytes are per-device == per-node on this
+    mesh (collective-permute counts its operand once per step; all-gather
+    counts its gathered output).  ``inner > 1`` builds a multi-axis
+    pod mesh (``(N, inner, 1)``, each node ``inner`` data-parallel
+    devices) and attributes collective bytes per mesh axis from the HLO
+    device groups: ``collective_bytes_per_node`` is then the POD-axis
+    total divided by N — intra-pod widening (all-gather over the inner
+    axis) is reported separately under ``by_axis`` and never counts as
+    wire.  ``exchanges`` entries that don't apply to the graph (ppermute
+    on irregular graphs stays valid — partial steps — but multi-device
+    requirements may fail) report their error string.
     """
     import jax
     import jax.numpy as jnp
@@ -110,7 +137,9 @@ def measure_exchange_bytes(arch: str, n_nodes: int, topology: str = "ring",
         else resolve_spec(bits)
     sched = T.make_schedule(n_nodes, topology, rounds=1, seed=seed)
     adj = sched.adjacency_at(0)
-    mesh = fed_mesh(n_nodes)
+    mesh = fed_mesh(n_nodes, (inner, 1))
+    mesh_shape = tuple((a, int(dict(mesh.shape)[a]))
+                       for a in mesh.axis_names) if inner > 1 else None
     cfg, student_cfg, struct, C = _student_setup(arch)
     specs = param_specs(student_cfg, struct, mesh)
     Pdim = student_cfg.proto_dim
@@ -146,16 +175,17 @@ def measure_exchange_bytes(arch: str, n_nodes: int, topology: str = "ring",
     rows16, _nseg = packed_wire_rows(
         {"model": payload["model"], "protos": payload["protos"]},
         node_axis=False)
-    copy_spec = int(packed_copy_bytes(payload, spec))
-    copy16 = int(packed_copy_bytes(payload, 16))
+    copy_spec = int(packed_copy_bytes(payload, spec, inner=inner))
+    copy16 = int(packed_copy_bytes(payload, 16, inner=inner))
     sidecar = copy16 - rows16 * 512 * 2
     acct = ScheduleCommAccountant(sched)
     logical = acct.predicted_node_bytes(payload, 0, spec, wire="dense")
-    packed = acct.predicted_node_bytes(payload, 0, spec, wire="packed")
+    packed = acct.predicted_node_bytes(payload, 0, spec, wire="packed",
+                                       inner=inner)
 
     out: Dict[str, Any] = {
         "arch": arch, "topology": topology, "n_nodes": n_nodes,
-        "bits": spec.describe(),
+        "inner": inner, "bits": spec.describe(),
         "degree": [int(d) for d in sched.out_degrees()[0]],
         "logical_bytes_per_node": int(logical.max()),
         "packed_pred_bytes_per_node": int(packed.max()),
@@ -167,9 +197,15 @@ def measure_exchange_bytes(arch: str, n_nodes: int, topology: str = "ring",
     node_specs = jax.tree_util.tree_map(
         lambda s: P("pod", *s), specs, is_leaf=lambda x: isinstance(x, P))
     if spec.error_feedback:
-        ef_shardings = to_named(jax.tree_util.tree_map(
-            lambda s: P("pod", *s), ef_state_specs(specs),
-            is_leaf=lambda x: isinstance(x, P)), mesh)
+        # node-shard only the residual tree; the scalar seq counter is
+        # replicated (P("pod") on a rank-0 leaf would be an error)
+        from repro.core.wire_state import CodecState
+        es = ef_state_specs(specs)
+        ef_shardings = to_named(CodecState(
+            residual=jax.tree_util.tree_map(
+                lambda s: P("pod", *s), es.residual,
+                is_leaf=lambda x: isinstance(x, P)),
+            seq=P()), mesh)
     # the "full-gather" pseudo-mode is the full-graph all-gather
     # reference (packed exchange, adjacency=None) the sparse exchange
     # is measured against
@@ -190,13 +226,33 @@ def measure_exchange_bytes(arch: str, n_nodes: int, topology: str = "ring",
             with mesh:
                 jitted = jax.jit(fn, in_shardings=in_sh)
                 hlo = jitted.lower(*args).compile().as_text()
-            an = analyze_hlo(hlo)
+            an = analyze_hlo(hlo, mesh_shape=mesh_shape)
+            if inner > 1:
+                # per-axis attribution: pod bytes are system totals over
+                # all (src, dst) pairs, so divide by N for per-node wire
+                per_node = an.axis_total("pod") / n_nodes
+            else:
+                per_node = float(an.coll_total)
             entry = {
-                "collective_bytes_per_node": float(an.coll_total),
+                "collective_bytes_per_node": per_node,
                 "by_kind": {k: float(v) for k, v in an.coll.items() if v},
                 "counts": {k: float(v) for k, v in an.coll_counts.items()
                            if v},
             }
+            if inner > 1:
+                entry["by_axis"] = {
+                    ax: {k: float(v) for k, v in kinds.items() if v}
+                    for ax, kinds in an.axis_coll.items()}
+                # exact gate input: pod-axis bytes split by collective
+                # kind (the permute is the wire; the tiny sizes/validity
+                # all-gather rides separately)
+                pod_kinds: Dict[str, float] = {}
+                for key, kinds in an.axis_coll.items():
+                    if "pod" in key.split("+"):
+                        for k, v in kinds.items():
+                            pod_kinds[k] = pod_kinds.get(k, 0.0) + float(v)
+                entry["pod_by_kind_per_node"] = {
+                    k: v / n_nodes for k, v in pod_kinds.items() if v}
         except (ValueError, RuntimeError) as e:
             entry = {"error": f"{type(e).__name__}: {e}"}
         if name == "full-gather":
@@ -209,12 +265,16 @@ def measure_exchange_bytes(arch: str, n_nodes: int, topology: str = "ring",
 
 def check_topology_bytes(report: Dict[str, Any], *, exchange: str,
                          rel_tol: float = 0.10,
-                         gather_frac: Optional[float] = None
-                         ) -> Dict[str, Any]:
+                         gather_frac: Optional[float] = None,
+                         exact: bool = False) -> Dict[str, Any]:
     """Assert physical ≈ predicted wire bytes for one exchange mode.
 
     * physical collective bytes within ``rel_tol`` of the accountant's
       packed-codec prediction (``predicted_node_bytes(..., "packed")``),
+    * ``exact=True`` (multi-axis pods) additionally requires the
+      POD-axis collective-permute bytes per node to equal the prediction
+      EXACTLY — the row-sharded permute moves spec-exact bytes; only the
+      few-byte sizes/validity all-gather rides outside the permute,
     * when ``gather_frac`` is given (e.g. 0.5 for the ring-vs-full
       acceptance bound), physical < gather_frac x the full-graph
       all-gather exchange.
@@ -234,6 +294,16 @@ def check_topology_bytes(report: Dict[str, Any], *, exchange: str,
             f"{exchange} physical bytes {phys:.0f} deviate "
             f"{rel:.1%} (> {rel_tol:.0%}) from the accountant's "
             f"prediction {pred}")
+    if exact:
+        perm = ex.get("pod_by_kind_per_node",
+                      ex.get("by_kind", {})).get("collective-permute")
+        verdict["permute_bytes_per_node"] = perm
+        verdict["exact"] = True
+        if perm is None or perm != pred:
+            raise AssertionError(
+                f"{exchange} pod-axis collective-permute moves "
+                f"{perm} bytes/node, accountant predicts {pred} — the "
+                f"row-sharded permute must be spec-EXACT")
     if gather_frac is not None:
         full = report.get("full_gather_bytes_per_node")
         verdict["full_gather"] = full

@@ -51,6 +51,39 @@ def dim_axis(dim: int, mesh: Mesh, axis):
     return axis if _fits(dim, mesh, axis) else None
 
 
+def row_shard_order(row_bits, inner: int):
+    """Static row permutation that shards a packed wire buffer's row dim
+    over ``inner`` devices with an IDENTICAL per-width row profile on
+    every shard.
+
+    ``row_bits`` is the per-row wire width vector of the packed buffer
+    (``seg_bits[seg_ids]``, length R).  ``shard_map`` traces one program
+    for all shards, so the encoded byte count of each device's row block
+    must be a static constant — shard k therefore takes the k-th
+    equal slice of EVERY width group (groups in ascending width, the
+    encode order), giving each device ``R/inner`` rows whose widths are
+    the same sequence.  Returns ``(order, inv_order, local_bits)`` —
+    apply ``buf[:, order]`` before sharding rows over the inner axes,
+    ``mixed[:, inv_order]`` after, and encode each local block against
+    ``local_bits`` — or ``None`` when some width group's row count does
+    not divide ``inner`` (the caller falls back to the gather exchange).
+    """
+    bits = np.asarray(row_bits)
+    if inner <= 1:
+        r = np.arange(bits.shape[0])
+        return r, r, bits
+    widths = sorted(set(int(b) for b in bits))
+    groups = [(b, np.nonzero(bits == b)[0]) for b in widths]
+    if any(len(rows) % inner for _b, rows in groups):
+        return None
+    order = np.concatenate([
+        rows[k * (len(rows) // inner):(k + 1) * (len(rows) // inner)]
+        for k in range(inner) for _b, rows in groups])
+    local_bits = np.concatenate([
+        np.full(len(rows) // inner, b, bits.dtype) for b, rows in groups])
+    return order, np.argsort(order), local_bits
+
+
 def _path_names(path) -> Tuple[str, ...]:
     names = []
     for p in path:

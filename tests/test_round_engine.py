@@ -442,3 +442,157 @@ def test_proto_accumulator_traces_once(mnist_like):
                 cfg, params, batches(node_data[node], 64, seed=trial), ncls)
     assert profe.PROTO_ACC_TRACES[(cfg.name, ncls)] == 1, \
         profe.PROTO_ACC_TRACES
+
+
+# ---------------------------------------------------------------------------
+# packed codec: CPU fast path (layout elided) == buffer path
+# ---------------------------------------------------------------------------
+
+def test_packed_codec_elide_layout_bit_identity():
+    """The leaf-local fake-quant fast path (``elide_layout=True``, the
+    CPU default) == the full pack -> quantize -> unpack buffer path,
+    bit for bit — stateless, mixed-precision, and error-feedback
+    flavors.  The buffer path stays the wire truth (it IS what the
+    mesh exchange encodes); the elided path is how simulator receivers
+    compute the identical reconstruction without the layout copies."""
+    from repro.core.wire_state import init_codec_state
+    from repro.kernels.quantize import ops as q_ops
+    from repro.wirespec import WireSpec
+    tree = _payload_tree()
+
+    def both(spec, **kw):
+        return [q_ops.quantize_dequantize_tree_packed_nodes(
+            tree, spec=spec, use_kernels=False, elide_layout=el, **kw)
+            for el in (True, False)]
+
+    for bits in ("16", "8", "4", "4/16"):
+        el, buf = both(WireSpec.parse(bits))
+        for g, w in zip(jax.tree_util.tree_leaves(el),
+                        jax.tree_util.tree_leaves(buf)):
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+    # EF: reconstruction AND the carried residual
+    st = init_codec_state(tree)
+    el, buf = both(WireSpec.parse("4+ef"), residual=st.residual)
+    for g, w in zip(jax.tree_util.tree_leaves(el),
+                    jax.tree_util.tree_leaves(buf)):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+# ---------------------------------------------------------------------------
+# pipelined mesh exchange (overlap=) + row-sharded multi-axis pods
+# ---------------------------------------------------------------------------
+
+def _pod_mesh(n, d):
+    from jax.sharding import Mesh
+    devs = np.asarray(jax.devices()[:n * d]).reshape(n, d, 1)
+    return Mesh(devs, ("pod", "data", "model"))
+
+
+@pytest.mark.mesh
+@pytest.mark.parametrize("ex", ["gather", "packed", "ppermute"])
+def test_mesh_overlap_matches_sequential(ex):
+    """``overlap=True`` double-buffers the permute steps (step s+1
+    issued while step s's fused mix runs) — same result as the
+    sequential schedule.  gather/packed have no step loop; the knob is
+    a no-op there and the outputs are bit-identical."""
+    n = 8
+    if jax.device_count() < n:
+        pytest.skip(f"needs {n} devices, have {jax.device_count()}")
+    from repro.core.mesh_federation import make_profe_round
+    mesh, students, specs, protos, counts, sizes = _mesh_round_fixtures(n)
+    adj = T.make_schedule(n, "ring", seed=0).adjacency_at(0)
+    outs = {}
+    for ov in (False, True):
+        fn = make_profe_round(mesh, specs, bits=16, adjacency=adj,
+                              exchange=ex, overlap=ov)
+        with mesh:
+            outs[ov] = jax.jit(fn)(students, protos, counts, sizes)
+    for got, want in zip(jax.tree_util.tree_leaves(outs[True]),
+                         jax.tree_util.tree_leaves(outs[False])):
+        if ex == "ppermute":
+            # the double-buffered accumulate reassociates the neighbor
+            # sum — fp32 noise only
+            np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                       rtol=1e-5, atol=1e-5)
+        else:
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.mesh
+def test_row_sharded_permute_matches_gather():
+    """(4,2,1) pod mesh: each inner device permutes only its row block
+    of the encoded wire buffer — same round outputs as the per-leaf
+    gather reference, overlap on or off."""
+    n, d = 4, 2
+    if jax.device_count() < n * d:
+        pytest.skip(f"needs {n * d} devices, have {jax.device_count()}")
+    from repro.core.mesh_federation import make_profe_round
+    _, students, specs, protos, counts, sizes = _mesh_round_fixtures(n)
+    mesh = _pod_mesh(n, d)
+    adj = T.make_schedule(n, "ring", seed=0).adjacency_at(0)
+    outs = {}
+    for tag, kw in (("gather", dict(exchange="gather")),
+                    ("sharded", dict(exchange="ppermute")),
+                    ("sharded+ovl", dict(exchange="ppermute",
+                                         overlap=True))):
+        fn = make_profe_round(mesh, specs, bits=16, adjacency=adj, **kw)
+        with mesh:
+            outs[tag] = jax.jit(fn)(students, protos, counts, sizes)
+    for got, want in zip(jax.tree_util.tree_leaves(outs["sharded"]),
+                         jax.tree_util.tree_leaves(outs["gather"])):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-4)
+    for got, want in zip(jax.tree_util.tree_leaves(outs["sharded+ovl"]),
+                         jax.tree_util.tree_leaves(outs["sharded"])):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.mesh
+def test_row_sharded_mixed_spec_splits_or_falls_back():
+    """Mixed 4/16 on a (4,2,1) pod mesh: a payload whose width groups
+    split over the 2 inner devices runs row-sharded and matches the
+    packed gather; a payload whose groups DON'T split raises under
+    explicit ``exchange='ppermute'`` and silently falls back (bit-
+    identical to packed) under ``exchange='auto'``."""
+    n, d = 4, 2
+    if jax.device_count() < n * d:
+        pytest.skip(f"needs {n * d} devices, have {jax.device_count()}")
+    from repro.core.mesh_federation import make_profe_round
+    from repro.wirespec import WireSpec
+    _, students, specs, _protos, _counts, sizes = _mesh_round_fixtures(n)
+    mesh = _pod_mesh(n, d)
+    adj = T.make_schedule(n, "ring", seed=0).adjacency_at(0)
+    wire = WireSpec.parse("4/16")
+
+    # splittable: protos [n, 8, 128] -> 2 int16 rows; student rows pad
+    # to a multiple of 8 -> both groups divide M=2
+    protos_b = jnp.asarray(RNG.standard_normal((n, 8, 128)), jnp.float32)
+    counts_b = jnp.asarray(RNG.integers(0, 4, (n, 8)), jnp.float32)
+    outs = {}
+    for ex in ("packed", "ppermute"):
+        fn = make_profe_round(mesh, specs, adjacency=adj, spec=wire,
+                              exchange=ex)
+        with mesh:
+            outs[ex] = jax.jit(fn)(students, protos_b, counts_b, sizes)
+    for got, want in zip(jax.tree_util.tree_leaves(outs["ppermute"]),
+                         jax.tree_util.tree_leaves(outs["packed"])):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-3)
+
+    # non-splittable: protos [n, 5, 16] -> 3 int16 rows (odd)
+    protos_s = jnp.asarray(RNG.standard_normal((n, 5, 16)), jnp.float32)
+    counts_s = jnp.asarray(RNG.integers(0, 4, (n, 5)), jnp.float32)
+    fn = make_profe_round(mesh, specs, adjacency=adj, spec=wire,
+                          exchange="ppermute")
+    with mesh, pytest.raises(ValueError, match="divisible"):
+        jax.jit(fn)(students, protos_s, counts_s, sizes)
+    outs = {}
+    for ex in ("auto", "packed"):
+        fn = make_profe_round(mesh, specs, adjacency=adj, spec=wire,
+                              exchange=ex)
+        with mesh:
+            outs[ex] = jax.jit(fn)(students, protos_s, counts_s, sizes)
+    for got, want in zip(jax.tree_util.tree_leaves(outs["auto"]),
+                         jax.tree_util.tree_leaves(outs["packed"])):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))

@@ -121,6 +121,45 @@ def test_ef_packed_bit_identical_per_leaf_reference(spec):
                for x in _leaves(ref_state.residual)) > 0
 
 
+def test_ef_seq_pins_residual_to_payload_across_rounds():
+    """The sequence number witnesses payload/residual pairing across 5
+    carried rounds: after quantizing payload ``t`` (0-based) the state
+    holds ``seq == t + 1``, and the carried residual corrects exactly
+    the payload it was quantized against — the invariant the stale-by-
+    one pipeline (``overlap='rounds'``) leans on when round ``t``'s
+    wire view is mixed while round ``t+1`` trains.  Verified against an
+    independently recomputed per-leaf recursion, bit for bit."""
+    payloads = [_payload() for _ in range(5)]
+    fn = jax.jit(lambda t, s: R.quantize_dequantize_per_node(
+        t, spec=EF4, use_kernels=False, state=s))
+    ref_fn = jax.jit(lambda t, s: ef_quantize_dequantize_tree(
+        t, EF4, s, node_axis=True))
+    state = init_codec_state(payloads[0])
+    assert int(state.seq) == 0
+    ref_state = init_codec_state(payloads[0])
+    for t, tree in enumerate(payloads):
+        recv, state = fn(tree, state)
+        assert int(state.seq) == t + 1
+        # reference recursion: eff_t = p_t + decay*res_t; res_{t+1} =
+        # eff_t - deq_t — res_{t+1} is quantized against payload t, so
+        # a receiver holding (recv_t, seq=t+1) knows which stale
+        # payload the next correction applies to
+        ref_recv, ref_state = ref_fn(tree, ref_state)
+        _assert_trees_equal(recv, ref_recv)
+        _assert_trees_equal(state.residual, ref_state.residual)
+        assert int(ref_state.seq) == t + 1
+    # the carried residual is payload-specific: replaying round 4's
+    # payload against round 2's residual changes the reconstruction
+    _, st2 = fn(payloads[0], init_codec_state(payloads[0]))
+    _, st2 = fn(payloads[1], st2)
+    wrong, _ = fn(payloads[4], st2)          # seq mismatch: 2 vs 4
+    right, _ = fn(payloads[4], CodecState(ref_state.residual,
+                                          seq=jnp.int32(4)))
+    diffs = [float(np.abs(a - b).max())
+             for a, b in zip(_leaves(wrong), _leaves(right))]
+    assert max(diffs) > 0
+
+
 def test_ef_zero_residual_round_matches_stateless():
     """Round 1 (zero residual) reconstructs exactly like the stateless
     spec — EF changes nothing until there is an error to feed back."""
@@ -286,7 +325,7 @@ def _stacked_round_harness(tmp_seed=0):
     stacked = stacked._replace(wire_state=init_codec_state({
         "protos": jnp.zeros((n_nodes, ncls, student_cfg.proto_dim),
                             jnp.float32),
-        "student": stacked.student}))
+        "student": stacked.student}, n_nodes=n_nodes))
     sched = T.make_schedule(n_nodes, fed.topology, rounds=fed.rounds,
                             seed=fed.seed)
     w_self, w_neigh, include = sched.lower(sizes)
