@@ -15,14 +15,34 @@ deterministic — any drift is a wire-format change that needs a
 deliberate baseline refresh), and the jitted packed-codec round-trip ms
 must stay within the same threshold.
 
+When the committed baseline carries per-phase rows
+(``nodes[n]["phases"]``, written by ``round_step.py --phases``), the
+phase gate also runs: the exact Eq. 3 proto phase is re-measured fresh
+at the LARGEST committed node count (one node count bounds the extra
+compile time; the whole-round gate above already covers every N) and
+must stay within ``--threshold`` x the committed ``proto_exact_ms``;
+and the committed rows themselves must keep the single-pass win —
+``round_fused_ms < round_exact_ms`` at the largest N (and at worst
+break-even, <= 1.05x, on the smaller rows, where the saved pass is
+inside timer noise), and at the largest N the fused in-scan proto
+marginal must cost at most HALF the exact second pass
+(``proto_fused_ms <= 0.5 * proto_exact_ms``).  A failure
+of the committed invariants means the committed file was refreshed
+from a run where the fusion stopped paying — that needs investigation,
+not a baseline bump.
+
 Tier-1-adjacent invocation (see ROADMAP):
 
     PYTHONPATH=src python benchmarks/check_regression.py
 
 Refresh the baselines after an intentional perf change with:
 
-    PYTHONPATH=src python benchmarks/round_step.py --nodes 2 4 8
+    PYTHONPATH=src python benchmarks/round_step.py --nodes 2 4 8 --phases
     PYTHONPATH=src python benchmarks/round_step.py --wire
+
+(the first command is the deliberate-refresh flow for both the
+whole-round and the per-phase rows: re-run, eyeball the printed
+breakdown, commit the regenerated BENCH_round_step.json).
 """
 from __future__ import annotations
 
@@ -33,7 +53,7 @@ import subprocess
 import sys
 import tempfile
 
-from round_step import measure
+from round_step import measure, measure_phases
 
 
 def check_wire(baseline_path: str, threshold: float) -> bool:
@@ -113,6 +133,56 @@ def check_wire(baseline_path: str, threshold: float) -> bool:
     return failed
 
 
+def check_phases(baseline: dict, threshold: float, rounds: int) -> bool:
+    """Per-phase gate (see module docstring).  Returns True on failure.
+    No-op when the committed baseline has no ``phases`` rows (pre-phase
+    baseline files stay checkable)."""
+    cfg = baseline["config"]
+    phased = {n: row["phases"] for n, row in baseline["nodes"].items()
+              if "phases" in row}
+    if not phased:
+        return False
+    failed = False
+    n_big = max(phased, key=int)
+
+    # committed invariants: the single-pass round must win where the
+    # round is big enough for the saved pass to clear the noise floor
+    # (the largest committed N), and must never do worse than
+    # break-even (<= 1.05x) on any row — at tiny N the exact pass
+    # costs about what the in-scan accumulators add, so strict
+    # per-row "cheaper" would gate on timer noise
+    for n, ph in sorted(phased.items(), key=lambda kv: int(kv[0])):
+        if n == n_big:
+            ok = ph["round_fused_ms"] < ph["round_exact_ms"]
+            tag = "FUSED-NOT-CHEAPER"
+        else:
+            ok = ph["round_fused_ms"] <= 1.05 * ph["round_exact_ms"]
+            tag = "FUSED-REGRESSED"
+        failed |= not ok
+        print(f"N={n}: committed round fused {ph['round_fused_ms']:7.1f} ms"
+              f" vs exact {ph['round_exact_ms']:7.1f} ms  "
+              f"{'OK' if ok else tag}")
+    big = phased[n_big]
+    ok = big["proto_fused_ms"] <= 0.5 * big["proto_exact_ms"]
+    failed |= not ok
+    print(f"N={n_big}: committed proto fused marginal "
+          f"{big['proto_fused_ms']:6.1f} ms vs 0.5 x exact "
+          f"{big['proto_exact_ms']:6.1f} ms  "
+          f"{'OK' if ok else 'FUSED-MARGINAL-TOO-HIGH'}")
+
+    # fresh exact proto phase at the largest committed N
+    fresh = measure_phases(int(n_big),
+                           samples_per_node=cfg["samples_per_node"],
+                           batch_size=cfg["batch_size"], rounds=rounds)
+    ratio = fresh["proto_exact_ms"] / big["proto_exact_ms"]
+    verdict = "OK" if ratio <= threshold else "REGRESSION"
+    failed |= verdict == "REGRESSION"
+    print(f"N={n_big}: proto phase {fresh['proto_exact_ms']:7.1f} ms vs "
+          f"committed {big['proto_exact_ms']:7.1f} ms  ({ratio:.2f}x)  "
+          f"{verdict}")
+    return failed
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--baseline", default="BENCH_round_step.json")
@@ -123,8 +193,9 @@ def main() -> int:
     ap.add_argument("--nodes", nargs="+", type=int, default=None,
                     help="subset of baseline node counts to check "
                          "(default: all)")
-    ap.add_argument("--rounds", type=int, default=3,
-                    help="timed rounds per node count (median)")
+    ap.add_argument("--rounds", type=int, default=5,
+                    help="timed rounds per node count (median) — 5 keeps "
+                         "the median outside this container's timer noise")
     ap.add_argument("--skip-wire", action="store_true")
     args = ap.parse_args()
 
@@ -151,6 +222,8 @@ def main() -> int:
             failed = True
         print(f"N={n}: jitted {fresh:8.1f} ms/round vs committed "
               f"{committed:8.1f} ms  ({ratio:.2f}x)  {verdict}")
+
+    failed |= check_phases(baseline, args.threshold, args.rounds)
 
     if not args.skip_wire and os.path.exists(args.wire_baseline):
         failed |= check_wire(args.wire_baseline, args.threshold)

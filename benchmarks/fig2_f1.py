@@ -10,7 +10,10 @@ Every row also carries that spec's wire bytes (logical per copy,
 physical packed per copy, and degree-weighted GB per node for the whole
 run), so the bytes-vs-F1 tradeoff is ONE plot-ready artifact; ``--bits
 ... --ef`` adds the stateful error-feedback twin of each sub-int16 spec
-(same bytes, recovered F1 — see ``reports/fig2_f1_bits_ef.json``).
+(same bytes, recovered F1 — see ``reports/fig2_f1_bits_ef.json``);
+``--proto-pass both`` adds a ``+fused`` twin per proto-sharing spec —
+the F1 cost of the single-pass round's evolving-student prototypes
+(see ``reports/fig2_f1_proto_pass.json``).
 
 Full paper scale (20 nodes, 3 datasets, 5 splits, 10-80 rounds) is hours
 of CPU; the default here is the scaled-down protocol (4 nodes, MNIST-like
@@ -46,7 +49,7 @@ def _sub_int16(bits: str) -> bool:
 
 def run(dataset: str, split: str, *, nodes: int, rounds: int, epochs: int,
         n_samples: int, algos=ALGOS, seed: int = 0, verbose=False,
-        topology: str = "full", bits=("16",)):
+        topology: str = "full", bits=("16",), proto_pass=("exact",)):
     cfg = get_config(dataset)
     data = make_image_dataset(seed, n_samples, cfg.input_hw, cfg.num_classes)
     train_d, test_d = train_test_split(data, 0.1, seed)  # paper: 10% global test
@@ -58,18 +61,27 @@ def run(dataset: str, split: str, *, nodes: int, rounds: int, epochs: int,
     # the bits column: profe re-runs per wire spec (only profe quantizes
     # its wire), quantifying the F1 cost of int8/int4/mixed next to the
     # byte savings — the scenario the paper's Table II cannot show
+    # the proto_pass column: proto-sharing algos re-run per Eq. 3 pass
+    # mode when asked — "fused" is the single-pass round; its F1 delta
+    # vs "exact" is the accuracy cost of prototypes built from the
+    # evolving (pre-final) student, recorded curve-vs-curve
     jobs = []
     for algo in algos:
-        if algo == "profe":
-            jobs += [(f"profe@{b}" if len(bits) > 1 or b != "16" else
-                      "profe", algo, b) for b in bits]
-        else:
-            jobs.append((algo, algo, "16"))
-    for name, algo, b in jobs:
+        passes = proto_pass if algo in ("profe", "fedproto", "fedgpd") \
+            else ("exact",)
+        for pp in passes:
+            suffix = "+fused" if pp == "fused" else ""
+            if algo == "profe":
+                jobs += [(f"profe@{b}{suffix}"
+                          if len(bits) > 1 or b != "16" or suffix else
+                          "profe", algo, b, pp) for b in bits]
+            else:
+                jobs.append((f"{algo}{suffix}", algo, "16", pp))
+    for name, algo, b, pp in jobs:
         fed = FederationConfig(num_nodes=nodes, rounds=rounds,
                                local_epochs=epochs, algorithm=algo,
                                split=split, seed=seed, topology=topology,
-                               **_bits_fed_kwargs(b))
+                               proto_pass=pp, **_bits_fed_kwargs(b))
         res = run_federation(cfg, fed, train, node_data, test_d,
                              verbose=verbose, eval_all_nodes=True)
         # one plot-ready row: F1 curve AND the wire bytes of that exact
@@ -85,6 +97,7 @@ def run(dataset: str, split: str, *, nodes: int, rounds: int, epochs: int,
                 res.extras.get("wire_bytes_packed_per_copy"),
             "avg_sent_packed_gb": res.extras.get("avg_sent_packed_gb"),
             "elapsed_s": res.elapsed_s,
+            "proto_pass": pp,
         }
         if algo == "profe":
             out[name]["bits"] = WireSpec.parse(b).describe()
@@ -107,6 +120,12 @@ def main():
                          "--bits 16 8 4 4/16 (mixed = int4 student + "
                          "int16 prototypes); a +ef suffix enables the "
                          "stateful error-feedback codec")
+    ap.add_argument("--proto-pass", choices=["exact", "fused", "both"],
+                    default="exact",
+                    help="Eq. 3 pass mode for proto-sharing algos; "
+                         "'both' adds a '+fused' twin row per spec — "
+                         "the fused-vs-exact F1 curves artifact "
+                         "(reports/fig2_f1_proto_pass.json)")
     ap.add_argument("--ef", action="store_true",
                     help="add an error-feedback twin row (spec+ef, zero "
                          "extra wire bytes) for every sub-int16 spec — "
@@ -127,9 +146,12 @@ def main():
         for split in args.splits:
             key = f"{ds}/{split}"
             print(f"== {key} (topology={args.topology}) ==", flush=True)
+            passes = ("exact", "fused") if args.proto_pass == "both" \
+                else (args.proto_pass,)
             results[key] = run(ds, split, nodes=nodes, rounds=rounds,
                                epochs=epochs, n_samples=n, algos=args.algos,
-                               topology=args.topology, bits=args.bits)
+                               topology=args.topology, bits=args.bits,
+                               proto_pass=passes)
             for algo, r in results[key].items():
                 curve = " ".join(
                     f"{x:.3f}±{s:.3f}"

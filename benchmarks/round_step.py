@@ -11,6 +11,21 @@ perf trajectory is tracked in ``BENCH_round_step.json``.
 
     PYTHONPATH=src python benchmarks/round_step.py --nodes 2 4 8
 
+**Per-phase breakdown** (``--phases``): decomposes the jitted round into
+train / proto (Eq. 3, exact pass AND the fused in-scan marginal) /
+codec (wire round-trip) / mix (gossip+aggregate) phase timings, plus
+whole-round exact-vs-fused wall times — the numbers behind the
+``proto_pass="fused"`` single-pass round.  Each phase is jitted
+standalone (no donation) so constant inputs can be replayed; the fused
+proto cost is the marginal ``fused_train - train`` (clamped at 0)
+because the fused pass has no standalone program — it lives inside the
+training scan.  Written into ``BENCH_round_step.json`` under
+``nodes[n]["phases"]`` and gated by ``check_regression.py`` (fresh
+exact proto phase vs committed, and committed fused-cheaper-than-exact
+invariants):
+
+    PYTHONPATH=src python benchmarks/round_step.py --nodes 2 4 8 --phases
+
 **Wire-exchange microbench** (``--wire``): the packed single-buffer
 codec vs the per-leaf path (jitted round-trip ms), and the gather vs
 ppermute exchange on an (N, 1, 1) federation mesh (per-node HLO
@@ -212,6 +227,103 @@ def measure(n_nodes: int, *, samples_per_node: int, batch_size: int,
 
 
 # ---------------------------------------------------------------------------
+# per-phase breakdown (--phases)
+# ---------------------------------------------------------------------------
+
+def measure_phases(n_nodes: int, *, samples_per_node: int, batch_size: int,
+                   rounds: int):
+    """Phase timings of the jitted stacked round at one node count.
+
+    Every phase body comes from ``F._make_round_parts`` (the exact
+    traced code both engines run) but is jitted here WITHOUT donation,
+    so the same inputs replay across timed reps on any backend.
+    ``proto_fused_ms`` is the marginal cost of folding Eq. 3 into the
+    training scan: ``fused train_phase - plain train_phase``, clamped
+    at zero (the fused pass has no standalone program to time)."""
+    cfg, fed, train, node_data = _setup(n_nodes, samples_per_node,
+                                        batch_size)
+    adj = T.adjacency(n_nodes, fed.topology)
+    sizes = [len(d["label"]) for d in node_data]
+    step_p, bits, ncls, model_cfgs, states, student_cfg = _wiring(
+        cfg, fed, train, jit=False)
+    stacked = F._stack_states(states)
+    w_self, w_neigh = R.gossip_matrix(adj, sizes)
+    include = R.include_matrix(adj)
+    xb, valid = F._stack_round_batches(
+        node_data, batch_size, [fed.seed + 997 + i for i in range(n_nodes)],
+        fed.local_epochs)
+    pxb, pvalid = F._stack_round_batches(
+        node_data, batch_size, [fed.seed + 1] * n_nodes, 1)
+    av = bool(np.all(np.asarray(valid) == 1.0))
+    empty = ({}, jnp.zeros((0, n_nodes), jnp.float32))
+
+    def parts(proto_pass, share=True):
+        return F._make_round_parts(step_p, student_cfg, ncls,
+                                   share_protos=share,
+                                   wire_model="student", bits=bits,
+                                   proto_pass=proto_pass)
+
+    def compose(p3):
+        tr, sh, mx = p3
+
+        def round_fn(state, xb, valid, pxb, pvalid, teacher_on,
+                     all_valid=False):
+            state, protos, counts = tr(state, xb, valid, pxb, pvalid,
+                                       teacher_on, all_valid)
+            state, rs, prx = sh(state, protos)
+            return mx(state, rs, prx, counts, w_self, w_neigh, include)
+
+        return jax.jit(round_fn,
+                       static_argnames=("teacher_on", "all_valid"))
+
+    sj = jax.jit
+    stat = dict(static_argnames=("teacher_on", "all_valid"))
+    train_only = sj(parts("exact", share=False)[0], **stat)
+    exact3 = parts("exact")
+    train_fused = sj(parts("fused")[0], **stat)
+    share_jit = sj(exact3[1])
+    mix_jit = sj(exact3[2])
+    proto_jit = sj(F._make_proto_pass(student_cfg, ncls))
+
+    e0, e1 = empty
+    # the fused proto cost is a DIFFERENCE of two ~train-sized timings —
+    # interleave them (like the codec A/B) so drift cancels per pair
+    train_ms, fused_train_ms = _paired_ms(
+        lambda: train_only(stacked, xb, valid, e0, e1, teacher_on=True,
+                           all_valid=av),
+        lambda: train_fused(stacked, xb, valid, e0, e1, teacher_on=True,
+                            all_valid=av), rounds=max(rounds, 5))
+    proto_exact_ms = _median_ms(
+        lambda: proto_jit(stacked.student, pxb, pvalid), rounds=rounds)
+    sums, counts = proto_jit(stacked.student, pxb, pvalid)
+    protos = sums / jnp.maximum(counts, 1.0)[..., None]
+    codec_ms = _median_ms(lambda: share_jit(stacked, protos),
+                          rounds=rounds)
+    _st, recv_student, protos_rx = share_jit(stacked, protos)
+    mix_ms = _median_ms(
+        lambda: mix_jit(stacked, recv_student, protos_rx, counts, w_self,
+                        w_neigh, include), rounds=rounds)
+    round_exact = compose(parts("exact"))
+    round_fused = compose(parts("fused"))
+    round_exact_ms, round_fused_ms = _paired_ms(
+        lambda: round_exact(stacked, xb, valid, pxb, pvalid,
+                            teacher_on=True, all_valid=av),
+        lambda: round_fused(stacked, xb, valid, e0, e1, teacher_on=True,
+                            all_valid=av), rounds=max(rounds, 5))
+    return {
+        "train_ms": train_ms,
+        "proto_exact_ms": proto_exact_ms,
+        "proto_fused_ms": round(max(0.0, fused_train_ms - train_ms), 3),
+        "codec_ms": codec_ms,
+        "mix_ms": mix_ms,
+        "round_exact_ms": round_exact_ms,
+        "round_fused_ms": round_fused_ms,
+        "fused_round_speedup": round(round_exact_ms
+                                     / max(round_fused_ms, 1e-9), 3),
+    }
+
+
+# ---------------------------------------------------------------------------
 # wire-exchange microbench (--wire)
 # ---------------------------------------------------------------------------
 
@@ -397,6 +509,10 @@ def main():
     ap.add_argument("--batch-size", type=int, default=8)
     ap.add_argument("--rounds", type=int, default=5)
     ap.add_argument("--out", default="BENCH_round_step.json")
+    ap.add_argument("--phases", action="store_true",
+                    help="also record the per-phase breakdown "
+                         "(train/proto/codec/mix, exact vs fused round) "
+                         "under nodes[n]['phases']")
     ap.add_argument("--wire", action="store_true",
                     help="wire-exchange microbench instead of the round "
                          "step (writes BENCH_wire_exchange.json)")
@@ -436,6 +552,18 @@ def main():
         print(f"  legacy {r['legacy_ms']:8.1f} ms/round   "
               f"jitted {r['jitted_ms']:8.1f} ms/round   "
               f"speedup {r['speedup']:.2f}x")
+        if args.phases:
+            ph = measure_phases(n, samples_per_node=args.samples_per_node,
+                                batch_size=args.batch_size,
+                                rounds=args.rounds)
+            r["phases"] = ph
+            print(f"  phases: train {ph['train_ms']:7.1f}  "
+                  f"proto exact {ph['proto_exact_ms']:6.1f} / "
+                  f"fused +{ph['proto_fused_ms']:5.1f}  "
+                  f"codec {ph['codec_ms']:6.1f}  mix {ph['mix_ms']:6.1f} ms")
+            print(f"  round: exact {ph['round_exact_ms']:7.1f}  "
+                  f"fused {ph['round_fused_ms']:7.1f} ms  "
+                  f"({ph['fused_round_speedup']:.2f}x)")
 
     out = {
         "benchmark": "one full ProFe federation round (train + Eq.3 protos "

@@ -6,7 +6,11 @@
 #   2. the tier-1-adjacent perf/wire gate: re-measures the jitted round
 #      against BENCH_round_step.json and the wire exchange against
 #      BENCH_wire_exchange.json (codec ms within threshold, per-node
-#      collective bytes EXACT per wire spec)
+#      collective bytes EXACT per wire spec).  When the committed
+#      baseline carries per-phase rows (round_step.py --phases), the
+#      single-pass gate rides along: fused round beats exact at the
+#      largest N, fused Eq. 3 marginal <= 0.5x the exact pass, fresh
+#      exact proto phase within threshold.
 #
 #   scripts/verify.sh [extra pytest args...]
 set -euo pipefail

@@ -194,6 +194,15 @@ class FederationConfig:
     # Both route through _algo_wiring into the WireSpec.
     error_feedback: bool = False
     error_feedback_decay: float = 1.0
+    # Eq. 3 prototype pass: "exact" streams every node's local data a
+    # SECOND time after local training (the paper's post-training pass,
+    # bit-identical to the historical engines); "fused" accumulates the
+    # per-class sums/counts inside the training scan from the f1
+    # features the student loss already computes — one forward pass per
+    # node per round instead of two, at the cost of prototypes built
+    # from the evolving (pre-final) student (F1 delta recorded in
+    # reports/fig2_f1_proto_pass.json).
+    proto_pass: str = "exact"       # "exact" | "fused"
     # data split
     split: str = "iid"              # "iid"|"noniid60"|"noniid40"|"noniid20"|"dirichlet"
     dirichlet_alpha: float = 0.5

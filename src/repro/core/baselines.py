@@ -77,11 +77,13 @@ def make_fedproto_step(cfg: ModelConfig, fed: FederationConfig,
                 out.f1, state.global_protos, labels_p, state.proto_mask)
             return l + out.aux * getattr(cfg, "router_aux_weight", 0.0), out
 
-        (l, _), g = jax.value_and_grad(loss, has_aux=True)(state.student)
+        (l, out), g = jax.value_and_grad(loss, has_aux=True)(state.student)
         g, gn = clip_by_global_norm(g, grad_clip)
         params, opt_state = opt.update(g, state.opt_s, state.student)
+        # f1 from the loss forward: the fused Eq. 3 pass accumulates it
+        # in-scan (FedProto shares prototypes); exact mode DCEs it
         return state._replace(student=params, opt_s=opt_state), \
-            {"loss_s": l, "grad_norm_s": gn}
+            {"loss_s": l, "grad_norm_s": gn, "f1": out.f1}
 
     if not jit:
         return _step
@@ -153,11 +155,13 @@ def make_fedgpd_step(cfg: ModelConfig, fed: FederationConfig, opt: Optimizer,
             pce = jnp.where(any_proto, D.ce_loss(proto_logits, labels_p), 0.0)
             return l + 0.5 * pce + out.aux * getattr(cfg, "router_aux_weight", 0.0), out
 
-        (l, _), g = jax.value_and_grad(loss, has_aux=True)(state.student)
+        (l, out), g = jax.value_and_grad(loss, has_aux=True)(state.student)
         g, gn = clip_by_global_norm(g, grad_clip)
         params, opt_state = opt.update(g, state.opt_s, state.student)
+        # f1 rides out for the fused Eq. 3 pass (FedGPD shares
+        # prototypes); exact mode DCEs it
         return state._replace(student=params, opt_s=opt_state), \
-            {"loss_s": l, "grad_norm_s": gn}
+            {"loss_s": l, "grad_norm_s": gn, "f1": out.f1}
 
     if not jit:
         return _step

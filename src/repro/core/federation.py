@@ -17,8 +17,13 @@ executes an entire round —
 1. local training: ``jax.lax.scan`` over the pre-stacked batch/epoch
    axis with ``jax.vmap(step)`` over nodes (a per-node validity mask
    handles unequal local batch counts),
-2. Eq. 3 prototype accumulation: a scanned einsum over a second stacked
-   batch stream (no per-call re-jitting),
+2. Eq. 3 prototype accumulation through the ``kernels/proto_accum`` op
+   (one-hot einsum on CPU, the fused Pallas kernel on TPU): either a
+   scanned second pass over a dedicated batch stream
+   (``proto_pass="exact"``, the paper's post-training pass) or folded
+   into step 1's training scan (``proto_pass="fused"`` — the
+   single-pass round: each step's ``f1`` feeds the accumulators
+   directly, eliminating one full forward pass per node per round),
 3. gossip + aggregation: the shared stacked-node-state math in
    :mod:`repro.core.round_ops` (per-node quantize→exchange→weighted
    mean, per-neighborhood Eq. 4) — the same functions the TPU mesh path
@@ -41,7 +46,7 @@ axis = federation node) lives in ``repro/launch`` and
 """
 from __future__ import annotations
 
-import os
+import functools
 import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Tuple
@@ -59,14 +64,26 @@ from repro.core.comm import CommMeter, ScheduleCommAccountant
 from repro.core.distillation import teacher_active
 from repro.core.metrics import accuracy, macro_f1
 from repro.core.profe import (NodeState, compute_local_prototypes,
-                              init_node_state, make_profe_step, proto_labels)
+                              init_node_state, make_profe_step,
+                              normalize_protos, proto_labels)
 from repro.core.prototypes import aggregate_prototypes
 from repro.core.quantization import quantize_dequantize_tree
 from repro.data import batches
 from repro.data.loader import batch_index_lists
+from repro.kernels.proto_accum.ops import (proto_accumulate,
+                                           proto_accumulate_nodes)
 from repro.models import derive_student, forward, init_params
 from repro.optim import make_optimizer
 from repro.wirespec import WireSpec
+
+# The CPU-unroll-capped scan lives in ``core/scanning.py`` (shared with
+# the loop engine's one-program Eq. 3 pass in ``core/profe.py``); the
+# historical names stay importable from here (used by tests/benchmarks).
+from repro.core.scanning import _DEFAULT_CPU_UNROLL_CAP  # noqa: F401  isort:skip
+from repro.core.scanning import cpu_unroll_cap  # noqa: F401  isort:skip
+from repro.core.scanning import scan as _scan  # isort:skip
+
+PROTO_PASSES = ("exact", "fused")
 
 
 @dataclass
@@ -265,32 +282,53 @@ def _masked_select(v, new_tree, old_tree):
 # the jitted round program
 # ---------------------------------------------------------------------------
 
-# XLA:CPU executes while-loop bodies on the calling thread (no intra-op
-# parallelism), which makes a rolled scan ~5x slower than the same body
-# unrolled.  Short batch axes are fully unrolled on CPU; long ones and
-# accelerator backends keep the rolled scan (compile-time economy).  The
-# threshold is a config knob: set the ``REPRO_CPU_UNROLL_CAP`` env var
-# (0 forces rolled scans everywhere, large values trade compile time for
-# run time) or pass ``unroll_cap`` to ``_scan`` directly.  Both paths
-# compute identical results (asserted in ``tests/test_topology.py``).
-_DEFAULT_CPU_UNROLL_CAP = 32
+# Trace bookkeeping for the fused Eq. 3 scan body: incremented only
+# when jax (re)traces the fused training scan, so tests can assert the
+# fused round compiles a bounded number of times regardless of how many
+# rounds run (the fused pass must not reintroduce per-round retracing).
+FUSED_PROTO_TRACES: Dict[Tuple[str, int], int] = {}
 
 
-def cpu_unroll_cap() -> int:
-    """Batch-axis length at or below which CPU scans fully unroll."""
-    return int(os.environ.get("REPRO_CPU_UNROLL_CAP",
-                              _DEFAULT_CPU_UNROLL_CAP))
+def _make_proto_pass(proto_cfg: ModelConfig, ncls: int):
+    """The exact (post-training) Eq. 3 pass over a stacked ``[T, N, B,
+    ...]`` proto batch stream: scan over T, vmap the forward over nodes,
+    accumulate per-class sums/counts through the shared
+    ``proto_accumulate_nodes`` op (the historical one-hot einsum on CPU,
+    the Pallas kernel on TPU — no ``[N, B, C]`` one-hot intermediate).
 
+    Factored out of :func:`_make_round_parts` so
+    ``benchmarks/round_step.py --phases`` can jit and time this pass in
+    isolation (the "proto" phase of the exact round)."""
 
-def _scan(body, init, xs, length: int, *, unroll_cap: Optional[int] = None):
-    cap = cpu_unroll_cap() if unroll_cap is None else unroll_cap
-    full = length <= cap and jax.default_backend() == "cpu"
-    return jax.lax.scan(body, init, xs, unroll=length if full else 1)
+    def proto_pass(students, pxb, pvalid):
+        proto_dim = proto_cfg.proto_dim
+        n_nodes = pvalid.shape[1]
+        sums0 = jnp.zeros((n_nodes, ncls, proto_dim), jnp.float32)
+        counts0 = jnp.zeros((n_nodes, ncls), jnp.float32)
+
+        def pbody(carry, inp):
+            sums, counts = carry
+            batch, v = inp
+            out = jax.vmap(
+                lambda p, b: forward(proto_cfg, p, b, remat=False))(
+                    students, batch)
+            labels = proto_labels(proto_cfg, batch)        # [N, B]
+            s_add, c_add = proto_accumulate_nodes(out.f1, labels, ncls)
+            sums = sums + s_add * v[:, None, None]
+            counts = counts + c_add * v[:, None]
+            return (sums, counts), ()
+
+        (sums, counts), _ = _scan(pbody, (sums0, counts0), (pxb, pvalid),
+                                  pvalid.shape[0])
+        return sums, counts
+
+    return proto_pass
 
 
 def _make_round_parts(step: Callable, proto_cfg: ModelConfig, ncls: int, *,
                       share_protos: bool, wire_model: Optional[str],
-                      bits: Optional[int] | WireSpec):
+                      bits: Optional[int] | WireSpec,
+                      proto_pass: str = "exact"):
     """The three phases of one stacked round, as plain traceable
     functions:
 
@@ -304,19 +342,66 @@ def _make_round_parts(step: Callable, proto_cfg: ModelConfig, ncls: int, *,
     * ``mix_phase`` — gossip weights on the received views + Eq. 4
       aggregation → ``state``.
 
+    ``proto_pass`` selects how Eq. 3 runs inside ``train_phase``:
+    ``"exact"`` streams the dedicated proto batches a second time after
+    training (the paper's post-training pass, bit-identical to the
+    historical engines); ``"fused"`` accumulates sums/counts inside the
+    training scan from the ``f1`` the step's loss already computed —
+    one forward per batch instead of two, prototypes built from the
+    evolving student.  Fused mode ignores ``pxb``/``pvalid`` (drivers
+    pass an empty placeholder and skip staging the proto stream).
+
     The sequential engine jits their composition as ONE program
     (:func:`_make_round_fn`); the pipelined engine
     (``run_federation(overlap=...)``) jits each phase separately so the
     driver can re-order dispatch.  Phases unused by an algorithm pass
     ``()`` placeholders (no pytree leaves), so both drivers share one
     code path for every algorithm."""
+    if proto_pass not in PROTO_PASSES:
+        raise ValueError(f"proto_pass must be one of {PROTO_PASSES}, "
+                         f"got {proto_pass!r}")
     spec = WireSpec.from_bits(bits) if bits else None
+    fused = share_protos and proto_pass == "fused"
+    exact_pass = _make_proto_pass(proto_cfg, ncls) \
+        if share_protos and not fused else None
+    trace_key = (proto_cfg.name, ncls)
 
     def train_phase(state: NodeState, xb, valid, pxb, pvalid,
                     teacher_on: bool, all_valid: bool = False):
         # 1) local training: scan over the batch axis, vmap over nodes.
         # ``all_valid`` (static) skips the per-step mask merge when every
         # node runs the same number of batches (the common, iid case).
+        if fused:
+            # single-pass round: the carry grows (sums, counts) and the
+            # body feeds the step's own f1 straight into Eq. 3 —
+            # padded/invalid steps are masked out of the accumulators
+            # exactly like they are masked out of the state
+            proto_dim = proto_cfg.proto_dim
+            n_nodes = valid.shape[1]
+            sums0 = jnp.zeros((n_nodes, ncls, proto_dim), jnp.float32)
+            counts0 = jnp.zeros((n_nodes, ncls), jnp.float32)
+
+            def fbody(carry, inp):
+                FUSED_PROTO_TRACES[trace_key] = \
+                    FUSED_PROTO_TRACES.get(trace_key, 0) + 1
+                st, sums, counts = carry
+                batch, v = inp
+                new, m = jax.vmap(
+                    lambda s, b: step(s, b, teacher_on))(st, batch)
+                labels = proto_labels(proto_cfg, batch)    # [N, B]
+                s_add, c_add = proto_accumulate_nodes(m["f1"], labels,
+                                                      ncls)
+                sums = sums + s_add * v[:, None, None]
+                counts = counts + c_add * v[:, None]
+                st = new if all_valid else _masked_select(v, new, st)
+                return (st, sums, counts), ()
+
+            (state, sums, counts), _ = _scan(
+                fbody, (state, sums0, counts0), (xb, valid),
+                valid.shape[0])
+            state = state._replace(round_idx=state.round_idx + 1)
+            return state, normalize_protos(sums, counts), counts
+
         def body(carry, inp):
             batch, v = inp
             new, _ = jax.vmap(lambda s, b: step(s, b, teacher_on))(carry,
@@ -328,31 +413,10 @@ def _make_round_parts(step: Callable, proto_cfg: ModelConfig, ncls: int, *,
         if not share_protos:
             return state, (), ()
 
-        # 2) Eq. 3 prototype accumulation: scanned einsum, no
-        #    per-call re-jitting (post-training student forward)
-        proto_dim = proto_cfg.proto_dim
-        n_nodes = valid.shape[1]
-        sums0 = jnp.zeros((n_nodes, ncls, proto_dim), jnp.float32)
-        counts0 = jnp.zeros((n_nodes, ncls), jnp.float32)
-
-        def pbody(carry, inp):
-            sums, counts = carry
-            batch, v = inp
-            out = jax.vmap(
-                lambda p, b: forward(proto_cfg, p, b, remat=False))(
-                    state.student, batch)
-            labels = proto_labels(proto_cfg, batch)        # [N, B]
-            onehot = jax.nn.one_hot(labels, ncls, dtype=jnp.float32)
-            f1 = out.f1.astype(jnp.float32)                # [N, B, P]
-            sums = sums + jnp.einsum("nbc,nbp->ncp", onehot,
-                                     f1) * v[:, None, None]
-            counts = counts + jnp.sum(onehot, axis=1) * v[:, None]
-            return (sums, counts), ()
-
-        (sums, counts), _ = _scan(pbody, (sums0, counts0), (pxb, pvalid),
-                                  pvalid.shape[0])
-        protos = sums / jnp.maximum(counts, 1.0)[..., None]
-        return state, protos, counts
+        # 2) Eq. 3 prototype accumulation: the factored exact pass
+        #    (post-training student forward over the proto stream)
+        sums, counts = exact_pass(state.student, pxb, pvalid)
+        return state, normalize_protos(sums, counts), counts
 
     def share_phase(state: NodeState, protos):
         # 3a) the wire: receiver-side reconstruction.  A node's own
@@ -405,9 +469,11 @@ def _make_round_parts(step: Callable, proto_cfg: ModelConfig, ncls: int, *,
 
 def _make_round_fn(step: Callable, proto_cfg: ModelConfig, ncls: int, *,
                    share_protos: bool, wire_model: Optional[str],
-                   bits: Optional[int] | WireSpec):
+                   bits: Optional[int] | WireSpec,
+                   proto_pass: str = "exact"):
     """One full federation round as a single compiled program over
-    stacked node state: scan(vmap(step)) → scanned Eq. 3 einsum →
+    stacked node state: scan(vmap(step)) → Eq. 3 proto pass (exact
+    second stream, or fused into the training scan — ``proto_pass``) →
     round_ops gossip/aggregate.  ``teacher_on`` is a static arg (two
     program variants, exactly like the per-node step).
 
@@ -417,7 +483,7 @@ def _make_round_fn(step: Callable, proto_cfg: ModelConfig, ncls: int, *,
     a round-varying topology never rebuilds or retraces the program."""
     train_phase, share_phase, mix_phase = _make_round_parts(
         step, proto_cfg, ncls, share_protos=share_protos,
-        wire_model=wire_model, bits=bits)
+        wire_model=wire_model, bits=bits, proto_pass=proto_pass)
 
     def round_fn(state: NodeState, xb, valid, pxb, pvalid,
                  w_self, w_neigh, include,
@@ -435,14 +501,15 @@ def _make_round_fn(step: Callable, proto_cfg: ModelConfig, ncls: int, *,
 
 def _make_phase_fns(step: Callable, proto_cfg: ModelConfig, ncls: int, *,
                     share_protos: bool, wire_model: Optional[str],
-                    bits: Optional[int] | WireSpec):
+                    bits: Optional[int] | WireSpec,
+                    proto_pass: str = "exact"):
     """The pipelined engine's three jitted programs — the same traced
     phase bodies as the sequential :func:`_make_round_fn`, so splitting
     the round changes jit boundaries (and therefore dispatch order),
     never the math."""
     train_phase, share_phase, mix_phase = _make_round_parts(
         step, proto_cfg, ncls, share_protos=share_protos,
-        wire_model=wire_model, bits=bits)
+        wire_model=wire_model, bits=bits, proto_pass=proto_pass)
     donate = (0,) if jax.default_backend() != "cpu" else ()
     return (jax.jit(train_phase,
                     static_argnames=("teacher_on", "all_valid"),
@@ -455,23 +522,96 @@ def _make_phase_fns(step: Callable, proto_cfg: ModelConfig, ncls: int, *,
 # driver (stacked engine)
 # ---------------------------------------------------------------------------
 
+@functools.lru_cache(maxsize=None)
+def _batched_eval_fn(cfg: ModelConfig):
+    """One jitted program evaluating EVERY node's student on one test
+    batch: vmap(forward) over the stacked ``[N, ...]`` params, argmax
+    inside the program so only ``[N, B]`` predictions leave the device.
+    Cached by config — traced once per run, not once per node×round."""
+
+    def run(students, batch):
+        out = jax.vmap(lambda p: forward(cfg, p, batch, remat=False))(
+            students)
+        return jnp.argmax(out.logits, -1)
+
+    return jax.jit(run)
+
+
+def _eval_params_batched(cfg: ModelConfig, stacked_students, test_data,
+                         batch_size: int = 256):
+    """All-node global-test metrics from stacked params: one vmapped
+    forward per test batch instead of ``n_nodes`` separate dispatches
+    (the stacked engine's fast path for ``eval_all_nodes``)."""
+    fn = _batched_eval_fn(cfg)
+    tkey = "label" if cfg.family in ("cnn", "resnet") else "labels"
+    preds, trues = [], []
+    n = len(next(iter(test_data.values())))
+    for i in range(0, n, batch_size):
+        batch = {k: jnp.asarray(v[i:i + batch_size])
+                 for k, v in test_data.items()}
+        p = np.asarray(fn(stacked_students, batch))    # [N, B] / [N, B, T]
+        preds.append(p.reshape(p.shape[0], -1))
+        trues.append(np.asarray(batch[tkey]).reshape(-1))
+    y_pred = np.concatenate(preds, axis=1)             # [N, total]
+    y_true = np.concatenate(trues)
+    ncls = _n_proto_classes(cfg) if cfg.family in ("cnn", "resnet") \
+        else int(min(cfg.vocab_size, 4096))
+    return [(macro_f1(y_true, y_pred[i], ncls), accuracy(y_true, y_pred[i]))
+            for i in range(y_pred.shape[0])]
+
+
 def _eval_nodes(eval_cfg, students_of, n_nodes: int, test_data,
-                eval_all_nodes: bool, extras: Dict[str, Any]):
+                eval_all_nodes: bool, extras: Dict[str, Any],
+                *, stacked_students=None):
     """Per-round evaluation.  Default: node 0 (cheap; exact on full
     graphs where every node ends identical).  ``eval_all_nodes``
     evaluates every node and returns the mean — the per-node curves and
     spread land in extras, so sparse-topology divergence is visible
-    (Fig. 2 as mean±spread over nodes)."""
+    (Fig. 2 as mean±spread over nodes).  When the caller holds stacked
+    ``[N, ...]`` students it passes them as ``stacked_students`` and the
+    per-node loop collapses into one vmapped program per test batch
+    (same metrics, asserted equivalent in tests)."""
     if not eval_all_nodes:
         return _eval_params(eval_cfg, students_of(0), test_data)
-    per_node = [_eval_params(eval_cfg, students_of(i), test_data)
-                for i in range(n_nodes)]
+    if stacked_students is not None:
+        per_node = _eval_params_batched(eval_cfg, stacked_students,
+                                        test_data)
+    else:
+        per_node = [_eval_params(eval_cfg, students_of(i), test_data)
+                    for i in range(n_nodes)]
     f1s = [p[0] for p in per_node]
     accs = [p[1] for p in per_node]
     extras.setdefault("f1_per_round_nodes", []).append(f1s)
     extras.setdefault("acc_per_round_nodes", []).append(accs)
     extras.setdefault("f1_std_per_round", []).append(float(np.std(f1s)))
     return float(np.mean(f1s)), float(np.mean(accs))
+
+
+def _apply_self_floor(w_self_st, w_neigh_st, floor: float):
+    """Floor every node's self-weight in the lowered gossip stacks.
+
+    Stale-by-one mixing (``overlap="rounds"``) on dense graphs can
+    collapse: size-proportional gossip weights give a node's own model
+    only ``1/N`` mass, so mixing N-1 stale neighbor payloads every
+    round drags all nodes toward last round's average and training
+    never progresses (N=20 full graph: F1 falls to chance, recorded in
+    ``reports/table3_time.json``).  Raising the self-weight to
+    ``max(w_self, floor)`` and rescaling neighbor weights by
+    ``(1 - new_self) / sum(w_neigh)`` keeps rows summing to 1 while
+    bounding the stale mass per round.  Isolated nodes (no neighbors)
+    already hold self-weight 1 and pass through unchanged."""
+    if not 0.0 < floor < 1.0:
+        raise ValueError(f"stale_self_floor must be in (0, 1), "
+                         f"got {floor!r}")
+    w_self = np.asarray(w_self_st, np.float32)          # [R, N]
+    w_neigh = np.asarray(w_neigh_st, np.float32)        # [R, N, N]
+    neigh_sum = w_neigh.sum(axis=-1)
+    has_neigh = neigh_sum > 0
+    new_self = np.where(has_neigh, np.maximum(w_self, floor), w_self)
+    scale = np.where(has_neigh, (1.0 - new_self)
+                     / np.maximum(neigh_sum, 1e-12), 0.0)
+    return (jnp.asarray(new_self),
+            jnp.asarray(w_neigh * scale[..., None]))
 
 
 OVERLAPS = (None, "none", "rounds")
@@ -482,13 +622,26 @@ def run_federation(teacher_cfg: ModelConfig, fed: FederationConfig,
                    test_data: Dict[str, np.ndarray],
                    *, verbose: bool = False,
                    eval_all_nodes: bool = False,
-                   overlap: Optional[str] = None) -> FederationResult:
+                   overlap: Optional[str] = None,
+                   stale_self_floor: Optional[float] = None
+                   ) -> FederationResult:
     """Run one algorithm end-to-end; fed.algorithm selects it.
 
     Uses the vectorized stacked-node-state round engine; falls back to
     :func:`run_federation_loop` when node datasets are too ragged to
     stack (some node smaller than one batch; ``overlap`` is ignored
     there — the reference loop is always sequential).
+
+    ``fed.proto_pass`` selects the Eq. 3 pass: ``"exact"`` (default,
+    post-training second stream, bit-identical to the historical
+    engines) or ``"fused"`` (in-scan accumulation, one forward per
+    batch — the single-pass round; no proto batch stream is staged).
+
+    ``stale_self_floor`` (only with ``overlap="rounds"``) floors every
+    node's gossip self-weight via :func:`_apply_self_floor` — the knob
+    that recovers stale-by-one mixing on dense graphs, where the 1/N
+    self-weight otherwise lets N-1 stale payloads swamp each round's
+    training (full-graph N=20 collapse in reports/table3_time.json).
 
     ``overlap`` selects the round pipeline:
 
@@ -514,6 +667,13 @@ def run_federation(teacher_cfg: ModelConfig, fed: FederationConfig,
     if overlap not in OVERLAPS:
         raise ValueError(f"overlap must be one of {OVERLAPS}, "
                          f"got {overlap!r}")
+    if fed.proto_pass not in PROTO_PASSES:
+        raise ValueError(f"proto_pass must be one of {PROTO_PASSES}, "
+                         f"got {fed.proto_pass!r}")
+    if stale_self_floor is not None and overlap != "rounds":
+        raise ValueError("stale_self_floor only applies to the "
+                         "stale-by-one pipeline (overlap='rounds'), "
+                         f"got overlap={overlap!r}")
     algo = fed.algorithm
     student_cfg = derive_student(teacher_cfg)
     n_nodes = fed.num_nodes
@@ -561,13 +721,23 @@ def run_federation(teacher_cfg: ModelConfig, fed: FederationConfig,
     # the lowered schedule: [R, N]/[R, N, N] stacks indexed per round and
     # fed to the jitted round as traced operands (R == 1 for static)
     w_self_st, w_neigh_st, include_st = sched.lower(sizes)
+    if stale_self_floor is not None:
+        w_self_st, w_neigh_st = _apply_self_floor(w_self_st, w_neigh_st,
+                                                  stale_self_floor)
+    # fused mode never streams the proto batches — the training scan
+    # accumulates Eq. 3 itself, so the drivers skip staging them
+    stream_protos = share_protos and fed.proto_pass != "fused"
     round_fn = _make_round_fn(step, proto_cfg, ncls,
                               share_protos=share_protos,
-                              wire_model=wire_model, bits=bits)
+                              wire_model=wire_model, bits=bits,
+                              proto_pass=fed.proto_pass)
     payload = _payload_template(wire_model, share_protos, stacked, ncls,
                                 proto_cfg.proto_dim)
 
     result = FederationResult(comm=meter, algorithm=algo)
+    result.extras["proto_pass"] = fed.proto_pass
+    if stale_self_floor is not None:
+        result.extras["stale_self_floor"] = stale_self_floor
     # one consistent wire number: the logical (Table II) bytes per copy
     # next to the physical packed-codec bytes the mesh exchange moves
     from repro.core.comm import packed_copy_bytes
@@ -590,11 +760,11 @@ def run_federation(teacher_cfg: ModelConfig, fed: FederationConfig,
     if overlap is not None:
         train_jit, share_jit, mix_jit = _make_phase_fns(
             step, proto_cfg, ncls, share_protos=share_protos,
-            wire_model=wire_model, bits=bits)
+            wire_model=wire_model, bits=bits, proto_pass=fed.proto_pass)
         staged_next = probe
         proto_next = _stack_round_batches(
             node_data, train.batch_size, [fed.seed] * n_nodes, 1) \
-            if share_protos else empty
+            if stream_protos else empty
         recv_prev = None
         for rnd in range(fed.rounds):
             t_r = time.time()
@@ -637,13 +807,14 @@ def run_federation(teacher_cfg: ModelConfig, fed: FederationConfig,
                 proto_next = _stack_round_batches(
                     node_data, train.batch_size,
                     [fed.seed + rnd + 1] * n_nodes, 1) \
-                    if share_protos else empty
+                    if stream_protos else empty
             meter.record_round(payload, kind=algo, round_idx=rnd,
                                bits=bits)
             f1, acc = _eval_nodes(eval_cfg,
                                   lambda i: _node_slice(stacked.student, i),
                                   n_nodes, test_data, eval_all_nodes,
-                                  result.extras)
+                                  result.extras,
+                                  stacked_students=stacked.student)
             result.f1_per_round.append(f1)
             result.acc_per_round.append(acc)
             round_times.append(time.time() - t_r)
@@ -666,7 +837,7 @@ def run_federation(teacher_cfg: ModelConfig, fed: FederationConfig,
             fed.local_epochs)
         proto_staged = _stack_round_batches(
             node_data, train.batch_size, [fed.seed + rnd] * n_nodes, 1) \
-            if share_protos else empty
+            if stream_protos else empty
         xb, valid = staged
         pxb, pvalid = proto_staged
 
@@ -684,7 +855,8 @@ def run_federation(teacher_cfg: ModelConfig, fed: FederationConfig,
         f1, acc = _eval_nodes(eval_cfg,
                               lambda i: _node_slice(stacked.student, i),
                               n_nodes, test_data, eval_all_nodes,
-                              result.extras)
+                              result.extras,
+                              stacked_students=stacked.student)
         result.f1_per_round.append(f1)
         result.acc_per_round.append(acc)
         round_times.append(time.time() - t_r)
@@ -719,8 +891,18 @@ def run_federation_loop(teacher_cfg: ModelConfig, fed: FederationConfig,
     (per-round adjacency for time-varying specs) but keeps the per-edge
     ``CommMeter`` loop — the reference the vectorized accounting is
     asserted byte-identical to.
+
+    ``fed.proto_pass="fused"`` is honored here too (the reference
+    semantics of the stacked fused round): Eq. 3 sums/counts accumulate
+    from each training step's ``f1`` metric instead of the
+    post-training :func:`~repro.core.profe.compute_local_prototypes`
+    stream.
     """
     algo = fed.algorithm
+    if fed.proto_pass not in PROTO_PASSES:
+        raise ValueError(f"proto_pass must be one of {PROTO_PASSES}, "
+                         f"got {fed.proto_pass!r}")
+    fused = fed.proto_pass == "fused"
     student_cfg = derive_student(teacher_cfg)
     n_nodes = fed.num_nodes
     assert len(node_data) == n_nodes
@@ -763,6 +945,7 @@ def run_federation_loop(teacher_cfg: ModelConfig, fed: FederationConfig,
         ef_qdq = jax.jit(
             lambda t, s: ef_quantize_dequantize_tree(t, bits, s))
     result = FederationResult(comm=meter, algorithm=algo)
+    result.extras["proto_pass"] = fed.proto_pass
     # same wire-byte extras as the stacked engine, so a run that fell
     # back to the reference loop still fills the one-row fig2 artifact
     from repro.core.comm import packed_copy_bytes
@@ -785,18 +968,32 @@ def run_federation_loop(teacher_cfg: ModelConfig, fed: FederationConfig,
         adj = sched.adjacency_at(rnd)
         t_on = teacher_active(fed.alpha_s, fed.alpha_limit, rnd) \
             if algo == "profe" else needs_teacher
-        # 1) local training
+        # 1) local training (fused mode also streams each step's f1
+        #    metric into the Eq. 3 accumulators — the single-pass round)
+        protos, counts = [], []
         for i in range(n_nodes):
             st = states[i]
+            if fused and share_protos:
+                sums_i = jnp.zeros((ncls, proto_cfg.proto_dim),
+                                   jnp.float32)
+                counts_i = jnp.zeros((ncls,), jnp.float32)
             for batch in batches(node_data[i], train.batch_size,
                                  seed=fed.seed + rnd * 997 + i,
                                  epochs=fed.local_epochs):
                 st, m = step(st, batch, teacher_on=t_on)
+                if fused and share_protos:
+                    s_add, c_add = proto_accumulate(
+                        m["f1"], proto_labels(proto_cfg, batch), ncls)
+                    sums_i = sums_i + s_add
+                    counts_i = counts_i + c_add
             states[i] = st._replace(round_idx=jnp.int32(rnd + 1))
+            if fused and share_protos:
+                protos.append(normalize_protos(sums_i, counts_i))
+                counts.append(counts_i)
 
-        # 2) payload construction (+ local prototypes where the algo uses them)
-        protos, counts = [], []
-        if share_protos:
+        # 2) payload construction (+ local prototypes where the algo
+        #    uses them; fused mode already accumulated them in-pass)
+        if share_protos and not fused:
             for i in range(n_nodes):
                 pr, ct = compute_local_prototypes(
                     proto_cfg, states[i].student,

@@ -93,6 +93,7 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import topology as T
+from repro.core.profe import normalize_protos
 from repro.core.prototypes import aggregate_prototypes
 from repro.core.round_ops import (dequantize_leaf, gossip_matrix_dyn,
                                   include_matrix, mix_node_trees,
@@ -222,13 +223,27 @@ def _step_weight(src, me, w_row):
 # ProFe round
 # ---------------------------------------------------------------------------
 
+PROTO_PASSES = ("exact", "fused")
+
+
 def make_profe_round(mesh, student_specs, bits: int = 16,
                      adjacency: Optional[np.ndarray] = None,
                      exchange: str = "auto",
                      spec: Optional[WireSpec] = None,
-                     overlap: bool = False):
+                     overlap: bool = False,
+                     proto_pass: str = "exact"):
     """Returns round_fn(students, protos, counts, sizes) for stacked
     node state; students leaves [N, ...] sharded P("pod", *student_spec).
+
+    ``proto_pass="fused"`` adapts the round to the single-pass training
+    engine: the caller hands the RAW Eq. 3 accumulators its training
+    scan produced — ``round_fn(students, sums, counts, sizes, ...)``
+    with ``sums [N, C, P]`` un-normalized — and the round normalizes
+    (``sums / max(counts, 1)``, the shared
+    :func:`repro.core.profe.normalize_protos`) before the exchange.
+    Everything downstream (codec, exchange mode, EF arity) is identical
+    to ``"exact"``, so a fused round given ``(sums, counts)`` equals an
+    exact round given the normalized prototypes (asserted in tests).
 
     ``adjacency=None`` (the paper's fully-connected protocol): output is
     aggregated students (every node identical), global prototypes
@@ -266,19 +281,32 @@ def make_profe_round(mesh, student_specs, bits: int = 16,
     Overlap changes only issue order, never which payload reaches which
     mix weight, and moves byte-identical collectives.
     """
+    if proto_pass not in PROTO_PASSES:
+        raise ValueError(f"proto_pass must be one of {PROTO_PASSES}, "
+                         f"got {proto_pass!r}")
     wire = spec if spec is not None else WireSpec.from_bits(bits)
     adj = None if adjacency is None else np.asarray(adjacency)
     mode = _resolve_exchange(exchange, adj, mesh)
     if mode == "gather":
-        return _make_profe_round_gather(mesh, student_specs, wire, adj)
-    if mode == "ppermute":
+        fn = _make_profe_round_gather(mesh, student_specs, wire, adj)
+    elif mode == "ppermute":
         if _inner_size(mesh) == 1:
-            return _make_profe_round_ppermute(mesh, student_specs, wire,
-                                              adj, overlap=overlap)
-        return _make_profe_round_ppermute_sharded(
-            mesh, student_specs, wire, adj,
-            strict=(exchange == "ppermute"), overlap=overlap)
-    return _make_profe_round_packed(mesh, student_specs, wire, adj)
+            fn = _make_profe_round_ppermute(mesh, student_specs, wire,
+                                            adj, overlap=overlap)
+        else:
+            fn = _make_profe_round_ppermute_sharded(
+                mesh, student_specs, wire, adj,
+                strict=(exchange == "ppermute"), overlap=overlap)
+    else:
+        fn = _make_profe_round_packed(mesh, student_specs, wire, adj)
+    if proto_pass == "exact":
+        return fn
+    # fused: normalize the raw training-scan accumulators on the way in
+    # (*rest carries the EF CodecState when the spec is stateful)
+
+    def fused_round(students, sums, counts, *rest):
+        return fn(students, normalize_protos(sums, counts), counts, *rest)
+    return fused_round
 
 
 def _quantize_with_state(mesh, wire: WireSpec, buf, seg_ids, meta,

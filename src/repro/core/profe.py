@@ -19,10 +19,13 @@ from typing import Any, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.config.base import FederationConfig, ModelConfig, TrainConfig
 from repro.core import distillation as D
 from repro.core import prototypes as P
+from repro.core.scanning import scan
+from repro.kernels.proto_accum.ops import proto_accumulate
 from repro.models import forward
 from repro.optim import Optimizer, clip_by_global_norm
 
@@ -130,7 +133,11 @@ def make_profe_step(teacher_cfg: ModelConfig, student_cfg: ModelConfig,
         (ls, out_s), gs = jax.value_and_grad(s_loss, has_aux=True)(state.student)
         gs, gnorm = clip_by_global_norm(gs, grad_clip)
         student, opt_s_state = opt_s.update(gs, state.opt_s, state.student)
-        metrics.update(loss_s=ls, grad_norm_s=gnorm, alpha=alpha)
+        # the f1 the loss already computed rides out in metrics so the
+        # fused Eq. 3 pass (proto_pass="fused") can accumulate it
+        # without a second forward; exact mode never reads it (DCE'd)
+        metrics.update(loss_s=ls, grad_norm_s=gnorm, alpha=alpha,
+                       f1=out_s.f1)
 
         new_state = state._replace(student=student, teacher=teacher,
                                    opt_s=opt_s_state, opt_t=opt_t_state)
@@ -163,6 +170,13 @@ def init_node_state(teacher_cfg: ModelConfig, student_cfg: ModelConfig,
 # round-boundary: local prototypes (Eq. 3)
 # ---------------------------------------------------------------------------
 
+def normalize_protos(sums, counts):
+    """Eq. 3 class means from raw accumulators: ``sums / max(counts, 1)``
+    — the one normalization every proto path (exact, fused, mesh)
+    shares, so streamed and post-hoc prototypes divide identically."""
+    return sums / jnp.maximum(counts, 1.0)[..., None]
+
+
 # Trace bookkeeping for the cached accumulator: the body of ``acc`` runs
 # only when jax (re)traces it, so the counter measures exactly the
 # retrace behavior the cache is meant to eliminate (asserted in tests).
@@ -178,6 +192,8 @@ def _proto_acc_step(cfg: ModelConfig, n_classes: int):
     function object per call, so jax re-traced it every round × node.
     Hoisting it here (params as an argument) makes the trace happen once
     per (cfg, n_classes, batch shape) for the whole federation run.
+    Kept as the ragged fallback of :func:`compute_local_prototypes`
+    (uneven batch shapes cannot stack for the scanned pass).
     """
     key = (cfg.name, n_classes)
 
@@ -185,21 +201,68 @@ def _proto_acc_step(cfg: ModelConfig, n_classes: int):
         PROTO_ACC_TRACES[key] = PROTO_ACC_TRACES.get(key, 0) + 1
         out = forward(cfg, params, batch, remat=False)
         labels_p = proto_labels(cfg, batch)
-        onehot = jax.nn.one_hot(labels_p, n_classes, dtype=jnp.float32)
-        sums = sums + jnp.einsum("nc,np->cp", onehot, out.f1)
-        counts = counts + jnp.sum(onehot, axis=0)
-        return sums, counts
+        s_add, c_add = proto_accumulate(out.f1, labels_p, n_classes)
+        return sums + s_add, counts + c_add
 
     return jax.jit(acc)
 
 
+@functools.lru_cache(maxsize=None)
+def _proto_scan_fn(cfg: ModelConfig, n_classes: int):
+    """The whole Eq. 3 pass as ONE jitted program, cached by (config,
+    classes): a ``scan`` (CPU-unroll-capped, same policy as the round
+    engines) over pre-stacked ``[T, B, ...]`` batches.  The host-loop
+    seed dispatched one ``acc`` per batch with a device round-trip per
+    call — this runs the loop engine's exact pass dispatch-free.  The
+    per-batch body is the same ``proto_accumulate`` op the per-batch
+    path runs (bit-identical accumulation), and it increments the same
+    ``PROTO_ACC_TRACES`` counter: the scan body traces once per
+    (config, classes, batch shape), never per round x node."""
+    key = (cfg.name, n_classes)
+
+    def run(params, stacked):
+        sums0 = jnp.zeros((n_classes, cfg.proto_dim), jnp.float32)
+        counts0 = jnp.zeros((n_classes,), jnp.float32)
+
+        def body(carry, batch):
+            PROTO_ACC_TRACES[key] = PROTO_ACC_TRACES.get(key, 0) + 1
+            sums, counts = carry
+            out = forward(cfg, params, batch, remat=False)
+            labels_p = proto_labels(cfg, batch)
+            s_add, c_add = proto_accumulate(out.f1, labels_p, n_classes)
+            return (sums + s_add, counts + c_add), ()
+
+        length = len(next(iter(stacked.values())))
+        (sums, counts), _ = scan(body, (sums0, counts0), stacked, length)
+        return sums, counts
+
+    return jax.jit(run)
+
+
 def compute_local_prototypes(cfg: ModelConfig, params, batches,
                              n_classes: int):
-    """Stream local data once, accumulate Eq. 3 sums/counts."""
-    sums = jnp.zeros((n_classes, cfg.proto_dim), jnp.float32)
-    counts = jnp.zeros((n_classes,), jnp.float32)
-    acc = _proto_acc_step(cfg, n_classes)
-    for batch in batches:
-        sums, counts = acc(params, sums, counts, batch)
-    protos = sums / jnp.maximum(counts, 1.0)[:, None]
-    return protos, counts
+    """Stream local data once, accumulate Eq. 3 sums/counts.
+
+    Uniform-shape batch streams (the common drop-remainder case) stack
+    into one ``[T, B, ...]`` program: a single jitted scan instead of a
+    host loop with a dispatch + device round-trip per batch.  Ragged
+    streams keep the cached per-batch accumulator."""
+    batch_list = [dict(b) for b in batches]
+    if not batch_list:
+        counts = jnp.zeros((n_classes,), jnp.float32)
+        return normalize_protos(jnp.zeros((n_classes, cfg.proto_dim),
+                                          jnp.float32), counts), counts
+    shapes = {tuple(sorted((k, np.shape(v)) for k, v in b.items()))
+              for b in batch_list}
+    if len(shapes) == 1:
+        stacked = {k: jnp.asarray(np.stack([np.asarray(b[k])
+                                            for b in batch_list]))
+                   for k in batch_list[0]}
+        sums, counts = _proto_scan_fn(cfg, n_classes)(params, stacked)
+    else:
+        sums = jnp.zeros((n_classes, cfg.proto_dim), jnp.float32)
+        counts = jnp.zeros((n_classes,), jnp.float32)
+        acc = _proto_acc_step(cfg, n_classes)
+        for batch in batch_list:
+            sums, counts = acc(params, sums, counts, batch)
+    return normalize_protos(sums, counts), counts

@@ -1,0 +1,37 @@
+"""Shared scan helper: CPU-unroll-capped ``jax.lax.scan``.
+
+XLA:CPU executes while-loop bodies on the calling thread (no intra-op
+parallelism), which makes a rolled scan ~5x slower than the same body
+unrolled.  Short batch axes are fully unrolled on CPU; long ones and
+accelerator backends keep the rolled scan (compile-time economy).  The
+threshold is a config knob: set the ``REPRO_CPU_UNROLL_CAP`` env var
+(0 forces rolled scans everywhere, large values trade compile time for
+run time) or pass ``unroll_cap`` to ``scan`` directly.  Both paths
+compute identical results (asserted in ``tests/test_topology.py``).
+
+Lives in its own module so both the round engines
+(``core/federation.py``) and the Eq. 3 prototype pass
+(``core/profe.py``) can share one unroll policy without a circular
+import; ``federation`` re-exports the historical ``_scan`` /
+``cpu_unroll_cap`` names.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+
+_DEFAULT_CPU_UNROLL_CAP = 32
+
+
+def cpu_unroll_cap() -> int:
+    """Batch-axis length at or below which CPU scans fully unroll."""
+    return int(os.environ.get("REPRO_CPU_UNROLL_CAP",
+                              _DEFAULT_CPU_UNROLL_CAP))
+
+
+def scan(body, init, xs, length: int, *, unroll_cap: Optional[int] = None):
+    cap = cpu_unroll_cap() if unroll_cap is None else unroll_cap
+    full = length <= cap and jax.default_backend() == "cpu"
+    return jax.lax.scan(body, init, xs, unroll=length if full else 1)

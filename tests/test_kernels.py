@@ -10,6 +10,8 @@ from repro.core.distillation import kd_loss as kd_oracle
 from repro.core.quantization import quantize_array, quantize_dequantize_tree
 from repro.kernels.kd_loss import ops as kd_ops
 from repro.kernels.kd_loss.ref import kd_loss_rows_ref
+from repro.kernels.proto_accum import ops as pa_ops
+from repro.kernels.proto_accum.ref import proto_accum_ref
 from repro.kernels.proto_dist import ops as pd_ops
 from repro.kernels.proto_dist.ref import proto_dist_ref
 from repro.kernels.quantize import ops as q_ops
@@ -191,3 +193,85 @@ def test_nearest_prototype_respects_mask():
     mask = jnp.array([0.0, 1.0])  # class 0 unseen -> must pick class 1
     got = np.asarray(pd_ops.nearest_prototype(x, protos, mask))
     np.testing.assert_array_equal(got, np.ones(4, np.int64))
+
+
+# ---------------------------------------------------------------------------
+# proto_accum — Eq. 3 per-batch accumulation without the [B, C] one-hot
+# ---------------------------------------------------------------------------
+
+# deliberately off the kernel tile (BLOCK_B, BLOCK_C) = (128, 128):
+# partial batch tiles, partial class tiles, single-row edge cases
+PA_SHAPES = [(64, 10, 32), (130, 100, 256), (7, 3, 64), (128, 128, 128),
+             (257, 33, 16), (1, 1, 8), (300, 10, 48)]
+
+
+@pytest.mark.parametrize("b,c,p", PA_SHAPES)
+def test_proto_accum_pallas_matches_ref(b, c, p):
+    """Pallas flavor (interpret mode on CPU) vs the one-hot-einsum
+    oracle: same class sums and counts, accumulation-order noise only."""
+    f1 = jnp.asarray(RNG.standard_normal((b, p)) * 2, jnp.float32)
+    labels = jnp.asarray(RNG.integers(0, c, (b,)), jnp.int32)
+    got_s, got_c = pa_ops.proto_accumulate(f1, labels, c, use_kernels=True)
+    want_s, want_c = proto_accum_ref(f1, labels, c)
+    np.testing.assert_array_equal(np.asarray(got_c), np.asarray(want_c))
+    np.testing.assert_allclose(np.asarray(got_s), np.asarray(want_s),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("b,c,p", PA_SHAPES)
+def test_proto_accum_jnp_bit_identical_to_ref(b, c, p):
+    """The jnp flavor IS the historical engine computation — bit-for-bit
+    against the oracle, so ``proto_pass='exact'`` on CPU cannot drift."""
+    f1 = jnp.asarray(RNG.standard_normal((b, p)) * 2, jnp.float32)
+    labels = jnp.asarray(RNG.integers(0, c, (b,)), jnp.int32)
+    got_s, got_c = pa_ops.proto_accumulate(f1, labels, c, use_kernels=False)
+    want_s, want_c = proto_accum_ref(f1, labels, c)
+    np.testing.assert_array_equal(np.asarray(got_s), np.asarray(want_s))
+    np.testing.assert_array_equal(np.asarray(got_c), np.asarray(want_c))
+
+
+def test_proto_accum_missing_classes_count_zero():
+    """Classes absent from the batch must accumulate exactly zero (their
+    Eq. 3 normalization divides by max(count, 1))."""
+    c = 12
+    f1 = jnp.asarray(RNG.standard_normal((40, 16)), jnp.float32)
+    labels = jnp.asarray(RNG.integers(0, 3, (40,)), jnp.int32)  # 3..11 unseen
+    for uk in (False, True):
+        sums, counts = pa_ops.proto_accumulate(f1, labels, c, use_kernels=uk)
+        np.testing.assert_array_equal(np.asarray(counts[3:]), np.zeros(9))
+        np.testing.assert_array_equal(np.asarray(sums[3:]),
+                                      np.zeros((9, 16)))
+
+
+@pytest.mark.parametrize("use_kernels", [False, True],
+                         ids=["jnp", "pallas-interpret"])
+def test_proto_accum_nodes_matches_stacked_einsum(use_kernels):
+    """The stacked-node view vs the engines' historical
+    ``jnp.einsum("nbc,nbp->ncp", ...)`` over the [N, B, C] one-hot —
+    bit-identical on the jnp path (what the CPU exact engine runs),
+    accumulation noise only through the kernel."""
+    n, b, c, p = 3, 26, 10, 32
+    f1 = jnp.asarray(RNG.standard_normal((n, b, p)), jnp.float32)
+    labels = jnp.asarray(RNG.integers(0, c, (n, b)), jnp.int32)
+    got_s, got_c = pa_ops.proto_accumulate_nodes(f1, labels, c,
+                                                 use_kernels=use_kernels)
+    onehot = jax.nn.one_hot(labels, c, dtype=jnp.float32)
+    want_s = jnp.einsum("nbc,nbp->ncp", onehot, f1)
+    want_c = jnp.sum(onehot, axis=1)
+    if use_kernels:
+        np.testing.assert_allclose(np.asarray(got_s), np.asarray(want_s),
+                                   rtol=1e-5, atol=1e-5)
+    else:
+        np.testing.assert_array_equal(np.asarray(got_s), np.asarray(want_s))
+    np.testing.assert_array_equal(np.asarray(got_c), np.asarray(want_c))
+
+
+def test_proto_accum_bf16_features():
+    f1 = jnp.asarray(RNG.standard_normal((33, 24)), jnp.bfloat16)
+    labels = jnp.asarray(RNG.integers(0, 5, (33,)), jnp.int32)
+    got_s, got_c = pa_ops.proto_accumulate(f1, labels, 5, use_kernels=True)
+    want_s, want_c = proto_accum_ref(f1, labels, 5)
+    assert got_s.dtype == jnp.float32
+    np.testing.assert_array_equal(np.asarray(got_c), np.asarray(want_c))
+    np.testing.assert_allclose(np.asarray(got_s), np.asarray(want_s),
+                               rtol=1e-5, atol=1e-5)
