@@ -24,9 +24,11 @@ must stay within ``--threshold`` x the committed ``proto_exact_ms``;
 and the committed rows themselves must keep the single-pass win —
 ``round_fused_ms < round_exact_ms`` at the largest N (and at worst
 break-even, <= 1.05x, on the smaller rows, where the saved pass is
-inside timer noise), and at the largest N the fused in-scan proto
-marginal must cost at most HALF the exact second pass
-(``proto_fused_ms <= 0.5 * proto_exact_ms``).  A failure
+inside timer noise), at every committed N the flat-parameter-plane
+fused clip+update sweep must beat the per-leaf reference
+(``update_fused_ms < update_per_leaf_ms``), and at the largest N the
+fused in-scan proto marginal must cost at most HALF the exact second
+pass (``proto_fused_ms <= 0.5 * proto_exact_ms``).  A failure
 of the committed invariants means the committed file was refreshed
 from a run where the fusion stopped paying — that needs investigation,
 not a baseline bump.
@@ -162,6 +164,19 @@ def check_phases(baseline: dict, threshold: float, rounds: int) -> bool:
         print(f"N={n}: committed round fused {ph['round_fused_ms']:7.1f} ms"
               f" vs exact {ph['round_exact_ms']:7.1f} ms  "
               f"{'OK' if ok else tag}")
+    # flat-parameter-plane invariant: the fused clip+update sweep over
+    # the packed buffer must beat the per-leaf reference at every
+    # committed N (rows without the update sub-phase predate the plane
+    # and stay checkable)
+    for n, ph in sorted(phased.items(), key=lambda kv: int(kv[0])):
+        if "update_fused_ms" not in ph:
+            continue
+        ok = ph["update_fused_ms"] < ph["update_per_leaf_ms"]
+        failed |= not ok
+        print(f"N={n}: committed update fused {ph['update_fused_ms']:6.2f} "
+              f"ms vs per-leaf {ph['update_per_leaf_ms']:6.2f} ms  "
+              f"{'OK' if ok else 'FUSED-UPDATE-NOT-CHEAPER'}")
+
     big = phased[n_big]
     ok = big["proto_fused_ms"] <= 0.5 * big["proto_exact_ms"]
     failed |= not ok

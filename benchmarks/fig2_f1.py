@@ -13,7 +13,9 @@ run), so the bytes-vs-F1 tradeoff is ONE plot-ready artifact; ``--bits
 (same bytes, recovered F1 — see ``reports/fig2_f1_bits_ef.json``);
 ``--proto-pass both`` adds a ``+fused`` twin per proto-sharing spec —
 the F1 cost of the single-pass round's evolving-student prototypes
-(see ``reports/fig2_f1_proto_pass.json``).
+(see ``reports/fig2_f1_proto_pass.json``); ``--proto-ema <decay>``
+adds an ``+ema`` twin — Eq. 3 accumulators carried across rounds with
+an exponential decay instead of restarting from zero.
 
 Full paper scale (20 nodes, 3 datasets, 5 splits, 10-80 rounds) is hours
 of CPU; the default here is the scaled-down protocol (4 nodes, MNIST-like
@@ -49,7 +51,8 @@ def _sub_int16(bits: str) -> bool:
 
 def run(dataset: str, split: str, *, nodes: int, rounds: int, epochs: int,
         n_samples: int, algos=ALGOS, seed: int = 0, verbose=False,
-        topology: str = "full", bits=("16",), proto_pass=("exact",)):
+        topology: str = "full", bits=("16",), proto_pass=("exact",),
+        proto_ema: float = 0.0):
     cfg = get_config(dataset)
     data = make_image_dataset(seed, n_samples, cfg.input_hw, cfg.num_classes)
     train_d, test_d = train_test_split(data, 0.1, seed)  # paper: 10% global test
@@ -65,23 +68,32 @@ def run(dataset: str, split: str, *, nodes: int, rounds: int, epochs: int,
     # mode when asked — "fused" is the single-pass round; its F1 delta
     # vs "exact" is the accuracy cost of prototypes built from the
     # evolving (pre-final) student, recorded curve-vs-curve
+    # the proto_ema column: an '+ema' twin row per proto-sharing spec —
+    # the F1 effect of carrying Eq. 3 accumulators across rounds with an
+    # exponential decay instead of restarting them from zero
     jobs = []
     for algo in algos:
-        passes = proto_pass if algo in ("profe", "fedproto", "fedgpd") \
-            else ("exact",)
+        sharing = algo in ("profe", "fedproto", "fedgpd")
+        passes = proto_pass if sharing else ("exact",)
         for pp in passes:
             suffix = "+fused" if pp == "fused" else ""
-            if algo == "profe":
-                jobs += [(f"profe@{b}{suffix}"
-                          if len(bits) > 1 or b != "16" or suffix else
-                          "profe", algo, b, pp) for b in bits]
-            else:
-                jobs.append((f"{algo}{suffix}", algo, "16", pp))
-    for name, algo, b, pp in jobs:
+            emas = (0.0, proto_ema) if proto_ema and sharing else (0.0,)
+            for em in emas:
+                esuf = "+ema" if em else ""
+                if algo == "profe":
+                    jobs += [(f"profe@{b}{suffix}{esuf}"
+                              if len(bits) > 1 or b != "16" or suffix
+                              or esuf else "profe", algo, b, pp, em)
+                             for b in bits]
+                else:
+                    jobs.append((f"{algo}{suffix}{esuf}", algo, "16", pp,
+                                 em))
+    for name, algo, b, pp, em in jobs:
         fed = FederationConfig(num_nodes=nodes, rounds=rounds,
                                local_epochs=epochs, algorithm=algo,
                                split=split, seed=seed, topology=topology,
-                               proto_pass=pp, **_bits_fed_kwargs(b))
+                               proto_pass=pp, proto_ema=em,
+                               **_bits_fed_kwargs(b))
         res = run_federation(cfg, fed, train, node_data, test_d,
                              verbose=verbose, eval_all_nodes=True)
         # one plot-ready row: F1 curve AND the wire bytes of that exact
@@ -99,6 +111,8 @@ def run(dataset: str, split: str, *, nodes: int, rounds: int, epochs: int,
             "elapsed_s": res.elapsed_s,
             "proto_pass": pp,
         }
+        if em:
+            out[name]["proto_ema"] = em
         if algo == "profe":
             out[name]["bits"] = WireSpec.parse(b).describe()
     return out
@@ -126,6 +140,11 @@ def main():
                          "'both' adds a '+fused' twin row per spec — "
                          "the fused-vs-exact F1 curves artifact "
                          "(reports/fig2_f1_proto_pass.json)")
+    ap.add_argument("--proto-ema", type=float, default=0.0,
+                    help="add an '+ema' twin row per proto-sharing spec "
+                         "with this Eq. 3 accumulator decay (0 = off): "
+                         "prototypes blend the previous round's raw "
+                         "sums/counts instead of restarting from zero")
     ap.add_argument("--ef", action="store_true",
                     help="add an error-feedback twin row (spec+ef, zero "
                          "extra wire bytes) for every sub-int16 spec — "
@@ -151,7 +170,8 @@ def main():
             results[key] = run(ds, split, nodes=nodes, rounds=rounds,
                                epochs=epochs, n_samples=n, algos=args.algos,
                                topology=args.topology, bits=args.bits,
-                               proto_pass=passes)
+                               proto_pass=passes,
+                               proto_ema=args.proto_ema)
             for algo, r in results[key].items():
                 curve = " ".join(
                     f"{x:.3f}±{s:.3f}"

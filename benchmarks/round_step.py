@@ -13,9 +13,11 @@ perf trajectory is tracked in ``BENCH_round_step.json``.
 
 **Per-phase breakdown** (``--phases``): decomposes the jitted round into
 train / proto (Eq. 3, exact pass AND the fused in-scan marginal) /
-codec (wire round-trip) / mix (gossip+aggregate) phase timings, plus
-whole-round exact-vs-fused wall times — the numbers behind the
-``proto_pass="fused"`` single-pass round.  Each phase is jitted
+codec (wire round-trip) / mix (gossip+aggregate) phase timings, an
+optimizer A/B (fused plane clip+update sweep vs the per-leaf
+reference, paired-interleaved), plus whole-round exact-vs-fused wall
+times — the numbers behind the ``proto_pass="fused"`` single-pass
+round and the flat parameter plane.  Each phase is jitted
 standalone (no donation) so constant inputs can be replayed; the fused
 proto cost is the marginal ``fused_train - train`` (clamped at 0)
 because the fused pass has no standalone program — it lives inside the
@@ -60,7 +62,9 @@ from repro.core.prototypes import aggregate_prototypes
 from repro.core.quantization import quantize_dequantize_tree
 from repro.data import batches, make_image_dataset, partition
 from repro.models import derive_student, forward
-from repro.optim import make_optimizer
+from repro.optim import (clip_by_global_norm, make_optimizer,
+                         make_plane_optimizer)
+from repro.optim.plane import as_tree, is_plane, plane_from_tree
 from repro.wirespec import WireSpec, resolve_bits
 
 
@@ -90,15 +94,29 @@ def _setup(n_nodes: int, samples_per_node: int, batch_size: int,
     return cfg, fed, train, node_data
 
 
-def _wiring(cfg, fed, train, *, jit: bool):
+def _wiring(cfg, fed, train, *, jit: bool, plane=None):
+    """Mirrors ``run_federation``'s wiring, including the flat-parameter-
+    plane resolution: ``plane=None`` resolves ``fed.param_plane`` exactly
+    like the engines do (so the timed jitted round runs the same fused
+    clip+update path a real run would), ``plane=False`` pins the
+    per-leaf reference (the seed loop's representation)."""
     student_cfg = derive_student(cfg)
     opt = make_optimizer(train.optimizer, train.learning_rate,
                          weight_decay=train.weight_decay,
                          momentum=train.momentum)
+    use_plane = (F._plane_mode(fed, train, fed.algorithm, student_cfg)
+                 if plane is None else plane)
+    opt_s = opt
+    if use_plane:
+        opt_s = make_plane_optimizer(train.optimizer, train.learning_rate,
+                                     weight_decay=train.weight_decay,
+                                     momentum=train.momentum,
+                                     grad_clip=train.grad_clip)
     step, wire_model, share_protos, bits, model_cfgs = F._algo_wiring(
-        fed.algorithm, cfg, student_cfg, fed, train, opt, opt, jit=jit)
+        fed.algorithm, cfg, student_cfg, fed, train, opt_s, opt, jit=jit)
     ncls = F._n_proto_classes(cfg)
-    states = F._init_states(fed.algorithm, model_cfgs, fed, opt, opt, ncls)
+    states = F._init_states(fed.algorithm, model_cfgs, fed, opt_s, opt, ncls,
+                            plane=use_plane)
     return step, bits, ncls, model_cfgs, states, student_cfg
 
 
@@ -172,7 +190,7 @@ def measure(n_nodes: int, *, samples_per_node: int, batch_size: int,
     t_legacy = []
     if not jitted_only:
         step, bits, ncls, model_cfgs, states, student_cfg = _wiring(
-            cfg, fed, train, jit=True)
+            cfg, fed, train, jit=True, plane=False)
         states = legacy_round(step, states, node_data, cfg, student_cfg, fed,
                               train, adj, sizes, ncls, bits, 0)  # warmup
         for rnd in range(1, rounds + 1):
@@ -310,12 +328,50 @@ def measure_phases(n_nodes: int, *, samples_per_node: int, batch_size: int,
                             teacher_on=True, all_valid=av),
         lambda: round_fused(stacked, xb, valid, e0, e1, teacher_on=True,
                             all_valid=av), rounds=max(rounds, 5))
+
+    # optimizer sweep in isolation: fused plane clip+update (one pass
+    # over the [N, R, 512] buffer, one global-norm reduction) vs the
+    # per-leaf reference (leaf-walk clip + leaf-walk update), on
+    # identical operands — another close A/B, so interleaved like the
+    # codec pair.  The params double as grads: same shapes, realistic
+    # magnitudes, no RNG in the timed path.
+    views = as_tree(stacked.student)
+    planes = stacked.student if is_plane(stacked.student) \
+        else jax.vmap(plane_from_tree)(views)
+    opt_leaf = make_optimizer(train.optimizer, train.learning_rate,
+                              weight_decay=train.weight_decay,
+                              momentum=train.momentum)
+    opt_plane = make_plane_optimizer(train.optimizer, train.learning_rate,
+                                     weight_decay=train.weight_decay,
+                                     momentum=train.momentum,
+                                     grad_clip=train.grad_clip)
+    leaf_state = jax.vmap(opt_leaf.init)(views)
+    plane_state = jax.vmap(opt_plane.init)(planes)
+
+    @jax.jit
+    def upd_leaf(params, grads, state):
+        def one(p, g, s):
+            g, _ = clip_by_global_norm(g, train.grad_clip)
+            return opt_leaf.update(g, s, p)
+        return jax.vmap(one)(params, grads, state)
+
+    @jax.jit
+    def upd_fused(params, grads, state):
+        return jax.vmap(lambda g, s, p: opt_plane.update(g, s, p))(
+            grads, state, params)
+
+    update_per_leaf_ms, update_fused_ms = _paired_ms(
+        lambda: upd_leaf(views, views, leaf_state),
+        lambda: upd_fused(planes, planes, plane_state),
+        rounds=max(rounds, 10))
     return {
         "train_ms": train_ms,
         "proto_exact_ms": proto_exact_ms,
         "proto_fused_ms": round(max(0.0, fused_train_ms - train_ms), 3),
         "codec_ms": codec_ms,
         "mix_ms": mix_ms,
+        "update_per_leaf_ms": update_per_leaf_ms,
+        "update_fused_ms": update_fused_ms,
         "round_exact_ms": round_exact_ms,
         "round_fused_ms": round_fused_ms,
         "fused_round_speedup": round(round_exact_ms
@@ -561,6 +617,8 @@ def main():
                   f"proto exact {ph['proto_exact_ms']:6.1f} / "
                   f"fused +{ph['proto_fused_ms']:5.1f}  "
                   f"codec {ph['codec_ms']:6.1f}  mix {ph['mix_ms']:6.1f} ms")
+            print(f"  update: per-leaf {ph['update_per_leaf_ms']:6.2f}  "
+                  f"fused {ph['update_fused_ms']:6.2f} ms")
             print(f"  round: exact {ph['round_exact_ms']:7.1f}  "
                   f"fused {ph['round_fused_ms']:7.1f} ms  "
                   f"({ph['fused_round_speedup']:.2f}x)")

@@ -9,8 +9,9 @@
 #      collective bytes EXACT per wire spec).  When the committed
 #      baseline carries per-phase rows (round_step.py --phases), the
 #      single-pass gate rides along: fused round beats exact at the
-#      largest N, fused Eq. 3 marginal <= 0.5x the exact pass, fresh
-#      exact proto phase within threshold.
+#      largest N, fused Eq. 3 marginal <= 0.5x the exact pass, the
+#      parameter-plane fused clip+update beats the per-leaf optimizer
+#      at every committed N, fresh exact proto phase within threshold.
 #
 #   scripts/verify.sh [extra pytest args...]
 set -euo pipefail

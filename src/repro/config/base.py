@@ -203,6 +203,19 @@ class FederationConfig:
     # from the evolving (pre-final) student (F1 delta recorded in
     # reports/fig2_f1_proto_pass.json).
     proto_pass: str = "exact"       # "exact" | "fused"
+    # EMA prototype carry across rounds (fused-pass follow-up): decay
+    # on last round's raw Eq. 3 accumulators (sums, counts) blended
+    # into this round's before normalization — 0.0 (default) is off
+    # (current-round prototypes only); 0 < proto_ema < 1 carries
+    # `ema * prev + new`, smoothing the evolving-student bias of the
+    # fused pass and sparse-data rounds of the exact pass alike.
+    proto_ema: float = 0.0
+    # flat parameter plane (optim/plane.py): "auto" packs the student
+    # into one contiguous fp32 [R, 512] buffer with a fused clip+update
+    # sweep whenever the algorithm/optimizer/dtypes support it (profe +
+    # sgd/adamw + all-float32 student); "on" requires it (ValueError
+    # otherwise); "off" keeps the per-leaf reference everywhere.
+    param_plane: str = "auto"       # "auto" | "on" | "off"
     # data split
     split: str = "iid"              # "iid"|"noniid60"|"noniid40"|"noniid20"|"dirichlet"
     dirichlet_alpha: float = 0.5

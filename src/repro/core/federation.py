@@ -73,7 +73,8 @@ from repro.data.loader import batch_index_lists
 from repro.kernels.proto_accum.ops import (proto_accumulate,
                                            proto_accumulate_nodes)
 from repro.models import derive_student, forward, init_params
-from repro.optim import make_optimizer
+from repro.optim import make_optimizer, make_plane_optimizer
+from repro.optim.plane import as_tree, plane_from_tree
 from repro.wirespec import WireSpec
 
 # The CPU-unroll-capped scan lives in ``core/scanning.py`` (shared with
@@ -171,22 +172,71 @@ def _algo_wiring(algo: str, teacher_cfg: ModelConfig,
     raise ValueError(f"unknown algorithm {algo!r}")
 
 
+PLANE_MODES = ("auto", "on", "off")
+
+
+def _plane_mode(fed: FederationConfig, train: TrainConfig, algo: str,
+                student_cfg: ModelConfig) -> bool:
+    """Resolve ``fed.param_plane`` to a concrete on/off for this run.
+
+    ``"auto"`` enables the flat parameter plane exactly where the fused
+    clip+update sweep is the per-leaf reference's equal: the profe
+    student (the only wire model the plane splice is built for) under
+    sgd/adamw with an all-float32 parameter tree.  ``"on"`` asserts
+    those conditions (raises otherwise); everything else — adafactor's
+    shape-factored state, mixed-dtype models, the baseline algorithms —
+    keeps the per-leaf reference path."""
+    mode = fed.param_plane
+    if mode not in PLANE_MODES:
+        raise ValueError(f"param_plane must be one of {PLANE_MODES}, "
+                         f"got {mode!r}")
+    if mode == "off":
+        return False
+    why = None
+    if algo != "profe":
+        why = f"algorithm {algo!r} (the plane is wired through the " \
+              "profe student)"
+    elif train.optimizer not in ("sgd", "adamw"):
+        why = f"optimizer {train.optimizer!r} (factored per-leaf-shape " \
+              "state cannot live on the plane)"
+    else:
+        tmpl = jax.eval_shape(
+            functools.partial(init_params, student_cfg),
+            jax.random.PRNGKey(0))
+        if any(l.dtype != jnp.float32
+               for l in jax.tree_util.tree_leaves(tmpl)):
+            why = "student has non-float32 leaves (the plane buffer " \
+                  "is fp32)"
+    if why is None:
+        return True
+    if mode == "on":
+        raise ValueError(f"param_plane='on' is unsupported here: {why}")
+    return False
+
+
 def _init_states(algo: str, model_cfgs, fed: FederationConfig, opt_s, opt_t,
-                 ncls: int) -> List[NodeState]:
+                 ncls: int, *, plane: bool = False) -> List[NodeState]:
     needs_teacher = algo in ("profe", "fml")
     states: List[NodeState] = []
     for i in range(fed.num_nodes):
         rng = jax.random.PRNGKey(fed.seed * 1000 + i)
         if needs_teacher:
             st = init_node_state(model_cfgs[0], model_cfgs[1], rng, opt_s,
-                                 opt_t, ncls)
+                                 opt_t, ncls, plane=plane,
+                                 proto_ema=fed.proto_ema)
         else:
             params = init_params(model_cfgs[0], rng)
+            proto_acc = None
+            if fed.proto_ema and fed.proto_ema > 0:
+                proto_acc = (jnp.zeros((ncls, model_cfgs[0].proto_dim),
+                                       jnp.float32),
+                             jnp.zeros((ncls,), jnp.float32))
             st = NodeState(student=params, teacher={}, opt_s=opt_s.init(params),
                            opt_t={}, global_protos=jnp.zeros(
                                (ncls, model_cfgs[0].proto_dim), jnp.float32),
                            proto_mask=jnp.zeros((ncls,), jnp.float32),
-                           round_idx=jnp.zeros((), jnp.int32))
+                           round_idx=jnp.zeros((), jnp.int32),
+                           proto_acc=proto_acc)
         states.append(st)
     return states
 
@@ -200,9 +250,11 @@ def _payload_template(wire_model, share_protos, stacked: NodeState,
     payload: Dict[str, Any] = {}
     if wire_model is not None:
         skip = 1 if node_axis else 0
+        # as_tree: a plane-backed student meters by its LEAF shapes (the
+        # logical wire payload), never by the padded buffer
         payload["model"] = jax.tree_util.tree_map(
             lambda x: jax.ShapeDtypeStruct(x.shape[skip:], x.dtype),
-            stacked.student)
+            as_tree(stacked.student))
     if share_protos:
         payload["protos"] = jax.ShapeDtypeStruct((ncls, proto_dim),
                                                  np.dtype(np.float32))
@@ -301,6 +353,7 @@ def _make_proto_pass(proto_cfg: ModelConfig, ncls: int):
     isolation (the "proto" phase of the exact round)."""
 
     def proto_pass(students, pxb, pvalid):
+        students = as_tree(students)   # plane buffers forward as views
         proto_dim = proto_cfg.proto_dim
         n_nodes = pvalid.shape[1]
         sums0 = jnp.zeros((n_nodes, ncls, proto_dim), jnp.float32)
@@ -328,7 +381,7 @@ def _make_proto_pass(proto_cfg: ModelConfig, ncls: int):
 def _make_round_parts(step: Callable, proto_cfg: ModelConfig, ncls: int, *,
                       share_protos: bool, wire_model: Optional[str],
                       bits: Optional[int] | WireSpec,
-                      proto_pass: str = "exact"):
+                      proto_pass: str = "exact", proto_ema: float = 0.0):
     """The three phases of one stacked round, as plain traceable
     functions:
 
@@ -350,6 +403,14 @@ def _make_round_parts(step: Callable, proto_cfg: ModelConfig, ncls: int, *,
     one forward per batch instead of two, prototypes built from the
     evolving student.  Fused mode ignores ``pxb``/``pvalid`` (drivers
     pass an empty placeholder and skip staging the proto stream).
+
+    ``proto_ema`` > 0 carries the RAW Eq. 3 accumulators across rounds
+    (``NodeState.proto_acc``): this round's sums/counts become
+    ``new + proto_ema * previous`` before the shared normalization, so
+    prototypes smooth over the per-round minibatch noise.  In fused
+    mode the decayed carry warm-starts the scan accumulators; in exact
+    mode it is added after the pass — either way the blended raw
+    accumulators are stored back into the carry for the next round.
 
     The sequential engine jits their composition as ONE program
     (:func:`_make_round_fn`); the pipelined engine
@@ -378,8 +439,14 @@ def _make_round_parts(step: Callable, proto_cfg: ModelConfig, ncls: int, *,
             # exactly like they are masked out of the state
             proto_dim = proto_cfg.proto_dim
             n_nodes = valid.shape[1]
-            sums0 = jnp.zeros((n_nodes, ncls, proto_dim), jnp.float32)
-            counts0 = jnp.zeros((n_nodes, ncls), jnp.float32)
+            if proto_ema and proto_ema > 0:
+                # EMA carry: warm-start the accumulators at the decayed
+                # previous round's raw sums/counts
+                sums0 = proto_ema * state.proto_acc[0]
+                counts0 = proto_ema * state.proto_acc[1]
+            else:
+                sums0 = jnp.zeros((n_nodes, ncls, proto_dim), jnp.float32)
+                counts0 = jnp.zeros((n_nodes, ncls), jnp.float32)
 
             def fbody(carry, inp):
                 FUSED_PROTO_TRACES[trace_key] = \
@@ -400,6 +467,8 @@ def _make_round_parts(step: Callable, proto_cfg: ModelConfig, ncls: int, *,
                 fbody, (state, sums0, counts0), (xb, valid),
                 valid.shape[0])
             state = state._replace(round_idx=state.round_idx + 1)
+            if proto_ema and proto_ema > 0:
+                state = state._replace(proto_acc=(sums, counts))
             return state, normalize_protos(sums, counts), counts
 
         def body(carry, inp):
@@ -416,6 +485,10 @@ def _make_round_parts(step: Callable, proto_cfg: ModelConfig, ncls: int, *,
         # 2) Eq. 3 prototype accumulation: the factored exact pass
         #    (post-training student forward over the proto stream)
         sums, counts = exact_pass(state.student, pxb, pvalid)
+        if proto_ema and proto_ema > 0:
+            sums = sums + proto_ema * state.proto_acc[0]
+            counts = counts + proto_ema * state.proto_acc[1]
+            state = state._replace(proto_acc=(sums, counts))
         return state, normalize_protos(sums, counts), counts
 
     def share_phase(state: NodeState, protos):
@@ -470,7 +543,7 @@ def _make_round_parts(step: Callable, proto_cfg: ModelConfig, ncls: int, *,
 def _make_round_fn(step: Callable, proto_cfg: ModelConfig, ncls: int, *,
                    share_protos: bool, wire_model: Optional[str],
                    bits: Optional[int] | WireSpec,
-                   proto_pass: str = "exact"):
+                   proto_pass: str = "exact", proto_ema: float = 0.0):
     """One full federation round as a single compiled program over
     stacked node state: scan(vmap(step)) → Eq. 3 proto pass (exact
     second stream, or fused into the training scan — ``proto_pass``) →
@@ -483,7 +556,8 @@ def _make_round_fn(step: Callable, proto_cfg: ModelConfig, ncls: int, *,
     a round-varying topology never rebuilds or retraces the program."""
     train_phase, share_phase, mix_phase = _make_round_parts(
         step, proto_cfg, ncls, share_protos=share_protos,
-        wire_model=wire_model, bits=bits, proto_pass=proto_pass)
+        wire_model=wire_model, bits=bits, proto_pass=proto_pass,
+        proto_ema=proto_ema)
 
     def round_fn(state: NodeState, xb, valid, pxb, pvalid,
                  w_self, w_neigh, include,
@@ -502,14 +576,15 @@ def _make_round_fn(step: Callable, proto_cfg: ModelConfig, ncls: int, *,
 def _make_phase_fns(step: Callable, proto_cfg: ModelConfig, ncls: int, *,
                     share_protos: bool, wire_model: Optional[str],
                     bits: Optional[int] | WireSpec,
-                    proto_pass: str = "exact"):
+                    proto_pass: str = "exact", proto_ema: float = 0.0):
     """The pipelined engine's three jitted programs — the same traced
     phase bodies as the sequential :func:`_make_round_fn`, so splitting
     the round changes jit boundaries (and therefore dispatch order),
     never the math."""
     train_phase, share_phase, mix_phase = _make_round_parts(
         step, proto_cfg, ncls, share_protos=share_protos,
-        wire_model=wire_model, bits=bits, proto_pass=proto_pass)
+        wire_model=wire_model, bits=bits, proto_pass=proto_pass,
+        proto_ema=proto_ema)
     donate = (0,) if jax.default_backend() != "cpu" else ()
     return (jax.jit(train_phase,
                     static_argnames=("teacher_on", "all_valid"),
@@ -689,6 +764,15 @@ def run_federation(teacher_cfg: ModelConfig, fed: FederationConfig,
     opt_t = make_optimizer(train.optimizer, train.learning_rate,
                            weight_decay=train.weight_decay,
                            momentum=train.momentum)
+    use_plane = _plane_mode(fed, train, algo, student_cfg)
+    if use_plane:
+        # flat parameter plane: the student optimizer becomes the fused
+        # clip+update sweep over the [N, R, 512] buffer (the clip moves
+        # inside the optimizer — the step skips its per-leaf clip pass)
+        opt_s = make_plane_optimizer(train.optimizer, train.learning_rate,
+                                     weight_decay=train.weight_decay,
+                                     momentum=train.momentum,
+                                     grad_clip=train.grad_clip)
 
     step, wire_model, share_protos, bits, model_cfgs = _algo_wiring(
         algo, teacher_cfg, student_cfg, fed, train, opt_s, opt_t, jit=False)
@@ -705,7 +789,8 @@ def run_federation(teacher_cfg: ModelConfig, fed: FederationConfig,
 
     meter = ScheduleCommAccountant(sched)
     stacked = _stack_states(
-        _init_states(algo, model_cfgs, fed, opt_s, opt_t, ncls))
+        _init_states(algo, model_cfgs, fed, opt_s, opt_t, ncls,
+                     plane=use_plane))
     eval_cfg = model_cfgs[1] if algo in ("profe", "fml") else model_cfgs[0]
     proto_cfg = eval_cfg
     needs_teacher = algo in ("profe", "fml")
@@ -730,12 +815,16 @@ def run_federation(teacher_cfg: ModelConfig, fed: FederationConfig,
     round_fn = _make_round_fn(step, proto_cfg, ncls,
                               share_protos=share_protos,
                               wire_model=wire_model, bits=bits,
-                              proto_pass=fed.proto_pass)
+                              proto_pass=fed.proto_pass,
+                              proto_ema=fed.proto_ema)
     payload = _payload_template(wire_model, share_protos, stacked, ncls,
                                 proto_cfg.proto_dim)
 
     result = FederationResult(comm=meter, algorithm=algo)
     result.extras["proto_pass"] = fed.proto_pass
+    result.extras["param_plane"] = use_plane
+    if fed.proto_ema:
+        result.extras["proto_ema"] = fed.proto_ema
     if stale_self_floor is not None:
         result.extras["stale_self_floor"] = stale_self_floor
     # one consistent wire number: the logical (Table II) bytes per copy
@@ -760,7 +849,8 @@ def run_federation(teacher_cfg: ModelConfig, fed: FederationConfig,
     if overlap is not None:
         train_jit, share_jit, mix_jit = _make_phase_fns(
             step, proto_cfg, ncls, share_protos=share_protos,
-            wire_model=wire_model, bits=bits, proto_pass=fed.proto_pass)
+            wire_model=wire_model, bits=bits, proto_pass=fed.proto_pass,
+            proto_ema=fed.proto_ema)
         staged_next = probe
         proto_next = _stack_round_batches(
             node_data, train.batch_size, [fed.seed] * n_nodes, 1) \
@@ -810,11 +900,12 @@ def run_federation(teacher_cfg: ModelConfig, fed: FederationConfig,
                     if stream_protos else empty
             meter.record_round(payload, kind=algo, round_idx=rnd,
                                bits=bits)
+            students = as_tree(stacked.student)
             f1, acc = _eval_nodes(eval_cfg,
-                                  lambda i: _node_slice(stacked.student, i),
+                                  lambda i: _node_slice(students, i),
                                   n_nodes, test_data, eval_all_nodes,
                                   result.extras,
-                                  stacked_students=stacked.student)
+                                  stacked_students=students)
             result.f1_per_round.append(f1)
             result.acc_per_round.append(acc)
             round_times.append(time.time() - t_r)
@@ -852,11 +943,12 @@ def run_federation(teacher_cfg: ModelConfig, fed: FederationConfig,
         # byte-identical to the reference loop's per-edge meter
         meter.record_round(payload, kind=algo, round_idx=rnd, bits=bits)
 
+        students = as_tree(stacked.student)
         f1, acc = _eval_nodes(eval_cfg,
-                              lambda i: _node_slice(stacked.student, i),
+                              lambda i: _node_slice(students, i),
                               n_nodes, test_data, eval_all_nodes,
                               result.extras,
-                              stacked_students=stacked.student)
+                              stacked_students=students)
         result.f1_per_round.append(f1)
         result.acc_per_round.append(acc)
         round_times.append(time.time() - t_r)
@@ -918,11 +1010,21 @@ def run_federation_loop(teacher_cfg: ModelConfig, fed: FederationConfig,
     opt_t = make_optimizer(train.optimizer, train.learning_rate,
                            weight_decay=train.weight_decay,
                            momentum=train.momentum)
+    # same plane resolution as the stacked engine, so the per-node
+    # reference runs the identical fused clip+update math (the wire /
+    # meter / mix boundaries below unwrap the plane to leaf views)
+    use_plane = _plane_mode(fed, train, algo, student_cfg)
+    if use_plane:
+        opt_s = make_plane_optimizer(train.optimizer, train.learning_rate,
+                                     weight_decay=train.weight_decay,
+                                     momentum=train.momentum,
+                                     grad_clip=train.grad_clip)
 
     step, wire_model, share_protos, bits, model_cfgs = _algo_wiring(
         algo, teacher_cfg, student_cfg, fed, train, opt_s, opt_t, jit=True)
     needs_teacher = algo in ("profe", "fml")
-    states = _init_states(algo, model_cfgs, fed, opt_s, opt_t, ncls)
+    states = _init_states(algo, model_cfgs, fed, opt_s, opt_t, ncls,
+                          plane=use_plane)
     eval_cfg = model_cfgs[1] if algo in ("profe", "fml") else model_cfgs[0]
     proto_cfg = eval_cfg
     # stateful wire codec: per-node residual dicts, the reference
@@ -937,7 +1039,7 @@ def run_federation_loop(teacher_cfg: ModelConfig, fed: FederationConfig,
             states[i] = states[i]._replace(wire_state=init_codec_state({
                 "protos": jnp.zeros((ncls, proto_cfg.proto_dim),
                                     jnp.float32),
-                "student": states[i].student}))
+                "student": as_tree(states[i].student)}))
         # jitted like the stacked round program, so both engines see the
         # same compiled residual arithmetic (XLA contracts the
         # mul-subtract of the residual update into an FMA; an eager
@@ -946,6 +1048,9 @@ def run_federation_loop(teacher_cfg: ModelConfig, fed: FederationConfig,
             lambda t, s: ef_quantize_dequantize_tree(t, bits, s))
     result = FederationResult(comm=meter, algorithm=algo)
     result.extras["proto_pass"] = fed.proto_pass
+    result.extras["param_plane"] = use_plane
+    if fed.proto_ema:
+        result.extras["proto_ema"] = fed.proto_ema
     # same wire-byte extras as the stacked engine, so a run that fell
     # back to the reference loop still fills the one-row fig2 artifact
     from repro.core.comm import packed_copy_bytes
@@ -971,12 +1076,19 @@ def run_federation_loop(teacher_cfg: ModelConfig, fed: FederationConfig,
         # 1) local training (fused mode also streams each step's f1
         #    metric into the Eq. 3 accumulators — the single-pass round)
         protos, counts = [], []
+        ema = fed.proto_ema if share_protos else 0.0
         for i in range(n_nodes):
             st = states[i]
             if fused and share_protos:
-                sums_i = jnp.zeros((ncls, proto_cfg.proto_dim),
-                                   jnp.float32)
-                counts_i = jnp.zeros((ncls,), jnp.float32)
+                if ema and ema > 0:
+                    # EMA carry: warm-start at the decayed previous
+                    # round's raw accumulators (stacked-engine order)
+                    sums_i = ema * st.proto_acc[0]
+                    counts_i = ema * st.proto_acc[1]
+                else:
+                    sums_i = jnp.zeros((ncls, proto_cfg.proto_dim),
+                                       jnp.float32)
+                    counts_i = jnp.zeros((ncls,), jnp.float32)
             for batch in batches(node_data[i], train.batch_size,
                                  seed=fed.seed + rnd * 997 + i,
                                  epochs=fed.local_epochs):
@@ -988,6 +1100,9 @@ def run_federation_loop(teacher_cfg: ModelConfig, fed: FederationConfig,
                     counts_i = counts_i + c_add
             states[i] = st._replace(round_idx=jnp.int32(rnd + 1))
             if fused and share_protos:
+                if ema and ema > 0:
+                    states[i] = states[i]._replace(
+                        proto_acc=(sums_i, counts_i))
                 protos.append(normalize_protos(sums_i, counts_i))
                 counts.append(counts_i)
 
@@ -995,11 +1110,15 @@ def run_federation_loop(teacher_cfg: ModelConfig, fed: FederationConfig,
         #    uses them; fused mode already accumulated them in-pass)
         if share_protos and not fused:
             for i in range(n_nodes):
-                pr, ct = compute_local_prototypes(
+                sums_i, ct = compute_local_prototypes(
                     proto_cfg, states[i].student,
                     batches(node_data[i], train.batch_size,
-                            seed=fed.seed + rnd), ncls)
-                protos.append(pr)
+                            seed=fed.seed + rnd), ncls, raw=True)
+                if ema and ema > 0:
+                    sums_i = sums_i + ema * states[i].proto_acc[0]
+                    ct = ct + ema * states[i].proto_acc[1]
+                    states[i] = states[i]._replace(proto_acc=(sums_i, ct))
+                protos.append(normalize_protos(sums_i, ct))
                 counts.append(ct)
 
         # 3) gossip: metering + (de-quantized) receive buffers.  With
@@ -1011,7 +1130,8 @@ def run_federation_loop(teacher_cfg: ModelConfig, fed: FederationConfig,
         if ef:
             for i in range(n_nodes):
                 recv_i, new_ws = ef_qdq(
-                    {"protos": protos[i], "student": states[i].student},
+                    {"protos": protos[i],
+                     "student": as_tree(states[i].student)},
                     states[i].wire_state)
                 states[i] = states[i]._replace(wire_state=new_ws)
                 ef_recv.append(recv_i)
@@ -1021,7 +1141,7 @@ def run_federation_loop(teacher_cfg: ModelConfig, fed: FederationConfig,
             neigh = T.neighbors(adj, i)
             payload = {}
             if wire_model is not None:
-                payload["model"] = states[i].student
+                payload["model"] = as_tree(states[i].student)
             if share_protos:
                 payload["protos"] = protos[i]
                 payload["counts"] = counts[i]
@@ -1032,8 +1152,9 @@ def run_federation_loop(teacher_cfg: ModelConfig, fed: FederationConfig,
                     model_rx = ef_recv[i]["student"]
                 else:
                     model_rx = quantize_dequantize_tree(
-                        states[i].student, bits.bits_for("student")) \
-                        if bits else states[i].student
+                        as_tree(states[i].student),
+                        bits.bits_for("student")) \
+                        if bits else as_tree(states[i].student)
                 for j in neigh:
                     recv_models[j].append(model_rx)
                     recv_sizes[j].append(sizes[i])
@@ -1055,9 +1176,13 @@ def run_federation_loop(teacher_cfg: ModelConfig, fed: FederationConfig,
             new_models = []
             for i in range(n_nodes):
                 if recv_models[i]:
-                    new_models.append(weighted_tree_mean(
-                        [states[i].student] + recv_models[i],
-                        [sizes[i]] + recv_sizes[i]))
+                    mixed = weighted_tree_mean(
+                        [as_tree(states[i].student)] + recv_models[i],
+                        [sizes[i]] + recv_sizes[i])
+                    # plane mode: the mixed views repack into the buffer
+                    # (the stacked engine mixes the buffer in place)
+                    new_models.append(plane_from_tree(mixed) if use_plane
+                                      else mixed)
                 else:
                     new_models.append(states[i].student)
             for i in range(n_nodes):
@@ -1065,7 +1190,7 @@ def run_federation_loop(teacher_cfg: ModelConfig, fed: FederationConfig,
 
         # 5) evaluation (node 0 by default — exact on full topologies
         #    where all nodes share the model; eval_all_nodes for spread)
-        f1, acc = _eval_nodes(eval_cfg, lambda i: states[i].student,
+        f1, acc = _eval_nodes(eval_cfg, lambda i: as_tree(states[i].student),
                               n_nodes, test_data, eval_all_nodes,
                               result.extras)
         result.f1_per_round.append(f1)

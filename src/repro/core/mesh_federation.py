@@ -101,6 +101,7 @@ from repro.core.round_ops import (dequantize_leaf, gossip_matrix_dyn,
                                   quantize_leaf_per_node, weighted_node_mean)
 from repro.core.wire_state import CodecState, ef_state_specs, next_seq
 from repro.kernels.quantize import ops as Q
+from repro.optim.plane import Plane, as_tree, is_plane, plane_from_tree
 from repro.sharding import row_shard_order
 from repro.wirespec import WireSpec, resolve_spec
 
@@ -194,6 +195,71 @@ def _proto_recipe(payload, meta, key: str = "protos"):
     return row, nrows, shape
 
 
+def _pack_payload(protos, students, wire):
+    """Plane-aware wire pack: ``(buf, seg_ids, meta, proto_loc, splice)``.
+
+    ``proto_loc`` is ``(row, nrows, shape)`` of the prototype leaf inside
+    the packed buffer.  When the students arrive as a
+    :class:`~repro.optim.plane.Plane` the pack is a row splice off the
+    plane buffer (zero repack — the student already lives in the wire
+    layout) and ``splice = (plane, r_protos, span)`` lets the receiver
+    splice the mixed rows straight back; per-leaf payloads take
+    ``pack_tree_nodes`` and ``splice`` is ``None``."""
+    if is_plane(students):
+        buf, seg_ids, meta, r_p, span = Q.pack_plane_payload(
+            protos, students, wire)
+        return (buf, seg_ids, meta, (0, r_p, protos.shape),
+                (students, r_p, span))
+    payload = {"protos": protos, "student": students}
+    buf, seg_ids, meta = Q.pack_tree_nodes(payload, wire)
+    return buf, seg_ids, meta, _proto_recipe(payload, meta), None
+
+
+def _splice_students(mesh, mixed, meta, students, splice, student_specs):
+    """Receiver-side student reconstruction from the mixed buffer: the
+    plane path slices its rows straight into a fresh plane (zero repack
+    — the trailing alignment rows are re-zeroed, a fixed point of the
+    mix), the per-leaf path unpacks to leaves."""
+    if splice is not None:
+        plane, r_p, span = splice
+        sbuf = mixed[:, r_p:r_p + span]
+        pad = plane.meta.rows - span
+        if pad:
+            sbuf = jnp.pad(sbuf, ((0, 0), (0, pad), (0, 0)))
+        return Plane(_constrain_buf(mesh, sbuf, "pod"), plane.raw,
+                     plane.meta)
+    new_students = jax.tree_util.tree_map(
+        lambda new, old: new.astype(old.dtype),
+        Q.unpack_tree_nodes(mixed, meta)["student"], students)
+    return _constrain_over_pod(mesh, new_students, student_specs, "pod")
+
+
+def _plane_views_adapter(fn, stateful: bool):
+    """The gather reference exchange is per-leaf math end to end, so a
+    plane-backed caller is adapted at the boundary: leaf views go in,
+    and the mixed leaves (and the EF residual) pack back into planes on
+    the way out — the semantics oracle stays byte-for-byte the PR-2
+    path."""
+    def round_fn(students, protos, counts, sizes, *rest):
+        if not is_plane(students):
+            return fn(students, protos, counts, sizes, *rest)
+        repack = jax.vmap(plane_from_tree)
+        if stateful:
+            (state,) = rest
+            res = state.residual
+            if is_plane(res.get("student")):
+                state = CodecState(dict(res, student=as_tree(
+                    res["student"])), seq=state.seq)
+            s, g, m, ns = fn(as_tree(students), protos, counts, sizes,
+                             state)
+            nres = dict(ns.residual,
+                        student=repack(ns.residual["student"]))
+            return repack(s), g, m, CodecState(nres, seq=ns.seq)
+        s, g, m = fn(as_tree(students), protos, counts, sizes)
+        return repack(s), g, m
+    return round_fn
+
+
 def _perm_lowering(adj: np.ndarray):
     """Lower an adjacency to its ppermute schedule: ``(perms, srcs)`` —
     the permutation step lists and, per step, the receiver -> sender map
@@ -234,6 +300,15 @@ def make_profe_round(mesh, student_specs, bits: int = 16,
                      proto_pass: str = "exact"):
     """Returns round_fn(students, protos, counts, sizes) for stacked
     node state; students leaves [N, ...] sharded P("pod", *student_spec).
+
+    ``students`` may also be a :class:`~repro.optim.plane.Plane` whose
+    buffer is stacked ``[N, R, 512]`` (the flat-parameter engines): the
+    packed and ppermute exchanges then splice the wire payload straight
+    off the plane buffer and splice the mixed rows straight back (zero
+    repack on either end, byte-identical wire traffic), and the round
+    returns a plane.  A plane-backed EF residual quantizes the same
+    way.  The gather reference path unwraps the plane to leaf views at
+    the boundary.
 
     ``proto_pass="fused"`` adapts the round to the single-pass training
     engine: the caller hands the RAW Eq. 3 accumulators its training
@@ -288,7 +363,9 @@ def make_profe_round(mesh, student_specs, bits: int = 16,
     adj = None if adjacency is None else np.asarray(adjacency)
     mode = _resolve_exchange(exchange, adj, mesh)
     if mode == "gather":
-        fn = _make_profe_round_gather(mesh, student_specs, wire, adj)
+        fn = _plane_views_adapter(
+            _make_profe_round_gather(mesh, student_specs, wire, adj),
+            stateful=wire.error_feedback)
     elif mode == "ppermute":
         if _inner_size(mesh) == 1:
             fn = _make_profe_round_ppermute(mesh, student_specs, wire,
@@ -321,7 +398,31 @@ def _quantize_with_state(mesh, wire: WireSpec, buf, seg_ids, meta,
                                                  seg_bits=meta[4],
                                                  use_kernels=False)
         return codes, scales, None
-    res_buf, _ids, res_meta = Q.pack_tree_nodes(ef_state.residual)
+    res = ef_state.residual
+    if isinstance(res, dict) and is_plane(res.get("student")):
+        # plane-backed residual: its student rows already live in the
+        # wire layout — splice, quantize in the shared sweep, splice the
+        # fresh error back into a plane (zero repack, like the payload)
+        res_buf, _i, _m, r_p, span = Q.pack_plane_payload(
+            res["protos"], res["student"])
+        res_buf = _constrain_buf(mesh, res_buf, "pod")
+        codes, scales, new_res = Q.quantize_packed_buffer(
+            buf, seg_ids, meta[2], seg_bits=meta[4], use_kernels=False,
+            residual=res_buf, ef_decay=wire.ef_decay)
+        new_res = _constrain_buf(mesh, new_res, "pod")
+        n, c_cls, p_dim = res["protos"].shape
+        pr = new_res[:, :r_p].reshape(n, -1)[:, :c_cls * p_dim] \
+            .reshape(n, c_cls, p_dim)
+        spl = res["student"]
+        sbuf = new_res[:, r_p:r_p + span]
+        pad = spl.meta.rows - span
+        if pad:
+            sbuf = jnp.pad(sbuf, ((0, 0), (0, pad), (0, 0)))
+        residual = {"protos": pr,
+                    "student": Plane(sbuf, spl.raw, spl.meta)}
+        return codes, scales, CodecState(residual,
+                                         seq=next_seq(ef_state.seq))
+    res_buf, _ids, res_meta = Q.pack_tree_nodes(res)
     res_buf = _constrain_buf(mesh, res_buf, "pod")
     codes, scales, new_res = Q.quantize_packed_buffer(
         buf, seg_ids, meta[2], seg_bits=meta[4], use_kernels=False,
@@ -332,8 +433,16 @@ def _quantize_with_state(mesh, wire: WireSpec, buf, seg_ids, meta,
 
 
 def _constrain_ef_state(mesh, state: CodecState, student_specs):
+    res = state.residual
+    if isinstance(res, dict) and is_plane(res.get("student")):
+        pl = res["student"]
+        return CodecState(residual={
+            "protos": jax.lax.with_sharding_constraint(
+                res["protos"], NamedSharding(mesh, P("pod", None, None))),
+            "student": Plane(_constrain_buf(mesh, pl.buf, "pod"),
+                             pl.raw, pl.meta)}, seq=state.seq)
     return CodecState(residual=_constrain_over_pod(
-        mesh, state.residual, ef_state_specs(student_specs).residual,
+        mesh, res, ef_state_specs(student_specs).residual,
         "pod"), seq=state.seq)
 
 
@@ -371,8 +480,8 @@ def _packed_round_core(mesh, student_specs, wire: WireSpec, adj):
 
     def _round(students, protos, counts, sizes, ef_state):
         n = counts.shape[0]
-        payload = {"protos": protos, "student": students}
-        buf, seg_ids, meta = Q.pack_tree_nodes(payload, wire)
+        buf, seg_ids, meta, ploc, splice = _pack_payload(protos, students,
+                                                         wire)
         seg_bits = meta[4]
         buf = _constrain_buf(mesh, buf, "pod")
         # jnp codec flavor: GSPMD partitions it over the mesh (the
@@ -415,14 +524,11 @@ def _packed_round_core(mesh, student_specs, wire: WireSpec, adj):
         mixed = Q.mix_packed(buf, codes, row_delta, w_self_v, w_rows,
                              use_kernels=False)
         mixed = _constrain_buf(mesh, mixed, "pod")
-        new_students = jax.tree_util.tree_map(
-            lambda new, old: new.astype(old.dtype),
-            Q.unpack_tree_nodes(mixed, meta)["student"], students)
-        new_students = _constrain_over_pod(mesh, new_students,
-                                           student_specs, "pod")
+        new_students = _splice_students(mesh, mixed, meta, students,
+                                        splice, student_specs)
 
         # prototypes: receiver-side view straight from the packed codes
-        prow, pnrows, pshape = _proto_recipe(payload, meta)
+        prow, pnrows, pshape = ploc
         pdeq = codes[:, prow:prow + pnrows].astype(jnp.float32) * \
             row_delta[:, prow:prow + pnrows, None]
         cdim = pshape[1] * pshape[2]
@@ -452,8 +558,8 @@ def _make_profe_round_ppermute(mesh, student_specs, wire: WireSpec,
     perms, srcs = _perm_lowering(adj)
 
     def _round(students, protos, counts, sizes, ef_state):
-        payload = {"protos": protos, "student": students}
-        buf, seg_ids, meta = Q.pack_tree_nodes(payload, wire)
+        buf, seg_ids, meta, ploc, splice = _pack_payload(protos, students,
+                                                         wire)
         seg_bits = meta[4]
         buf = _constrain_buf(mesh, buf, "pod")
         # the stateful quantize runs BEFORE the permutes — the residual
@@ -462,7 +568,7 @@ def _make_profe_round_ppermute(mesh, student_specs, wire: WireSpec,
         codes, scales, new_state = _quantize_with_state(
             mesh, wire, buf, seg_ids, meta, ef_state)
         w_self_v, w_neigh = gossip_matrix_dyn(adj, sizes)
-        prow, pnrows, pshape = _proto_recipe(payload, meta)
+        prow, pnrows, pshape = ploc
         ccls, pdim = pshape[1], pshape[2]
         ids = jnp.asarray(seg_ids)
 
@@ -559,11 +665,8 @@ def _make_profe_round_ppermute(mesh, student_specs, wire: WireSpec,
 
         mixed, global_protos, proto_mask = exchange(
             buf, codes, scales, counts, w_self_v, w_neigh)
-        new_students = jax.tree_util.tree_map(
-            lambda new, old: new.astype(old.dtype),
-            Q.unpack_tree_nodes(mixed, meta)["student"], students)
-        new_students = _constrain_over_pod(mesh, new_students,
-                                           student_specs, "pod")
+        new_students = _splice_students(mesh, mixed, meta, students,
+                                        splice, student_specs)
         return new_students, global_protos, proto_mask, new_state
 
     return _wrap_ef(_round, mesh, student_specs, wire)
@@ -600,8 +703,8 @@ def _make_profe_round_ppermute_sharded(mesh, student_specs, wire: WireSpec,
     fallback = _packed_round_core(mesh, student_specs, wire, adj)
 
     def _round(students, protos, counts, sizes, ef_state):
-        payload = {"protos": protos, "student": students}
-        buf, seg_ids, meta = Q.pack_tree_nodes(payload, wire)
+        buf, seg_ids, meta, ploc, splice = _pack_payload(protos, students,
+                                                         wire)
         seg_bits = meta[4]
         ids_np = np.asarray(seg_ids)
         layout = row_shard_order(np.asarray(seg_bits)[ids_np], M)
@@ -622,7 +725,7 @@ def _make_profe_round_ppermute_sharded(mesh, student_specs, wire: WireSpec,
         codes, scales, new_state = _quantize_with_state(
             mesh, wire, buf, seg_ids, meta, ef_state)
         w_self_v, w_neigh = gossip_matrix_dyn(adj, sizes)
-        prow, pnrows, pshape = _proto_recipe(payload, meta)
+        prow, pnrows, pshape = ploc
         ccls, pdim = pshape[1], pshape[2]
 
         # rows into shard order; sidecars padded to a multiple of M so
@@ -718,11 +821,8 @@ def _make_profe_round_ppermute_sharded(mesh, student_specs, wire: WireSpec,
         mixed = _constrain_buf(mesh, jnp.take(mixed_p,
                                               jnp.asarray(inv_order),
                                               axis=1), "pod")
-        new_students = jax.tree_util.tree_map(
-            lambda new, old: new.astype(old.dtype),
-            Q.unpack_tree_nodes(mixed, meta)["student"], students)
-        new_students = _constrain_over_pod(mesh, new_students,
-                                           student_specs, "pod")
+        new_students = _splice_students(mesh, mixed, meta, students,
+                                        splice, student_specs)
         return new_students, global_protos, proto_mask, new_state
 
     return _wrap_ef(_round, mesh, student_specs, wire)

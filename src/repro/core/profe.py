@@ -28,6 +28,7 @@ from repro.core.scanning import scan
 from repro.kernels.proto_accum.ops import proto_accumulate
 from repro.models import forward
 from repro.optim import Optimizer, clip_by_global_norm
+from repro.optim.plane import Plane, as_tree, plane_from_tree
 
 
 class NodeState(NamedTuple):
@@ -44,6 +45,11 @@ class NodeState(NamedTuple):
     # inside NodeState means the stacked engine carries it through the
     # donated round program and checkpoints capture it for exact resume.
     wire_state: Any = None
+    # EMA prototype carry (None unless FederationConfig.proto_ema > 0):
+    # last round's raw Eq. 3 accumulators ``(sums [C, P], counts [C])``,
+    # decayed into the next round's accumulation before normalization.
+    # Same checkpoint/donation story as wire_state.
+    proto_acc: Any = None
 
 
 def proto_labels(cfg: ModelConfig, batch) -> jnp.ndarray:
@@ -126,13 +132,24 @@ def make_profe_step(teacher_cfg: ModelConfig, student_cfg: ModelConfig,
                                                  teacher_out)
 
         def s_loss(sp):
-            return student_loss(student_cfg, sp, batch, state.global_protos,
+            # as_tree: a plane-backed student differentiates through the
+            # slice+reshape views (buf cotangent, padding lanes zero)
+            return student_loss(student_cfg, as_tree(sp), batch,
+                                state.global_protos,
                                 state.proto_mask, alpha, fed.beta_s,
                                 fed.kd_temperature, teacher_out, remat=remat)
 
         (ls, out_s), gs = jax.value_and_grad(s_loss, has_aux=True)(state.student)
-        gs, gnorm = clip_by_global_norm(gs, grad_clip)
-        student, opt_s_state = opt_s.update(gs, state.opt_s, state.student)
+        if isinstance(state.student, Plane):
+            # fused path: the plane optimizer clips + updates in one
+            # sweep over the buffer and reports the pre-clip norm
+            student, opt_s_state = opt_s.update(gs, state.opt_s,
+                                                state.student)
+            gnorm = opt_s_state["gnorm"]
+        else:
+            gs, gnorm = clip_by_global_norm(gs, grad_clip)
+            student, opt_s_state = opt_s.update(gs, state.opt_s,
+                                                state.student)
         # the f1 the loss already computed rides out in metrics so the
         # fused Eq. 3 pass (proto_pass="fused") can accumulate it
         # without a second forward; exact mode never reads it (DCE'd)
@@ -150,11 +167,22 @@ def make_profe_step(teacher_cfg: ModelConfig, student_cfg: ModelConfig,
 
 def init_node_state(teacher_cfg: ModelConfig, student_cfg: ModelConfig,
                     rng, opt_s: Optimizer, opt_t: Optimizer,
-                    n_classes: int) -> NodeState:
+                    n_classes: int, *, plane: bool = False,
+                    proto_ema: float = 0.0) -> NodeState:
+    """``plane=True`` packs the student into a flat parameter plane
+    (``opt_s`` must then be a ``make_plane_optimizer``); ``proto_ema``
+    > 0 allocates the zero EMA accumulator carry."""
     from repro.models import init_params
     k1, k2 = jax.random.split(rng)
     teacher = init_params(teacher_cfg, k1)
     student = init_params(student_cfg, k2)
+    if plane:
+        student = plane_from_tree(student)
+    proto_acc = None
+    if proto_ema and proto_ema > 0:
+        proto_acc = (jnp.zeros((n_classes, student_cfg.proto_dim),
+                               jnp.float32),
+                     jnp.zeros((n_classes,), jnp.float32))
     return NodeState(
         student=student,
         teacher=teacher,
@@ -163,6 +191,7 @@ def init_node_state(teacher_cfg: ModelConfig, student_cfg: ModelConfig,
         global_protos=jnp.zeros((n_classes, student_cfg.proto_dim), jnp.float32),
         proto_mask=jnp.zeros((n_classes,), jnp.float32),
         round_idx=jnp.zeros((), jnp.int32),
+        proto_acc=proto_acc,
     )
 
 
@@ -240,18 +269,25 @@ def _proto_scan_fn(cfg: ModelConfig, n_classes: int):
 
 
 def compute_local_prototypes(cfg: ModelConfig, params, batches,
-                             n_classes: int):
+                             n_classes: int, *, raw: bool = False):
     """Stream local data once, accumulate Eq. 3 sums/counts.
 
     Uniform-shape batch streams (the common drop-remainder case) stack
     into one ``[T, B, ...]`` program: a single jitted scan instead of a
     host loop with a dispatch + device round-trip per batch.  Ragged
-    streams keep the cached per-batch accumulator."""
+    streams keep the cached per-batch accumulator.
+
+    ``raw=True`` returns the un-normalized ``(sums, counts)``
+    accumulators — the EMA prototype carry blends raw accumulators
+    across rounds before the shared ``normalize_protos`` division."""
+    params = as_tree(params)        # plane-backed students forward as views
     batch_list = [dict(b) for b in batches]
     if not batch_list:
+        sums = jnp.zeros((n_classes, cfg.proto_dim), jnp.float32)
         counts = jnp.zeros((n_classes,), jnp.float32)
-        return normalize_protos(jnp.zeros((n_classes, cfg.proto_dim),
-                                          jnp.float32), counts), counts
+        if raw:
+            return sums, counts
+        return normalize_protos(sums, counts), counts
     shapes = {tuple(sorted((k, np.shape(v)) for k, v in b.items()))
               for b in batch_list}
     if len(shapes) == 1:
@@ -265,4 +301,6 @@ def compute_local_prototypes(cfg: ModelConfig, params, batches,
         acc = _proto_acc_step(cfg, n_classes)
         for batch in batch_list:
             sums, counts = acc(params, sums, counts, batch)
+    if raw:
+        return sums, counts
     return normalize_protos(sums, counts), counts

@@ -120,6 +120,22 @@ def quantize_dequantize_per_node(tree, bits: int = 16, *,
         return ef_quantize_dequantize_tree(
             tree, spec if spec is not None else WireSpec.from_bits(bits),
             state, node_axis=True)
+    if packed and isinstance(tree, dict):
+        # flat-parameter-plane payload: the student rides a Plane, so
+        # the pack step is a row slice off its buffer and the receiver
+        # view comes back as a plane (zero repack on either end)
+        from repro.optim.plane import Plane
+        if isinstance(tree.get("student"), Plane):
+            from repro.core.wire_state import CodecState, next_seq
+            from repro.kernels.quantize.ops import (
+                quantize_dequantize_plane_payload)
+            if state is not None:
+                recv, new_res = quantize_dequantize_plane_payload(
+                    tree, bits, spec=spec, use_kernels=use_kernels,
+                    rng=rng, residual=state.residual)
+                return recv, CodecState(new_res, seq=next_seq(state.seq))
+            return quantize_dequantize_plane_payload(
+                tree, bits, spec=spec, use_kernels=use_kernels, rng=rng)
     if packed and any(_is_float(x) for x in jax.tree_util.tree_leaves(tree)):
         from repro.core.wire_state import CodecState, next_seq
         from repro.kernels.quantize.ops import (

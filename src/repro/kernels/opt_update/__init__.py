@@ -1,0 +1,5 @@
+from repro.kernels.opt_update.ops import (OPT_UPDATE_TRACES,
+                                          fused_adamw_update,
+                                          fused_sgd_update)
+
+__all__ = ["OPT_UPDATE_TRACES", "fused_adamw_update", "fused_sgd_update"]

@@ -1,0 +1,76 @@
+"""Dispatch over the fused plane-update sweeps: Pallas on TPU, the
+bit-identical jnp reference elsewhere (``ref.py``), interpret mode
+threading for the CPU test suite — the same policy as
+``kernels/quantize/ops``.
+
+``use_kernels=None`` defaults to the backend check; pass ``True`` on a
+non-TPU host to exercise the Pallas kernels in interpret mode (asserted
+against the reference in tests).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.opt_update.opt_update import (adamw_update_pallas,
+                                                 sgd_update_pallas)
+from repro.kernels.opt_update.ref import adamw_update_ref, sgd_update_ref
+
+# Trace bookkeeping (same pattern as profe.PROTO_ACC_TRACES): the body
+# below runs only when jax (re)traces the enclosing program, so the
+# counter measures exactly the retrace behavior the static PlaneMeta is
+# meant to eliminate — asserted == 1 over repeated jitted steps.
+OPT_UPDATE_TRACES: Dict[str, int] = {}
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _s11(x) -> jnp.ndarray:
+    return jnp.reshape(jnp.asarray(x, jnp.float32), (1, 1))
+
+
+def fused_sgd_update(g, p, mu, lr, scale, *, momentum: float,
+                     weight_decay: float,
+                     use_kernels: Optional[bool] = None):
+    """Fused clipped sgd+momentum sweep over plane buffers ``[..., R, C]``
+    -> ``(new_p, new_mu)``.  ``scale`` is the precomputed global-norm
+    clip factor (1.0 disables)."""
+    OPT_UPDATE_TRACES["sgd"] = OPT_UPDATE_TRACES.get("sgd", 0) + 1
+    if use_kernels is None:
+        use_kernels = jax.default_backend() == "tpu"
+    if not use_kernels:
+        return sgd_update_ref(g, p, mu, lr=lr, scale=scale,
+                              momentum=momentum, weight_decay=weight_decay)
+    c = g.shape[-1]
+    newp, newmu = sgd_update_pallas(
+        g.reshape(-1, c), p.reshape(-1, c), mu.reshape(-1, c),
+        _s11(lr), _s11(scale), momentum=momentum,
+        weight_decay=weight_decay, interpret=_interpret())
+    return newp.reshape(p.shape), newmu.reshape(p.shape)
+
+
+def fused_adamw_update(g, p, mu, nu, lr, scale, bc1, bc2, *, b1: float,
+                       b2: float, eps: float, weight_decay: float,
+                       use_kernels: Optional[bool] = None):
+    """Fused clipped adamw sweep over plane buffers ``[..., R, C]``
+    -> ``(new_p, new_mu, new_nu)``.  ``bc1``/``bc2`` are the traced
+    bias-correction scalars of the current step."""
+    OPT_UPDATE_TRACES["adamw"] = OPT_UPDATE_TRACES.get("adamw", 0) + 1
+    if use_kernels is None:
+        use_kernels = jax.default_backend() == "tpu"
+    if not use_kernels:
+        return adamw_update_ref(g, p, mu, nu, lr=lr, scale=scale, bc1=bc1,
+                                bc2=bc2, b1=b1, b2=b2, eps=eps,
+                                weight_decay=weight_decay)
+    c = g.shape[-1]
+    newp, newmu, newnu = adamw_update_pallas(
+        g.reshape(-1, c), p.reshape(-1, c), mu.reshape(-1, c),
+        nu.reshape(-1, c), _s11(lr), _s11(scale), _s11(bc1), _s11(bc2),
+        b1=b1, b2=b2, eps=eps, weight_decay=weight_decay,
+        interpret=_interpret())
+    return newp.reshape(p.shape), newmu.reshape(p.shape), \
+        newnu.reshape(p.shape)

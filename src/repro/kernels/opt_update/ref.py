@@ -1,0 +1,49 @@
+"""jnp reference of the fused clip+update sweep — bit-identical to the
+per-leaf ``optim/optimizers.py`` math.
+
+Each function is the per-leaf optimizer's update expression applied
+elementwise to the whole plane buffer with the clip scale folded in
+(the per-leaf path scales grads leaf-by-leaf after
+``clip_by_global_norm``; here the multiply rides the same sweep).  All
+operands are fp32 (the plane dtype), so every ``astype`` in the
+per-leaf path is a no-op and the arithmetic matches expression for
+expression.  Plane padding is zero and stays zero: ``g = 0, p = 0`` is
+a fixed point of both updates (sgd: ``0 - lr*(0 + wd*0) = 0``; adamw:
+``0 - lr*(0/(0 + eps) + wd*0) = 0``), so padded lanes never drift and
+the wire splice never ships garbage.
+
+These run shape-agnostic (any ``[..., R, C]``), serve as the CPU
+dispatch target, and are the interpret-mode oracle for the Pallas
+kernels in ``opt_update.py``.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def sgd_update_ref(g, p, mu, *, lr, scale, momentum: float,
+                   weight_decay: float):
+    """One fused sgd+momentum step over a plane buffer.
+
+    Mirrors ``optimizers.sgd``: ``mu = momentum*mu + g_clipped``,
+    ``p' = p - lr*(mu + wd*p)``.  Returns ``(new_p, new_mu)``."""
+    g = g * scale
+    mu = momentum * mu + g
+    newp = p - lr * (mu + weight_decay * p)
+    return newp, mu
+
+
+def adamw_update_ref(g, p, mu, nu, *, lr, scale, bc1, bc2, b1: float,
+                     b2: float, eps: float, weight_decay: float):
+    """One fused adamw step over a plane buffer.
+
+    Mirrors ``optimizers.adamw``'s ``upd``: moment EMAs on the clipped
+    grad, bias correction by the traced ``bc1``/``bc2`` scalars, decayed
+    parameter step.  Returns ``(new_p, new_mu, new_nu)``."""
+    g32 = g * scale
+    mu = b1 * mu + (1 - b1) * g32
+    nu = b2 * nu + (1 - b2) * jnp.square(g32)
+    mh = mu / bc1
+    vh = nu / bc2
+    newp = p - lr * (mh / (jnp.sqrt(vh) + eps) + weight_decay * p)
+    return newp, mu, nu

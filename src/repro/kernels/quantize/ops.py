@@ -753,6 +753,141 @@ def quantize_dequantize_tree_packed_nodes(tree, bits: int = 16, *,
     return recv
 
 
+# ---------------------------------------------------------------------------
+# flat-parameter-plane wire handoff: the pack step becomes a row slice
+# ---------------------------------------------------------------------------
+# A plane-backed student (``repro.optim.plane.Plane``) already stores its
+# float leaves in EXACTLY this codec's row layout (per leaf: prod(shape)
+# padded to _COLS columns, flatten order, trailing 8-alignment rows), so
+# the round-boundary wire payload {"protos", "student"} never re-gathers
+# the student: its packed rows are spliced straight off the plane buffer
+# and only the (tiny) prototype rows are packed fresh.  Bit-identical to
+# ``pack_tree_nodes`` on the leaf-view payload (asserted in tests).
+
+def pack_plane_payload(protos, plane, spec: Optional[WireSpec] = None):
+    """Pack the wire payload ``{"protos": [N, C, P], "student": Plane}``
+    into the packed node wire format without re-packing the student.
+
+    Returns ``(buf, seg_ids, meta, r_protos, span)`` — the first three
+    exactly as :func:`pack_tree_nodes` would produce for the equivalent
+    leaf-view payload (same treedef, recipe, segment ids and widths),
+    plus the prototype row count and the student's leaf-row span so the
+    receiver can splice the dequantized rows back into a plane."""
+    n, c_cls, p_dim = protos.shape
+    if plane.buf.ndim != 3 or plane.buf.shape[0] != n:
+        raise ValueError(f"plane buffer {getattr(plane.buf, 'shape', None)} "
+                         f"is not stacked over the payload's {n} nodes")
+    per = c_cls * p_dim
+    flat_p = protos.reshape(n, per).astype(jnp.float32)
+    pad = (-per) % _COLS
+    if pad:
+        flat_p = jnp.pad(flat_p, ((0, 0), (0, pad)))
+    rows_p = flat_p.reshape(n, -1, _COLS)                 # [N, r_p, C]
+    r_p = rows_p.shape[1]
+
+    recipe: List[Tuple] = [("packed", protos.shape, protos.dtype, 0, r_p, 0)]
+    seg_parts: List[np.ndarray] = [np.zeros((r_p,), np.int32)]
+    seg_bits: List[int] = [spec.bits_for("protos")] if spec is not None \
+        else []
+    seg = 1
+    span = 0
+    for item in plane.meta.recipe:
+        if item[0] == "raw":
+            recipe.append(("raw", plane.raw[item[1]]))
+            continue
+        _, shape, dtype, prow, r_leaf = item
+        recipe.append(("packed", (n,) + tuple(shape), dtype,
+                       r_p + prow, r_leaf, seg))
+        seg_parts.append(np.full((r_leaf,), seg, np.int32))
+        if spec is not None:
+            seg_bits.append(spec.bits_for("student"))
+        seg += 1
+        span = max(span, prow + r_leaf)
+    # the splice: the plane's leaf rows ARE the student's packed rows
+    buf = jnp.concatenate([rows_p, plane.buf[:, :span]], axis=1)
+    seg_ids = np.concatenate(seg_parts)
+    rpad = (-buf.shape[1]) % 8
+    if rpad:
+        buf = jnp.pad(buf, ((0, 0), (0, rpad), (0, 0)))
+        seg_ids = np.concatenate([seg_ids,
+                                  np.full((rpad,), seg - 1, np.int32)])
+    n_leaves = len(plane.meta.recipe)
+    inner = jax.tree_util.tree_unflatten(plane.meta.treedef,
+                                         list(range(n_leaves)))
+    treedef = jax.tree_util.tree_structure({"protos": 0, "student": inner})
+    bits_arr = np.asarray(seg_bits, np.int32) if spec is not None else None
+    meta = (treedef, tuple(recipe), seg, n, bits_arr)
+    return buf, seg_ids, meta, r_p, span
+
+
+def quantize_dequantize_plane_payload(payload, bits: int = 16, *,
+                                      spec: Optional[WireSpec] = None,
+                                      use_kernels: Optional[bool] = None,
+                                      rng=None, residual=None):
+    """Receiver-side reconstruction of a plane-backed wire payload
+    ``{"protos": [N, C, P], "student": Plane}`` — the plane twin of
+    :func:`quantize_dequantize_tree_packed_nodes`, bit-identical to it
+    on the equivalent leaf-view payload (asserted in tests).
+
+    The student side never leaves the packed layout: its rows are
+    spliced off the plane buffer, quantized in the shared buffer sweep,
+    and the dequantized rows are spliced back into a fresh plane (the
+    receiver view mixes buffer-against-buffer downstream — zero repack
+    on either end; the plane's zero padding lanes quantize to zero, so
+    the layout invariant survives the round-trip).  With ``residual``
+    (``{"protos", "student": Plane}`` mirroring the payload — the
+    error-feedback codec) returns ``(reconstruction, new_residual)``;
+    wire format unchanged."""
+    from repro.optim.plane import Plane
+    protos, plane = payload["protos"], payload["student"]
+    if use_kernels is None:
+        use_kernels = jax.default_backend() == "tpu"
+    if spec is not None and spec.stochastic_rounding and rng is None:
+        raise ValueError("WireSpec.stochastic_rounding is set but no rng "
+                         "was passed — stochastic rounding needs an "
+                         "explicit PRNG key")
+    if spec is not None and spec.error_feedback and residual is None:
+        raise ValueError("WireSpec.error_feedback is set but no residual "
+                         "was passed — the stateful codec needs the "
+                         "carried per-node residual (CodecState)")
+    buf, seg_ids, meta, r_p, span = pack_plane_payload(protos, plane, spec)
+
+    def split(b):
+        pr = b[:, :r_p].reshape(protos.shape[0], -1)
+        pr = pr[:, :protos.shape[1] * protos.shape[2]].reshape(protos.shape)
+        sbuf = b[:, r_p:r_p + span]
+        if plane.meta.rows > span:
+            sbuf = jnp.pad(sbuf,
+                           ((0, 0), (0, plane.meta.rows - span), (0, 0)))
+        return pr, sbuf
+
+    if residual is not None:
+        res_plane = residual["student"]
+        res_buf = pack_plane_payload(residual["protos"], res_plane, None)[0]
+        if res_buf.shape != buf.shape:
+            raise ValueError(
+                f"residual buffer {res_buf.shape} does not match the "
+                f"payload buffer {buf.shape} — the residual must mirror "
+                f"the payload layout")
+        codes, deltas, new_res_buf = quantize_packed_buffer(
+            buf, seg_ids, meta[2], bits, seg_bits=meta[4],
+            use_kernels=use_kernels, rng=rng, residual=res_buf,
+            ef_decay=spec.ef_decay if spec is not None else 1.0)
+    else:
+        codes, deltas = quantize_packed_buffer(
+            buf, seg_ids, meta[2], bits, seg_bits=meta[4],
+            use_kernels=use_kernels, rng=rng)
+    row_delta = deltas[:, seg_ids]
+    deq = codes.astype(jnp.float32) * row_delta[:, :, None]
+    pr, sbuf = split(deq)
+    recv = {"protos": pr, "student": Plane(sbuf, plane.raw, plane.meta)}
+    if residual is not None:
+        rp, rbuf = split(new_res_buf)
+        return recv, {"protos": rp,
+                      "student": Plane(rbuf, res_plane.raw, res_plane.meta)}
+    return recv
+
+
 def packed_wire_rows(tree, *, node_axis: bool = True) -> Tuple[int, int]:
     """Static layout of the packed node buffer: ``(R_padded, T)`` — rows
     per node (8-aligned) and scale-segment count.  Works on arrays or

@@ -1,3 +1,29 @@
+"""Optimizers over parameter pytrees — and over the flat parameter
+plane.
+
+Two representations share the ``Optimizer(init, update)`` contract:
+
+* **Per-leaf** (``optimizers.py``): ``sgd`` / ``adamw`` / ``adafactor``
+  map the update over every leaf of the params pytree; the global-norm
+  clip (``clip_by_global_norm``) walks the leaves once more.  This is
+  the semantic reference, and the only path for ``adafactor`` (its
+  factored second moment is per-leaf-shape state) and for non-fp32 /
+  ragged-dtype models.
+
+* **Flat plane** (``plane.py``): all float leaves of a model live in
+  ONE contiguous fp32 ``[R, 512]`` buffer (node-stacked:
+  ``[N, R, 512]``) in tree-flatten order — each leaf padded to a
+  multiple of 512 columns, R padded to a multiple of 8, the exact
+  layout of the wire codec's ``pack_tree_nodes`` so the round-boundary
+  wire path splices student rows straight off the plane.  A static
+  ``PlaneMeta`` recipe yields slice+reshape views (``as_tree``) for the
+  forward pass, and ``make_plane_optimizer`` fuses clip+update into one
+  sweep over the buffer (``kernels/opt_update``; CPU path bit-identical
+  to the per-leaf reference, asserted in tests).  Engines enable it via
+  ``FederationConfig.param_plane`` ("auto": profe + sgd/adamw +
+  all-float32 student; the gather exchange and per-leaf EF reference
+  paths unwrap the plane to views).
+"""
 from repro.optim.optimizers import (
     Optimizer,
     adafactor,
@@ -6,9 +32,21 @@ from repro.optim.optimizers import (
     make_optimizer,
     sgd,
 )
+from repro.optim.plane import (
+    Plane,
+    PlaneMeta,
+    as_tree,
+    is_plane,
+    make_plane_optimizer,
+    plane_from_tree,
+    plane_global_norm,
+    plane_to_tree,
+)
 from repro.optim.schedule import constant, cosine_decay, warmup_cosine
 
 __all__ = [
     "Optimizer", "adafactor", "adamw", "clip_by_global_norm",
     "make_optimizer", "sgd", "constant", "cosine_decay", "warmup_cosine",
+    "Plane", "PlaneMeta", "as_tree", "is_plane", "make_plane_optimizer",
+    "plane_from_tree", "plane_global_norm", "plane_to_tree",
 ]

@@ -152,7 +152,10 @@ def adafactor(lr_or_sched, decay: float = 0.8, eps: float = 1e-30,
 def make_optimizer(name: str, lr_or_sched, *, weight_decay: float = 0.01,
                    momentum: float = 0.9) -> Optimizer:
     if name == "sgd":
-        return sgd(lr_or_sched, momentum=momentum, weight_decay=0.0)
+        # the caller's weight_decay is honored (it was silently dropped
+        # here once — decoupled decay is well-defined for sgd too)
+        return sgd(lr_or_sched, momentum=momentum,
+                   weight_decay=weight_decay)
     if name == "adamw":
         return adamw(lr_or_sched, weight_decay=weight_decay)
     if name == "adafactor":

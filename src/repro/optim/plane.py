@@ -1,0 +1,282 @@
+"""Flat parameter plane: one contiguous fp32 buffer per model.
+
+Every float leaf of a parameter pytree is flattened into ONE ``[R, 512]``
+fp32 row buffer (stacked node state: ``[N, R, 512]``) laid out exactly
+like the wire codec's ``kernels/quantize/ops.pack_tree_nodes`` — per
+leaf, ``prod(shape)`` elements padded to a multiple of 512 columns in
+tree-flatten order, with trailing alignment rows padding R to a multiple
+of 8.  A static :class:`PlaneMeta` recipe maps leaves to row spans, so
+``plane_to_tree`` reconstructs the original pytree from cheap
+slice+reshape views (``models/forward`` consumes the views untouched),
+and the round-boundary wire path can splice the student rows straight
+out of the plane (``ops.pack_plane_payload`` — the codec's pack step
+becomes a row slice instead of a per-leaf re-gather).
+
+On top of the plane, :func:`make_plane_optimizer` fuses global-norm
+clipping and the optimizer update into one sweep over the buffer
+(``kernels/opt_update``): a single launch per step instead of ~30 small
+per-leaf ops.  The CPU reference path is bit-identical to the per-leaf
+``optim/optimizers.py`` math — the global norm is accumulated per leaf
+VIEW in flatten order (the exact reduction the per-leaf
+``clip_by_global_norm`` performs), and the elementwise update is the
+same expression over the buffer (plane padding is zero and stays zero:
+``g = 0, p = 0`` is a fixed point of both sgd and adamw updates).
+
+The plane keeps the per-node shape generic: non-float leaves ride along
+as ``raw`` children (stable checkpoint keys), but gradient-driven use
+(the federation engines) requires an all-float32 student — ragged
+dtypes and ``adafactor`` states keep the per-leaf reference path (see
+``repro.optim`` module docstring).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.quantize.ops import _COLS
+from repro.optim.optimizers import Optimizer
+
+
+def _prod(shape) -> int:
+    n = 1
+    for s in shape:
+        n *= s
+    return n
+
+
+class PlaneMeta(NamedTuple):
+    """Static (hashable) recipe mapping pytree leaves to plane rows.
+
+    ``recipe`` entries: ``("leaf", shape, dtype, row, r_leaf)`` for float
+    leaves packed at row span ``[row, row + r_leaf)``, or ``("raw", i)``
+    for the i-th non-float passthrough child.  ``rows`` is the padded
+    row count (multiple of 8) of the buffer.
+    """
+    treedef: Any
+    recipe: Tuple
+    rows: int
+    n_raw: int
+
+
+class Plane:
+    """One model's float parameters as a contiguous ``[R, 512]`` fp32
+    buffer (``[N, R, 512]`` when node-stacked) plus non-float
+    passthrough leaves.  Registered as a pytree-with-keys: ``buf`` and
+    each ``raw{i}`` are traced children (they stack, vmap, donate and
+    checkpoint like any leaf), the :class:`PlaneMeta` is static aux."""
+
+    __slots__ = ("buf", "raw", "meta")
+
+    def __init__(self, buf, raw: Tuple, meta: PlaneMeta):
+        self.buf = buf
+        self.raw = tuple(raw)
+        self.meta = meta
+
+    def to_tree(self):
+        return plane_to_tree(self)
+
+    def __repr__(self):
+        return (f"Plane(buf={getattr(self.buf, 'shape', None)}, "
+                f"raw={len(self.raw)}, rows={self.meta.rows})")
+
+
+def _plane_flatten_with_keys(p: Plane):
+    kids = [(jax.tree_util.DictKey("buf"), p.buf)]
+    kids += [(jax.tree_util.DictKey(f"raw{i}"), r)
+             for i, r in enumerate(p.raw)]
+    return kids, p.meta
+
+
+def _plane_flatten(p: Plane):
+    return (p.buf,) + p.raw, p.meta
+
+
+def _plane_unflatten(meta: PlaneMeta, children):
+    children = tuple(children)
+    return Plane(children[0], children[1:], meta)
+
+
+jax.tree_util.register_pytree_with_keys(
+    Plane, _plane_flatten_with_keys, _plane_unflatten, _plane_flatten)
+
+
+def plane_from_tree(tree) -> Plane:
+    """Pack a parameter pytree into a :class:`Plane`.
+
+    Float leaves land in the fp32 buffer in tree-flatten order with the
+    wire codec's exact per-leaf layout (pad ``prod(shape)`` to a
+    multiple of 512 columns, trailing rows pad R to a multiple of 8);
+    non-float leaves pass through as ``raw`` children."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    parts, recipe, raw = [], [], []
+    row = 0
+    for leaf in leaves:
+        is_float = hasattr(leaf, "dtype") and \
+            jnp.issubdtype(leaf.dtype, jnp.floating)
+        if not is_float:
+            recipe.append(("raw", len(raw)))
+            raw.append(leaf)
+            continue
+        per = _prod(leaf.shape)
+        flat = jnp.asarray(leaf).reshape(-1).astype(jnp.float32)
+        pad = (-per) % _COLS
+        if pad:
+            flat = jnp.pad(flat, (0, pad))
+        rows = flat.reshape(-1, _COLS)
+        recipe.append(("leaf", tuple(leaf.shape), np.dtype(leaf.dtype),
+                       row, rows.shape[0]))
+        parts.append(rows)
+        row += rows.shape[0]
+    if not parts:
+        raise ValueError("plane needs at least one float leaf")
+    buf = jnp.concatenate(parts, axis=0)
+    rpad = (-buf.shape[0]) % 8
+    if rpad:
+        buf = jnp.pad(buf, ((0, rpad), (0, 0)))
+    meta = PlaneMeta(treedef, tuple(recipe), buf.shape[0], len(raw))
+    return Plane(buf, tuple(raw), meta)
+
+
+def _leaf_view(buf, shape, row: int, r_leaf: int):
+    """Slice+reshape view of one leaf out of a (possibly node-stacked)
+    plane buffer — ``buf[..., row:row+r, :]`` reinterpreted as the leaf
+    shape under any leading axes."""
+    lead = tuple(buf.shape[:-2])
+    per = _prod(shape)
+    v = buf[..., row:row + r_leaf, :].reshape(lead + (-1,))
+    return v[..., :per].reshape(lead + tuple(shape))
+
+
+def plane_to_tree(plane: Plane):
+    """Inverse of :func:`plane_from_tree` — cheap views, works on both
+    per-node ``[R, C]`` and stacked ``[N, R, C]`` buffers (stacked
+    leaves come back with the extra leading node axis)."""
+    buf = plane.buf
+    leaves = []
+    for item in plane.meta.recipe:
+        if item[0] == "raw":
+            leaves.append(plane.raw[item[1]])
+            continue
+        _, shape, dtype, row, r_leaf = item
+        v = _leaf_view(buf, shape, row, r_leaf)
+        if dtype != np.dtype(np.float32):
+            v = v.astype(dtype)
+        leaves.append(v)
+    return jax.tree_util.tree_unflatten(plane.meta.treedef, leaves)
+
+
+def as_tree(params):
+    """Pytree view of ``params``: unwraps a :class:`Plane`, passes plain
+    pytrees through — the one adapter every tree-consuming boundary
+    (forward, eval, byte accounting, loop-engine wire) calls."""
+    return plane_to_tree(params) if isinstance(params, Plane) else params
+
+
+def is_plane(params) -> bool:
+    return isinstance(params, Plane)
+
+
+def student_row_span(meta: PlaneMeta) -> int:
+    """Rows of real leaf payload (excluding the trailing 8-alignment
+    padding) — the span the wire handoff splices out of the buffer."""
+    last = 0
+    for item in meta.recipe:
+        if item[0] == "leaf":
+            last = item[3] + item[4]
+    return last
+
+
+def plane_global_norm(grads: Plane) -> jnp.ndarray:
+    """Global grad norm over a plane, accumulated per leaf VIEW in
+    flatten order — bitwise identical to the per-leaf
+    ``clip_by_global_norm`` reduction (same shapes, same values, same
+    Python-ordered sum), unlike one flat reduction over the buffer
+    (different association, last-ulp drift)."""
+    buf = grads.buf
+    if buf.ndim != 2:
+        raise ValueError("plane_global_norm expects an unstacked [R, C] "
+                         "plane (the engines vmap the step over nodes)")
+    total = 0.0
+    for item in grads.meta.recipe:
+        if item[0] != "leaf":
+            continue
+        _, shape, _dtype, row, r_leaf = item
+        total = total + jnp.sum(jnp.square(
+            _leaf_view(buf, shape, row, r_leaf).astype(jnp.float32)))
+    return jnp.sqrt(total)
+
+
+def make_plane_optimizer(name: str, lr_or_sched, *,
+                         weight_decay: float = 0.01, momentum: float = 0.9,
+                         b1: float = 0.9, b2: float = 0.999,
+                         eps: float = 1e-8, grad_clip: float = 0.0,
+                         use_kernels=None) -> Optimizer:
+    """Fused clip+update optimizer over :class:`Plane` params.
+
+    Same ``(init, update)`` contract as the per-leaf optimizers, but
+    ``update`` takes Plane grads/params, performs the global-norm clip
+    (``grad_clip > 0``) and the sgd/adamw update in one fused sweep over
+    the ``[R, C]`` buffer (``kernels/opt_update``; Pallas on TPU, the
+    bit-identical jnp reference elsewhere), and reports the pre-clip
+    grad norm in the returned state under ``"gnorm"`` so the training
+    step needs no separate clip pass.  fp32 ``mu``/``nu`` live as
+    sibling ``[R, C]`` planes.  Supports ``"sgd"`` and ``"adamw"``;
+    ``adafactor`` (factored state is shape-dependent) stays per-leaf.
+    """
+    from repro.kernels.opt_update.ops import (fused_adamw_update,
+                                              fused_sgd_update)
+    if name not in ("sgd", "adamw"):
+        raise ValueError(f"plane optimizer supports 'sgd'/'adamw', "
+                         f"got {name!r}")
+    sched = lr_or_sched if callable(lr_or_sched) \
+        else (lambda _: jnp.float32(lr_or_sched))
+
+    def _clip_scale(grads: Plane):
+        gnorm = plane_global_norm(grads)
+        if grad_clip and grad_clip > 0:
+            scale = jnp.minimum(1.0, grad_clip / jnp.maximum(gnorm, 1e-9))
+        else:
+            scale = jnp.float32(1.0)
+        return gnorm, scale
+
+    if name == "sgd":
+        def init(params: Plane):
+            return {"mu": jnp.zeros_like(params.buf),
+                    "step": jnp.zeros((), jnp.int32),
+                    "gnorm": jnp.zeros((), jnp.float32)}
+
+        def update(grads: Plane, state, params: Plane):
+            gnorm, scale = _clip_scale(grads)
+            lr = sched(state["step"])
+            newp, mu = fused_sgd_update(
+                grads.buf, params.buf, state["mu"], lr, scale,
+                momentum=momentum, weight_decay=weight_decay,
+                use_kernels=use_kernels)
+            return (Plane(newp, params.raw, params.meta),
+                    {"mu": mu, "step": state["step"] + 1, "gnorm": gnorm})
+
+        return Optimizer(init, update)
+
+    def init(params: Plane):
+        return {"mu": jnp.zeros_like(params.buf),
+                "nu": jnp.zeros_like(params.buf),
+                "step": jnp.zeros((), jnp.int32),
+                "gnorm": jnp.zeros((), jnp.float32)}
+
+    def update(grads: Plane, state, params: Plane):
+        gnorm, scale = _clip_scale(grads)
+        step = state["step"] + 1
+        lr = sched(step)
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+        newp, mu, nu = fused_adamw_update(
+            grads.buf, params.buf, state["mu"], state["nu"],
+            lr, scale, bc1, bc2, b1=b1, b2=b2, eps=eps,
+            weight_decay=weight_decay, use_kernels=use_kernels)
+        return (Plane(newp, params.raw, params.meta),
+                {"mu": mu, "nu": nu, "step": step, "gnorm": gnorm})
+
+    return Optimizer(init, update)

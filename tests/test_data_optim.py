@@ -107,6 +107,25 @@ def test_sgd_converges():
     assert _optimize(sgd(0.05, momentum=0.5)) < 1e-3
 
 
+def test_sgd_weight_decay_honored():
+    """make_optimizer("sgd", ..., weight_decay=...) must reach sgd()
+    (it was silently dropped once) and apply decoupled decay:
+    p - lr * (mu + wd * p)."""
+    from repro.optim import make_optimizer
+    params = {"x": jnp.asarray([2.0, -4.0])}
+    grads = {"x": jnp.asarray([1.0, 1.0])}
+    wd, lr = 0.1, 0.5
+    opt = make_optimizer("sgd", lr, weight_decay=wd, momentum=0.0)
+    new, _ = opt.update(grads, opt.init(params), params)
+    want = params["x"] - lr * (grads["x"] + wd * params["x"])
+    np.testing.assert_allclose(np.asarray(new["x"]), np.asarray(want),
+                               rtol=1e-6)
+    # and it must differ from the no-decay update
+    plain = make_optimizer("sgd", lr, weight_decay=0.0, momentum=0.0)
+    new0, _ = plain.update(grads, plain.init(params), params)
+    assert float(jnp.max(jnp.abs(new["x"] - new0["x"]))) > 0
+
+
 def test_adamw_converges():
     assert _optimize(adamw(0.3, weight_decay=0.0)) < 1e-2
 
