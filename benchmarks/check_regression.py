@@ -26,7 +26,9 @@ and the committed rows themselves must keep the single-pass win —
 break-even, <= 1.05x, on the smaller rows, where the saved pass is
 inside timer noise), at every committed N the flat-parameter-plane
 fused clip+update sweep must beat the per-leaf reference
-(``update_fused_ms < update_per_leaf_ms``), and at the largest N the
+(``update_fused_ms < update_per_leaf_ms``), at every committed N the plane-resident grad and gossip-mix paths
+must beat their references (``grad_plane_ms < grad_repack_ms``,
+``mix_plane_ms < mix_tree_ms``), and at the largest N the
 fused in-scan proto marginal must cost at most HALF the exact second
 pass (``proto_fused_ms <= 0.5 * proto_exact_ms``).  A failure
 of the committed invariants means the committed file was refreshed
@@ -116,7 +118,21 @@ def check_wire(baseline_path: str, threshold: float) -> bool:
             failed |= verdict == "REGRESSION"
             print(f"{tag} wire codec: packed qdq {f_ms:7.2f} ms vs "
                   f"committed {b_ms:7.2f} ms  ({ratio:.2f}x)  {verdict}")
-            for ex, rep in brow["exchange"]["exchanges"].items():
+            # every byte field of the exchange report must match EXACTLY
+            # — not just the headline collective bytes: the accountant
+            # predictions (packed_pred/packed_copy/sidecar) and the
+            # per-kind / per-mesh-axis HLO attributions are all
+            # deterministic integers
+            bex, fex = brow["exchange"], frow.get("exchange", {})
+            for key, bv in bex.items():
+                if key == "exchanges" or "bytes" not in key:
+                    continue
+                fv = fex.get(key)
+                ok = fv == bv
+                failed |= not ok
+                print(f"{tag} {key}: {fv} vs committed {bv}  "
+                      f"{'OK' if ok else 'WIRE-FORMAT DRIFT'}")
+            for ex, rep in bex["exchanges"].items():
                 if "error" in rep:
                     # visible, so an error'd baseline mode can't hide
                     # forever — regenerate the baseline to bring it under
@@ -125,13 +141,19 @@ def check_wire(baseline_path: str, threshold: float) -> bool:
                           f"(baseline recorded {rep['error']!r} — refresh "
                           f"BENCH_wire_exchange.json)")
                     continue
+                fr = fex.get("exchanges", {}).get(ex, {})
                 fb = rep["collective_bytes_per_node"]
-                ff = frow["exchange"]["exchanges"].get(ex, {}).get(
-                    "collective_bytes_per_node")
+                ff = fr.get("collective_bytes_per_node")
                 ok = ff == fb
                 failed |= not ok
                 print(f"{tag} wire bytes [{ex}]: {ff} vs committed "
                       f"{fb}  {'OK' if ok else 'WIRE-FORMAT DRIFT'}")
+                for key in ("by_kind", "by_axis", "pod_by_kind_per_node"):
+                    if key in rep and fr.get(key) != rep[key]:
+                        failed = True
+                        print(f"{tag} wire bytes [{ex}].{key}: "
+                              f"{fr.get(key)} vs committed {rep[key]}  "
+                              f"WIRE-FORMAT DRIFT")
     return failed
 
 
@@ -176,6 +198,27 @@ def check_phases(baseline: dict, threshold: float, rounds: int) -> bool:
         print(f"N={n}: committed update fused {ph['update_fused_ms']:6.2f} "
               f"ms vs per-leaf {ph['update_per_leaf_ms']:6.2f} ms  "
               f"{'OK' if ok else 'FUSED-UPDATE-NOT-CHEAPER'}")
+    # plane-resident round invariants: the custom-vjp grad backward must
+    # beat the autodiff-through-views repack, and the buffer-native
+    # gossip mix must beat the tree mix + plane rebuild, at every
+    # committed N (rows without the sub-phases predate the
+    # plane-resident round and stay checkable)
+    for n, ph in sorted(phased.items(), key=lambda kv: int(kv[0])):
+        if "grad_plane_ms" not in ph:
+            continue
+        ok = ph["grad_plane_ms"] < ph["grad_repack_ms"]
+        failed |= not ok
+        print(f"N={n}: committed grad plane {ph['grad_plane_ms']:6.2f} ms "
+              f"vs repack {ph['grad_repack_ms']:6.2f} ms  "
+              f"{'OK' if ok else 'PLANE-GRAD-NOT-CHEAPER'}")
+    for n, ph in sorted(phased.items(), key=lambda kv: int(kv[0])):
+        if "mix_plane_ms" not in ph:
+            continue
+        ok = ph["mix_plane_ms"] < ph["mix_tree_ms"]
+        failed |= not ok
+        print(f"N={n}: committed mix plane {ph['mix_plane_ms']:6.2f} ms "
+              f"vs tree {ph['mix_tree_ms']:6.2f} ms  "
+              f"{'OK' if ok else 'PLANE-MIX-NOT-CHEAPER'}")
 
     big = phased[n_big]
     ok = big["proto_fused_ms"] <= 0.5 * big["proto_exact_ms"]

@@ -15,8 +15,10 @@ perf trajectory is tracked in ``BENCH_round_step.json``.
 train / proto (Eq. 3, exact pass AND the fused in-scan marginal) /
 codec (wire round-trip) / mix (gossip+aggregate) phase timings, an
 optimizer A/B (fused plane clip+update sweep vs the per-leaf
-reference, paired-interleaved), plus whole-round exact-vs-fused wall
-times — the numbers behind the ``proto_pass="fused"`` single-pass
+reference, paired-interleaved), a grad-path A/B (custom-vjp plane
+backward vs autodiff through the leaf views), a gossip-mix A/B
+(buffer-native stacked mix vs tree mix + plane rebuild), plus
+whole-round exact-vs-fused wall times — the numbers behind the ``proto_pass="fused"`` single-pass
 round and the flat parameter plane.  Each phase is jitted
 standalone (no donation) so constant inputs can be replayed; the fused
 proto cost is the marginal ``fused_train - train`` (clamped at 0)
@@ -64,7 +66,8 @@ from repro.data import batches, make_image_dataset, partition
 from repro.models import derive_student, forward
 from repro.optim import (clip_by_global_norm, make_optimizer,
                          make_plane_optimizer)
-from repro.optim.plane import as_tree, is_plane, plane_from_tree
+from repro.optim.plane import (as_tree, is_plane, plane_from_tree,
+                               plane_to_tree, plane_view_tree)
 from repro.wirespec import WireSpec, resolve_bits
 
 
@@ -364,6 +367,52 @@ def measure_phases(n_nodes: int, *, samples_per_node: int, batch_size: int,
         lambda: upd_leaf(views, views, leaf_state),
         lambda: upd_fused(planes, planes, plane_state),
         rounds=max(rounds, 10))
+
+    # plane-resident grad path: the custom-vjp backward packs the
+    # per-leaf cotangents into ONE [R, 512] buffer, vs autodiff through
+    # the plane_to_tree views (XLA's slice transposes: per-leaf pad +
+    # add into the buffer).  Same forward math on both sides, so the
+    # pair isolates the backward packing cost — interleaved A/B.
+    def _loss(tree):
+        return sum(jnp.sum(jnp.sin(l) * l)
+                   for l in jax.tree_util.tree_leaves(tree))
+
+    @jax.jit
+    def grad_plane(ps):
+        return jax.vmap(jax.grad(lambda p: _loss(plane_view_tree(p))))(
+            ps).buf
+
+    @jax.jit
+    def grad_repack(ps):
+        return jax.vmap(jax.grad(lambda p: _loss(plane_to_tree(p))))(
+            ps).buf
+
+    # both grad/mix pairs are sub-ms dispatch-bound ops with ~10%
+    # margins — 100 pairs keep the medians outside this container's
+    # timer noise (still ~0.1 s per pair set)
+    grad_repack_ms, grad_plane_ms = _paired_ms(
+        lambda: grad_repack(planes),
+        lambda: grad_plane(planes), rounds=max(rounds, 100))
+
+    # plane-resident gossip mix: the round's weighted mean applied
+    # straight to the stacked [N, R, 512] buffer vs the tree reference
+    # (R.mix_node_trees over the leaf views + the vmap(plane_from_tree)
+    # rebuild the plane path deletes at the round boundary).
+    @jax.jit
+    def mix_plane(ps):
+        bufs = ps.buf
+        return w_self[:, None, None] * bufs + jnp.tensordot(
+            w_neigh, bufs, axes=1)
+
+    @jax.jit
+    def mix_tree(ps):
+        v = as_tree(ps)
+        mixed = R.mix_node_trees(w_self, w_neigh, v, v)
+        return jax.vmap(plane_from_tree)(mixed).buf
+
+    mix_tree_ms, mix_plane_ms = _paired_ms(
+        lambda: mix_tree(planes),
+        lambda: mix_plane(planes), rounds=max(rounds, 100))
     return {
         "train_ms": train_ms,
         "proto_exact_ms": proto_exact_ms,
@@ -372,6 +421,10 @@ def measure_phases(n_nodes: int, *, samples_per_node: int, batch_size: int,
         "mix_ms": mix_ms,
         "update_per_leaf_ms": update_per_leaf_ms,
         "update_fused_ms": update_fused_ms,
+        "grad_repack_ms": grad_repack_ms,
+        "grad_plane_ms": grad_plane_ms,
+        "mix_tree_ms": mix_tree_ms,
+        "mix_plane_ms": mix_plane_ms,
         "round_exact_ms": round_exact_ms,
         "round_fused_ms": round_fused_ms,
         "fused_round_speedup": round(round_exact_ms
@@ -619,6 +672,10 @@ def main():
                   f"codec {ph['codec_ms']:6.1f}  mix {ph['mix_ms']:6.1f} ms")
             print(f"  update: per-leaf {ph['update_per_leaf_ms']:6.2f}  "
                   f"fused {ph['update_fused_ms']:6.2f} ms")
+            print(f"  grad: repack {ph['grad_repack_ms']:6.2f}  "
+                  f"plane {ph['grad_plane_ms']:6.2f} ms   "
+                  f"mix: tree {ph['mix_tree_ms']:6.2f}  "
+                  f"plane {ph['mix_plane_ms']:6.2f} ms")
             print(f"  round: exact {ph['round_exact_ms']:7.1f}  "
                   f"fused {ph['round_fused_ms']:7.1f} ms  "
                   f"({ph['fused_round_speedup']:.2f}x)")

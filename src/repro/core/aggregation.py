@@ -31,3 +31,24 @@ def neighborhood_aggregate(node: int, own_tree, received: List[Any],
     """Aggregate own + neighbour models, dataset-size weighted."""
     return weighted_tree_mean([own_tree] + received,
                               [own_size] + list(received_sizes))
+
+
+def weighted_plane_mean(planes: Sequence[Any], weights: Sequence[float]):
+    """:func:`weighted_tree_mean` over plane-backed models, applied to
+    the ``[R, 512]`` buffers directly — no leaf views, no
+    ``plane_from_tree`` rebuild at the round boundary.
+
+    Bit-identical to mixing the leaf views and repacking: the plane
+    layout is a placement-only rearrangement of the leaves, the mix is
+    linear, and the buffers run the *same* normalized weights in the
+    *same* summation order per element, so
+    ``pack(Σ wᵢ·leafᵢ) == Σ wᵢ·pack(leafᵢ)`` bitwise.  Padding lanes
+    are zero in every input (the plane invariant), so the mix keeps
+    them zero."""
+    from repro.optim.plane import Plane
+    w = np.asarray(weights, np.float64)
+    w = w / w.sum()
+    out = sum(wi * p.buf.astype(jnp.float32)
+              for wi, p in zip(w, planes))
+    first = planes[0]
+    return Plane(out.astype(first.buf.dtype), first.raw, first.meta)

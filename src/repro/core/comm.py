@@ -48,10 +48,13 @@ def packed_copy_bytes(payload_tree, bits: Bits = None, *,
     ``inner`` is the product of the mesh's inner (non-pod) axis sizes.
     The row-sharded permute exchange splits every per-copy tensor across
     the ``inner`` devices of a node, which pads the fp32 scale vector
-    and each raw sidecar leaf up to a multiple of ``inner`` elements (the
-    code buffer's 8-aligned rows split without padding — the mesh factory
-    enforces per-width divisibility before picking that path).  ``inner=1``
-    is byte-identical to the single-axis accounting.
+    and each raw sidecar leaf up to a multiple of ``inner`` elements,
+    and every wire WIDTH group of the code buffer up to a multiple of
+    ``inner`` rows (the all-zero pad rows ``sharding.row_shard_order``
+    appends for mixed-width payloads whose groups don't split — a
+    uniform-width payload's 8-aligned rows split unpadded for ``inner``
+    in {2, 4, 8}).  ``inner=1`` is byte-identical to the single-axis
+    accounting.
     """
     import jax
     import jax.numpy as jnp
@@ -82,7 +85,8 @@ def packed_copy_bytes(payload_tree, bits: Bits = None, *,
     pad_scales = ((-len(groups)) % inner) * 4 if bits is not None else 0
     return packed_wire_bytes_per_node(
         packed_leaves, bits if spec is None else spec.max_bits,
-        node_axis=False, leaf_bits=leaf_bits) + raw + pad_scales
+        node_axis=False, leaf_bits=leaf_bits, inner=inner) + raw + \
+        pad_scales
 
 
 class CommMeter:

@@ -59,7 +59,7 @@ from repro.config.base import FederationConfig, ModelConfig, TrainConfig
 from repro.core import baselines as B
 from repro.core import round_ops as R
 from repro.core import topology as T
-from repro.core.aggregation import weighted_tree_mean
+from repro.core.aggregation import weighted_plane_mean, weighted_tree_mean
 from repro.core.comm import CommMeter, ScheduleCommAccountant
 from repro.core.distillation import teacher_active
 from repro.core.metrics import accuracy, macro_f1
@@ -72,6 +72,7 @@ from repro.data import batches
 from repro.data.loader import batch_index_lists
 from repro.kernels.proto_accum.ops import (proto_accumulate,
                                            proto_accumulate_nodes)
+from repro.kernels.quantize.ops import quantize_dequantize_plane_rows
 from repro.models import derive_student, forward, init_params
 from repro.optim import make_optimizer, make_plane_optimizer
 from repro.optim.plane import as_tree, plane_from_tree
@@ -182,10 +183,12 @@ def _plane_mode(fed: FederationConfig, train: TrainConfig, algo: str,
     ``"auto"`` enables the flat parameter plane exactly where the fused
     clip+update sweep is the per-leaf reference's equal: the profe
     student (the only wire model the plane splice is built for) under
-    sgd/adamw with an all-float32 parameter tree.  ``"on"`` asserts
-    those conditions (raises otherwise); everything else — adafactor's
-    shape-factored state, mixed-dtype models, the baseline algorithms —
-    keeps the per-leaf reference path."""
+    sgd/adamw/adafactor with an all-float32 parameter tree (adafactor's
+    factored moments live per buffer *segment* —
+    ``make_plane_optimizer``).  ``"on"`` asserts those conditions
+    (raises otherwise); everything else — optimizers without a fused
+    plane update, mixed-dtype models, the baseline algorithms — keeps
+    the per-leaf reference path."""
     mode = fed.param_plane
     if mode not in PLANE_MODES:
         raise ValueError(f"param_plane must be one of {PLANE_MODES}, "
@@ -196,9 +199,9 @@ def _plane_mode(fed: FederationConfig, train: TrainConfig, algo: str,
     if algo != "profe":
         why = f"algorithm {algo!r} (the plane is wired through the " \
               "profe student)"
-    elif train.optimizer not in ("sgd", "adamw"):
-        why = f"optimizer {train.optimizer!r} (factored per-leaf-shape " \
-              "state cannot live on the plane)"
+    elif train.optimizer not in ("sgd", "adamw", "adafactor"):
+        why = f"optimizer {train.optimizer!r} (no fused plane update " \
+              "in kernels/opt_update)"
     else:
         tmpl = jax.eval_shape(
             functools.partial(init_params, student_cfg),
@@ -1150,6 +1153,14 @@ def run_federation_loop(teacher_cfg: ModelConfig, fed: FederationConfig,
             if wire_model is not None:
                 if ef:
                     model_rx = ef_recv[i]["student"]
+                elif use_plane:
+                    # plane-resident wire: quantize the [R, 512] buffer
+                    # per leaf row span — bit-identical to the per-leaf
+                    # qdq, and the receive buffer stays a Plane so the
+                    # mix below never rebuilds a tree.
+                    model_rx = quantize_dequantize_plane_rows(
+                        states[i].student, bits.bits_for("student")) \
+                        if bits else states[i].student
                 else:
                     model_rx = quantize_dequantize_tree(
                         as_tree(states[i].student),
@@ -1175,16 +1186,25 @@ def run_federation_loop(teacher_cfg: ModelConfig, fed: FederationConfig,
         if wire_model is not None:
             new_models = []
             for i in range(n_nodes):
-                if recv_models[i]:
+                if not recv_models[i]:
+                    new_models.append(states[i].student)
+                elif use_plane and not ef:
+                    # plane-resident mix: splice the dequantized [R, 512]
+                    # buffers straight into the stacked plane — no leaf
+                    # views, no plane_from_tree rebuild at the round
+                    # boundary (bit-identical to the tree mix; see
+                    # weighted_plane_mean).
+                    new_models.append(weighted_plane_mean(
+                        [states[i].student] + recv_models[i],
+                        [sizes[i]] + recv_sizes[i]))
+                else:
                     mixed = weighted_tree_mean(
                         [as_tree(states[i].student)] + recv_models[i],
                         [sizes[i]] + recv_sizes[i])
-                    # plane mode: the mixed views repack into the buffer
-                    # (the stacked engine mixes the buffer in place)
+                    # error-feedback wire decodes to leaf views, so this
+                    # narrow path keeps the tree mix + repack fallback
                     new_models.append(plane_from_tree(mixed) if use_plane
                                       else mixed)
-                else:
-                    new_models.append(states[i].student)
             for i in range(n_nodes):
                 states[i] = states[i]._replace(student=new_models[i])
 

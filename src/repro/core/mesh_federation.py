@@ -48,11 +48,10 @@ dequant-and-accumulate, ``mix_packed`` — a single Pallas launch on TPU).
   preserving int16 codes + masked ``mix_node_trees``.  Kept as the
   semantics oracle the packed paths are asserted equivalent to.
 * ``"auto"`` (default) — ``ppermute`` when the graph is regular and the
-  pod axis has one device per node, else ``packed``.  On multi-axis
-  pods ``auto`` additionally requires the buffer's width groups to
-  split over the inner devices (``row_shard_order``); when they don't,
-  it silently takes the packed gather, whereas an explicit
-  ``exchange="ppermute"`` raises at trace time.
+  pod axis has one device per node, else ``packed``.  Multi-axis pods
+  always take the row-sharded permute: width groups that don't divide
+  the inner devices ride appended all-zero pad rows
+  (``row_shard_order``), so mixed-width payloads never fall back.
 
 **Overlap** (``overlap=True`` on :func:`make_profe_round`): the permute
 exchange is double-buffered — step ``s+1``'s collectives are issued
@@ -156,8 +155,8 @@ def _resolve_exchange(exchange: str, adj, mesh) -> str:
                 f"(pod={_pod_size(mesh)}, N={adj.shape[0]})")
         # inner axes of size > 1 take the row-sharded permute: each
         # inner device permutes only its row block of the encoded
-        # buffer (the factory validates the static row split and raises
-        # there when a width group doesn't divide the inner size)
+        # buffer (width groups that don't divide the inner size ride
+        # appended zero pad rows — see row_shard_order)
         return exchange
     if exchange != "auto":
         return exchange
@@ -372,8 +371,7 @@ def make_profe_round(mesh, student_specs, bits: int = 16,
                                             adj, overlap=overlap)
         else:
             fn = _make_profe_round_ppermute_sharded(
-                mesh, student_specs, wire, adj,
-                strict=(exchange == "ppermute"), overlap=overlap)
+                mesh, student_specs, wire, adj, overlap=overlap)
     else:
         fn = _make_profe_round_packed(mesh, student_specs, wire, adj)
     if proto_pass == "exact":
@@ -473,9 +471,7 @@ def _make_profe_round_packed(mesh, student_specs, wire: WireSpec, adj):
 
 
 def _packed_round_core(mesh, student_specs, wire: WireSpec, adj):
-    """The unwrapped 5-arg packed round — also the trace-time fallback
-    of the row-sharded permute when the buffer's width groups don't
-    split over the inner axes."""
+    """The unwrapped 5-arg packed round."""
     include = None if adj is None else include_matrix(adj)
 
     def _round(students, protos, counts, sizes, ef_state):
@@ -673,7 +669,7 @@ def _make_profe_round_ppermute(mesh, student_specs, wire: WireSpec,
 
 
 def _make_profe_round_ppermute_sharded(mesh, student_specs, wire: WireSpec,
-                                       adj: np.ndarray, *, strict: bool,
+                                       adj: np.ndarray, *,
                                        overlap: bool = False):
     """Row-sharded sparse gossip for multi-axis pods: each of the M inner
     devices of a pod permutes only ITS row block of the encoded wire
@@ -685,10 +681,11 @@ def _make_profe_round_ppermute_sharded(mesh, student_specs, wire: WireSpec,
     encoded byte count must be a static constant: the buffer rows are
     re-ordered by :func:`repro.sharding.row_shard_order` so every shard
     holds the identical per-width row profile (the k-th equal slice of
-    every width group).  When a width group's row count does not divide
-    M the split is impossible — ``strict`` (explicit
-    ``exchange='ppermute'``) raises at trace time, ``auto`` falls back
-    to the packed gather round.
+    every width group).  A width group whose row count does not divide
+    M rides appended all-zero pad rows (zero codes encode to zero bytes
+    at the group's width and dequantize to zero — the mix math is
+    unchanged, and ``packed_copy_bytes(..., inner=M)`` counts the pad
+    rows), so every mixed-width payload splits.
 
     Scale/count sidecars shard over the inner axes too (padded to a
     multiple of M) and are re-widened receiver-side with an intra-pod
@@ -700,27 +697,32 @@ def _make_profe_round_ppermute_sharded(mesh, student_specs, wire: WireSpec,
     M = _inner_size(mesh)
     inner = _inner_axes(mesh)
     inner_sizes = [int(dict(mesh.shape)[a]) for a in inner]
-    fallback = _packed_round_core(mesh, student_specs, wire, adj)
 
     def _round(students, protos, counts, sizes, ef_state):
         buf, seg_ids, meta, ploc, splice = _pack_payload(protos, students,
                                                          wire)
         seg_bits = meta[4]
         ids_np = np.asarray(seg_ids)
-        layout = row_shard_order(np.asarray(seg_bits)[ids_np], M)
-        if layout is None:
-            if strict:
-                raise ValueError(
-                    f"exchange='ppermute' on a {M}-wide inner mesh needs "
-                    f"every wire width group's row count divisible by {M} "
-                    f"— this payload's groups don't split; use "
-                    f"exchange='auto' (falls back to the packed gather) "
-                    f"or a single-axis pod mesh")
-            return fallback(students, protos, counts, sizes, ef_state)
-        order, inv_order, local_bits = layout
+        row_b = np.asarray(seg_bits)[ids_np]
+        order, inv_order, local_bits = row_shard_order(row_b, M)
         rloc = len(order) // M
         loc_seq = np.arange(rloc)
-        ids_g = ids_np[order]                  # true segment per row, shard order
+        n_pad = len(order) - len(ids_np)
+        if n_pad:
+            # non-splittable width groups ride appended all-zero rows;
+            # a pad row borrows a segment id of its width group (sentinel
+            # assignment mirrors row_shard_order: sequential, groups in
+            # ascending width) so the receiver's scale lookup stays in
+            # range — its codes are zero, so delta never matters
+            pad_ids = []
+            for b in sorted(set(row_b.tolist())):
+                grp = np.nonzero(row_b == b)[0]
+                pad_ids += [int(ids_np[grp[0]])] * ((-len(grp)) % M)
+            ids_full = np.concatenate(
+                [ids_np, np.asarray(pad_ids, ids_np.dtype)])
+        else:
+            ids_full = ids_np
+        ids_g = ids_full[order]                # segment per row, shard order
         buf = _constrain_buf(mesh, buf, "pod")
         codes, scales, new_state = _quantize_with_state(
             mesh, wire, buf, seg_ids, meta, ef_state)
@@ -728,8 +730,12 @@ def _make_profe_round_ppermute_sharded(mesh, student_specs, wire: WireSpec,
         prow, pnrows, pshape = ploc
         ccls, pdim = pshape[1], pshape[2]
 
-        # rows into shard order; sidecars padded to a multiple of M so
-        # they split over the inner axes with the buffer
+        # rows into shard order (pad rows appended zero); sidecars padded
+        # to a multiple of M so they split over the inner axes with the
+        # buffer
+        if n_pad:
+            buf = jnp.pad(buf, ((0, 0), (0, n_pad), (0, 0)))
+            codes = jnp.pad(codes, ((0, 0), (0, n_pad), (0, 0)))
         buf_p = _constrain_buf(mesh, jnp.take(buf, jnp.asarray(order),
                                               axis=1), "pod")
         codes_p = _constrain_buf(mesh, jnp.take(codes, jnp.asarray(order),
@@ -922,6 +928,15 @@ def make_fedavg_round(mesh, model_specs,
     packed-buffer / ppermute / gather machinery as ProFe so the dry-run
     byte diff between the two programs is apples-to-apples.
 
+    ``models`` may be a :class:`~repro.optim.plane.Plane` with a stacked
+    ``[N, R, 512]`` buffer (the flat-parameter engines): the packed and
+    ppermute wires then ARE the plane buffer — the plane layout equals
+    ``pack_tree_nodes``'s, so the whole-model payload splices off the
+    buffer with zero repack, the fp32 mix runs on it directly, and the
+    round returns a plane (trailing alignment rows are zero in every
+    input, a fixed point of the mix).  The gather reference unwraps to
+    leaf views at the boundary.
+
     ``adjacency=None``: global size-weighted mean, every node identical.
     With a 0/1 ``[N, N]`` adjacency: the neighborhood-weighted mix,
     node-distinct output sharded P("pod", ...).
@@ -931,6 +946,9 @@ def make_fedavg_round(mesh, model_specs,
 
     if mode == "gather":
         def round_fn(models, sizes):
+            if is_plane(models):
+                return jax.vmap(plane_from_tree)(
+                    round_fn(as_tree(models), sizes))
             gathered = _replicate_over_pod(mesh, models, model_specs)
             if adj is None:
                 w = sizes / jnp.sum(sizes)
@@ -947,7 +965,13 @@ def make_fedavg_round(mesh, model_specs,
         perms, srcs = _perm_lowering(adj)
 
         def round_fn(models, sizes):
-            buf, seg_ids, meta = Q.pack_tree_nodes(models)
+            plane = models if is_plane(models) else None
+            if plane is not None:
+                # the plane buffer IS the pack_tree_nodes layout — the
+                # whole-model wire splices off it with zero repack
+                buf = plane.buf
+            else:
+                buf, seg_ids, meta = Q.pack_tree_nodes(models)
             buf = _constrain_buf(mesh, buf, "pod")
             w_self_v, w_neigh = gossip_matrix_dyn(adj, sizes)
 
@@ -968,6 +992,9 @@ def make_fedavg_round(mesh, model_specs,
                                     jnp.stack(ws)[None, :])
 
             mixed = exchange_fp32(buf, w_self_v, w_neigh)
+            if plane is not None:
+                return Plane(_constrain_buf(mesh, mixed, "pod"),
+                             plane.raw, plane.meta)
             out = jax.tree_util.tree_map(
                 lambda new, old: new.astype(old.dtype),
                 Q.unpack_tree_nodes(mixed, meta), models)
@@ -975,11 +1002,18 @@ def make_fedavg_round(mesh, model_specs,
         return round_fn
 
     def round_fn(models, sizes):                               # packed
-        n_nodes = None
-        for leaf in jax.tree_util.tree_leaves(models):
-            n_nodes = leaf.shape[0]
-            break
-        buf, seg_ids, meta = Q.pack_tree_nodes(models)
+        plane = models if is_plane(models) else None
+        if plane is not None:
+            # zero-repack wire: the plane buffer is already the packed
+            # node format, so the all-gather moves it verbatim
+            n_nodes = plane.buf.shape[0]
+            buf = plane.buf
+        else:
+            n_nodes = None
+            for leaf in jax.tree_util.tree_leaves(models):
+                n_nodes = leaf.shape[0]
+                break
+            buf, seg_ids, meta = Q.pack_tree_nodes(models)
         buf = _constrain_buf(mesh, buf, "pod")
         gathered = _constrain_buf(mesh, buf, None)   # ONE fp32 all-gather
         deltas = jnp.ones(gathered.shape[:2], jnp.float32)
@@ -992,6 +1026,8 @@ def make_fedavg_round(mesh, model_specs,
         mixed = Q.mix_packed(buf, gathered, deltas, w_self_v, w_rows,
                              use_kernels=False)
         mixed = _constrain_buf(mesh, mixed, "pod")
+        if plane is not None:
+            return Plane(mixed, plane.raw, plane.meta)
         out = jax.tree_util.tree_map(
             lambda new, old: new.astype(old.dtype),
             Q.unpack_tree_nodes(mixed, meta), models)

@@ -28,7 +28,8 @@ from repro.core.scanning import scan
 from repro.kernels.proto_accum.ops import proto_accumulate
 from repro.models import forward
 from repro.optim import Optimizer, clip_by_global_norm
-from repro.optim.plane import Plane, as_tree, plane_from_tree
+from repro.optim.plane import (Plane, as_tree, plane_from_tree,
+                               plane_view_tree)
 
 
 class NodeState(NamedTuple):
@@ -132,9 +133,11 @@ def make_profe_step(teacher_cfg: ModelConfig, student_cfg: ModelConfig,
                                                  teacher_out)
 
         def s_loss(sp):
-            # as_tree: a plane-backed student differentiates through the
-            # slice+reshape views (buf cotangent, padding lanes zero)
-            return student_loss(student_cfg, as_tree(sp), batch,
+            # plane_view_tree: a plane-backed student forwards through
+            # the same slice+reshape views as as_tree, but the custom
+            # vjp packs the backward straight into one [R, C] buffer
+            # cotangent (padding lanes zero) — no per-leaf scatter-adds
+            return student_loss(student_cfg, plane_view_tree(sp), batch,
                                 state.global_protos,
                                 state.proto_mask, alpha, fed.beta_s,
                                 fed.kd_temperature, teacher_out, remat=remat)

@@ -14,9 +14,11 @@ from typing import Dict, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.opt_update.opt_update import (adamw_update_pallas,
+from repro.kernels.opt_update.opt_update import (adafactor_apply_pallas,
+                                                 adamw_update_pallas,
                                                  sgd_update_pallas)
-from repro.kernels.opt_update.ref import adamw_update_ref, sgd_update_ref
+from repro.kernels.opt_update.ref import (adafactor_apply_ref,
+                                          adamw_update_ref, sgd_update_ref)
 
 # Trace bookkeeping (same pattern as profe.PROTO_ACC_TRACES): the body
 # below runs only when jax (re)traces the enclosing program, so the
@@ -74,3 +76,72 @@ def fused_adamw_update(g, p, mu, nu, lr, scale, bc1, bc2, *, b1: float,
         interpret=_interpret())
     return newp.reshape(p.shape), newmu.reshape(p.shape), \
         newnu.reshape(p.shape)
+
+
+def fused_adafactor_update(g, p, fac, lr, scale, beta, *, recipe,
+                           eps: float = 1e-30, clip_threshold: float = 1.0,
+                           weight_decay: float = 0.0,
+                           use_kernels: Optional[bool] = None):
+    """Plane-backed adafactor over an unstacked ``[R, C]`` buffer
+    -> ``(new_p, new_fac)``.
+
+    ``fac`` is a tuple of moment dicts aligned with the float ``"leaf"``
+    entries of the static ``recipe`` (``PlaneMeta.recipe``) — one per
+    buffer *segment*: ``{"vr", "vc"}`` when the leaf factors
+    (``ndim >= 2`` with both trailing dims > 1), dense ``{"v"}``
+    otherwise.  The moment EMAs and the per-leaf RMS clip are
+    shape-dependent, so they run per segment view with the clip
+    ``scale`` folded into the grad (the exact
+    ``optimizers.adafactor`` expressions); the clipped update is then
+    packed back into an ``[R, C]`` plane (padding lanes zero) and the
+    parameter step is ONE elementwise apply sweep — Pallas on TPU, the
+    bit-identical jnp reference elsewhere."""
+    OPT_UPDATE_TRACES["adafactor"] = \
+        OPT_UPDATE_TRACES.get("adafactor", 0) + 1
+    from repro.optim.plane import _leaf_view, _prod
+    if g.ndim != 2:
+        raise ValueError("fused_adafactor_update expects an unstacked "
+                         "[R, C] plane (the engines vmap the step over "
+                         "nodes)")
+    c = g.shape[-1]
+    parts, new_fac = [], []
+    i = 0
+    for item in recipe:
+        if item[0] != "leaf":
+            continue
+        _, shape, _dtype, row, r_leaf = item
+        v = fac[i]
+        i += 1
+        g32 = _leaf_view(g, shape, row, r_leaf).astype(jnp.float32) * scale
+        g2 = jnp.square(g32) + eps
+        if len(shape) >= 2 and shape[-1] > 1 and shape[-2] > 1:
+            vr = beta * v["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+            vc = beta * v["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+            rfac = (vr / jnp.mean(vr, axis=-1, keepdims=True))[..., None]
+            upd = g32 * jax.lax.rsqrt(rfac * vc[..., None, :] + eps)
+            new_fac.append({"vr": vr, "vc": vc})
+        else:
+            nv = beta * v["v"] + (1 - beta) * g2
+            upd = g32 * jax.lax.rsqrt(nv + eps)
+            new_fac.append({"v": nv})
+        rms = jnp.sqrt(jnp.mean(jnp.square(upd)) + 1e-12)
+        upd = upd / jnp.maximum(1.0, rms / clip_threshold)
+        flat = upd.reshape(-1)
+        pad = r_leaf * c - _prod(shape)
+        if pad:
+            flat = jnp.pad(flat, (0, pad))
+        parts.append(flat.reshape(r_leaf, c))
+    upd_buf = jnp.concatenate(parts, axis=0)
+    rpad = p.shape[-2] - upd_buf.shape[0]
+    if rpad:
+        upd_buf = jnp.pad(upd_buf, ((0, rpad), (0, 0)))
+    if use_kernels is None:
+        use_kernels = jax.default_backend() == "tpu"
+    if not use_kernels:
+        newp = adafactor_apply_ref(upd_buf, p, lr=lr,
+                                   weight_decay=weight_decay)
+    else:
+        newp = adafactor_apply_pallas(upd_buf, p, _s11(lr),
+                                      weight_decay=weight_decay,
+                                      interpret=_interpret())
+    return newp, tuple(new_fac)

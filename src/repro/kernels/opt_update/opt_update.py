@@ -107,3 +107,33 @@ def adamw_update_pallas(g2d, p2d, mu2d, nu2d, lr, scale, bc1, bc2, *,
     )(g2d.astype(jnp.float32), p2d.astype(jnp.float32),
       mu2d.astype(jnp.float32), nu2d.astype(jnp.float32),
       lr, scale, bc1, bc2)
+
+
+def _adafactor_apply_kernel(weight_decay: float, upd_ref, p_ref, lr_ref,
+                            newp_ref):
+    lr = lr_ref[0, 0]
+    upd = upd_ref[...].astype(jnp.float32)
+    p = p_ref[...].astype(jnp.float32)
+    newp_ref[...] = p - lr * (upd + weight_decay * p)
+
+
+def adafactor_apply_pallas(upd2d, p2d, lr, *, weight_decay: float,
+                           interpret: bool = False):
+    """upd2d (the packed per-segment clipped adafactor update) and p2d:
+    [R, C] fp32; lr: (1, 1) fp32 runtime scalar -> new params [R, C] in
+    ONE launch.  The moment EMAs are shape-dependent and stay per
+    segment upstream (``ops.fused_adafactor_update``)."""
+    r, c = upd2d.shape
+    br, bc = min(BLOCK_R, r), min(BLOCK_C, c)
+    return pl.pallas_call(
+        functools.partial(_adafactor_apply_kernel, weight_decay),
+        grid=(pl.cdiv(r, br), pl.cdiv(c, bc)),
+        in_specs=[
+            pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+            pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((r, c), jnp.float32),
+        interpret=interpret,
+    )(upd2d.astype(jnp.float32), p2d.astype(jnp.float32), lr)

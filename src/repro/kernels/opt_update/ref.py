@@ -47,3 +47,16 @@ def adamw_update_ref(g, p, mu, nu, *, lr, scale, bc1, bc2, b1: float,
     vh = nu / bc2
     newp = p - lr * (mh / (jnp.sqrt(vh) + eps) + weight_decay * p)
     return newp, mu, nu
+
+
+def adafactor_apply_ref(upd, p, *, lr, weight_decay: float):
+    """The adafactor *apply* sweep over a plane buffer.
+
+    Adafactor's factored moments and per-leaf RMS clip are
+    shape-dependent and stay per buffer segment
+    (``ops.fused_adafactor_update``); this is the one elementwise pass
+    the packed clipped update rides, mirroring
+    ``optimizers.adafactor``'s last line:
+    ``p' = p - lr*(upd + wd*p)``.  Padding is a fixed point
+    (``upd = 0, p = 0`` -> 0)."""
+    return p - lr * (upd + weight_decay * p)

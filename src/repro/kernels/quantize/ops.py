@@ -888,6 +888,43 @@ def quantize_dequantize_plane_payload(payload, bits: int = 16, *,
     return recv
 
 
+def quantize_dequantize_plane_rows(plane, bits: int = 16):
+    """Per-leaf fake-quant round-trip applied straight to a plane
+    buffer: one Δ per leaf *segment* (max|x| over the segment's rows —
+    padding lanes are zero and cannot raise it), then one elementwise
+    round-trip sweep over the whole ``[R, C]`` buffer with the per-row
+    Δ broadcast.  Bit-identical to
+    ``core.quantization.quantize_dequantize_tree`` on the leaf views
+    (same amax, qmax, tiny-guard, rounding and clip per element; the
+    clipped codes are integers exactly representable in fp32, so the
+    int container round-trip is elided as in ``_qdq_tree_leaf_local``).
+    Deliberately eager, like the per-leaf reference it mirrors in the
+    loop engine — a jitted whole-program version would let XLA:CPU
+    strength-reduce the Δ division and drift an ulp.  Trailing
+    8-alignment rows ride Δ=1 (zeros round-trip to zeros), so the
+    plane's padding invariant survives."""
+    from repro.optim.plane import Plane
+    buf = plane.buf
+    qm = (1 << (bits - 1)) - 1
+    tiny = jnp.finfo(jnp.float32).tiny
+    row_parts = []
+    covered = 0
+    for item in plane.meta.recipe:
+        if item[0] != "leaf":
+            continue
+        _, _shape, _dtype, row, r_leaf = item
+        amax = jnp.max(jnp.abs(buf[..., row:row + r_leaf, :]))
+        d = jnp.maximum(amax / qm, tiny)
+        row_parts.append(jnp.broadcast_to(d, (r_leaf,)))
+        covered = row + r_leaf
+    if plane.meta.rows > covered:
+        row_parts.append(jnp.ones((plane.meta.rows - covered,),
+                                  jnp.float32))
+    rd = jnp.concatenate(row_parts)[:, None]
+    codes = jnp.clip(jnp.floor(buf / rd + 0.5), -qm - 1, qm)
+    return Plane(codes * rd, plane.raw, plane.meta)
+
+
 def packed_wire_rows(tree, *, node_axis: bool = True) -> Tuple[int, int]:
     """Static layout of the packed node buffer: ``(R_padded, T)`` — rows
     per node (8-aligned) and scale-segment count.  Works on arrays or
@@ -911,26 +948,33 @@ def packed_wire_rows(tree, *, node_axis: bool = True) -> Tuple[int, int]:
 
 def packed_wire_bytes_per_node(tree, bits: Optional[int] = 16, *,
                                node_axis: bool = True,
-                               leaf_bits: Optional[Sequence[int]] = None
-                               ) -> int:
+                               leaf_bits: Optional[Sequence[int]] = None,
+                               inner: int = 1) -> int:
     """Physical bytes one node's packed payload occupies on the wire:
     the encoded byte buffer (fp32 rows when ``bits`` is None) incl.
     512-lane padding, plus one fp32 scale per leaf segment when
     quantized.  ``leaf_bits`` gives each float leaf its own width
     (parallel to the float leaves of ``tree``, in flatten order) —
     alignment rows carry the LAST leaf's width, mirroring
-    :func:`pack_tree_nodes`' tagging.  This is the number the dry-run's
-    HLO collective-bytes breakdown measures per exchanged copy."""
+    :func:`pack_tree_nodes`' tagging.  ``inner`` is the inner-device
+    count of the row-sharded multi-axis exchange: every wire WIDTH
+    group's row count is padded up to a multiple of ``inner`` (the
+    all-zero pad rows ``sharding.row_shard_order`` appends are physical
+    bytes on the permute).  The 8-aligned rows of a uniform-width
+    payload split without padding for ``inner`` in {2, 4, 8}.  This is
+    the number the dry-run's HLO collective-bytes breakdown measures
+    per exchanged copy."""
     if bits is None or leaf_bits is None:
         rows, nseg = packed_wire_rows(tree, node_axis=node_axis)
+        rows += (-rows) % inner              # one width group
         if bits is None:                                  # fp32 (fedavg)
             return rows * _COLS * 4
         return rows * _COLS * bits // 8 + nseg * 4        # sub-byte exact
     skip = 1 if node_axis else 0
-    total_bits = 0
     rows = 0
     nseg = 0
     last_b = None
+    width_rows: Dict[int, int] = {}
     floats = [leaf for leaf in jax.tree_util.tree_leaves(tree)
               if hasattr(leaf, "dtype")
               and jnp.issubdtype(leaf.dtype, jnp.floating)]
@@ -943,10 +987,14 @@ def packed_wire_bytes_per_node(tree, bits: Optional[int] = 16, *,
             per *= s
         r = -(-per // _COLS)
         rows += r
-        total_bits += r * _COLS * b
+        width_rows[int(b)] = width_rows.get(int(b), 0) + r
         nseg += 1
         last_b = b
-    total_bits += ((-rows) % 8) * _COLS * last_b      # alignment rows
+    width_rows[int(last_b)] += (-rows) % 8            # alignment rows
+    total_bits = 0
+    for b, r in width_rows.items():
+        r += (-r) % inner                 # row-sharded permute pad rows
+        total_bits += r * _COLS * b
     return total_bits // 8 + nseg * 4
 
 

@@ -12,6 +12,19 @@ and the round-boundary wire path can splice the student rows straight
 out of the plane (``ops.pack_plane_payload`` — the codec's pack step
 becomes a row slice instead of a per-leaf re-gather).
 
+Gradients never leave the plane either: :func:`plane_view_tree` is the
+differentiable twin of :func:`as_tree` — a ``custom_vjp`` whose forward
+hands the loss the same cheap leaf views, and whose backward packs the
+per-leaf cotangents straight into ONE ``[R, 512]`` gradient buffer
+(concat of reshaped cotangents in recipe order) instead of letting
+autodiff transpose ~30 slice/reshape views into per-leaf scatter-adds.
+The packed gradient obeys the **padding-lane-zero invariant**: every
+column past ``prod(shape)`` in a leaf's row span and every trailing
+8-alignment row is exactly ``0.0`` (``jnp.pad`` with zeros — the same
+lanes ``plane_from_tree`` zeroes), so fused update sweeps may touch the
+whole buffer: ``g = 0, p = 0`` stays a fixed point and padding never
+leaks into parameters or optimizer state.
+
 On top of the plane, :func:`make_plane_optimizer` fuses global-norm
 clipping and the optimizer update into one sweep over the buffer
 (``kernels/opt_update``): a single launch per step instead of ~30 small
@@ -20,16 +33,21 @@ per-leaf ops.  The CPU reference path is bit-identical to the per-leaf
 VIEW in flatten order (the exact reduction the per-leaf
 ``clip_by_global_norm`` performs), and the elementwise update is the
 same expression over the buffer (plane padding is zero and stays zero:
-``g = 0, p = 0`` is a fixed point of both sgd and adamw updates).
+``g = 0, p = 0`` is a fixed point of the sgd, adamw and adafactor
+apply sweeps).  ``adafactor``'s factored second moment is kept per leaf
+*segment* of the buffer (``vr``/``vc`` per factored leaf, dense ``v``
+otherwise) — the moments are shape-dependent, the final clip+apply is
+one fused elementwise pass over the buffer.
 
 The plane keeps the per-node shape generic: non-float leaves ride along
 as ``raw`` children (stable checkpoint keys), but gradient-driven use
 (the federation engines) requires an all-float32 student — ragged
-dtypes and ``adafactor`` states keep the per-leaf reference path (see
-``repro.optim`` module docstring).
+dtypes keep the per-leaf reference path (see ``repro.optim`` module
+docstring).
 """
 from __future__ import annotations
 
+import functools
 from typing import Any, NamedTuple, Tuple
 
 import jax
@@ -150,22 +168,80 @@ def _leaf_view(buf, shape, row: int, r_leaf: int):
     return v[..., :per].reshape(lead + tuple(shape))
 
 
-def plane_to_tree(plane: Plane):
-    """Inverse of :func:`plane_from_tree` — cheap views, works on both
-    per-node ``[R, C]`` and stacked ``[N, R, C]`` buffers (stacked
-    leaves come back with the extra leading node axis)."""
-    buf = plane.buf
+def _views(meta: PlaneMeta, buf, raw):
     leaves = []
-    for item in plane.meta.recipe:
+    for item in meta.recipe:
         if item[0] == "raw":
-            leaves.append(plane.raw[item[1]])
+            leaves.append(raw[item[1]])
             continue
         _, shape, dtype, row, r_leaf = item
         v = _leaf_view(buf, shape, row, r_leaf)
         if dtype != np.dtype(np.float32):
             v = v.astype(dtype)
         leaves.append(v)
-    return jax.tree_util.tree_unflatten(plane.meta.treedef, leaves)
+    return jax.tree_util.tree_unflatten(meta.treedef, leaves)
+
+
+def plane_to_tree(plane: Plane):
+    """Inverse of :func:`plane_from_tree` — cheap views, works on both
+    per-node ``[R, C]`` and stacked ``[N, R, C]`` buffers (stacked
+    leaves come back with the extra leading node axis)."""
+    return _views(plane.meta, plane.buf, plane.raw)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _plane_views(meta: PlaneMeta, buf, raw):
+    return _views(meta, buf, raw)
+
+
+def _plane_views_fwd(meta: PlaneMeta, buf, raw):
+    return _views(meta, buf, raw), None
+
+
+def _plane_views_bwd(meta: PlaneMeta, _res, ct):
+    # Pack the per-leaf view cotangents into ONE [.., R, C] buffer in
+    # recipe order — the transpose of `_views` without the per-leaf
+    # scatter-adds autodiff would emit.  Padding lanes (columns past
+    # prod(shape) in each span, trailing 8-alignment rows) are zeroed
+    # by the pads, so the result obeys the plane's padding invariant.
+    cts = meta.treedef.flatten_up_to(ct)
+    parts = []
+    raw_ct = [None] * meta.n_raw
+    lead = ()
+    for item, g in zip(meta.recipe, cts):
+        if item[0] == "raw":
+            raw_ct[item[1]] = g
+            continue
+        _, shape, _dtype, _row, r_leaf = item
+        g = jnp.asarray(g).astype(jnp.float32)
+        nl = g.ndim - len(shape)
+        lead = g.shape[:nl]
+        per = _prod(shape)
+        flat = g.reshape(lead + (per,))
+        pad = r_leaf * _COLS - per
+        if pad:
+            flat = jnp.pad(flat, [(0, 0)] * nl + [(0, pad)])
+        parts.append(flat.reshape(lead + (r_leaf, _COLS)))
+    buf_ct = jnp.concatenate(parts, axis=-2)
+    rpad = meta.rows - buf_ct.shape[-2]
+    if rpad:
+        buf_ct = jnp.pad(buf_ct,
+                         [(0, 0)] * len(lead) + [(0, rpad), (0, 0)])
+    return buf_ct, tuple(raw_ct)
+
+
+_plane_views.defvjp(_plane_views_fwd, _plane_views_bwd)
+
+
+def plane_view_tree(params):
+    """Differentiable :func:`as_tree`: unwraps a :class:`Plane` into the
+    same leaf views, but under ``jax.grad`` the backward emits the
+    gradient directly as one ``[R, 512]`` plane buffer (custom vjp; see
+    module docstring), so ``value_and_grad`` over a Plane returns Plane
+    grads with zero per-leaf repack.  Non-Plane params pass through."""
+    if not isinstance(params, Plane):
+        return params
+    return _plane_views(params.meta, params.buf, params.raw)
 
 
 def as_tree(params):
@@ -218,19 +294,24 @@ def make_plane_optimizer(name: str, lr_or_sched, *,
 
     Same ``(init, update)`` contract as the per-leaf optimizers, but
     ``update`` takes Plane grads/params, performs the global-norm clip
-    (``grad_clip > 0``) and the sgd/adamw update in one fused sweep over
+    (``grad_clip > 0``) and the optimizer update in one fused sweep over
     the ``[R, C]`` buffer (``kernels/opt_update``; Pallas on TPU, the
     bit-identical jnp reference elsewhere), and reports the pre-clip
     grad norm in the returned state under ``"gnorm"`` so the training
-    step needs no separate clip pass.  fp32 ``mu``/``nu`` live as
-    sibling ``[R, C]`` planes.  Supports ``"sgd"`` and ``"adamw"``;
-    ``adafactor`` (factored state is shape-dependent) stays per-leaf.
+    step needs no separate clip pass.  sgd/adamw keep fp32 ``mu``/``nu``
+    as sibling ``[R, C]`` planes; ``adafactor`` keeps its factored
+    second moment per leaf *segment* of the buffer (``fac`` tuple
+    aligned with the recipe's float leaves — ``vr``/``vc`` for factored
+    shapes, dense ``v`` otherwise, the per-leaf defaults
+    ``decay=0.8, eps=1e-30, clip_threshold=1.0``) and rides one fused
+    apply sweep for the parameter step.
     """
-    from repro.kernels.opt_update.ops import (fused_adamw_update,
+    from repro.kernels.opt_update.ops import (fused_adafactor_update,
+                                              fused_adamw_update,
                                               fused_sgd_update)
-    if name not in ("sgd", "adamw"):
-        raise ValueError(f"plane optimizer supports 'sgd'/'adamw', "
-                         f"got {name!r}")
+    if name not in ("sgd", "adamw", "adafactor"):
+        raise ValueError(f"plane optimizer supports "
+                         f"'sgd'/'adamw'/'adafactor', got {name!r}")
     sched = lr_or_sched if callable(lr_or_sched) \
         else (lambda _: jnp.float32(lr_or_sched))
 
@@ -257,6 +338,40 @@ def make_plane_optimizer(name: str, lr_or_sched, *,
                 use_kernels=use_kernels)
             return (Plane(newp, params.raw, params.meta),
                     {"mu": mu, "step": state["step"] + 1, "gnorm": gnorm})
+
+        return Optimizer(init, update)
+
+    if name == "adafactor":
+        def init(params: Plane):
+            lead = tuple(params.buf.shape[:-2])
+            fac = []
+            for item in params.meta.recipe:
+                if item[0] != "leaf":
+                    continue
+                _, shape, _dtype, _row, _r_leaf = item
+                if len(shape) >= 2 and shape[-1] > 1 and shape[-2] > 1:
+                    fac.append({
+                        "vr": jnp.zeros(lead + shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(lead + shape[:-2] + shape[-1:],
+                                        jnp.float32),
+                    })
+                else:
+                    fac.append({"v": jnp.zeros(lead + shape, jnp.float32)})
+            return {"fac": tuple(fac),
+                    "step": jnp.zeros((), jnp.int32),
+                    "gnorm": jnp.zeros((), jnp.float32)}
+
+        def update(grads: Plane, state, params: Plane):
+            gnorm, scale = _clip_scale(grads)
+            step = state["step"] + 1
+            lr = sched(step)
+            beta = 1.0 - (step.astype(jnp.float32) + 1.0) ** (-0.8)
+            newp, fac = fused_adafactor_update(
+                grads.buf, params.buf, state["fac"], lr, scale, beta,
+                recipe=params.meta.recipe, weight_decay=weight_decay,
+                use_kernels=use_kernels)
+            return (Plane(newp, params.raw, params.meta),
+                    {"fac": fac, "step": step, "gnorm": gnorm})
 
         return Optimizer(init, update)
 

@@ -61,27 +61,47 @@ def row_shard_order(row_bits, inner: int):
     for all shards, so the encoded byte count of each device's row block
     must be a static constant — shard k therefore takes the k-th
     equal slice of EVERY width group (groups in ascending width, the
-    encode order), giving each device ``R/inner`` rows whose widths are
-    the same sequence.  Returns ``(order, inv_order, local_bits)`` —
-    apply ``buf[:, order]`` before sharding rows over the inner axes,
-    ``mixed[:, inv_order]`` after, and encode each local block against
-    ``local_bits`` — or ``None`` when some width group's row count does
-    not divide ``inner`` (the caller falls back to the gather exchange).
+    encode order), giving each device the same per-width row sequence.
+
+    A width group whose row count does not divide ``inner`` is PADDED:
+    ``order`` grows sentinel indices ``R, R+1, ...`` — assigned
+    sequentially over the groups in ascending width order — that the
+    caller materializes as appended all-zero rows before taking
+    ``buf[:, order]``.  Zero codes encode to zero bytes at the group's
+    width and dequantize to zero, so the mix math is unchanged while
+    every shard keeps the static profile (the padded rows are wire
+    bytes the comm accountant counts, ``packed_copy_bytes(...,
+    inner=...)``).
+
+    Returns ``(order, inv_order, local_bits)`` — apply ``buf[:, order]``
+    (after appending the ``len(order) - R`` zero rows) before sharding
+    rows over the inner axes, ``mixed[:, inv_order]`` after
+    (``inv_order`` has length R: it restores the original rows and
+    drops the pad rows), and encode each local block against
+    ``local_bits``.
     """
     bits = np.asarray(row_bits)
+    r_orig = bits.shape[0]
     if inner <= 1:
-        r = np.arange(bits.shape[0])
+        r = np.arange(r_orig)
         return r, r, bits
     widths = sorted(set(int(b) for b in bits))
-    groups = [(b, np.nonzero(bits == b)[0]) for b in widths]
-    if any(len(rows) % inner for _b, rows in groups):
-        return None
+    groups = []
+    next_pad = r_orig
+    for b in widths:
+        rows = np.nonzero(bits == b)[0]
+        pad = (-len(rows)) % inner
+        if pad:
+            rows = np.concatenate(
+                [rows, np.arange(next_pad, next_pad + pad)])
+            next_pad += pad
+        groups.append((b, rows))
     order = np.concatenate([
         rows[k * (len(rows) // inner):(k + 1) * (len(rows) // inner)]
         for k in range(inner) for _b, rows in groups])
     local_bits = np.concatenate([
         np.full(len(rows) // inner, b, bits.dtype) for b, rows in groups])
-    return order, np.argsort(order), local_bits
+    return order, np.argsort(order)[:r_orig], local_bits
 
 
 def _path_names(path) -> Tuple[str, ...]:

@@ -104,7 +104,7 @@ def test_plane_is_a_pytree_that_stacks():
 # fused clip+update sweep == per-leaf reference, 5 carried steps
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("name", ["sgd", "adamw"])
+@pytest.mark.parametrize("name", ["sgd", "adamw", "adafactor"])
 def test_fused_update_bit_identical_to_per_leaf(name):
     tree = _odd_float_tree()
     clip = 0.5
@@ -170,18 +170,79 @@ def test_fused_update_traces_once():
     assert ou_ops.OPT_UPDATE_TRACES == {"adamw": 1}
 
 
-def test_make_plane_optimizer_rejects_adafactor():
-    with pytest.raises(ValueError, match="adafactor"):
-        make_plane_optimizer("adafactor", 1e-3)
+def test_make_plane_optimizer_rejects_unknown():
+    with pytest.raises(ValueError, match="lion"):
+        make_plane_optimizer("lion", 1e-3)
+
+
+def test_plane_adafactor_state_is_per_segment():
+    """Factored second moments live per buffer *segment*: every 2-D+
+    leaf with both trailing dims > 1 carries {vr, vc} of the LEAF's
+    shape (not the padded rows), everything else a dense {v}."""
+    tree = _odd_float_tree()
+    opt = make_plane_optimizer("adafactor", 1e-3, grad_clip=1.0)
+    p = plane_from_tree(tree)
+    s = opt.init(p)
+    leaves = [it for it in p.meta.recipe if it[0] == "leaf"]
+    assert len(s["fac"]) == len(leaves)
+    for (_tag, shape, _dt, _row, _r), v in zip(leaves, s["fac"]):
+        if len(shape) >= 2 and shape[-1] > 1 and shape[-2] > 1:
+            assert set(v) == {"vr", "vc"}
+            assert v["vr"].shape == tuple(shape[:-1])
+            assert v["vc"].shape == tuple(shape[:-2] + shape[-1:])
+        else:
+            assert set(v) == {"v"} and v["v"].shape == tuple(shape)
+
+
+def test_adafactor_apply_pallas_interpret_matches_ref():
+    upd, p = _f32((2, 16, 512)), _f32((2, 16, 512))
+    lr = jnp.float32(1e-2)
+    a = jax.jit(lambda u, q: ou_ops.adafactor_apply_ref(
+        u.reshape(-1, 512), q.reshape(-1, 512), lr=lr,
+        weight_decay=0.01))(upd, p)
+    b = jax.jit(lambda u, q: ou_ops.adafactor_apply_pallas(
+        u.reshape(-1, 512), q.reshape(-1, 512), ou_ops._s11(lr),
+        weight_decay=0.01, interpret=True))(upd, p)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_plane_view_tree_grads_match_view_grads():
+    """The custom-vjp plane forward must emit the SAME gradients as
+    autodiff through the per-leaf views, already packed as one [R, 512]
+    buffer with the padding lanes exactly zero."""
+    from repro.optim.plane import plane_to_tree, plane_view_tree
+    tree = _odd_float_tree()
+    plane = plane_from_tree(tree)
+
+    def loss_of(view_fn):
+        def loss(pl):
+            t = view_fn(pl)
+            return sum(jnp.sum(jnp.sin(l) * l)
+                       for l in jax.tree_util.tree_leaves(t))
+        return loss
+
+    g_vjp = jax.jit(jax.grad(loss_of(plane_view_tree)))(plane)
+    g_ref = jax.jit(jax.grad(loss_of(plane_to_tree)))(plane)
+    assert is_plane(g_vjp)
+    np.testing.assert_array_equal(np.asarray(g_vjp.buf),
+                                  np.asarray(g_ref.buf))
+    # padding-lane-zero invariant: repacking the views is the identity
+    repacked = plane_from_tree(as_tree(g_vjp))
+    np.testing.assert_array_equal(np.asarray(g_vjp.buf),
+                                  np.asarray(repacked.buf))
 
 
 # ---------------------------------------------------------------------------
 # checkpoint: plane-backed state round-trips and resumes bit-identically
 # ---------------------------------------------------------------------------
 
-def test_checkpoint_resume_matches_uninterrupted(tmp_path):
+@pytest.mark.parametrize("name", ["adamw", "adafactor"])
+def test_checkpoint_resume_matches_uninterrupted(tmp_path, name):
+    """Exact resume: the plane-backed optimizer state (incl. adafactor's
+    per-segment factored moments) survives the checkpoint round-trip and
+    the resumed run equals the uninterrupted one bit for bit."""
     tree = _odd_float_tree()
-    opt = make_plane_optimizer("adamw", 1e-2, grad_clip=1.0)
+    opt = make_plane_optimizer(name, 1e-2, grad_clip=1.0)
     step = jax.jit(opt.update)
     g = plane_from_tree(jax.tree_util.tree_map(jnp.sin, tree))
     p, s = plane_from_tree(tree), opt.init(plane_from_tree(tree))
@@ -193,7 +254,10 @@ def test_checkpoint_resume_matches_uninterrupted(tmp_path):
     restored = load_checkpoint(path, like)
     p2, s2 = restored["params"], restored["opt"]
     assert is_plane(p2)
-    for _ in range(2):
+    for a, b in zip(jax.tree_util.tree_leaves(s),
+                    jax.tree_util.tree_leaves(s2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for _ in range(3):
         p, s = step(g, s, p)
         p2, s2 = step(g, s2, p2)
     np.testing.assert_array_equal(np.asarray(p.buf), np.asarray(p2.buf))
@@ -337,6 +401,62 @@ def test_plane_on_off_f1_bitwise_identical(mnist_like):
         assert runs["on"].extras[k] == runs["off"].extras[k]
 
 
+def test_plane_qdq_rows_bit_identical_to_tree():
+    """The loop engine's plane-resident wire: per-row-span qdq on the
+    [R, 512] buffer == the per-leaf eager reference, bitwise, and the
+    result stays a plane (padding rows untouched at delta=1)."""
+    from repro.core.quantization import quantize_dequantize_tree
+    tree = _odd_float_tree()
+    plane = plane_from_tree(tree)
+    for bits in (16, 8):
+        got = Q.quantize_dequantize_plane_rows(plane, bits)
+        assert is_plane(got)
+        want = quantize_dequantize_tree(tree, bits)
+        views = as_tree(got)
+        for path, w in jax.tree_util.tree_flatten_with_path(want)[0]:
+            have = views
+            for p_ in path:
+                have = have[p_.key]
+            np.testing.assert_array_equal(np.asarray(have), np.asarray(w),
+                                          err_msg=f"bits={bits} {path}")
+        # buffer stays repack-identical (padding lanes zero)
+        np.testing.assert_array_equal(np.asarray(got.buf),
+                                      np.asarray(plane_from_tree(want).buf))
+
+
+def test_weighted_plane_mean_bit_identical_to_tree_mix():
+    """The loop engine's plane-resident gossip mix: mixing the [R, 512]
+    buffers row-for-row == mixing the leaf views and repacking
+    (pack is placement-only, the mix is linear)."""
+    from repro.core.aggregation import weighted_plane_mean, \
+        weighted_tree_mean
+    trees = [_odd_float_tree() for _ in range(3)]
+    planes = [plane_from_tree(t) for t in trees]
+    w = [3.0, 1.0, 2.0]
+    got = weighted_plane_mean(planes, w)
+    want = plane_from_tree(weighted_tree_mean(trees, w))
+    assert is_plane(got)
+    np.testing.assert_array_equal(np.asarray(got.buf), np.asarray(want.buf))
+
+
+def test_plane_loop_engine_on_off_f1_bitwise_identical(mnist_like):
+    """End to end: the loop engine's plane-resident wire + mix (no tree
+    rebuild at the round boundary) must reproduce the per-leaf path
+    bit for bit, quantized wire included."""
+    cfg, node_data, test_d = mnist_like
+    runs = {}
+    for mode in ("on", "off"):
+        fed = FederationConfig(num_nodes=N_NODES, rounds=2, local_epochs=1,
+                               algorithm="profe", topology="ring",
+                               quantize_bits=16, param_plane=mode)
+        runs[mode] = run_federation_loop(cfg, fed, TRAIN, node_data, test_d)
+    assert runs["on"].extras["param_plane"] is True
+    assert runs["off"].extras["param_plane"] is False
+    assert runs["on"].f1_per_round == runs["off"].f1_per_round
+    assert runs["on"].extras["avg_sent_gb"] == \
+        runs["off"].extras["avg_sent_gb"]
+
+
 def test_plane_loop_engine_matches_stacked(mnist_like):
     cfg, node_data, test_d = mnist_like
     fed = FederationConfig(num_nodes=N_NODES, rounds=2, local_epochs=1,
@@ -355,20 +475,24 @@ def test_param_plane_on_rejects_unsupported():
     import dataclasses
     cfg = get_config("mnist-cnn")
     from repro.models import derive_student
-    ada = TrainConfig(batch_size=64, learning_rate=1e-3,
-                      optimizer="adafactor", remat=False)
+    lion = TrainConfig(batch_size=64, learning_rate=1e-3,
+                       optimizer="lion", remat=False)
     fed = FederationConfig(num_nodes=2, rounds=1, algorithm="profe",
                            param_plane="on")
     with pytest.raises(ValueError, match="param_plane"):
-        F._plane_mode(fed, ada, "profe", derive_student(cfg))
+        F._plane_mode(fed, lion, "profe", derive_student(cfg))
     with pytest.raises(ValueError, match="param_plane"):
         F._plane_mode(dataclasses.replace(fed, param_plane="maybe"), TRAIN,
                       "profe", derive_student(cfg))
     # auto quietly falls back instead
     auto = dataclasses.replace(fed, param_plane="auto")
-    assert F._plane_mode(auto, ada, "profe", derive_student(cfg)) is False
+    assert F._plane_mode(auto, lion, "profe", derive_student(cfg)) is False
     assert F._plane_mode(auto, TRAIN, "fedavg",
                          derive_student(cfg)) is False
+    # adafactor has a fused plane update now: auto engages, on accepts
+    ada = dataclasses.replace(lion, optimizer="adafactor")
+    assert F._plane_mode(auto, ada, "profe", derive_student(cfg)) is True
+    assert F._plane_mode(fed, ada, "profe", derive_student(cfg)) is True
 
 
 def test_proto_ema_carries_and_matches_loop(mnist_like):

@@ -549,12 +549,13 @@ def test_row_sharded_permute_matches_gather():
 
 
 @pytest.mark.mesh
-def test_row_sharded_mixed_spec_splits_or_falls_back():
+def test_row_sharded_mixed_spec_pads_non_splittable():
     """Mixed 4/16 on a (4,2,1) pod mesh: a payload whose width groups
     split over the 2 inner devices runs row-sharded and matches the
-    packed gather; a payload whose groups DON'T split raises under
-    explicit ``exchange='ppermute'`` and silently falls back (bit-
-    identical to packed) under ``exchange='auto'``."""
+    packed gather; a payload whose groups DON'T split rides appended
+    all-zero pad rows — explicit ``exchange='ppermute'`` no longer
+    raises, ``auto`` takes the same row-sharded permute, and both match
+    the packed reference."""
     n, d = 4, 2
     if jax.device_count() < n * d:
         pytest.skip(f"needs {n * d} devices, have {jax.device_count()}")
@@ -580,19 +581,21 @@ def test_row_sharded_mixed_spec_splits_or_falls_back():
         np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                    rtol=1e-5, atol=1e-3)
 
-    # non-splittable: protos [n, 5, 16] -> 3 int16 rows (odd)
+    # non-splittable: protos [n, 5, 16] -> 3 int16 rows (odd) — the
+    # int16 group pads with one zero row per row_shard_order
     protos_s = jnp.asarray(RNG.standard_normal((n, 5, 16)), jnp.float32)
     counts_s = jnp.asarray(RNG.integers(0, 4, (n, 5)), jnp.float32)
-    fn = make_profe_round(mesh, specs, adjacency=adj, spec=wire,
-                          exchange="ppermute")
-    with mesh, pytest.raises(ValueError, match="divisible"):
-        jax.jit(fn)(students, protos_s, counts_s, sizes)
     outs = {}
-    for ex in ("auto", "packed"):
+    for ex in ("auto", "ppermute", "packed"):
         fn = make_profe_round(mesh, specs, adjacency=adj, spec=wire,
                               exchange=ex)
         with mesh:
             outs[ex] = jax.jit(fn)(students, protos_s, counts_s, sizes)
-    for got, want in zip(jax.tree_util.tree_leaves(outs["auto"]),
+    for got, want in zip(jax.tree_util.tree_leaves(outs["ppermute"]),
                          jax.tree_util.tree_leaves(outs["packed"])):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-3)
+    # auto resolves to the same row-sharded permute program
+    for got, want in zip(jax.tree_util.tree_leaves(outs["auto"]),
+                         jax.tree_util.tree_leaves(outs["ppermute"])):
         np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
