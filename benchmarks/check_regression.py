@@ -28,7 +28,9 @@ inside timer noise), at every committed N the flat-parameter-plane
 fused clip+update sweep must beat the per-leaf reference
 (``update_fused_ms < update_per_leaf_ms``), at every committed N the plane-resident grad and gossip-mix paths
 must beat their references (``grad_plane_ms < grad_repack_ms``,
-``mix_plane_ms < mix_tree_ms``), and at the largest N the
+``mix_plane_ms < mix_tree_ms``), at every committed N the fused
+low-rank adapter merge must beat the materialized merge + plane
+rebuild (``apply_fused_ms < apply_dense_ms``), and at the largest N the
 fused in-scan proto marginal must cost at most HALF the exact second
 pass (``proto_fused_ms <= 0.5 * proto_exact_ms``).  A failure
 of the committed invariants means the committed file was refreshed
@@ -71,7 +73,21 @@ def check_wire(baseline_path: str, threshold: float) -> bool:
     with open(baseline_path) as f:
         base = json.load(f)
     cfg = base["config"]
-    bits_list = list(base["per_bits"].keys())
+    # adapter rows are labeled "<bits>+adapters<rank>" — they re-run
+    # through --wire-adapters/--wire-adapter-bits, not --wire-bits
+    labels = list(base["per_bits"].keys())
+    bits_list = [b for b in labels if "+adapters" not in b]
+    ad_ranks = [str(r) for r in cfg.get("adapter_ranks", [])] or \
+        sorted({b.split("+adapters")[1] for b in labels
+                if "+adapters" in b})
+    ad_bits = [str(b) for b in cfg.get("adapter_bits", [])] or \
+        sorted({b.split("+adapters")[0] for b in labels
+                if "+adapters" in b})
+    if any("+adapters" in b for b in labels):
+        adapter_args = ["--wire-adapters", *ad_ranks,
+                        "--wire-adapter-bits", *ad_bits]
+    else:
+        adapter_args = ["--wire-adapters", "0"]   # rank 0 = no extra rows
     # pod-shaped baselines ("RxC" rows: multi-axis mesh, row-sharded
     # permute) ride the same file under "per_pods"; a pre-pods baseline
     # has only the flat "per_bits" view
@@ -87,7 +103,7 @@ def check_wire(baseline_path: str, threshold: float) -> bool:
             [sys.executable, script, "--wire",
              "--wire-nodes", str(cfg["nodes"]),
              "--wire-topology", cfg["topology"],
-             "--wire-bits", *bits_list,
+             "--wire-bits", *bits_list, *adapter_args,
              "--pods", *pods_args, "--out", out],
             capture_output=True, text=True)
         if r.returncode != 0:
@@ -219,6 +235,18 @@ def check_phases(baseline: dict, threshold: float, rounds: int) -> bool:
         print(f"N={n}: committed mix plane {ph['mix_plane_ms']:6.2f} ms "
               f"vs tree {ph['mix_tree_ms']:6.2f} ms  "
               f"{'OK' if ok else 'PLANE-MIX-NOT-CHEAPER'}")
+    # adapter-wire invariant: the fused low-rank plane sweep must beat
+    # the materialized merge + plane rebuild at every committed N (rows
+    # without the apply sub-phase predate the adapter wire and stay
+    # checkable)
+    for n, ph in sorted(phased.items(), key=lambda kv: int(kv[0])):
+        if "apply_fused_ms" not in ph:
+            continue
+        ok = ph["apply_fused_ms"] < ph["apply_dense_ms"]
+        failed |= not ok
+        print(f"N={n}: committed apply fused {ph['apply_fused_ms']:6.2f} "
+              f"ms vs dense {ph['apply_dense_ms']:6.2f} ms  "
+              f"{'OK' if ok else 'FUSED-APPLY-NOT-CHEAPER'}")
 
     big = phased[n_big]
     ok = big["proto_fused_ms"] <= 0.5 * big["proto_exact_ms"]

@@ -36,12 +36,27 @@ from repro.wirespec import WireSpec
 ALGOS = ["fedavg", "fedproto", "fml", "fedgpd", "profe"]
 
 
+_OVERRIDE_FIELDS = {"adapters": "adapter_quantize_bits",
+                    "grams": "gram_quantize_bits"}
+
+
 def _bits_fed_kwargs(bits: str):
-    """CLI wire spec -> FederationConfig quantization fields."""
+    """CLI wire spec -> FederationConfig quantization fields.  Named
+    group overrides (``"4/16,adapters=8,grams=16"``) map onto the
+    matching per-group quantize fields; an override for a group the
+    config has no field for is a spec typo, not a silent no-op."""
     spec = WireSpec.parse(bits)
-    return {"quantize_bits": spec.student_bits,
-            "proto_quantize_bits": spec.proto_bits,
-            "error_feedback": spec.error_feedback}
+    kwargs = {"quantize_bits": spec.student_bits,
+              "proto_quantize_bits": spec.proto_bits,
+              "error_feedback": spec.error_feedback}
+    for group, b in spec.overrides:
+        field = _OVERRIDE_FIELDS.get(group)
+        if field is None:
+            raise ValueError(
+                f"wire spec {bits!r}: no FederationConfig field for "
+                f"group {group!r} (known: {sorted(_OVERRIDE_FIELDS)})")
+        kwargs[field] = b
+    return kwargs
 
 
 def _sub_int16(bits: str) -> bool:
@@ -52,7 +67,8 @@ def _sub_int16(bits: str) -> bool:
 def run(dataset: str, split: str, *, nodes: int, rounds: int, epochs: int,
         n_samples: int, algos=ALGOS, seed: int = 0, verbose=False,
         topology: str = "full", bits=("16",), proto_pass=("exact",),
-        proto_ema: float = 0.0):
+        proto_ema: float = 0.0, adapter_rank: int = 0,
+        adapter_grams: bool = False):
     cfg = get_config(dataset)
     data = make_image_dataset(seed, n_samples, cfg.input_hw, cfg.num_classes)
     train_d, test_d = train_test_split(data, 0.1, seed)  # paper: 10% global test
@@ -89,11 +105,16 @@ def run(dataset: str, split: str, *, nodes: int, rounds: int, epochs: int,
                     jobs.append((f"{algo}{suffix}{esuf}", algo, "16", pp,
                                  em))
     for name, algo, b, pp, em in jobs:
+        # the adapter-rank wire applies to profe's student gossip only
+        # — the baselines keep their dense exchanges for comparison
+        ad = {"adapter_rank": adapter_rank,
+              "adapter_grams": adapter_grams} \
+            if adapter_rank and algo == "profe" else {}
         fed = FederationConfig(num_nodes=nodes, rounds=rounds,
                                local_epochs=epochs, algorithm=algo,
                                split=split, seed=seed, topology=topology,
                                proto_pass=pp, proto_ema=em,
-                               **_bits_fed_kwargs(b))
+                               **_bits_fed_kwargs(b), **ad)
         res = run_federation(cfg, fed, train, node_data, test_d,
                              verbose=verbose, eval_all_nodes=True)
         # one plot-ready row: F1 curve AND the wire bytes of that exact
@@ -115,6 +136,9 @@ def run(dataset: str, split: str, *, nodes: int, rounds: int, epochs: int,
             out[name]["proto_ema"] = em
         if algo == "profe":
             out[name]["bits"] = WireSpec.parse(b).describe()
+            if adapter_rank:
+                out[name]["adapter_rank"] = adapter_rank
+                out[name]["adapter_grams"] = adapter_grams
     return out
 
 
@@ -145,6 +169,14 @@ def main():
                          "with this Eq. 3 accumulator decay (0 = off): "
                          "prototypes blend the previous round's raw "
                          "sums/counts instead of restarting from zero")
+    ap.add_argument("--adapter-rank", type=int, default=0,
+                    help="run the profe rows on the adapter-rank wire: "
+                         "matrix leaves gossip rank-r delta factors "
+                         "(merge-based aggregation) instead of dense "
+                         "parameters; 0 = dense gossip")
+    ap.add_argument("--adapter-grams", action="store_true",
+                    help="with --adapter-rank: ship RegMean gram "
+                         "statistics and merge gram-weighted")
     ap.add_argument("--ef", action="store_true",
                     help="add an error-feedback twin row (spec+ef, zero "
                          "extra wire bytes) for every sub-int16 spec — "
@@ -171,7 +203,9 @@ def main():
                                epochs=epochs, n_samples=n, algos=args.algos,
                                topology=args.topology, bits=args.bits,
                                proto_pass=passes,
-                               proto_ema=args.proto_ema)
+                               proto_ema=args.proto_ema,
+                               adapter_rank=args.adapter_rank,
+                               adapter_grams=args.adapter_grams)
             for algo, r in results[key].items():
                 curve = " ".join(
                     f"{x:.3f}±{s:.3f}"

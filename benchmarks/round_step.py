@@ -413,6 +413,41 @@ def measure_phases(n_nodes: int, *, samples_per_node: int, batch_size: int,
     mix_tree_ms, mix_plane_ms = _paired_ms(
         lambda: mix_tree(planes),
         lambda: mix_plane(planes), rounds=max(rounds, 100))
+
+    # adapter-wire merge A/B: the fused low-rank sweep over the plane
+    # buffer's matrix leaf-row spans (kernels/lowrank_apply) vs the
+    # materialized reference (per-leaf apply + plane rebuild), on
+    # identical factors.  Refs at 0.9x the weights give every leaf a
+    # realistic nonzero delta; the rest leaves pass through unmixed —
+    # the pair isolates the apply, not the gossip mean.
+    from repro.core.adapters import (adapter_layout, factorize_deltas,
+                                     split_student)
+    from repro.kernels.lowrank_apply.ops import (adapter_apply_plane,
+                                                 adapter_apply_tree)
+    a_layout = adapter_layout(views, 8, node_axis=True)
+    a_mats, a_rest = split_student(a_layout, views)
+    a_refs = {k: 0.9 * v for k, v in a_mats.items()}
+    a_factors = jax.jit(
+        lambda m, r: factorize_deltas(a_layout, m, r))(a_mats, a_refs)
+    _block(a_factors)
+
+    @jax.jit
+    def apply_dense(ps):
+        tree = adapter_apply_tree(as_tree(ps), a_layout, w_neigh,
+                                  a_factors, a_rest)
+        return jax.vmap(plane_from_tree)(tree).buf
+
+    @jax.jit
+    def apply_fused(ps):
+        # use_kernels resolves per-backend (Pallas on TPU, ref math on
+        # CPU) — on CPU the pair still isolates the plane-span splice
+        # vs the materialize + plane_from_tree rebuild
+        return adapter_apply_plane(ps, a_layout, w_neigh, a_factors,
+                                   a_rest).buf
+
+    apply_dense_ms, apply_fused_ms = _paired_ms(
+        lambda: apply_dense(planes),
+        lambda: apply_fused(planes), rounds=max(rounds, 100))
     return {
         "train_ms": train_ms,
         "proto_exact_ms": proto_exact_ms,
@@ -425,6 +460,8 @@ def measure_phases(n_nodes: int, *, samples_per_node: int, batch_size: int,
         "grad_plane_ms": grad_plane_ms,
         "mix_tree_ms": mix_tree_ms,
         "mix_plane_ms": mix_plane_ms,
+        "apply_dense_ms": apply_dense_ms,
+        "apply_fused_ms": apply_fused_ms,
         "round_exact_ms": round_exact_ms,
         "round_fused_ms": round_fused_ms,
         "fused_round_speedup": round(round_exact_ms
@@ -467,7 +504,8 @@ def _paired_ms(fn_a, fn_b, *args, rounds: int = 20):
 
 def measure_wire(n_nodes: int = 8, topology: str = "ring", *,
                  arch: str = "mnist-cnn", bits="16",
-                 rounds: int = 20, inner: int = 1):
+                 rounds: int = 20, inner: int = 1,
+                 adapter_rank: int = 0, adapter_grams: bool = False):
     """Packed vs per-leaf codec (jitted qdq round-trip) and gather vs
     ppermute exchange (HLO collective bytes + wall ms) for one gossip
     round of a stacked student + prototypes payload, at one wire spec
@@ -476,7 +514,13 @@ def measure_wire(n_nodes: int = 8, topology: str = "ring", *,
     ``inner > 1`` shapes each federation node as ``inner`` data-axis
     devices (the ``--pods RxC`` rows): the ppermute exchange lowers the
     row-sharded permute and the recorded bytes are the POD-axis
-    per-node attribution from the HLO device groups."""
+    per-node attribution from the HLO device groups.
+
+    ``adapter_rank > 0`` swaps matrix leaves onto the adapter-rank wire
+    (rank-``r`` delta factors instead of dense parameters): the codec
+    pair round-trips the factored payload groups and the exchange rows
+    carry the adapter round's bytes/ms (plus the adapter carry as a
+    round operand)."""
     from repro.core.mesh_federation import make_profe_round
     from repro.launch import wire as W
     from repro.models import init_params
@@ -492,7 +536,26 @@ def measure_wire(n_nodes: int = 8, topology: str = "ring", *,
     protos = jnp.asarray(
         np.random.default_rng(0).standard_normal(
             (n_nodes, ncls, student_cfg.proto_dim)), jnp.float32)
-    payload = {"protos": protos, "student": students}
+    ast_args = ()
+    if adapter_rank:
+        if inner > 1:
+            raise ValueError("adapter rows need --pods R (no row-sharded "
+                             "permute lowering for the adapter wire)")
+        from repro.core.adapters import adapter_layout, init_adapter_state
+        layout = adapter_layout(students, adapter_rank, node_axis=True)
+        refs = [init_params(student_cfg, jax.random.PRNGKey(1000 + i))
+                for i in range(n_nodes)]
+        ast = init_adapter_state(
+            layout, jax.tree_util.tree_map(lambda *xs: jnp.stack(xs),
+                                           *refs), grams=adapter_grams)
+        ast_args = (ast,)
+        groups, _, _ = R.adapter_share_nodes(students, ast,
+                                             rank=adapter_rank,
+                                             grams=adapter_grams)
+        payload = dict(groups)
+        payload["protos"] = protos
+    else:
+        payload = {"protos": protos, "student": students}
 
     # error-feedback specs time the stateful codec (residual replayed +
     # updated each call) — the EF rows in BENCH_wire_exchange.json gate
@@ -516,7 +579,9 @@ def measure_wire(n_nodes: int = 8, topology: str = "ring", *,
 
     # exchange: bytes from compiled HLO, wall ms on the federation mesh
     report = W.measure_exchange_bytes(arch, n_nodes, topology, bits=spec,
-                                      inner=inner)
+                                      inner=inner,
+                                      adapter_rank=adapter_rank,
+                                      adapter_grams=adapter_grams)
     mesh = W.fed_mesh(n_nodes, (inner, 1))
     shapes = jax.eval_shape(lambda: init_params(student_cfg,
                                                 jax.random.PRNGKey(0)))
@@ -528,23 +593,33 @@ def measure_wire(n_nodes: int = 8, topology: str = "ring", *,
         if "error" in rep:
             continue
         fn = make_profe_round(mesh, specs, spec=spec, adjacency=adj,
-                              exchange=ex)
+                              exchange=ex, adapter_rank=adapter_rank,
+                              adapter_grams=adapter_grams)
         with mesh:
             jitted = jax.jit(fn)
             rep["round_ms"] = _median_ms(
-                jitted, students, protos, counts, sizes, *ef_args,
-                rounds=rounds)
+                jitted, students, protos, counts, sizes, *ast_args,
+                *ef_args, rounds=rounds)
     return {"codec": codec, "exchange": report}
 
 
-def _wire_bits_sweep(n_nodes, topology, wire_bits, rounds, inner):
+def _wire_bits_sweep(n_nodes, topology, wire_bits, rounds, inner,
+                     adapter_ranks=(), adapter_bits=("4",)):
     per_bits = {}
-    for b in wire_bits:
+    rows = [(b, 0) for b in wire_bits]
+    if inner == 1:
+        # adapter rows, labeled "<bits>+adapters<rank>" (the label the
+        # regression gate keys on); multi-axis pods have no row-sharded
+        # lowering for the adapter wire, so RxC rows skip them
+        rows += [(b, r) for r in adapter_ranks if r
+                 for b in adapter_bits]
+    for b, rank in rows:
+        label = f"{b}+adapters{rank}" if rank else b
         res = measure_wire(n_nodes, topology, bits=b, rounds=rounds,
-                           inner=inner)
-        per_bits[b] = res
+                           inner=inner, adapter_rank=rank)
+        per_bits[label] = res
         ex = res["exchange"]["exchanges"]
-        print(f"== bits={b} ==")
+        print(f"== bits={label} ==")
         print(f"codec qdq: per-leaf {res['codec']['per_leaf_ms']:7.2f} ms   "
               f"packed {res['codec']['packed_ms']:7.2f} ms")
         for name, rep in ex.items():
@@ -585,13 +660,17 @@ def run_wire(args):
                    "topology": args.wire_topology,
                    "timed_rounds": args.rounds,
                    "bits": list(args.wire_bits),
-                   "pods": list(args.pods)},
+                   "pods": list(args.pods),
+                   "adapter_ranks": list(args.wire_adapters),
+                   "adapter_bits": list(args.wire_adapter_bits)},
         "per_pods": {},
     }
     for pods_str, (n, inner) in zip(args.pods, shapes):
         print(f"==== pods={pods_str} ({n} nodes x {inner} devices) ====")
         out["per_pods"][pods_str] = _wire_bits_sweep(
-            n, args.wire_topology, args.wire_bits, args.rounds, inner)
+            n, args.wire_topology, args.wire_bits, args.rounds, inner,
+            adapter_ranks=args.wire_adapters,
+            adapter_bits=args.wire_adapter_bits)
     # the first pod shape keeps the legacy top-level key so existing
     # readers (tables, plots) see the single-axis rows unchanged
     out["per_bits"] = out["per_pods"][args.pods[0]]
@@ -631,6 +710,13 @@ def main():
                     default=["16", "8", "4", "4/16"],
                     help="wire specs to sweep: 16 | 8 | 4 (uniform) or "
                          "<student>/<protos> (mixed)")
+    ap.add_argument("--wire-adapters", nargs="+", type=int, default=[8],
+                    metavar="RANK",
+                    help="adapter ranks to add as extra --wire rows "
+                         "(labeled '<bits>+adapters<rank>'); [] skips "
+                         "them")
+    ap.add_argument("--wire-adapter-bits", nargs="+", default=["4"],
+                    help="wire specs the adapter rows run at")
     ap.add_argument("--pods", nargs="+", default=None,
                     help="pod shapes to sweep in --wire mode: 'R' or "
                          "'RxC' (R nodes x C inner devices; C > 1 rows "
@@ -676,6 +762,8 @@ def main():
                   f"plane {ph['grad_plane_ms']:6.2f} ms   "
                   f"mix: tree {ph['mix_tree_ms']:6.2f}  "
                   f"plane {ph['mix_plane_ms']:6.2f} ms")
+            print(f"  apply: dense {ph['apply_dense_ms']:6.2f}  "
+                  f"fused {ph['apply_fused_ms']:6.2f} ms")
             print(f"  round: exact {ph['round_exact_ms']:7.1f}  "
                   f"fused {ph['round_fused_ms']:7.1f} ms  "
                   f"({ph['fused_round_speedup']:.2f}x)")

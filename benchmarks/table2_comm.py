@@ -57,32 +57,34 @@ def measure(dataset: str, *, nodes: int, rounds: int,
     return rows
 
 
-def physical_wire(dataset: str, nodes: int, topology: str, bits="16"):
+def physical_wire(dataset: str, nodes: int, topology: str, bits="16",
+                  adapter_rank: int = 0, adapter_grams: bool = False):
     """Compile the mesh ProFe round per exchange mode on an (N, 1, 1)
     federation mesh; per-node HLO collective bytes vs the accountant."""
     from repro.launch.wire import measure_exchange_bytes
-    return measure_exchange_bytes(dataset, nodes, topology, bits=bits)
+    return measure_exchange_bytes(dataset, nodes, topology, bits=bits,
+                                  adapter_rank=adapter_rank,
+                                  adapter_grams=adapter_grams)
 
 
-def logical_wire(dataset: str, nodes: int, topology: str, bits="16"):
+def logical_wire(dataset: str, nodes: int, topology: str, bits="16",
+                 adapter_rank: int = 0, adapter_grams: bool = False):
     """Accountant-only per-bits wire bytes (no compilation): logical
-    (Table II) and packed-codec predictions for one gossip round."""
-    import jax
-    import numpy as np
+    (Table II) and packed-codec predictions for one gossip round.  The
+    payload comes from the SAME ``accountant_payload`` builder the
+    dry-run byte gate asserts against, so this table and the compiled
+    HLO can never disagree about what rides the wire (including the
+    rank-r "adapters"/"grams" groups when ``adapter_rank`` is set)."""
     from repro.core import topology as T
     from repro.core.comm import ScheduleCommAccountant
-    from repro.launch.wire import _student_setup
+    from repro.launch.wire import _student_setup, accountant_payload
     from repro.wirespec import WireSpec
     spec = WireSpec.parse(bits)
     sched = T.make_schedule(nodes, topology, rounds=1, seed=0)
     cfg, student_cfg, struct, C = _student_setup(dataset)
-    payload = {
-        "model": jax.tree_util.tree_map(
-            lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), struct),
-        "protos": jax.ShapeDtypeStruct((C, student_cfg.proto_dim),
-                                       np.dtype(np.float32)),
-        "counts": jax.ShapeDtypeStruct((C,), np.dtype(np.float32)),
-    }
+    payload = accountant_payload(struct, C, student_cfg.proto_dim,
+                                 adapter_rank=adapter_rank,
+                                 adapter_grams=adapter_grams)
     acct = ScheduleCommAccountant(sched)
     return {
         "bits": spec.describe(),
@@ -106,6 +108,14 @@ def main():
                     help="comma list of wire specs for the per-bits wire "
                          "column, e.g. 16,8,4 or 16,4/16 (the first is "
                          "the headline row)")
+    ap.add_argument("--adapters", type=int, default=0, metavar="RANK",
+                    help="adapter-rank wire for the wire columns: matrix "
+                         "leaves ride as rank-r delta factors "
+                         "('adapters' payload group) instead of dense "
+                         "parameters")
+    ap.add_argument("--adapter-grams", action="store_true",
+                    help="with --adapters: add the RegMean gram "
+                         "statistics payload group")
     ap.add_argument("--out", default="reports/table2_comm.json")
     args = ap.parse_args()
 
@@ -134,9 +144,16 @@ def main():
         rows["wire_bits"] = {}
         for b in bits_list:
             if args.physical:
-                wire = physical_wire(ds, nodes, args.topology, bits=b)
+                wire = physical_wire(ds, nodes, args.topology, bits=b,
+                                     adapter_rank=args.adapters,
+                                     adapter_grams=args.adapter_grams)
             else:
-                wire = logical_wire(ds, nodes, args.topology, bits=b)
+                wire = logical_wire(ds, nodes, args.topology, bits=b,
+                                    adapter_rank=args.adapters,
+                                    adapter_grams=args.adapter_grams)
+            if args.adapters:
+                wire["adapter_rank"] = args.adapters
+                wire["adapter_grams"] = args.adapter_grams
             rows["wire_bits"][b] = wire
             print(f"  profe wire @ bits={b}, per round per node "
                   f"(topology={args.topology}):")

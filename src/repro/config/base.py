@@ -194,6 +194,19 @@ class FederationConfig:
     # Both route through _algo_wiring into the WireSpec.
     error_feedback: bool = False
     error_feedback_decay: float = 1.0
+    # adapter-rank wire (core/adapters.py): rank > 0 replaces each
+    # matrix leaf's dense payload with per-round low-rank delta factors
+    # (B: [d, r], A: [r, k]) riding the "adapters" payload group —
+    # O(r·(d+k)) wire per matrix instead of O(d·k).  Aggregation
+    # becomes merge-based (RegMean when adapter_grams, naive weighted
+    # factor averaging otherwise); non-matrix leaves stay dense in the
+    # "student" group.  adapter_quantize_bits / gram_quantize_bits pin
+    # the wire width of the factor / gram groups (None follows
+    # quantize_bits) — all four feed the one WireSpec.
+    adapter_rank: int = 0
+    adapter_grams: bool = False
+    adapter_quantize_bits: Optional[int] = None
+    gram_quantize_bits: Optional[int] = None
     # Eq. 3 prototype pass: "exact" streams every node's local data a
     # SECOND time after local training (the paper's post-training pass,
     # bit-identical to the historical engines); "fused" accumulates the

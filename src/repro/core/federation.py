@@ -143,11 +143,23 @@ def _algo_wiring(algo: str, teacher_cfg: ModelConfig,
     if algo == "profe":
         step = make_profe_step(teacher_cfg, student_cfg, fed, opt_s, opt_t,
                                grad_clip=train.grad_clip, remat=remat, jit=jit)
+        # adapter-rank wire: the factor (and gram) payload groups get
+        # their own widths when configured; bits_for falls back to the
+        # student width otherwise
+        overrides = []
+        if fed.adapter_rank and fed.adapter_quantize_bits:
+            overrides.append(("adapters", fed.adapter_quantize_bits))
+        if fed.adapter_rank and fed.adapter_grams and fed.gram_quantize_bits:
+            overrides.append(("grams", fed.gram_quantize_bits))
         wire = WireSpec(student_bits=fed.quantize_bits,
                         proto_bits=fed.proto_quantize_bits,
                         error_feedback=fed.error_feedback,
-                        ef_decay=fed.error_feedback_decay) \
+                        ef_decay=fed.error_feedback_decay,
+                        overrides=tuple(overrides)) \
             if fed.quantize_bits else None
+        if fed.adapter_rank and wire is None:
+            raise ValueError("adapter_rank needs the quantized wire codec "
+                             "(set fed.quantize_bits)")
         return step, "student", True, wire, (teacher_cfg, student_cfg)
     if algo == "fedavg":
         step = B.make_fedavg_step(teacher_cfg, opt_s,
@@ -245,19 +257,34 @@ def _init_states(algo: str, model_cfgs, fed: FederationConfig, opt_s, opt_t,
 
 
 def _payload_template(wire_model, share_protos, stacked: NodeState,
-                      ncls: int, proto_dim: int, *, node_axis: bool = True):
+                      ncls: int, proto_dim: int, *, node_axis: bool = True,
+                      adapter_rank: int = 0, adapter_grams: bool = False):
     """Shape/dtype skeleton of one node's wire payload — the comm meter
     reads only sizes and dtypes, so metering never touches device data.
     ``node_axis=False`` reads a per-node state (reference loop) instead
-    of a stacked ``[N, ...]`` one."""
+    of a stacked ``[N, ...]`` one.  With ``adapter_rank`` > 0 the matrix
+    leaves leave the ``"model"`` group and meter as their low-rank
+    ``"adapters"`` factors (plus per-layer ``"grams"`` when on) — the
+    wire shrinkage IS this template change."""
     payload: Dict[str, Any] = {}
     if wire_model is not None:
         skip = 1 if node_axis else 0
         # as_tree: a plane-backed student meters by its LEAF shapes (the
         # logical wire payload), never by the padded buffer
+        tree = as_tree(stacked.student)
+        if adapter_rank:
+            from repro.core.adapters import (adapter_layout,
+                                             adapter_payload_template,
+                                             split_student)
+            layout = adapter_layout(tree, adapter_rank,
+                                    node_axis=node_axis)
+            payload.update(adapter_payload_template(layout,
+                                                    grams=adapter_grams))
+            _, rest = split_student(layout, tree)
+            tree = rest
         payload["model"] = jax.tree_util.tree_map(
             lambda x: jax.ShapeDtypeStruct(x.shape[skip:], x.dtype),
-            as_tree(stacked.student))
+            tree)
     if share_protos:
         payload["protos"] = jax.ShapeDtypeStruct((ncls, proto_dim),
                                                  np.dtype(np.float32))
@@ -384,7 +411,8 @@ def _make_proto_pass(proto_cfg: ModelConfig, ncls: int):
 def _make_round_parts(step: Callable, proto_cfg: ModelConfig, ncls: int, *,
                       share_protos: bool, wire_model: Optional[str],
                       bits: Optional[int] | WireSpec,
-                      proto_pass: str = "exact", proto_ema: float = 0.0):
+                      proto_pass: str = "exact", proto_ema: float = 0.0,
+                      adapter_rank: int = 0, adapter_grams: bool = False):
     """The three phases of one stacked round, as plain traceable
     functions:
 
@@ -425,6 +453,8 @@ def _make_round_parts(step: Callable, proto_cfg: ModelConfig, ncls: int, *,
         raise ValueError(f"proto_pass must be one of {PROTO_PASSES}, "
                          f"got {proto_pass!r}")
     spec = WireSpec.from_bits(bits) if bits else None
+    adapters = bool(adapter_rank) and wire_model is not None \
+        and share_protos and spec is not None
     fused = share_protos and proto_pass == "fused"
     exact_pass = _make_proto_pass(proto_cfg, ncls) \
         if share_protos and not fused else None
@@ -509,6 +539,29 @@ def _make_round_parts(step: Callable, proto_cfg: ModelConfig, ncls: int, *,
         #    same pass — its ``seq`` counter advances once per share,
         #    pinning which payload the carried residual corrects when
         #    the pipelined driver mixes stale-by-one.
+        if adapters:
+            # adapter-rank wire: the matrix leaves' round delta leaves
+            # as low-rank factors (its own payload group, its own spec
+            # width), the dense rest + protos ride alongside, and the
+            # reference snapshot advances to the just-shared student —
+            # share-time snapshotting keeps the scheme exact under the
+            # stale-by-one pipeline (the mix adds merged deltas ON TOP
+            # of the current student, never rebuilding from the ref).
+            groups, new_ad, _ = R.adapter_share_nodes(
+                state.student, state.adapter_state, rank=adapter_rank,
+                grams=adapter_grams)
+            state = state._replace(adapter_state=new_ad)
+            payload = dict(groups)
+            payload["protos"] = protos
+            if spec.error_feedback:
+                recv, new_ws = R.quantize_dequantize_per_node(
+                    payload, spec=spec, state=state.wire_state)
+                state = state._replace(wire_state=new_ws)
+            else:
+                recv = R.quantize_dequantize_per_node(payload, spec=spec)
+            recv = dict(recv)
+            protos_rx = recv.pop("protos")
+            return state, recv, protos_rx
         if wire_model is not None and spec and share_protos:
             payload = {"protos": protos, "student": state.student}
             if spec.error_feedback:
@@ -531,7 +584,14 @@ def _make_round_parts(step: Callable, proto_cfg: ModelConfig, ncls: int, *,
     def mix_phase(state: NodeState, recv_student, protos_rx, counts,
                   w_self, w_neigh, include) -> NodeState:
         # 3b) gossip + aggregation (shared round_ops core)
-        if wire_model is not None:
+        if adapters:
+            # merge-based aggregation: neighbors' low-rank deltas apply
+            # straight onto the current student (RegMean-adjusted when
+            # grams ride), the dense rest keeps the classic gossip mix
+            state = state._replace(student=R.adapter_merge_nodes(
+                state.student, recv_student, w_self, w_neigh,
+                rank=adapter_rank, grams=adapter_grams))
+        elif wire_model is not None:
             state = state._replace(student=R.mix_node_trees(
                 w_self, w_neigh, state.student, recv_student))
         if share_protos:
@@ -546,7 +606,8 @@ def _make_round_parts(step: Callable, proto_cfg: ModelConfig, ncls: int, *,
 def _make_round_fn(step: Callable, proto_cfg: ModelConfig, ncls: int, *,
                    share_protos: bool, wire_model: Optional[str],
                    bits: Optional[int] | WireSpec,
-                   proto_pass: str = "exact", proto_ema: float = 0.0):
+                   proto_pass: str = "exact", proto_ema: float = 0.0,
+                   adapter_rank: int = 0, adapter_grams: bool = False):
     """One full federation round as a single compiled program over
     stacked node state: scan(vmap(step)) → Eq. 3 proto pass (exact
     second stream, or fused into the training scan — ``proto_pass``) →
@@ -560,7 +621,8 @@ def _make_round_fn(step: Callable, proto_cfg: ModelConfig, ncls: int, *,
     train_phase, share_phase, mix_phase = _make_round_parts(
         step, proto_cfg, ncls, share_protos=share_protos,
         wire_model=wire_model, bits=bits, proto_pass=proto_pass,
-        proto_ema=proto_ema)
+        proto_ema=proto_ema, adapter_rank=adapter_rank,
+        adapter_grams=adapter_grams)
 
     def round_fn(state: NodeState, xb, valid, pxb, pvalid,
                  w_self, w_neigh, include,
@@ -579,7 +641,8 @@ def _make_round_fn(step: Callable, proto_cfg: ModelConfig, ncls: int, *,
 def _make_phase_fns(step: Callable, proto_cfg: ModelConfig, ncls: int, *,
                     share_protos: bool, wire_model: Optional[str],
                     bits: Optional[int] | WireSpec,
-                    proto_pass: str = "exact", proto_ema: float = 0.0):
+                    proto_pass: str = "exact", proto_ema: float = 0.0,
+                    adapter_rank: int = 0, adapter_grams: bool = False):
     """The pipelined engine's three jitted programs — the same traced
     phase bodies as the sequential :func:`_make_round_fn`, so splitting
     the round changes jit boundaries (and therefore dispatch order),
@@ -587,7 +650,8 @@ def _make_phase_fns(step: Callable, proto_cfg: ModelConfig, ncls: int, *,
     train_phase, share_phase, mix_phase = _make_round_parts(
         step, proto_cfg, ncls, share_protos=share_protos,
         wire_model=wire_model, bits=bits, proto_pass=proto_pass,
-        proto_ema=proto_ema)
+        proto_ema=proto_ema, adapter_rank=adapter_rank,
+        adapter_grams=adapter_grams)
     donate = (0,) if jax.default_backend() != "cpu" else ()
     return (jax.jit(train_phase,
                     static_argnames=("teacher_on", "all_valid"),
@@ -797,14 +861,33 @@ def run_federation(teacher_cfg: ModelConfig, fed: FederationConfig,
     eval_cfg = model_cfgs[1] if algo in ("profe", "fml") else model_cfgs[0]
     proto_cfg = eval_cfg
     needs_teacher = algo in ("profe", "fml")
+    adapters_on = bool(fed.adapter_rank) and wire_model is not None \
+        and share_protos and isinstance(bits, WireSpec)
+    if adapters_on:
+        # adapter-rank wire: the per-node reference snapshot (and gram
+        # carry) rides the stacked NodeState through the jitted round
+        from repro.core.adapters import adapter_layout, init_adapter_state
+        a_layout = adapter_layout(as_tree(stacked.student),
+                                  fed.adapter_rank, node_axis=True)
+        stacked = stacked._replace(adapter_state=init_adapter_state(
+            a_layout, as_tree(stacked.student), grams=fed.adapter_grams))
     if isinstance(bits, WireSpec) and bits.error_feedback:
         # stateful codec: zero residual per node, shaped like the wire
         # payload — carried inside the stacked NodeState from here on
         from repro.core.wire_state import init_codec_state
-        stacked = stacked._replace(wire_state=init_codec_state({
-            "protos": jnp.zeros((n_nodes, ncls, proto_cfg.proto_dim),
-                                jnp.float32),
-            "student": stacked.student}, n_nodes=n_nodes))
+        ef_payload = {"protos": jnp.zeros(
+            (n_nodes, ncls, proto_cfg.proto_dim), jnp.float32)}
+        if adapters_on:
+            # the residual mirrors the adapter payload structure:
+            # factor-shaped zeros + the dense rest (+ gram zeros)
+            from repro.core.adapters import zero_wire_payload
+            ef_payload.update(zero_wire_payload(
+                a_layout, as_tree(stacked.student),
+                grams=fed.adapter_grams))
+        else:
+            ef_payload["student"] = stacked.student
+        stacked = stacked._replace(
+            wire_state=init_codec_state(ef_payload, n_nodes=n_nodes))
 
     # the lowered schedule: [R, N]/[R, N, N] stacks indexed per round and
     # fed to the jitted round as traced operands (R == 1 for static)
@@ -819,13 +902,20 @@ def run_federation(teacher_cfg: ModelConfig, fed: FederationConfig,
                               share_protos=share_protos,
                               wire_model=wire_model, bits=bits,
                               proto_pass=fed.proto_pass,
-                              proto_ema=fed.proto_ema)
+                              proto_ema=fed.proto_ema,
+                              adapter_rank=fed.adapter_rank if adapters_on
+                              else 0, adapter_grams=fed.adapter_grams)
     payload = _payload_template(wire_model, share_protos, stacked, ncls,
-                                proto_cfg.proto_dim)
+                                proto_cfg.proto_dim,
+                                adapter_rank=fed.adapter_rank if adapters_on
+                                else 0, adapter_grams=fed.adapter_grams)
 
     result = FederationResult(comm=meter, algorithm=algo)
     result.extras["proto_pass"] = fed.proto_pass
     result.extras["param_plane"] = use_plane
+    if adapters_on:
+        result.extras["adapter_rank"] = fed.adapter_rank
+        result.extras["adapter_grams"] = fed.adapter_grams
     if fed.proto_ema:
         result.extras["proto_ema"] = fed.proto_ema
     if stale_self_floor is not None:
@@ -853,7 +943,9 @@ def run_federation(teacher_cfg: ModelConfig, fed: FederationConfig,
         train_jit, share_jit, mix_jit = _make_phase_fns(
             step, proto_cfg, ncls, share_protos=share_protos,
             wire_model=wire_model, bits=bits, proto_pass=fed.proto_pass,
-            proto_ema=fed.proto_ema)
+            proto_ema=fed.proto_ema,
+            adapter_rank=fed.adapter_rank if adapters_on else 0,
+            adapter_grams=fed.adapter_grams)
         staged_next = probe
         proto_next = _stack_round_batches(
             node_data, train.batch_size, [fed.seed] * n_nodes, 1) \
@@ -1030,25 +1122,67 @@ def run_federation_loop(teacher_cfg: ModelConfig, fed: FederationConfig,
                           plane=use_plane)
     eval_cfg = model_cfgs[1] if algo in ("profe", "fml") else model_cfgs[0]
     proto_cfg = eval_cfg
+    adapters_on = bool(fed.adapter_rank) and wire_model is not None \
+        and share_protos and isinstance(bits, WireSpec)
+    a_layout = None
+    if adapters_on:
+        from repro.core.adapters import adapter_layout, init_adapter_state
+        a_layout = adapter_layout(as_tree(states[0].student),
+                                  fed.adapter_rank)
+        for i in range(n_nodes):
+            states[i] = states[i]._replace(
+                adapter_state=init_adapter_state(
+                    a_layout, as_tree(states[i].student),
+                    grams=fed.adapter_grams))
     # stateful wire codec: per-node residual dicts, the reference
     # semantics of the stacked engine's carried CodecState
     ef = isinstance(bits, WireSpec) and bits.error_feedback \
         and wire_model is not None and share_protos
     ef_qdq = None
+    ef_plane = ef and use_plane and not adapters_on
     if ef:
         from repro.core.wire_state import (ef_quantize_dequantize_tree,
                                            init_codec_state)
         for i in range(n_nodes):
-            states[i] = states[i]._replace(wire_state=init_codec_state({
-                "protos": jnp.zeros((ncls, proto_cfg.proto_dim),
-                                    jnp.float32),
-                "student": as_tree(states[i].student)}))
+            if adapters_on:
+                # the residual mirrors the adapter payload structure
+                from repro.core.adapters import zero_wire_payload
+                res0 = {"protos": jnp.zeros((ncls, proto_cfg.proto_dim),
+                                            jnp.float32)}
+                res0.update(zero_wire_payload(
+                    a_layout, as_tree(states[i].student),
+                    grams=fed.adapter_grams))
+                states[i] = states[i]._replace(
+                    wire_state=init_codec_state(res0))
+            elif ef_plane:
+                # plane-resident EF: the student residual is carried as
+                # a zero plane buffer — row spans, not leaf views —
+                # so the EF wire round-trips buffer-native and the mix
+                # below never rebuilds a tree (PR 9's narrow fallback
+                # retired; bit-identity to the tree reference asserted
+                # in tests)
+                states[i] = states[i]._replace(
+                    wire_state=init_codec_state({
+                        "protos": jnp.zeros(
+                            (ncls, proto_cfg.proto_dim), jnp.float32),
+                        "student": states[i].student}))
+            else:
+                states[i] = states[i]._replace(
+                    wire_state=init_codec_state({
+                        "protos": jnp.zeros(
+                            (ncls, proto_cfg.proto_dim), jnp.float32),
+                        "student": as_tree(states[i].student)}))
         # jitted like the stacked round program, so both engines see the
         # same compiled residual arithmetic (XLA contracts the
         # mul-subtract of the residual update into an FMA; an eager
         # reference would drift by an ulp and the drift compounds)
-        ef_qdq = jax.jit(
-            lambda t, s: ef_quantize_dequantize_tree(t, bits, s))
+        if ef_plane:
+            from repro.core.wire_state import ef_quantize_dequantize_plane
+            ef_qdq = jax.jit(
+                lambda t, s: ef_quantize_dequantize_plane(t, bits, s))
+        else:
+            ef_qdq = jax.jit(
+                lambda t, s: ef_quantize_dequantize_tree(t, bits, s))
     result = FederationResult(comm=meter, algorithm=algo)
     result.extras["proto_pass"] = fed.proto_pass
     result.extras["param_plane"] = use_plane
@@ -1060,7 +1194,10 @@ def run_federation_loop(teacher_cfg: ModelConfig, fed: FederationConfig,
     from repro.core.quantization import tree_wire_bytes
     payload_t = _payload_template(wire_model, share_protos, states[0],
                                   ncls, proto_cfg.proto_dim,
-                                  node_axis=False)
+                                  node_axis=False,
+                                  adapter_rank=fed.adapter_rank
+                                  if adapters_on else 0,
+                                  adapter_grams=fed.adapter_grams)
     result.extras["wire_bytes_per_copy"] = tree_wire_bytes(payload_t, bits)
     result.extras["wire_bytes_packed_per_copy"] = \
         packed_copy_bytes(payload_t, bits)
@@ -1129,28 +1266,74 @@ def run_federation_loop(teacher_cfg: ModelConfig, fed: FederationConfig,
         #    stateful codec exactly once per round (residual replayed +
         #    updated, isolated nodes included — matching the stacked
         #    engine, which quantizes all nodes unconditionally).
+        # 3-pre) adapter share: factorize each node's round delta into
+        #     the wire factor groups (+ gram carry) and advance the
+        #     reference snapshot to the just-shared student — the
+        #     reference semantics of the stacked adapter_share_nodes
+        adapter_pay: List[Any] = []
+        if adapters_on:
+            from repro.core.adapters import (factorize_deltas, gram_update,
+                                             split_student)
+            for i in range(n_nodes):
+                mats_i, rest_i = split_student(
+                    a_layout, as_tree(states[i].student))
+                ast = states[i].adapter_state
+                factors_i = factorize_deltas(a_layout, mats_i, ast["ref"])
+                new_ast = {"ref": mats_i}
+                pay = {"adapters": factors_i, "student": rest_i}
+                if fed.adapter_grams:
+                    g = gram_update(factors_i, ast.get("grams"))
+                    pay["grams"] = g
+                    new_ast["grams"] = g
+                states[i] = states[i]._replace(adapter_state=new_ast)
+                adapter_pay.append(pay)
         ef_recv: List[Any] = []
         if ef:
             for i in range(n_nodes):
-                recv_i, new_ws = ef_qdq(
-                    {"protos": protos[i],
-                     "student": as_tree(states[i].student)},
-                    states[i].wire_state)
+                if adapters_on:
+                    pay_i = dict(adapter_pay[i])
+                    pay_i["protos"] = protos[i]
+                elif ef_plane:
+                    # plane-resident EF payload: the student rides as
+                    # its Plane, residual spans mirror its row layout
+                    pay_i = {"protos": protos[i],
+                             "student": states[i].student}
+                else:
+                    pay_i = {"protos": protos[i],
+                             "student": as_tree(states[i].student)}
+                recv_i, new_ws = ef_qdq(pay_i, states[i].wire_state)
                 states[i] = states[i]._replace(wire_state=new_ws)
                 ef_recv.append(recv_i)
         recv_models: List[List[Any]] = [[] for _ in range(n_nodes)]
         recv_sizes: List[List[float]] = [[] for _ in range(n_nodes)]
+        recv_pay: List[Any] = []
         for i in range(n_nodes):
             neigh = T.neighbors(adj, i)
             payload = {}
-            if wire_model is not None:
+            if adapters_on:
+                payload["adapters"] = adapter_pay[i]["adapters"]
+                payload["model"] = adapter_pay[i]["student"]
+                if fed.adapter_grams:
+                    payload["grams"] = adapter_pay[i]["grams"]
+            elif wire_model is not None:
                 payload["model"] = as_tree(states[i].student)
             if share_protos:
                 payload["protos"] = protos[i]
                 payload["counts"] = counts[i]
             meter.record_broadcast(i, neigh, payload, kind=algo, round_idx=rnd,
                                    bits=bits)
-            if wire_model is not None:
+            if adapters_on:
+                # receiver-side factor view: per-leaf scales at each
+                # group's spec width (== the packed codec's per-(leaf,
+                # node) scale segments)
+                if ef:
+                    recv_pay.append({k: v for k, v in ef_recv[i].items()
+                                     if k != "protos"})
+                else:
+                    recv_pay.append({
+                        k: quantize_dequantize_tree(v, bits.bits_for(k))
+                        for k, v in adapter_pay[i].items()})
+            elif wire_model is not None:
                 if ef:
                     model_rx = ef_recv[i]["student"]
                 elif use_plane:
@@ -1183,28 +1366,80 @@ def run_federation_loop(teacher_cfg: ModelConfig, fed: FederationConfig,
                                                 all_c[np.array(neigh)])
                 states[i] = states[i]._replace(global_protos=gp,
                                                proto_mask=mask)
-        if wire_model is not None:
+        if adapters_on:
+            # merge-based aggregation: each receiver applies its
+            # neighbors' dequantized low-rank deltas ON TOP of its own
+            # current student (no self term — the node's own training
+            # delta is already in W); the dense rest keeps the classic
+            # size-weighted gossip.  Reference semantics of the stacked
+            # adapter_merge_nodes, built from stacked factor banks so
+            # the same lowrank_apply_ref contraction runs here.
+            from repro.core.adapters import merge_student, split_student
+            from repro.core.aggregation import regmean_adjust
+            from repro.kernels.lowrank_apply.ref import lowrank_apply_ref
+            b_bank = {n: jnp.stack([p["adapters"][n]["B"]
+                                    for p in recv_pay])
+                      for n in a_layout.mat_names}
+            a_bank = {n: jnp.stack([p["adapters"][n]["A"]
+                                    for p in recv_pay])
+                      for n in a_layout.mat_names}
+            g_bank = {n: jnp.stack([p["grams"][n] for p in recv_pay])
+                      for n in a_layout.mat_names} \
+                if fed.adapter_grams else None
+            coeffs_np = np.zeros((n_nodes, n_nodes), np.float32)
+            for i in range(n_nodes):
+                neigh = T.neighbors(adj, i)
+                tot = sizes[i] + sum(sizes[j] for j in neigh)
+                for j in neigh:
+                    coeffs_np[i, j] = sizes[j] / tot
+            coeffs = jnp.asarray(coeffs_np)
+            new_models = []
+            for i in range(n_nodes):
+                neigh = T.neighbors(adj, i)
+                if not neigh:
+                    new_models.append(states[i].student)
+                    continue
+                mats_i, rest_i = split_student(
+                    a_layout, as_tree(states[i].student))
+                rest_mix = weighted_tree_mean(
+                    [rest_i] + [recv_pay[j]["student"] for j in neigh],
+                    [sizes[i]] + [sizes[j] for j in neigh])
+                new_mats = {}
+                for nm in a_layout.mat_names:
+                    a_use = a_bank[nm]
+                    if fed.adapter_grams:
+                        a_use = regmean_adjust(a_bank[nm], g_bank[nm],
+                                               coeffs[i][None],
+                                               per_recv=False)[0]
+                    new_mats[nm] = lowrank_apply_ref(
+                        mats_i[nm][None], coeffs[i][None],
+                        b_bank[nm], a_use)[0]
+                mixed = merge_student(a_layout, new_mats, rest_mix)
+                new_models.append(plane_from_tree(mixed) if use_plane
+                                  else mixed)
+            for i in range(n_nodes):
+                states[i] = states[i]._replace(student=new_models[i])
+        elif wire_model is not None:
             new_models = []
             for i in range(n_nodes):
                 if not recv_models[i]:
                     new_models.append(states[i].student)
-                elif use_plane and not ef:
+                elif use_plane:
                     # plane-resident mix: splice the dequantized [R, 512]
                     # buffers straight into the stacked plane — no leaf
                     # views, no plane_from_tree rebuild at the round
                     # boundary (bit-identical to the tree mix; see
-                    # weighted_plane_mean).
+                    # weighted_plane_mean).  The EF wire now decodes to
+                    # planes too (ef_quantize_dequantize_plane), so the
+                    # tree-mix + rebuild fallback this path used to take
+                    # under error feedback is retired.
                     new_models.append(weighted_plane_mean(
                         [states[i].student] + recv_models[i],
                         [sizes[i]] + recv_sizes[i]))
                 else:
-                    mixed = weighted_tree_mean(
+                    new_models.append(weighted_tree_mean(
                         [as_tree(states[i].student)] + recv_models[i],
-                        [sizes[i]] + recv_sizes[i])
-                    # error-feedback wire decodes to leaf views, so this
-                    # narrow path keeps the tree mix + repack fallback
-                    new_models.append(plane_from_tree(mixed) if use_plane
-                                      else mixed)
+                        [sizes[i]] + recv_sizes[i]))
             for i in range(n_nodes):
                 states[i] = states[i]._replace(student=new_models[i])
 

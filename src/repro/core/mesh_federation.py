@@ -296,7 +296,9 @@ def make_profe_round(mesh, student_specs, bits: int = 16,
                      exchange: str = "auto",
                      spec: Optional[WireSpec] = None,
                      overlap: bool = False,
-                     proto_pass: str = "exact"):
+                     proto_pass: str = "exact",
+                     adapter_rank: int = 0,
+                     adapter_grams: bool = False):
     """Returns round_fn(students, protos, counts, sizes) for stacked
     node state; students leaves [N, ...] sharded P("pod", *student_spec).
 
@@ -345,6 +347,14 @@ def make_profe_round(mesh, student_specs, bits: int = 16,
     exchange mode moves byte-identical collectives to the stateless
     spec (asserted by ``launch/dryrun.py --ef``).
 
+    ``adapter_rank=r > 0`` switches to the adapter-rank wire: matrix
+    leaves gossip low-rank delta factors (+ gram statistics with
+    ``adapter_grams``) and aggregation becomes merge-based, so the
+    round takes and returns an extra ``adapter_state`` operand —
+    ``round_fn(students, protos, counts, sizes, adapter_state
+    [, codec_state])``.  Needs an adjacency; all three exchanges move
+    the factor payload (see :func:`_make_profe_round_adapter`).
+
     ``overlap=True`` pipelines the permute exchange: the mix is
     restructured into per-step ``mix_packed_accumulate`` folds and the
     ppermute for step ``s+1`` is issued BEFORE step ``s``'s
@@ -361,6 +371,21 @@ def make_profe_round(mesh, student_specs, bits: int = 16,
     wire = spec if spec is not None else WireSpec.from_bits(bits)
     adj = None if adjacency is None else np.asarray(adjacency)
     mode = _resolve_exchange(exchange, adj, mesh)
+    if adapter_rank:
+        # adapter-rank wire: low-rank factor payload + merge-based
+        # aggregation — the round gains an adapter_state operand (see
+        # _make_profe_round_adapter for the signature)
+        fn = _make_profe_round_adapter(mesh, student_specs, wire, adj,
+                                       mode, rank=adapter_rank,
+                                       grams=adapter_grams,
+                                       overlap=overlap)
+        if proto_pass == "exact":
+            return fn
+
+        def fused_adapter_round(students, sums, counts, *rest):
+            return fn(students, normalize_protos(sums, counts), counts,
+                      *rest)
+        return fused_adapter_round
     if mode == "gather":
         fn = _plane_views_adapter(
             _make_profe_round_gather(mesh, student_specs, wire, adj),
@@ -915,6 +940,317 @@ def _make_profe_round_gather(mesh, student_specs, wire: WireSpec, adj):
         return new_students, global_protos, proto_mask, new_state
 
     return _wrap_ef(_round, mesh, student_specs, wire)
+
+
+def _unpack_stack(dq_stack, meta):
+    """Per-step unpack of a received ``[N, S, R, C]`` dequantized buffer
+    stack: :func:`Q.unpack_tree_nodes` with a step axis — float leaves
+    come back ``[N, S, ...]``, raw entries pass through."""
+    treedef, recipe = meta[0], meta[1]
+    n, s = dq_stack.shape[:2]
+    leaves = []
+    for item in recipe:
+        if item[0] == "raw":
+            leaves.append(item[1])
+            continue
+        _, shape, _dtype, row, nrows, _s = item
+        per = 1
+        for d in shape[1:]:
+            per *= d
+        rows = dq_stack[:, :, row:row + nrows, :]
+        leaves.append(rows.reshape(n, s, -1)[:, :, :per]
+                      .reshape((n, s) + tuple(shape[1:])))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def _constrain_pod_lead(mesh, tree):
+    """Pin the leading node axis of every leaf to the pod axis
+    (trailing dims replicated) — the adapter-state convention."""
+    return jax.tree_util.tree_map(
+        lambda x: jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, P("pod"))), tree)
+
+
+def _make_profe_round_adapter(mesh, student_specs, wire: WireSpec,
+                              adj, mode: str, *, rank: int,
+                              grams: bool = False,
+                              overlap: bool = False):
+    """Adapter-rank wire on the mesh: every matrix leaf of the student
+    gossips its per-round low-rank delta factors ``(B, A)`` (the
+    "adapters" payload group, plus "grams" when RegMean statistics
+    ride) instead of the dense parameters; the non-matrix rest and the
+    prototypes keep the classic exchange.  Aggregation is merge-based —
+    ``W_i ← W_i + Σ_j w_ij·B_j@Ã_j`` — so the round carries an
+    ``adapter_state`` operand (the per-node reference snapshot deltas
+    factorize against):
+
+        round(students, protos, counts, sizes, adapter_state
+              [, codec_state]) -> (students', global_protos, mask,
+                                   adapter_state' [, codec_state'])
+
+    All three exchange modes move the same logical payload; only the
+    physical bytes differ:
+
+    * ``gather`` — the semantics oracle: the shared
+      :func:`repro.core.round_ops.quantize_dequantize_per_node` packed
+      codec, codes replicated over the pod axis, node-local merge.
+    * ``packed`` — ``Q.pack_tree_nodes`` of the factor payload → ONE
+      all-gather of the spec-byte wire buffer (encode under shard_map
+      at inner==1, exactly like the dense packed round) → dequantize →
+      unpack → merge.
+    * ``ppermute`` — degree-many permutes of the encoded factor wire
+      bytes; every receiver decodes its own per-step view, so the
+      factor banks come back receiver-specific ``[N, S, ...]`` and the
+      merge runs the 4-D-gram RegMean branch.  ``overlap`` double
+      buffers the permutes exactly like the dense path.
+
+    Error feedback rides the generic tree-residual path of
+    :func:`_quantize_with_state` — the residual mirrors the factor
+    payload structure and never feeds a collective.  The full-mesh
+    protocol (``adjacency=None``) is unsupported: merge-based
+    aggregation is inherently neighborhood-wise (every node applies
+    deltas onto its OWN weights), so "every node ends identical" does
+    not hold."""
+    from repro.core import round_ops as R
+    from repro.core.adapters import merge_student, split_student
+    from repro.core.aggregation import regmean_adjust
+    if adj is None:
+        raise ValueError("the adapter wire needs an explicit adjacency "
+                         "(merge-based aggregation is neighborhood-wise; "
+                         "the full protocol's identical-output semantics "
+                         "do not apply)")
+    include = include_matrix(adj)
+    if mode == "ppermute" and _inner_size(mesh) > 1:
+        raise ValueError("adapter_rank does not support the row-sharded "
+                         "ppermute exchange (inner mesh axes > 1) — use "
+                         "exchange='packed'")
+
+    def _share(students, protos, adapter_state):
+        groups, new_ast, layout = R.adapter_share_nodes(
+            students, adapter_state, rank=rank, grams=grams)
+        payload = dict(groups)
+        payload["protos"] = protos
+        return payload, _constrain_pod_lead(mesh, new_ast), layout
+
+    def _finish(new_students, protos_rx, counts_r):
+        new_students = _constrain_over_pod(mesh, new_students,
+                                           student_specs, "pod")
+        global_protos, proto_mask = neighborhood_prototype_aggregate(
+            include, protos_rx, counts_r)
+        global_protos = jax.lax.with_sharding_constraint(
+            global_protos, NamedSharding(mesh, P("pod", None, None)))
+        proto_mask = jax.lax.with_sharding_constraint(
+            proto_mask, NamedSharding(mesh, P("pod", None)))
+        return new_students, global_protos, proto_mask
+
+    def _core_gather(students, protos, counts, sizes, ast, ef_state):
+        payload, new_ast, _layout = _share(students, protos, ast)
+        if ef_state is not None:
+            recv, new_ef = R.quantize_dequantize_per_node(
+                payload, spec=wire, state=ef_state, use_kernels=False)
+        else:
+            recv = R.quantize_dequantize_per_node(payload, spec=wire,
+                                                  use_kernels=False)
+            new_ef = None
+        recv = dict(recv)
+        protos_rx = recv.pop("protos")
+        w_self_v, w_rows = gossip_matrix_dyn(adj, sizes)
+        new_students = R.adapter_merge_nodes(students, recv, w_self_v,
+                                             w_rows, rank=rank,
+                                             grams=grams,
+                                             use_kernels=False)
+        counts_r = jax.lax.with_sharding_constraint(
+            counts, NamedSharding(mesh, P(None, None)))
+        return (*_finish(new_students, protos_rx, counts_r), new_ast,
+                new_ef)
+
+    def _core_packed(students, protos, counts, sizes, ast, ef_state):
+        payload, new_ast, _layout = _share(students, protos, ast)
+        buf, seg_ids, meta = Q.pack_tree_nodes(payload, spec=wire)
+        seg_bits = meta[4]
+        buf = _constrain_buf(mesh, buf, "pod")
+        codes, scales, new_ef = _quantize_with_state(
+            mesh, wire, buf, seg_ids, meta, ef_state)
+        if _inner_size(mesh) == 1:
+            enc = shard_map(
+                lambda c: Q.encode_wire(c, seg_ids, seg_bits=seg_bits),
+                mesh=mesh, in_specs=(P("pod", None, None),),
+                out_specs=P("pod", None), check_rep=False)
+            wire_buf = _constrain_buf(mesh, enc(codes), None)
+            codes = Q.decode_wire(wire_buf, seg_ids, seg_bits=seg_bits)
+            codes = jax.lax.with_sharding_constraint(
+                codes, NamedSharding(mesh, P(None, None, None)))
+        else:
+            codes = _constrain_buf(mesh, codes, None)
+        scales = _constrain_buf(mesh, scales, None)
+        row_delta = scales[:, seg_ids]                         # [N, R]
+        dq = codes.astype(jnp.float32) * row_delta[:, :, None]
+        recv = dict(Q.unpack_tree_nodes(dq, meta))
+        protos_rx = recv.pop("protos")
+        w_self_v, w_rows = gossip_matrix_dyn(adj, sizes)
+        new_students = R.adapter_merge_nodes(students, recv, w_self_v,
+                                             w_rows, rank=rank,
+                                             grams=grams,
+                                             use_kernels=False)
+        counts_r = jax.lax.with_sharding_constraint(
+            counts, NamedSharding(mesh, P(None, None)))
+        return (*_finish(new_students, protos_rx, counts_r), new_ast,
+                new_ef)
+
+    perms, srcs = (None, None) if mode != "ppermute" else \
+        _perm_lowering(adj)
+
+    def _core_ppermute(students, protos, counts, sizes, ast, ef_state):
+        n = counts.shape[0]
+        payload, new_ast, layout = _share(students, protos, ast)
+        buf, seg_ids, meta = Q.pack_tree_nodes(payload, spec=wire)
+        seg_bits = meta[4]
+        buf = _constrain_buf(mesh, buf, "pod")
+        codes, scales, new_ef = _quantize_with_state(
+            mesh, wire, buf, seg_ids, meta, ef_state)
+        w_self_v, w_neigh = gossip_matrix_dyn(adj, sizes)
+        ids = jnp.asarray(seg_ids)
+
+        @partial(shard_map, mesh=mesh,
+                 in_specs=(P("pod", None, None), P("pod", None),
+                           P("pod", None)),
+                 out_specs=(P("pod", None, None, None),
+                            P("pod", None, None)),
+                 check_rep=False)
+        def exchange(codes, scales, counts):
+            # the physical wire: degree-many permutes of the encoded
+            # spec-byte factor buffer (+ scales and counts).  Each
+            # receiver dequantizes its per-step view locally — the
+            # stacks leave the shard_map node-sharded, so the merge
+            # below adds no collective beyond the permutes.
+            wire_bytes = Q.encode_wire(codes, seg_ids, seg_bits=seg_bits)
+            dqs, cnts = [], []
+            if overlap:
+                inflight = (
+                    jax.lax.ppermute(wire_bytes, "pod", perms[0]),
+                    jax.lax.ppermute(scales, "pod", perms[0]),
+                    jax.lax.ppermute(counts, "pod", perms[0]))
+                for s in range(len(perms)):
+                    rw, rs, rcnt = inflight
+                    if s + 1 < len(perms):
+                        inflight = (
+                            jax.lax.ppermute(wire_bytes, "pod",
+                                             perms[s + 1]),
+                            jax.lax.ppermute(scales, "pod", perms[s + 1]),
+                            jax.lax.ppermute(counts, "pod", perms[s + 1]))
+                    rc = Q.decode_wire(rw, seg_ids, seg_bits=seg_bits)
+                    dqs.append(rc[0].astype(jnp.float32)
+                               * rs[0, ids][:, None])
+                    cnts.append(rcnt[0])
+            else:
+                for step in perms:
+                    rw = jax.lax.ppermute(wire_bytes, "pod", step)
+                    rs = jax.lax.ppermute(scales, "pod", step)
+                    rcnt = jax.lax.ppermute(counts, "pod", step)
+                    rc = Q.decode_wire(rw, seg_ids, seg_bits=seg_bits)
+                    dqs.append(rc[0].astype(jnp.float32)
+                               * rs[0, ids][:, None])
+                    cnts.append(rcnt[0])
+            return jnp.stack(dqs)[None], jnp.stack(cnts)[None]
+
+        dq_stack, cnt_stack = exchange(codes, scales, counts)
+        # step -> (valid, sender) is static; zero invalid steps'
+        # payloads explicitly so isolated receivers merge exact zeros.
+        # Statically re-sort each receiver's steps into ascending-sender
+        # order (invalid steps last): the merge sums below then run in
+        # the same term order as the gather/packed exchanges.  The
+        # RegMean solve amplifies even a one-ulp reassociation of the
+        # gram sum, so the summation order is part of the cross-mode
+        # contract, not a cosmetic choice.
+        valid = np.stack([(s >= 0) for s in srcs], 1).astype(np.float32)
+        src_idx = np.stack([np.maximum(s, 0) for s in srcs], 1)
+        order = np.argsort(np.where(valid > 0, src_idx, n), axis=1,
+                           kind="stable")
+        valid = np.take_along_axis(valid, order, axis=1)
+        src_idx = np.take_along_axis(src_idx, order, axis=1)
+        jorder = jnp.asarray(order)
+        dq_stack = jnp.take_along_axis(
+            dq_stack, jorder[:, :, None, None], axis=1)
+        cnt_stack = jnp.take_along_axis(cnt_stack, jorder[:, :, None],
+                                        axis=1)
+        c_steps = jnp.asarray(valid) * jnp.take_along_axis(
+            w_neigh, jnp.asarray(src_idx), axis=1)             # [N, S]
+        dq_stack = dq_stack * jnp.asarray(valid)[:, :, None, None]
+        cnt_stack = cnt_stack * jnp.asarray(valid)[:, :, None]
+        recv = dict(_unpack_stack(dq_stack, meta))             # [N, S, ..]
+        protos_rx = recv.pop("protos")                         # [N,S,C,P]
+
+        # prototypes: own copy enters quantized, like every receiver's
+        # view of it (dequantize the own codes locally)
+        row_delta = scales[:, ids]
+        own_dq = codes.astype(jnp.float32) * row_delta[:, :, None]
+        own_p = dict(Q.unpack_tree_nodes(own_dq, meta))["protos"]
+        num = counts[:, :, None] * own_p + \
+            jnp.sum(cnt_stack[:, :, :, None] * protos_rx, axis=1)
+        den = counts + jnp.sum(cnt_stack, axis=1)
+        global_protos = num / jnp.maximum(den, 1.0)[:, :, None]
+        proto_mask = (den > 0).astype(jnp.float32)
+        global_protos = jax.lax.with_sharding_constraint(
+            global_protos, NamedSharding(mesh, P("pod", None, None)))
+        proto_mask = jax.lax.with_sharding_constraint(
+            proto_mask, NamedSharding(mesh, P("pod", None)))
+
+        # merge: rest leaves mix classically (own copy unquantized);
+        # matrix leaves add the receiver-specific low-rank deltas
+        mats_own, rest_own = split_student(layout, students)
+        rest_rx = recv["student"]
+
+        def mixr(own, rx):
+            bshape = (n,) + (1,) * (own.ndim - 1)
+            return w_self_v.reshape(bshape) * own.astype(jnp.float32) + \
+                jnp.einsum("ns,ns...->n...", c_steps,
+                           rx.astype(jnp.float32))
+        rest_mixed = jax.tree_util.tree_map(mixr, rest_own, rest_rx)
+        fac = recv["adapters"]
+        mats_new = {}
+        # the RegMean solve is receiver-local, but jnp.linalg.solve
+        # lowers to a getrf custom call the partitioner cannot shard
+        # over the node axis — run it under shard_map so each node
+        # solves its own [S, k, k] systems and no phantom all-gather
+        # rides the wire (the exact byte gate counts every collective)
+        regmean_local = partial(
+            shard_map, mesh=mesh,
+            in_specs=(P("pod"), P("pod"), P("pod")),
+            out_specs=P("pod"), check_rep=False)(
+                lambda a_, g_, c_: regmean_adjust(a_, g_, c_,
+                                                  per_recv=True))
+        for nm in layout.mat_names:
+            a4, b4 = fac[nm]["A"], fac[nm]["B"]
+            if grams:
+                a4 = regmean_local(a4, recv["grams"][nm], c_steps)
+            delta = jnp.einsum("ns,ns...dr,ns...rk->n...dk", c_steps,
+                               b4.astype(jnp.float32),
+                               a4.astype(jnp.float32))
+            mats_new[nm] = mats_own[nm].astype(jnp.float32) + delta
+        new_students = merge_student(layout, mats_new, rest_mixed)
+        new_students = _constrain_over_pod(mesh, new_students,
+                                           student_specs, "pod")
+        return new_students, global_protos, proto_mask, new_ast, new_ef
+
+    core = {"gather": _core_gather, "packed": _core_packed,
+            "ppermute": _core_ppermute}[mode]
+
+    def round_fn(students, protos, counts, sizes, adapter_state, *rest):
+        tree_in = as_tree(students) if is_plane(students) else students
+        ef_state = rest[0] if rest else None
+        s, g, m, na, ne = core(tree_in, protos, counts, sizes,
+                               adapter_state, ef_state)
+        if is_plane(students):
+            s = jax.vmap(plane_from_tree)(s)
+        if wire.error_feedback:
+            # the adapter residual mirrors the factor payload (its own
+            # structure, not the dense {"protos", "student"} one) —
+            # node-sharded on the leading axis like every carried leaf
+            ne = CodecState(_constrain_pod_lead(mesh, ne.residual),
+                            seq=ne.seq)
+            return s, g, m, na, ne
+        return s, g, m, na
+    return round_fn
 
 
 # ---------------------------------------------------------------------------

@@ -51,6 +51,12 @@ class NodeState(NamedTuple):
     # decayed into the next round's accumulation before normalization.
     # Same checkpoint/donation story as wire_state.
     proto_acc: Any = None
+    # adapter-rank wire carry (None unless FederationConfig.adapter_rank
+    # > 0): ``{"ref": {leaf: W}, ["grams": {leaf: G}]}`` — the per-node
+    # reference matrices deltas factorize against (snapshotted at share
+    # time) and, with adapter_grams, the EMA'd row-space gram
+    # statistics (core/adapters.py).  Same checkpoint/donation story.
+    adapter_state: Any = None
 
 
 def proto_labels(cfg: ModelConfig, batch) -> jnp.ndarray:

@@ -275,3 +275,76 @@ def neighborhood_prototype_aggregate(include, protos, counts):
     glob = jnp.einsum("ijc,jcp->icp", w, protos.astype(jnp.float32))
     mask = (n_j > 0).astype(jnp.float32)
     return glob, mask
+
+
+# ---------------------------------------------------------------------------
+# adapter-rank wire: stacked share/merge (shared by the CPU engines and
+# the mesh path's gather mode)
+# ---------------------------------------------------------------------------
+
+def adapter_share_nodes(student, adapter_state, *, rank: int,
+                        grams: bool = False):
+    """Share-side of the adapter wire over stacked ``[N, ...]`` state:
+    factorize this round's per-matrix deltas against the carried
+    reference, snapshot the reference forward to the current weights,
+    and (optionally) advance the gram statistics.
+
+    Returns ``(payload_groups, new_adapter_state, layout)`` where
+    ``payload_groups = {"adapters": {leaf: {"A", "B"}}, "student":
+    rest-dict [, "grams": {leaf: G}]}`` — ready to merge with
+    ``{"protos", "counts"}`` and feed the packed wire codec."""
+    from repro.core.adapters import (adapter_layout, factorize_deltas,
+                                     gram_update, split_student)
+    from repro.optim.plane import as_tree
+    tree = as_tree(student)
+    layout = adapter_layout(tree, rank, node_axis=True)
+    mats, rest = split_student(layout, tree)
+    factors = factorize_deltas(layout, mats, adapter_state["ref"])
+    groups = {"adapters": factors, "student": rest}
+    new_state = {"ref": mats}
+    if grams:
+        g = gram_update(factors, adapter_state.get("grams"))
+        groups["grams"] = g
+        new_state["grams"] = g
+    return groups, new_state, layout
+
+
+def adapter_merge_nodes(student, recv, w_self, w_neigh, *, rank: int,
+                        grams: bool = False,
+                        use_kernels: Optional[bool] = None):
+    """Merge-side of the adapter wire: every receiver applies its
+    neighbors' reconstructed low-rank deltas on top of its own current
+    weights,
+
+        W_i ← W_i + Σ_j w_neigh[i, j] · B_j @ Ã_j ,
+
+    (the receiver's own training delta is already in ``W_i`` — no self
+    term), while the dense rest leaves keep the classic gossip mean
+    (own copy unquantized, ``mix_node_trees``).  ``recv`` is the
+    receiver-side payload view ``{"adapters", "student" [, "grams"]}``;
+    with grams the factors are RegMean-adjusted per receiver
+    (:func:`repro.core.aggregation.regmean_adjust`), otherwise the
+    gossip weights apply to the raw factors (naive averaging).
+    Plane-backed students run the fused ``kernels/lowrank_apply``
+    sweep over the buffer; trees run the materialized reference."""
+    from repro.core.adapters import adapter_layout, split_student
+    from repro.kernels.lowrank_apply.ops import (adapter_apply_plane,
+                                                 adapter_apply_tree)
+    from repro.optim.plane import as_tree, is_plane
+    tree = as_tree(student)
+    layout = adapter_layout(tree, rank, node_axis=True)
+    _, rest_now = split_student(layout, tree)
+    rest_mixed = mix_node_trees(w_self, w_neigh, rest_now,
+                                recv["student"])
+    factors = recv["adapters"]
+    coeffs = w_neigh
+    if grams:
+        from repro.core.aggregation import regmean_adjust
+        factors = {n: {"A": regmean_adjust(f["A"], recv["grams"][n],
+                                           coeffs, per_recv=False),
+                       "B": f["B"]}
+                   for n, f in factors.items()}
+    if is_plane(student):
+        return adapter_apply_plane(student, layout, coeffs, factors,
+                                   rest_mixed, use_kernels=use_kernels)
+    return adapter_apply_tree(tree, layout, coeffs, factors, rest_mixed)

@@ -188,3 +188,65 @@ def ef_quantize_dequantize_tree(tree, spec: WireSpec, state: CodecState, *,
     res_def = jax.tree_util.tree_structure(state.residual)
     return recv, CodecState(jax.tree_util.tree_unflatten(res_def, new_res),
                             seq=next_seq(state.seq))
+
+
+def ef_quantize_dequantize_plane(payload, spec: WireSpec,
+                                 state: CodecState
+                                 ) -> Tuple[Any, CodecState]:
+    """Plane-resident stateful codec for the reference loop's wire
+    payload ``{"protos": [C, P], "student": Plane}`` — the EF twin of
+    ``kernels.quantize.ops.quantize_dequantize_plane_rows``.
+
+    The student residual is carried as a *plane* (same ``[R, 512]``
+    layout as the payload buffer), so the replay ``eff = buf + decay ·
+    res.buf`` is one buffer add, the per-leaf scales come off the
+    recipe's row spans, and the receiver view plus the fresh error both
+    stay planes — the EF loop path never unpacks to leaf views and the
+    mix downstream runs ``weighted_plane_mean`` buffer-against-buffer.
+
+    Bit-identical to :func:`ef_quantize_dequantize_tree`
+    (``node_axis=False``) on the leaf views: same whole-leaf absmax
+    (padding lanes are zero in payload AND residual, so they can never
+    raise it), same tiny-guard, rounding and clip per element; the int
+    code container is elided (clipped codes are integers exactly
+    representable in fp32).  Trailing alignment rows ride Δ = 1 and a
+    zero residual, a fixed point of the round-trip — the plane padding
+    invariant survives on both outputs."""
+    from repro.optim.plane import Plane
+    plane = payload["student"]
+    res_pl = state.residual["student"]
+    decay = jnp.float32(spec.ef_decay)
+
+    pb = spec.bits_for("protos")
+    qm_p = (1 << (pb - 1)) - 1
+    tiny = jnp.finfo(jnp.float32).tiny
+    eff_p = payload["protos"].astype(jnp.float32) + \
+        decay * state.residual["protos"]
+    d_p = jnp.maximum(jnp.max(jnp.abs(eff_p)) / qm_p, tiny)
+    codes_p = jnp.clip(jnp.floor(eff_p / d_p + 0.5), -qm_p - 1, qm_p)
+    deq_p = codes_p * d_p
+
+    sb = spec.bits_for("student")
+    qm = (1 << (sb - 1)) - 1
+    eff = plane.buf.astype(jnp.float32) + decay * res_pl.buf
+    row_parts = []
+    covered = 0
+    for item in plane.meta.recipe:
+        if item[0] != "leaf":
+            continue
+        _, _shape, _dtype, row, r_leaf = item
+        amax = jnp.max(jnp.abs(eff[..., row:row + r_leaf, :]))
+        row_parts.append(jnp.broadcast_to(
+            jnp.maximum(amax / qm, tiny), (r_leaf,)))
+        covered = row + r_leaf
+    if plane.meta.rows > covered:
+        row_parts.append(jnp.ones((plane.meta.rows - covered,),
+                                  jnp.float32))
+    rd = jnp.concatenate(row_parts)[:, None]
+    codes = jnp.clip(jnp.floor(eff / rd + 0.5), -qm - 1, qm)
+    deq = codes * rd
+
+    recv = {"protos": deq_p, "student": Plane(deq, plane.raw, plane.meta)}
+    residual = {"protos": eff_p - deq_p,
+                "student": Plane(eff - deq, res_pl.raw, res_pl.meta)}
+    return recv, CodecState(residual, seq=next_seq(state.seq))

@@ -1,0 +1,142 @@
+"""Dispatch + plane sweep for the fused low-rank apply: Pallas on TPU,
+the bit-identical jnp reference elsewhere, interpret-mode threading for
+the CPU test suite — the same policy as ``kernels/quantize/ops`` and
+``kernels/opt_update/ops``.
+
+Two entry points consume the per-leaf :func:`lowrank_apply` primitive:
+
+* :func:`adapter_apply_tree` — the materialized baseline: per matrix
+  leaf, the sequential ``W + Σ_j c_j·(B_j @ A_j)`` reference on tree
+  views, full student rebuilt leaf by leaf (and re-packed into a plane
+  by the caller when plane-backed).  This is the ``apply_dense`` side
+  of the ``round_step.py --phases`` A/B.
+* :func:`adapter_apply_plane` — the fused sweep: walks the plane
+  recipe's leaf-row spans, applies the low-rank update to each matrix
+  span *in the buffer* and splices the mixed dense rest straight into
+  the same ``[N, R, 512]`` buffer — no per-node dense delta, no
+  ``plane_from_tree`` repack at the round boundary.  Bit-identical to
+  the tree baseline (same per-sender accumulation, same values through
+  the views), asserted in tests and gated by ``check_regression.py``.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.lowrank_apply.lowrank_apply import lowrank_apply_pallas
+from repro.kernels.lowrank_apply.ref import lowrank_apply_ref
+
+# Trace bookkeeping (same pattern as OPT_UPDATE_TRACES): incremented
+# only when jax (re)traces a program containing the apply — asserted
+# bounded over repeated rounds in tests.
+LOWRANK_APPLY_TRACES: Dict[str, int] = {}
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def lowrank_apply(w, coeffs, b, a, *,
+                  use_kernels: Optional[bool] = None):
+    """``w`` [N, *lead, d, k] + per-sender factors -> merged
+    [N, *lead, d, k] (see ``ref.lowrank_apply_ref`` for the contract).
+    The Pallas kernel tiles plain ``[N, d, k]`` leaves; leading batch
+    axes (a scanned stack's layer dim) vmap over it — one batched
+    launch, same per-slice tiling."""
+    LOWRANK_APPLY_TRACES["apply"] = LOWRANK_APPLY_TRACES.get("apply", 0) + 1
+    if use_kernels is None:
+        use_kernels = jax.default_backend() == "tpu"
+    if not use_kernels:
+        return lowrank_apply_ref(w, coeffs, b, a)
+    if w.ndim > 3:
+        per_recv = a.ndim == b.ndim + 1
+        return jax.vmap(
+            lambda w_, b_, a_: lowrank_apply(w_, coeffs, b_, a_,
+                                             use_kernels=use_kernels),
+            in_axes=(1, 1, 2 if per_recv else 1), out_axes=1)(w, b, a)
+    return lowrank_apply_pallas(w, coeffs, b, a, interpret=_interpret())
+
+
+def adapter_apply_tree(tree, layout, coeffs, factors, rest_mixed):
+    """Materialized reference merge: ``tree``'s matrix leaves become
+    ``W + Σ_j coeffs[:, j]·(B_j @ A_j)`` (sequential sender order),
+    non-matrix leaves are replaced by the pre-mixed ``rest_mixed``
+    values.  ``factors``: ``{leaf: {"A", "B"}}`` stacked over senders;
+    ``layout``: the shared :class:`repro.core.adapters.AdapterLayout`.
+    """
+    leaves = jax.tree_util.tree_leaves(tree)
+    out = []
+    for name, is_mat, leaf in zip(layout.names, layout.is_mat, leaves):
+        if is_mat:
+            f = factors[name]
+            out.append(lowrank_apply_ref(leaf, coeffs, f["B"], f["A"]))
+        else:
+            out.append(rest_mixed[name])
+    return jax.tree_util.tree_unflatten(layout.treedef, out)
+
+
+def adapter_apply_plane(plane, layout, coeffs, factors, rest_mixed, *,
+                        use_kernels: Optional[bool] = None):
+    """The fused sweep over a node-stacked plane: every matrix
+    leaf-row span of ``plane.buf`` [N, R, 512] is updated in place
+    through :func:`lowrank_apply` on its ``[N, d, k]`` view, every
+    dense rest span is overwritten with its ``rest_mixed`` leaf
+    (padding lanes re-zeroed), trailing alignment rows pass through
+    (they are zero by the plane invariant).  Returns a Plane sharing
+    the input's meta."""
+    from repro.kernels.lowrank_apply.ref import lowrank_delta_ref
+    from repro.optim.plane import Plane, _leaf_view, _prod
+    if use_kernels is None:
+        use_kernels = jax.default_backend() == "tpu"
+    buf = plane.buf
+    n, c = buf.shape[0], buf.shape[-1]
+    new_raw = list(plane.raw)
+    # recipe rows ascend, so the new buffer assembles as one concat of
+    # updated spans + passed-through gap rows — a single fusable copy
+    # instead of a chain of per-leaf dynamic-update-slices
+    segs = []
+    cursor = 0
+    for name, is_mat, item in zip(layout.names, layout.is_mat,
+                                  plane.meta.recipe):
+        if item[0] == "raw":
+            new_raw[item[1]] = rest_mixed[name]
+            continue
+        _, shape, _dtype, row, r_leaf = item
+        assert row >= cursor, "plane recipe rows must ascend"
+        if row > cursor:
+            segs.append(buf[:, cursor:row, :])
+        pad = r_leaf * c - _prod(shape)
+        if is_mat and not use_kernels:
+            # buffer-native merge: the delta alone is reshaped into the
+            # leaf's row span and added there — w is never sliced out
+            # of the buffer.  flat(w) + flat(delta) runs the same
+            # elementwise adds as flat(w + delta), and the span's
+            # padding lanes are zero on both sides, so this is
+            # bit-identical to the materialized reference.
+            f = factors[name]
+            delta = lowrank_delta_ref(coeffs, f["B"], f["A"])
+            flat = jnp.reshape(delta, (n, -1))
+            if pad:
+                flat = jnp.pad(flat, ((0, 0), (0, pad)))
+            segs.append(buf[:, row:row + r_leaf, :]
+                        + flat.reshape(n, r_leaf, c))
+            cursor = row + r_leaf
+            continue
+        if is_mat:
+            w = _leaf_view(buf, shape, row, r_leaf)
+            f = factors[name]
+            out = lowrank_apply(w, coeffs, f["B"], f["A"],
+                                use_kernels=use_kernels)
+        else:
+            out = rest_mixed[name]
+        flat = jnp.reshape(out, (n, -1)).astype(jnp.float32)
+        if pad:
+            flat = jnp.pad(flat, ((0, 0), (0, pad)))
+        segs.append(flat.reshape(n, r_leaf, c))
+        cursor = row + r_leaf
+    if cursor < buf.shape[1]:
+        segs.append(buf[:, cursor:, :])
+    new_buf = jnp.concatenate(segs, axis=1) if segs else buf
+    return Plane(new_buf, tuple(new_raw), plane.meta)

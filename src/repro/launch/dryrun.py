@@ -289,7 +289,10 @@ def lower_federate(cfg, student_cfg, mesh, n_pods: int) -> Dict[str, Any]:
 
 
 def topology_report(arch: str, topology: str, pods,
-                    bits="16", ef: bool = False) -> Dict[str, Any]:
+                    bits="16", ef: bool = False,
+                    adapters: int = 0, adapter_grams: bool = False,
+                    adapter_frac: Optional[float] = None
+                    ) -> Dict[str, Any]:
     """The --topology axis: physical wire bytes per exchange mode on a
     federation mesh, asserted against the accountant.
 
@@ -308,22 +311,38 @@ def topology_report(arch: str, topology: str, pods,
     ≤ 0.25x the int16 ring buffer bytes).  With error feedback the
     stateless twin is ALSO compiled and the exchange bytes must match
     it exactly — the residual state costs zero wire bytes.
+
+    ``adapters=r > 0`` compiles the adapter-rank wire (matrix leaves
+    gossip rank-``r`` delta factors; ``adapter_grams`` adds the RegMean
+    gram group) and the gate tightens on both ends: per-node HLO
+    collective-permute bytes must equal the accountant's packed
+    prediction EXACTLY (the factor payload packs spec-exact rows, one
+    device per node, so no tolerance is owed), AND the dense
+    full-parameter round at the same spec is compiled as the reference
+    — the adapter exchange must move < ``adapter_frac`` (default
+    0.15x) of its physical bytes.
     """
     import dataclasses
 
     from repro.core import topology as T
-    from repro.launch.wire import (check_bits_reduction,
+    from repro.launch.wire import (check_adapter_reduction,
+                                   check_bits_reduction,
                                    check_ef_zero_overhead,
                                    check_topology_bytes,
                                    measure_exchange_bytes, parse_pods)
     from repro.wirespec import WireSpec, resolve_spec
     pods, inner = parse_pods(pods)
+    if adapters and inner > 1:
+        raise ValueError("--adapters does not support multi-axis pods "
+                         "('RxC') — the adapter wire has no row-sharded "
+                         "permute lowering; use --pods R")
     spec = WireSpec.parse(bits) if isinstance(bits, str) \
         else resolve_spec(bits)
     if ef and not spec.error_feedback:
         spec = dataclasses.replace(spec, error_feedback=True)
     report = measure_exchange_bytes(arch, pods, topology, bits=spec,
-                                    inner=inner)
+                                    inner=inner, adapter_rank=adapters,
+                                    adapter_grams=adapter_grams)
     adj = T.make_schedule(pods, topology, rounds=1, seed=0).adjacency_at(0)
     deg = int(adj.sum(axis=1).max())
     # The degree x payload prediction only holds for regular graphs,
@@ -339,7 +358,9 @@ def topology_report(arch: str, topology: str, pods,
         exs = ("packed", "ppermute") if T.is_regular(adj) else ("packed",)
         report_sl = measure_exchange_bytes(arch, pods, topology,
                                            bits=spec.stateless(),
-                                           exchanges=exs, inner=inner)
+                                           exchanges=exs, inner=inner,
+                                           adapter_rank=adapters,
+                                           adapter_grams=adapter_grams)
         report["stateless_reference"] = {
             "bits": report_sl["bits"],
             "exchanges": report_sl["exchanges"],
@@ -351,10 +372,33 @@ def topology_report(arch: str, topology: str, pods,
         # assertion — a compile failure would otherwise make the gate
         # pass vacuously (check_topology_bytes raises on recorded errors)
         # sparse graphs must also beat the dense exchange by the margin
-        # the degree implies (ring at N=8: 2/8 = 0.25x, bound 0.5x)
-        frac = 0.5 if 2 * deg <= pods else None
+        # the degree implies (ring at N=8: 2/8 = 0.25x, bound 0.5x).
+        # On the adapter wire the full-gather reference does not exist
+        # (merge is neighborhood-wise) and the byte gate is EXACT.
+        frac = None if adapters else (0.5 if 2 * deg <= pods else None)
         check_topology_bytes(report, exchange="ppermute", rel_tol=0.10,
-                             gather_frac=frac, exact=inner > 1)
+                             gather_frac=frac,
+                             exact=bool(adapters) or inner > 1)
+        if adapters:
+            # the headline adapter gate: the dense full-parameter round
+            # at the SAME spec, same graph — factors must move
+            # < adapter_frac of its physical permute bytes
+            report_dense = measure_exchange_bytes(
+                arch, pods, topology, bits=spec.stateless(),
+                exchanges=("ppermute",), inner=inner)
+            report["dense_reference"] = {
+                "bits": report_dense["bits"],
+                "packed_pred_bytes_per_node":
+                    report_dense["packed_pred_bytes_per_node"],
+                "exchanges": report_dense["exchanges"],
+            }
+            # the gram group rides the wire at full [*, k, k] per leaf,
+            # so gram mode legitimately costs more — unless the caller
+            # pins a fraction, record the ratio without gating it
+            check_adapter_reduction(
+                report, report_dense, exchange="ppermute",
+                frac=(adapter_frac if adapter_frac is not None
+                      else (None if adapter_grams else 0.15)))
         if spec.stateless() != WireSpec.from_bits(16):
             # the headline knob: the same graph at int16, and the
             # physical buffer bytes must scale by exactly spec/int16
@@ -362,7 +406,9 @@ def topology_report(arch: str, topology: str, pods,
             # reference compiles)
             report16 = measure_exchange_bytes(arch, pods, topology, bits=16,
                                               exchanges=("ppermute",),
-                                              inner=inner)
+                                              inner=inner,
+                                              adapter_rank=adapters,
+                                              adapter_grams=adapter_grams)
             report["int16_reference"] = {
                 "packed_pred_bytes_per_node":
                     report16["packed_pred_bytes_per_node"],
@@ -406,12 +452,29 @@ def main():
                          "compiles the stateful round AND its stateless "
                          "twin, asserting byte-identical collectives "
                          "(EF must cost zero wire bytes)")
+    ap.add_argument("--adapters", type=int, default=0, metavar="RANK",
+                    help="adapter-rank wire for --topology mode: matrix "
+                         "leaves gossip rank-r delta factors; the gate "
+                         "asserts permute bytes == accountant prediction "
+                         "EXACTLY and < --adapter-frac x the dense "
+                         "full-parameter exchange")
+    ap.add_argument("--adapter-grams", action="store_true",
+                    help="ship RegMean gram statistics as their own "
+                         "payload group (with --adapters)")
+    ap.add_argument("--adapter-frac", type=float, default=None,
+                    help="required adapter-vs-dense physical byte "
+                         "fraction (default 0.15; with --adapter-grams "
+                         "the ratio is recorded but not gated unless "
+                         "this is set)")
     args = ap.parse_args()
 
     if args.topology is not None:
         try:
             report = topology_report(args.arch, args.topology, args.pods,
-                                     bits=args.bits, ef=args.ef)
+                                     bits=args.bits, ef=args.ef,
+                                     adapters=args.adapters,
+                                     adapter_grams=args.adapter_grams,
+                                     adapter_frac=args.adapter_frac)
             report["status"] = "ok"
         except Exception as e:
             report = {"arch": args.arch, "topology": args.topology,

@@ -101,17 +101,59 @@ def _student_setup(arch: str):
     return cfg, student_cfg, struct, ncls
 
 
+def accountant_payload(struct, ncls: int, proto_dim: int, *,
+                       adapter_rank: int = 0,
+                       adapter_grams: bool = False) -> Dict[str, Any]:
+    """The per-copy payload skeleton the comm accountants meter for one
+    gossip share: dense ``{"model", "protos", "counts"}``, or — with an
+    adapter rank — the factored wire ``{"adapters", ["grams",] "model"
+    (the non-matrix rest), "protos", "counts"}``.  The adapter split
+    comes from the same :func:`repro.core.adapters.adapter_layout` the
+    engines run, so byte predictions stay exact against the compiled
+    exchange."""
+    import jax
+    model = jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(tuple(s.shape), s.dtype), struct)
+    payload: Dict[str, Any] = {
+        "model": model,
+        "protos": jax.ShapeDtypeStruct((ncls, proto_dim),
+                                       np.dtype(np.float32)),
+        "counts": jax.ShapeDtypeStruct((ncls,), np.dtype(np.float32)),
+    }
+    if adapter_rank:
+        from repro.core.adapters import (adapter_layout,
+                                         adapter_payload_template,
+                                         split_student)
+        layout = adapter_layout(model, adapter_rank)
+        _mats, rest = split_student(layout, model)
+        payload.update(adapter_payload_template(layout,
+                                                grams=adapter_grams))
+        payload["model"] = rest
+    return payload
+
+
 def measure_exchange_bytes(arch: str, n_nodes: int, topology: str = "ring",
                            bits=16,
                            exchanges=("gather", "packed", "ppermute"),
-                           seed: int = 0, inner: int = 1) -> Dict[str, Any]:
+                           seed: int = 0, inner: int = 1,
+                           adapter_rank: int = 0,
+                           adapter_grams: bool = False) -> Dict[str, Any]:
     """Lower + compile the ProFe gossip round per exchange mode on a
     federation mesh and report per-node physical bytes from the HLO next
     to the accountant's logical/packed predictions.
 
     ``bits`` is an int, a :class:`repro.wirespec.WireSpec`, or a spec
-    string (``"16"``/``"8"``/``"4"``/``"4/16"``) — the whole pipeline
-    (codec, exchange, accounting) runs at that wire format.
+    string (``"16"``/``"8"``/``"4"``/``"4/16"``, with named group
+    overrides like ``"4,adapters=8"``) — the whole pipeline (codec,
+    exchange, accounting) runs at that wire format.
+
+    ``adapter_rank > 0`` measures the adapter-rank wire: matrix leaves
+    ship rank-``r`` delta factors (the "adapters" payload group, plus
+    "grams" with ``adapter_grams``) instead of dense parameters, the
+    round threads the per-node adapter state, and the byte predictions
+    account the factor payload.  The full-graph all-gather reference
+    does not apply (merge-based aggregation is neighborhood-wise) and
+    its row records the error.
 
     At ``inner == 1`` physical bytes are per-device == per-node on this
     mesh (collective-permute counts its operand once per step; all-gather
@@ -150,6 +192,26 @@ def measure_exchange_bytes(arch: str, n_nodes: int, topology: str = "ring",
     protos = jax.ShapeDtypeStruct((n_nodes, C, Pdim), jnp.float32)
     counts = jax.ShapeDtypeStruct((n_nodes, C), jnp.float32)
     sizes = jax.ShapeDtypeStruct((n_nodes,), jnp.float32)
+    ast_struct = None
+    ast_shardings = None
+    if adapter_rank:
+        # the adapter carry the round threads: per-node fp32 reference
+        # matrices (+ gram statistics) — node-sharded, never a
+        # collective operand
+        from repro.core.adapters import adapter_layout, split_student
+        layout_n = adapter_layout(students, adapter_rank, node_axis=True)
+        mats_n, _rest_n = split_student(layout_n, students)
+        ast_struct = {"ref": {nm: jax.ShapeDtypeStruct(
+            tuple(s.shape), jnp.float32) for nm, s in mats_n.items()}}
+        if adapter_grams:
+            ast_struct["grams"] = {
+                nm: jax.ShapeDtypeStruct(
+                    tuple(s.shape[:-2]) + (int(s.shape[-1]),) * 2,
+                    jnp.float32)
+                for nm, s in mats_n.items()}
+        ast_shardings = jax.tree_util.tree_map(
+            lambda _: NamedSharding(mesh, P("pod")), ast_struct)
+
     ef_struct = None
     ef_shardings = None
     if spec.error_feedback:
@@ -157,23 +219,46 @@ def measure_exchange_bytes(arch: str, n_nodes: int, topology: str = "ring",
         # round — an extra (traced, P("pod", ...)) operand that must not
         # add a single collective byte (asserted by the --ef dry-run)
         from repro.core.wire_state import ef_state_specs, init_codec_state
-        ef_struct = init_codec_state({"protos": protos,
-                                      "student": students})
+        if adapter_rank:
+            # residual mirrors the factor payload structure
+            from repro.core.adapters import (adapter_layout,
+                                             split_student)
+            _lay = adapter_layout(students, adapter_rank, node_axis=True)
+            _mats, rest_n = split_student(_lay, students)
+            ef_payload: Dict[str, Any] = {
+                "adapters": {nm: {
+                    "A": jax.ShapeDtypeStruct(
+                        tuple(s.shape[:-2])
+                        + (adapter_rank, int(s.shape[-1])), jnp.float32),
+                    "B": jax.ShapeDtypeStruct(
+                        tuple(s.shape[:-2])
+                        + (int(s.shape[-2]), adapter_rank), jnp.float32)}
+                    for nm, s in _mats.items()},
+                "protos": protos,
+                "student": rest_n,
+            }
+            if adapter_grams:
+                ef_payload["grams"] = {
+                    nm: jax.ShapeDtypeStruct(
+                        tuple(s.shape[:-2]) + (int(s.shape[-1]),) * 2,
+                        jnp.float32)
+                    for nm, s in _mats.items()}
+            ef_struct = init_codec_state(ef_payload)
+        else:
+            ef_struct = init_codec_state({"protos": protos,
+                                          "student": students})
 
     # the accountant's per-copy payload skeleton (one node's payload)
-    payload = {
-        "model": jax.tree_util.tree_map(
-            lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), struct),
-        "protos": jax.ShapeDtypeStruct((C, Pdim), np.dtype(np.float32)),
-        "counts": jax.ShapeDtypeStruct((C,), np.dtype(np.float32)),
-    }
+    payload = accountant_payload(struct, C, Pdim,
+                                 adapter_rank=adapter_rank,
+                                 adapter_grams=adapter_grams)
     # buffer vs sidecar split of one packed copy: the fp32 scales +
     # counts bytes are wire-width-invariant, so per-bits comparisons
     # (int4 vs int16) are made on the code buffer alone
     from repro.core.comm import packed_copy_bytes
     from repro.kernels.quantize.ops import packed_wire_rows
     rows16, _nseg = packed_wire_rows(
-        {"model": payload["model"], "protos": payload["protos"]},
+        {k: v for k, v in payload.items() if k != "counts"},
         node_axis=False)
     copy_spec = int(packed_copy_bytes(payload, spec, inner=inner))
     copy16 = int(packed_copy_bytes(payload, 16, inner=inner))
@@ -186,6 +271,7 @@ def measure_exchange_bytes(arch: str, n_nodes: int, topology: str = "ring",
     out: Dict[str, Any] = {
         "arch": arch, "topology": topology, "n_nodes": n_nodes,
         "inner": inner, "bits": spec.describe(),
+        "adapter_rank": adapter_rank, "adapter_grams": adapter_grams,
         "degree": [int(d) for d in sched.out_degrees()[0]],
         "logical_bytes_per_node": int(logical.max()),
         "packed_pred_bytes_per_node": int(packed.max()),
@@ -200,26 +286,39 @@ def measure_exchange_bytes(arch: str, n_nodes: int, topology: str = "ring",
         # node-shard only the residual tree; the scalar seq counter is
         # replicated (P("pod") on a rank-0 leaf would be an error)
         from repro.core.wire_state import CodecState
-        es = ef_state_specs(specs)
-        ef_shardings = to_named(CodecState(
-            residual=jax.tree_util.tree_map(
-                lambda s: P("pod", *s), es.residual,
-                is_leaf=lambda x: isinstance(x, P)),
-            seq=P()), mesh)
+        if adapter_rank:
+            ef_shardings = CodecState(
+                residual=jax.tree_util.tree_map(
+                    lambda _: NamedSharding(mesh, P("pod")),
+                    ef_struct.residual),
+                seq=NamedSharding(mesh, P()))
+        else:
+            es = ef_state_specs(specs)
+            ef_shardings = to_named(CodecState(
+                residual=jax.tree_util.tree_map(
+                    lambda s: P("pod", *s), es.residual,
+                    is_leaf=lambda x: isinstance(x, P)),
+                seq=P()), mesh)
     # the "full-gather" pseudo-mode is the full-graph all-gather
     # reference (packed exchange, adjacency=None) the sparse exchange
-    # is measured against
+    # is measured against — on the adapter wire it reports its error
+    # (merge-based aggregation needs an adjacency)
     combos = [(ex, adj, ex) for ex in exchanges] + \
         [("full-gather", None, "packed")]
     for name, adjacency, mode in combos:
         try:
             fn = make_profe_round(mesh, specs, spec=spec,
-                                  adjacency=adjacency, exchange=mode)
+                                  adjacency=adjacency, exchange=mode,
+                                  adapter_rank=adapter_rank,
+                                  adapter_grams=adapter_grams)
             in_sh = (to_named(node_specs, mesh),
                      NamedSharding(mesh, P("pod", None, None)),
                      NamedSharding(mesh, P("pod", None)),
                      NamedSharding(mesh, P(None)))
             args = (students, protos, counts, sizes)
+            if adapter_rank:
+                in_sh += (ast_shardings,)
+                args += (ast_struct,)
             if spec.error_feedback:
                 in_sh += (ef_shardings,)
                 args += (ef_struct,)
@@ -387,4 +486,49 @@ def check_ef_zero_overhead(report_ef: Dict[str, Any],
             f"vs {b_sl:.0f} stateless — EF must be wire-free; the "
             f"residual leaked into a collective")
     report_ef.setdefault("checks", []).append(verdict)
+    return verdict
+
+
+def check_adapter_reduction(report: Dict[str, Any],
+                            report_dense: Dict[str, Any], *,
+                            exchange: str = "ppermute",
+                            frac: Optional[float] = 0.15
+                            ) -> Dict[str, Any]:
+    """Assert the adapter-rank wire physically shrinks the exchange:
+    the factored payload's collective bytes per node must be <
+    ``frac`` x the dense full-parameter exchange's, for the same
+    (arch, topology, N) and the same exchange mode.  The bound is on
+    *total* physical bytes (codes + scales sidecar) — the comparison
+    the ISSUE's acceptance gate specifies (r=8 adapter wire < 0.15x
+    the int4 full-parameter wire on yi_6b).  ``frac=None`` records the
+    ratio without gating it (the gram group's [*, k, k] payload makes
+    gram mode legitimately heavier)."""
+    if not report.get("adapter_rank"):
+        raise AssertionError("report was not measured with an adapter "
+                             "rank — nothing to bound")
+    if report_dense.get("adapter_rank"):
+        raise AssertionError("dense reference report was measured WITH "
+                             "an adapter rank")
+    for rep, name in ((report, "adapters"), (report_dense, "dense")):
+        ex = rep["exchanges"].get(exchange, {})
+        if "error" in ex or "collective_bytes_per_node" not in ex:
+            raise AssertionError(
+                f"{exchange} ({name}) did not compile: "
+                f"{ex.get('error', 'missing')}")
+    b_ad = report["exchanges"][exchange]["collective_bytes_per_node"]
+    b_dn = report_dense["exchanges"][exchange][
+        "collective_bytes_per_node"]
+    ratio = b_ad / max(b_dn, 1)
+    verdict = {"check": "adapter_reduction", "exchange": exchange,
+               "bits": report["bits"],
+               "adapter_rank": report["adapter_rank"],
+               "bytes_adapters": b_ad, "bytes_dense": b_dn,
+               "ratio_vs_dense": ratio, "frac": frac}
+    if frac is not None and ratio >= frac:
+        raise AssertionError(
+            f"{exchange} adapter wire (rank "
+            f"{report['adapter_rank']}) moves {b_ad:.0f} bytes/node = "
+            f"{ratio:.4f}x the dense exchange ({b_dn:.0f}); required "
+            f"< {frac:.2f}x")
+    report.setdefault("checks", []).append(verdict)
     return verdict

@@ -143,17 +143,38 @@ class WireSpec:
     def parse(cls, spec: str) -> "WireSpec":
         """Parse a CLI spec: ``"16"`` | ``"8"`` | ``"4"`` (uniform) or
         ``"<student>/<protos>"`` (mixed, e.g. ``"4/16"`` = int4 student
-        + int16 prototypes); a ``"+ef"`` suffix (``"4+ef"``,
-        ``"4/16+ef"``) enables the stateful error-feedback codec."""
+        + int16 prototypes), optionally followed by comma-separated
+        named group overrides (``"4/16,adapters=8"``,
+        ``"4,adapters=8,grams=16"``); a ``"+ef"`` suffix (``"4+ef"``,
+        ``"4/16,adapters=8+ef"``) enables the stateful error-feedback
+        codec.  :meth:`arg` is the inverse: ``parse(spec.arg()) ==
+        spec`` for every spec the grammar can express."""
         s = str(spec).strip()
         ef = s.endswith("+ef")
         if ef:
             s = s[:-3]
-        if "/" in s:
-            student, proto = s.split("/", 1)
+        base, *named = s.split(",")
+        overrides = []
+        for part in named:
+            if "=" not in part:
+                raise ValueError(
+                    f"group override must be <group>=<bits>, got {part!r}")
+            k, b = part.split("=", 1)
+            overrides.append((k.strip(), int(b)))
+        if "/" in base:
+            student, proto = base.split("/", 1)
             return cls(student_bits=int(student), proto_bits=int(proto),
-                       error_feedback=ef)
-        return cls(student_bits=int(s), error_feedback=ef)
+                       overrides=tuple(overrides), error_feedback=ef)
+        return cls(student_bits=int(base), overrides=tuple(overrides),
+                   error_feedback=ef)
+
+    def arg(self) -> str:
+        """The CLI spelling of this spec (inverse of :meth:`parse`)."""
+        base = str(self.student_bits)
+        if self.proto_bits is not None:
+            base += f"/{self.proto_bits}"
+        base += "".join(f",{k}={b}" for k, b in self.overrides)
+        return base + "+ef" if self.error_feedback else base
 
 
 def resolve_spec(bits_or_spec) -> Optional[WireSpec]:

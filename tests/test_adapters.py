@@ -1,0 +1,475 @@
+"""The adapter-rank wire: layout/leaf selection, randomized-QB factor
+properties (incl. lead-dim scanned-stack leaves), the fused low-rank
+apply (ref vs Pallas-interpret vs plane sweep, bit for bit), RegMean
+merge normalization, the stacked share/merge round-trip, payload/
+accountant agreement, and engine parity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import round_ops as R
+from repro.core import topology as T
+from repro.core.adapters import (GRAM_EMA, adapter_layout,
+                                 adapter_payload_template, factorize_delta,
+                                 factorize_deltas, gram_update,
+                                 init_adapter_state, is_adapter_shape,
+                                 merge_student, split_student,
+                                 zero_wire_payload)
+from repro.core.aggregation import regmean_adjust
+from repro.core.comm import ScheduleCommAccountant, packed_copy_bytes
+from repro.kernels.lowrank_apply.ops import (adapter_apply_plane,
+                                             adapter_apply_tree,
+                                             lowrank_apply)
+from repro.kernels.lowrank_apply.ref import (lowrank_apply_ref,
+                                             lowrank_delta_ref)
+from repro.optim.plane import as_tree, plane_from_tree
+from repro.wirespec import WireSpec
+
+RNG = np.random.default_rng(0xADA)
+
+
+def _f32(*shape, scale=1.0):
+    return jnp.asarray(RNG.standard_normal(shape) * scale, jnp.float32)
+
+
+def _student(n=3):
+    """A stacked [N, ...] student with every leaf class the layout must
+    classify: a plain matrix, a lead-dim (scanned-stack) matrix, a
+    too-small matrix, a bias, and an integer step counter."""
+    return {
+        "w": _f32(n, 33, 20),
+        "stack": _f32(n, 2, 24, 20, scale=0.3),
+        "tiny": _f32(n, 3, 5),
+        "b": _f32(n, 7),
+        "step": jnp.ones((n,), jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# layout + leaf selection
+# ---------------------------------------------------------------------------
+
+def test_is_adapter_shape_trailing_dims_rule():
+    assert is_adapter_shape((33, 20), 8)
+    assert is_adapter_shape((2, 24, 20), 8)        # lead axes are batch
+    assert not is_adapter_shape((33, 20), 20)      # min(d, k) must be > r
+    assert not is_adapter_shape((7,), 4)
+    assert not is_adapter_shape((3, 5), 4)
+
+
+def test_adapter_layout_classifies_and_splits():
+    tree = _student()
+    layout = adapter_layout(tree, 8, node_axis=True)
+    by_name = dict(zip(layout.names, layout.is_mat))
+    assert by_name["['w']"] and by_name["['stack']"]
+    assert not by_name["['tiny']"] and not by_name["['b']"]
+    assert not by_name["['step']"]                 # int leaf stays dense
+    mats, rest = split_student(layout, tree)
+    assert set(mats) == {"['w']", "['stack']"}
+    # merge is the exact inverse
+    back = merge_student(layout, mats, rest)
+    for a, b in zip(jax.tree_util.tree_leaves(back),
+                    jax.tree_util.tree_leaves(tree)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# factorization properties
+# ---------------------------------------------------------------------------
+
+def test_factorize_orthonormal_and_exact_on_lowrank_deltas():
+    """B has orthonormal columns and B @ A reconstructs any delta whose
+    true rank fits the sketch — including per-slice on a lead-dim
+    leaf."""
+    r = 6
+    for shape in ((3, 33, 20), (3, 2, 24, 20)):
+        lo = _f32(*shape[:-1], 4)                  # rank-4 < r = 6
+        hi = _f32(*shape[:-2], 4, shape[-1])
+        delta = lo @ hi
+        b, a = factorize_delta(delta, "['w']", r)
+        assert b.shape == shape[:-1] + (r,)
+        assert a.shape == shape[:-2] + (r, shape[-1])
+        btb = jnp.swapaxes(b, -1, -2) @ b
+        eye = jnp.broadcast_to(jnp.eye(r), btb.shape)
+        np.testing.assert_allclose(np.asarray(btb), np.asarray(eye),
+                                   atol=1e-4)
+        np.testing.assert_allclose(np.asarray(b @ a), np.asarray(delta),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_zero_delta_makes_zero_payload():
+    """Round-0 deltas are exactly zero: MGS normalizes zero columns to
+    zero instead of an arbitrary basis vector, so nothing rides."""
+    b, a = factorize_delta(jnp.zeros((3, 33, 20)), "['w']", 8)
+    assert float(jnp.abs(b).max()) == 0.0
+    assert float(jnp.abs(a).max()) == 0.0
+
+
+def test_factorize_deterministic_across_calls():
+    """Ω is a pure function of the leaf name — two engines factoring
+    the same delta produce bit-identical wire factors."""
+    delta = _f32(2, 33, 20)
+    b1, a1 = factorize_delta(delta, "['w']", 4)
+    b2, a2 = factorize_delta(delta, "['w']", 4)
+    np.testing.assert_array_equal(np.asarray(b1), np.asarray(b2))
+    np.testing.assert_array_equal(np.asarray(a1), np.asarray(a2))
+    # ...and a different leaf name sketches a different subspace
+    b3, _ = factorize_delta(delta, "['other']", 4)
+    assert float(jnp.abs(b1 - b3).max()) > 0
+
+
+def test_gram_update_ema_carry():
+    tree = _student()
+    layout = adapter_layout(tree, 8, node_axis=True)
+    mats, _ = split_student(layout, tree)
+    refs = {n: 0.5 * v for n, v in mats.items()}
+    factors = factorize_deltas(layout, mats, refs)
+    g1 = gram_update(factors, None)
+    a = factors["['w']"]["A"]
+    np.testing.assert_allclose(
+        np.asarray(g1["['w']"]),
+        np.asarray(jnp.swapaxes(a, -1, -2) @ a), rtol=1e-5, atol=1e-5)
+    g2 = gram_update(factors, g1)
+    np.testing.assert_allclose(
+        np.asarray(g2["['w']"]),
+        np.asarray(g1["['w']"] + GRAM_EMA * g1["['w']"]),
+        rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# the fused apply: ref vs Pallas(interpret) vs plane sweep
+# ---------------------------------------------------------------------------
+
+def _factors(s, d, k, r, *, lead=(), per_recv_n=0):
+    b = _f32(s, *lead, d, r)
+    if per_recv_n:
+        a = _f32(per_recv_n, s, *lead, r, k)
+    else:
+        a = _f32(s, *lead, r, k)
+    return b, a
+
+
+@pytest.mark.parametrize("per_recv", [False, True], ids=["shared", "perrecv"])
+def test_lowrank_apply_pallas_interpret_matches_ref(per_recv):
+    n, s, d, k, r = 3, 4, 33, 20, 6
+    w = _f32(n, d, k)
+    coeffs = _f32(n, s) ** 2
+    b, a = _factors(s, d, k, r, per_recv_n=n if per_recv else 0)
+    ref = lowrank_apply_ref(w, coeffs, b, a)
+    got = lowrank_apply(w, coeffs, b, a, use_kernels=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_lowrank_apply_lead_axis_vmaps_over_kernel():
+    """A scanned stack's [N, L, d, k] leaf runs the same kernel per
+    layer slice via the batched dispatch."""
+    n, s, l, d, k, r = 2, 3, 2, 16, 12, 4
+    w = _f32(n, l, d, k)
+    coeffs = _f32(n, s) ** 2
+    b, a = _factors(s, d, k, r, lead=(l,))
+    ref = lowrank_apply_ref(w, coeffs, b, a)
+    got = lowrank_apply(w, coeffs, b, a, use_kernels=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_lowrank_delta_is_apply_minus_w():
+    """The delta-first contract the buffer-native plane sweep leans on:
+    apply(w) == w + delta(factors), with the SAME sender accumulation
+    order on both sides — bit for bit."""
+    n, s, d, k, r = 3, 4, 33, 20, 6
+    w = _f32(n, d, k)
+    coeffs = _f32(n, s) ** 2
+    b, a = _factors(s, d, k, r)
+    applied = lowrank_apply_ref(w, coeffs, b, a)
+    delta = lowrank_delta_ref(coeffs, b, a)
+    np.testing.assert_array_equal(np.asarray(applied),
+                                  np.asarray(w + delta))
+
+
+def test_adapter_apply_plane_bit_identical_to_tree():
+    """The fused plane sweep == the materialized tree baseline repacked,
+    bit for bit — matrix spans, lead-dim leaves, dense rest, and the
+    zero padding lanes alike."""
+    n = 3
+    tree = _student(n)
+    layout = adapter_layout(tree, 8, node_axis=True)
+    mats, rest = split_student(layout, tree)
+    refs = {k: 0.9 * v for k, v in mats.items()}
+    factors = factorize_deltas(layout, mats, refs)
+    coeffs = jnp.asarray(RNG.random((n, n)), jnp.float32)
+    rest_mixed = {k: v + 0.1 for k, v in rest.items()
+                  if jnp.issubdtype(v.dtype, jnp.floating)}
+    rest_mixed["['step']"] = rest["['step']"]
+    plane = jax.vmap(plane_from_tree)(tree)
+
+    fused = adapter_apply_plane(plane, layout, coeffs, factors,
+                                rest_mixed, use_kernels=False)
+    dense_tree = adapter_apply_tree(tree, layout, coeffs, factors,
+                                    rest_mixed)
+    dense = jax.vmap(plane_from_tree)(dense_tree)
+    np.testing.assert_array_equal(np.asarray(fused.buf),
+                                  np.asarray(dense.buf))
+    # the round-tripped tree matches the materialized one exactly too
+    for a, b in zip(jax.tree_util.tree_leaves(as_tree(fused)),
+                    jax.tree_util.tree_leaves(dense_tree)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# RegMean merge
+# ---------------------------------------------------------------------------
+
+def test_regmean_equal_grams_reduces_to_normalized_average():
+    """With identical gram statistics the RegMean closed form collapses
+    to the NORMALIZED weighted factor average A / Σ_j c_ij (up to the
+    trace-scaled ridge, ~0.1% at the default eps)."""
+    s, n, r, k = 4, 3, 6, 20
+    a = _f32(s, r, k)
+    m = _f32(k, k)
+    # eigenvalues in ~[1, 5]: the trace-scaled ridge perturbs each
+    # eigendirection by ~eps·(tr/k)/σ ≲ 0.3%, so the reduction holds
+    # to well under 1% — rank-deficient grams would let the ridge
+    # dominate the null space and break the closed form
+    g = m.T @ m / k + jnp.eye(k)
+    grams = jnp.broadcast_to(g, (s, k, k))
+    coeffs = jnp.asarray(RNG.random((n, s)) + 0.1, jnp.float32)
+    adj = regmean_adjust(a, grams, coeffs, per_recv=False)
+    csum = jnp.sum(coeffs, axis=1)
+    want = a[None] / csum[:, None, None, None]
+    np.testing.assert_allclose(np.asarray(adj), np.asarray(want),
+                               rtol=1e-2, atol=5e-3)
+
+
+def test_regmean_per_recv_matches_broadcast_shared_view():
+    """per_recv=True over a receiver-replicated view == the shared-view
+    solve — the ppermute exchange's per-receiver dequantized factors
+    merge exactly like gather's single wire view."""
+    s, n, r, k = 3, 4, 5, 12
+    a = _f32(s, r, k)
+    grams = jnp.stack([(lambda m: m.T @ m + 0.3 * jnp.eye(k))(_f32(k, k))
+                       for _ in range(s)])
+    coeffs = jnp.asarray(RNG.random((n, s)) + 0.1, jnp.float32)
+    shared = regmean_adjust(a, grams, coeffs, per_recv=False)
+    rep = regmean_adjust(jnp.broadcast_to(a, (n,) + a.shape),
+                         jnp.broadcast_to(grams, (n,) + grams.shape),
+                         coeffs, per_recv=True)
+    np.testing.assert_allclose(np.asarray(rep), np.asarray(shared),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_regmean_isolated_receiver_stays_finite_and_zero():
+    s, n, r, k = 3, 2, 4, 10
+    a = _f32(s, r, k)
+    grams = jnp.stack([(lambda m: m.T @ m)(_f32(k, k))
+                       for _ in range(s)])
+    coeffs = jnp.asarray([[0.0, 0.0, 0.0], [0.3, 0.3, 0.4]], jnp.float32)
+    adj = regmean_adjust(a, grams, coeffs, per_recv=False)
+    assert bool(jnp.all(jnp.isfinite(adj)))
+    merged = jnp.einsum("ns,nsrk->nrk", coeffs, adj)
+    assert float(jnp.abs(merged[0]).max()) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# stacked share/merge round-trip
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("grams", [False, True], ids=["naive", "regmean"])
+def test_share_merge_recovers_lowrank_gossip(grams):
+    """End to end at the stacked level: when every node's round delta
+    fits the sketch rank, merge reconstructs the true gossip update
+    W_i + Σ_j w_neigh[i, j]·Δ_j (RegMean renormalizes by the coefficient
+    sum, naive applies the raw coefficients)."""
+    n, rank = 4, 8
+    refs_tree = _student(n)
+    layout = adapter_layout(refs_tree, rank, node_axis=True)
+    ref_mats, rest = split_student(layout, refs_tree)
+    if grams:
+        # identical per-node deltas -> identical wire grams, where the
+        # RegMean closed form has an exact expectation (the normalized
+        # average); distinct grams blend by geometry (covered by the
+        # equal-gram reduction test above)
+        deltas = {
+            "['w']": jnp.broadcast_to(_f32(33, 3) @ _f32(3, 20),
+                                      (n, 33, 20)),
+            "['stack']": jnp.broadcast_to(
+                _f32(2, 24, 3) @ _f32(2, 3, 20), (n, 2, 24, 20))}
+    else:
+        # true deltas of rank 3 < 8, per node
+        deltas = {"['w']": _f32(n, 33, 3) @ _f32(n, 3, 20),
+                  "['stack']": _f32(n, 2, 24, 3) @ _f32(n, 2, 3, 20)}
+    mats = {k: ref_mats[k] + deltas[k] for k in deltas}
+    student = merge_student(layout, mats, rest)
+    ast = init_adapter_state(layout, refs_tree, grams=grams)
+
+    recv, new_ast, _ = R.adapter_share_nodes(student, ast, rank=rank,
+                                             grams=grams)
+    # the reference snapshot advanced to the shared weights
+    for k in mats:
+        np.testing.assert_array_equal(np.asarray(new_ast["ref"][k]),
+                                      np.asarray(mats[k]))
+
+    sched = T.make_schedule(n, "ring", seed=0)
+    w_self, w_neigh, _ = sched.lower([1.0] * n)
+    merged = R.adapter_merge_nodes(student, recv, w_self[0], w_neigh[0],
+                                   rank=rank, grams=grams)
+    coeffs = np.asarray(w_neigh[0])
+    if grams:
+        # RegMean's built-in normalization: with equal grams the merge
+        # applies coefficients renormalized to sum 1
+        coeffs = coeffs / coeffs.sum(axis=1, keepdims=True)
+    merged_mats, _ = split_student(layout, as_tree(merged))
+    for k in mats:
+        want = np.asarray(mats[k]) + np.einsum(
+            "ns,s...->n...", coeffs, np.asarray(deltas[k]))
+        tol = 5e-2 if grams else 1e-4      # RegMean: rank-deficient
+        np.testing.assert_allclose(np.asarray(merged_mats[k]), want,
+                                   rtol=tol, atol=tol)
+
+
+# ---------------------------------------------------------------------------
+# payload template + byte accounting
+# ---------------------------------------------------------------------------
+
+def test_payload_template_matches_real_share_shapes():
+    """The accountant meters adapter_payload_template; the wire ships
+    adapter_share_nodes — per-copy shapes and dtypes must agree leaf
+    for leaf or the exact byte gate could never hold."""
+    n = 3
+    tree = _student(n)
+    layout = adapter_layout(tree, 8, node_axis=True)
+    ast = init_adapter_state(layout, tree, grams=True)
+    groups, _, _ = R.adapter_share_nodes(tree, ast, rank=8, grams=True)
+    template = adapter_payload_template(layout, grams=True)
+    for g in ("adapters", "grams"):
+        t_leaves = jax.tree_util.tree_leaves_with_path(template[g])
+        p_leaves = jax.tree_util.tree_leaves_with_path(groups[g])
+        assert len(t_leaves) == len(p_leaves) > 0
+        for (tp, tl), (pp, pl) in zip(t_leaves, p_leaves):
+            assert tp == pp
+            assert tuple(tl.shape) == tuple(pl.shape)[1:]   # drop [N]
+            assert tl.dtype == pl.dtype
+    # zero_wire_payload mirrors the same structure with the node axis
+    zp = zero_wire_payload(layout, tree, grams=True)
+    assert set(zp) == {"adapters", "student", "grams"}
+    for (tp, tl), (zp_, zl) in zip(
+            jax.tree_util.tree_leaves_with_path(template["adapters"]),
+            jax.tree_util.tree_leaves_with_path(zp["adapters"])):
+        assert tp == zp_ and tuple(zl.shape) == (n,) + tuple(tl.shape)
+
+
+def test_adapter_wire_bytes_beat_dense_for_wide_matrices():
+    """On a wide-matrix student the rank-8 factor payload undercuts the
+    dense int4 student payload by the margin the byte accountant
+    predicts, schedule-wide."""
+    big = {"w": jax.ShapeDtypeStruct((512, 256), np.dtype(np.float32)),
+           "b": jax.ShapeDtypeStruct((256,), np.dtype(np.float32))}
+    layout = adapter_layout(big, 8)
+    template = adapter_payload_template(layout, grams=False)
+    protos = jax.ShapeDtypeStruct((10, 64), np.dtype(np.float32))
+    dense_payload = {"model": big, "protos": protos}
+    adapter_payload = {"model": {"b": big["b"]}, "protos": protos,
+                       **template}
+    spec = WireSpec.parse("4,adapters=8")
+    dense = packed_copy_bytes(dense_payload, WireSpec.parse("4"))
+    low = packed_copy_bytes(adapter_payload, spec)
+    assert low < 0.15 * dense, (low, dense)
+    acct = ScheduleCommAccountant(T.make_schedule(6, "ring"))
+    pred_low = acct.predicted_node_bytes(adapter_payload, 0, spec,
+                                         wire="packed").max()
+    pred_dense = acct.predicted_node_bytes(dense_payload, 0,
+                                           WireSpec.parse("4"),
+                                           wire="packed").max()
+    assert pred_low < 0.15 * pred_dense
+
+
+# ---------------------------------------------------------------------------
+# engine parity
+# ---------------------------------------------------------------------------
+
+def test_stacked_matches_loop_with_adapter_wire():
+    """adapter_rank on, int4 ring: stacked vs loop engine — comm bytes
+    identical, learning to numerical noise."""
+    from repro.config import FederationConfig, TrainConfig, get_config
+    from repro.core import federation as F
+    from repro.data import make_image_dataset, partition, train_test_split
+    n_nodes = 3
+    cfg = get_config("mnist-cnn")
+    data = make_image_dataset(0, 900, cfg.input_hw, cfg.num_classes)
+    train_d, test_d = train_test_split(data, 0.1, 0)
+    parts = partition(train_d["label"], n_nodes, "iid", 0)
+    node_data = [{k: v[i] for k, v in train_d.items()} for i in parts]
+    train = TrainConfig(batch_size=64, learning_rate=1e-3,
+                        optimizer="adamw", remat=False)
+    fed = FederationConfig(num_nodes=n_nodes, rounds=2, local_epochs=1,
+                           algorithm="profe", topology="ring",
+                           quantize_bits=4, adapter_rank=4)
+    new = F.run_federation(cfg, fed, train, node_data, test_d)
+    old = F.run_federation_loop(cfg, fed, train, node_data, test_d)
+    assert new.extras["adapter_rank"] == 4
+    assert new.extras["avg_sent_gb"] == old.extras["avg_sent_gb"]
+    assert dict(new.comm.sent) == dict(old.comm.sent)
+    np.testing.assert_allclose(new.f1_per_round, old.f1_per_round,
+                               atol=0.05)
+    # the adapter wire moved fewer packed bytes than the dense int4 run
+    fed_dense = FederationConfig(num_nodes=n_nodes, rounds=2,
+                                 local_epochs=1, algorithm="profe",
+                                 topology="ring", quantize_bits=4)
+    dense = F.run_federation(cfg, fed_dense, train, node_data, test_d)
+    assert new.extras["wire_bytes_packed_per_copy"] < \
+        dense.extras["wire_bytes_packed_per_copy"]
+
+
+# ---------------------------------------------------------------------------
+# mesh cross-mode equivalence
+# ---------------------------------------------------------------------------
+
+@pytest.mark.mesh
+@pytest.mark.parametrize("grams", [False, True], ids=["naive", "regmean"])
+def test_mesh_adapter_round_modes_agree(grams):
+    """gather / packed / ppermute with adapter_rank=8 agree on the
+    merged students (packed bit-exact vs gather; ppermute to merge-
+    order tolerance), including a 3-D lead-dim leaf."""
+    n = 4
+    if jax.device_count() < n:
+        pytest.skip(f"needs {n} devices, have {jax.device_count()}")
+    from jax.sharding import PartitionSpec as P
+    from repro.core.mesh_federation import make_profe_round
+    from repro.launch.wire import fed_mesh
+    students = {
+        "w": _f32(n, 33, 20),
+        "stack": _f32(n, 2, 24, 20, scale=0.3),
+        "b": _f32(n, 7)}
+    specs = {"w": P(None, None), "stack": P(None, None, None),
+             "b": P(None,)}
+    protos = _f32(n, 5, 16)
+    counts = jnp.asarray(RNG.integers(0, 4, (n, 5)), jnp.float32)
+    sizes = jnp.asarray(RNG.integers(50, 200, (n,)), jnp.float32)
+    adj = T.make_schedule(n, "ring", seed=0).adjacency_at(0)
+    mesh = fed_mesh(n)
+    layout = adapter_layout(students, 8, node_axis=True)
+    assert layout.is_mat[layout.names.index("['stack']")]
+
+    outs = {}
+    for ex in ("gather", "packed", "ppermute"):
+        ast = init_adapter_state(layout, jax.tree_util.tree_map(
+            lambda x: 0.9 * x, students), grams=grams)
+        fn = make_profe_round(mesh, specs, bits=16, adjacency=adj,
+                              exchange=ex, adapter_rank=8,
+                              adapter_grams=grams)
+        with mesh:
+            outs[ex] = jax.jit(fn)(students, protos, counts, sizes, ast)
+
+    def maxdiff(a, b):
+        return max(float(jnp.max(jnp.abs(
+            jnp.asarray(x, jnp.float32) - jnp.asarray(y, jnp.float32))))
+            for x, y in zip(jax.tree_util.tree_leaves(a),
+                            jax.tree_util.tree_leaves(b)))
+
+    scale = max(float(jnp.max(jnp.abs(x)))
+                for x in jax.tree_util.tree_leaves(outs["gather"][0]))
+    assert maxdiff(outs["packed"][0], outs["gather"][0]) == 0.0
+    assert maxdiff(outs["ppermute"][0], outs["gather"][0]) <= 5e-5 * scale
+    assert maxdiff(outs["ppermute"][1], outs["gather"][1]) <= 1e-5

@@ -292,9 +292,12 @@ def test_stacked_matches_loop_with_error_feedback(mnist_like):
         new.extras["wire_bytes_packed_per_copy"]
 
 
-def _stacked_round_harness(tmp_seed=0):
+def _stacked_round_harness(tmp_seed=0, *, adapter_rank=0,
+                           adapter_grams=False):
     """A tiny jitted stacked EF round driven by federation internals —
-    the checkpoint/resume fixture."""
+    the checkpoint/resume fixture (optionally on the adapter-rank
+    wire, whose reference/gram carry rides ``NodeState.adapter_state``
+    and whose EF residual mirrors the factor payload)."""
     from repro.data import make_image_dataset, partition
     from repro.models import derive_student
     from repro.optim import make_optimizer
@@ -303,7 +306,9 @@ def _stacked_round_harness(tmp_seed=0):
     cfg = get_config("mnist-cnn").replace(cnn_channels=(4, 8))
     fed = FederationConfig(num_nodes=n_nodes, rounds=1, local_epochs=1,
                            algorithm="profe", quantize_bits=4,
-                           error_feedback=True, seed=tmp_seed)
+                           error_feedback=True, seed=tmp_seed,
+                           adapter_rank=adapter_rank,
+                           adapter_grams=adapter_grams)
     train = TrainConfig(batch_size=8, learning_rate=1e-3,
                         optimizer="adamw", remat=False)
     data = make_image_dataset(0, 32 * n_nodes, cfg.input_hw,
@@ -322,16 +327,30 @@ def _stacked_round_harness(tmp_seed=0):
     ncls = F._n_proto_classes(cfg)
     stacked = F._stack_states(
         F._init_states("profe", model_cfgs, fed, opt, opt, ncls))
-    stacked = stacked._replace(wire_state=init_codec_state({
-        "protos": jnp.zeros((n_nodes, ncls, student_cfg.proto_dim),
-                            jnp.float32),
-        "student": stacked.student}, n_nodes=n_nodes))
+    ef_payload = {"protos": jnp.zeros(
+        (n_nodes, ncls, student_cfg.proto_dim), jnp.float32)}
+    if adapter_rank:
+        from repro.core.adapters import (adapter_layout,
+                                         init_adapter_state,
+                                         zero_wire_payload)
+        a_layout = adapter_layout(stacked.student, adapter_rank,
+                                  node_axis=True)
+        stacked = stacked._replace(adapter_state=init_adapter_state(
+            a_layout, stacked.student, grams=adapter_grams))
+        # the EF residual mirrors the adapter payload structure
+        ef_payload.update(zero_wire_payload(a_layout, stacked.student,
+                                            grams=adapter_grams))
+    else:
+        ef_payload["student"] = stacked.student
+    stacked = stacked._replace(
+        wire_state=init_codec_state(ef_payload, n_nodes=n_nodes))
     sched = T.make_schedule(n_nodes, fed.topology, rounds=fed.rounds,
                             seed=fed.seed)
     w_self, w_neigh, include = sched.lower(sizes)
     round_fn = F._make_round_fn(step, student_cfg, ncls,
                                 share_protos=True, wire_model="student",
-                                bits=bits)
+                                bits=bits, adapter_rank=adapter_rank,
+                                adapter_grams=adapter_grams)
 
     def run_round(state, rnd):
         xb, valid = F._stack_round_batches(
@@ -371,6 +390,35 @@ def test_codec_state_survives_checkpoint_roundtrip(tmp_path):
     cont = run_round(state, 2)          # uninterrupted
     resumed = run_round(jax.tree_util.tree_map(jnp.asarray, restored), 2)
     _assert_trees_equal(cont, resumed)  # incl. wire_state residuals
+
+
+def test_adapter_state_survives_checkpoint_roundtrip(tmp_path):
+    """The adapter wire's per-node reference snapshot and gram EMA ride
+    ``NodeState.adapter_state`` through ckpt save/restore; the resumed
+    run matches the uninterrupted run EXACTLY — losing the reference
+    would silently re-ship whole-weight deltas next round."""
+    from repro.checkpoint import load_checkpoint, save_checkpoint
+    state, run_round = _stacked_round_harness(adapter_rank=2,
+                                              adapter_grams=True)
+    ref0 = [np.asarray(x) for x in _leaves(state.adapter_state["ref"])]
+    for rnd in range(2):
+        state = run_round(state, rnd)
+    # mid-federation carry is non-trivial: the reference advanced to
+    # the last shared weights and the gram EMA accumulated
+    assert max(float(np.abs(a - b).max())
+               for a, b in zip(_leaves(state.adapter_state["ref"]),
+                               ref0)) > 0
+    assert max(float(np.abs(x).max())
+               for x in _leaves(state.adapter_state["grams"])) > 0
+
+    path = os.path.join(tmp_path, "fed_state.npz")
+    save_checkpoint(path, state, metadata={"round": 2})
+    restored = load_checkpoint(path, state)
+    _assert_trees_equal(restored, state)
+
+    cont = run_round(state, 2)          # uninterrupted
+    resumed = run_round(jax.tree_util.tree_map(jnp.asarray, restored), 2)
+    _assert_trees_equal(cont, resumed)  # incl. adapter refs + grams
 
 
 # ---------------------------------------------------------------------------

@@ -52,6 +52,33 @@ def test_wirespec_groups_and_parsing():
         WireSpec(student_bits=12)
 
 
+def test_wirespec_named_override_grammar_roundtrip():
+    """The ``--bits`` grammar with named group overrides: parse/arg are
+    exact inverses for every expressible spec, overrides resolve per
+    group with unnamed groups falling back to the student width."""
+    for s in ("4", "4/16", "4,adapters=8", "4/16,adapters=8,grams=16",
+              "4/16,adapters=8,grams=16+ef", "8,model=4", "16,grams=8+ef"):
+        spec = WireSpec.parse(s)
+        assert WireSpec.parse(spec.arg()) == spec, s
+    spec = WireSpec.parse("4/16,adapters=8,grams=16+ef")
+    assert spec.bits_for("adapters") == 8
+    assert spec.bits_for("grams") == 16
+    assert spec.bits_for("protos") == 16
+    assert spec.error_feedback
+    assert spec.uniform_bits is None and spec.max_bits == 16
+    assert spec.describe() == \
+        "student=int4,protos=int16,adapters=int8,grams=int16+ef"
+    # a group with no override follows the student width
+    assert WireSpec.parse("4").bits_for("adapters") == 4
+    assert WireSpec.parse("4/16").bits_for("grams") == 4
+    # the "model" alias canonicalizes inside the override list too
+    assert WireSpec.parse("8,model=4").bits_for("student") == 4
+    with pytest.raises(ValueError, match="group override"):
+        WireSpec.parse("4,adapters8")            # missing '='
+    with pytest.raises(ValueError, match="wire bits"):
+        WireSpec.parse("4,adapters=5")           # not a legal width
+
+
 # ---------------------------------------------------------------------------
 # int4 nibble pack/unpack
 # ---------------------------------------------------------------------------
